@@ -1,0 +1,85 @@
+//! heterogeneous_deploy — deployment-side usage of the public API: take a
+//! trained model + a heterogeneous multiplier assignment and evaluate it
+//! with the *native* behavioral simulator (no Python, no PJRT — the pure
+//! Rust deployment path a downstream user would embed).
+//!
+//! Run: cargo run --release --example heterogeneous_deploy
+
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::matching::{assignment_luts, energy_reduction};
+use agn_approx::multipliers::unsigned_catalog;
+use agn_approx::runtime::Manifest;
+use agn_approx::simulator::{accuracy, LutSet, SimNet};
+use agn_approx::tensor::TensorF;
+use anyhow::Result;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(Path::new("artifacts"), "resnet8")?;
+    // use the cached QAT baseline if an experiment has produced one,
+    // otherwise fall back to the init params (demo still runs)
+    let cached = Path::new("results/cache").join(format!("{}_qat300_seed42.f32", manifest.model));
+    let flat = if cached.exists() {
+        let bytes = std::fs::read(&cached)?;
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    } else {
+        println!("(no cached baseline found — using init params)");
+        manifest.load_init_params()?
+    };
+    let net = SimNet::new(&manifest, &flat)?;
+    let spec = DatasetSpec::synth_cifar(net.input_hw, 42);
+    let val = Dataset::load(&spec, Split::Val);
+
+    // a hand-picked heterogeneous assignment: accurate ends, aggressive middle
+    let catalog = unsigned_catalog();
+    let exact = catalog.exact_index();
+    let aggressive = catalog.len() / 4; // a cheap instance
+    let moderate = catalog.len() / 2;
+    let l = manifest.num_layers;
+    let mut genome = vec![moderate; l];
+    genome[0] = exact;
+    *genome.last_mut().unwrap() = exact;
+    for g in genome.iter_mut().take(l - 2).skip(2) {
+        *g = aggressive;
+    }
+    println!("assignment:");
+    for (info, &g) in manifest.layers.iter().zip(&genome) {
+        println!("  {:<16} -> {}", info.name, catalog.instances[g].name);
+    }
+    println!(
+        "multiply-energy reduction: {:.1} %",
+        energy_reduction(&manifest, &catalog, &genome) * 100.0
+    );
+
+    let luts = assignment_luts(&manifest, &catalog, &genome);
+    let absmax = vec![6.0f32; l]; // demo scales; experiments calibrate properly
+    let (h, w) = net.input_hw;
+    let batch = manifest.batch;
+    let t0 = Instant::now();
+    let mut top1 = 0usize;
+    let mut n = 0usize;
+    for start in (0..val.len().min(512)).step_by(batch) {
+        let (xs, ys) = val.eval_batch(batch, start);
+        let x = TensorF::from_vec(&[batch, h, w, 3], xs);
+        let logits = net.forward(&x, &absmax, &LutSet::PerLayer(&luts), None);
+        top1 += accuracy(&logits, &ys, 5).0;
+        n += batch;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let mults = manifest
+        .layers
+        .iter()
+        .map(|l| l.mults_per_image as f64)
+        .sum::<f64>()
+        * n as f64;
+    println!(
+        "simulated {n} images in {dt:.2}s ({:.1} M approx-MACs/s): top-1 {:.3}",
+        mults / dt / 1e6,
+        top1 as f64 / n as f64
+    );
+    Ok(())
+}

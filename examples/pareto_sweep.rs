@@ -1,0 +1,59 @@
+//! pareto_sweep — a small lambda sweep on resnet8 producing the Figure-3
+//! style energy/accuracy tradeoff, printed as a text scatter.
+//!
+//! Run: cargo run --release --example pareto_sweep [-- --lambdas 0.0,0.2,0.5]
+
+use agn_approx::coordinator::experiments::{default_lambdas, sweep_lambda};
+use agn_approx::coordinator::pareto::{pareto_split, Point};
+use agn_approx::coordinator::{Pipeline, RunConfig};
+use agn_approx::multipliers::unsigned_catalog;
+use agn_approx::search::EvalMode;
+use agn_approx::util::cli::Args;
+use anyhow::Result;
+use std::path::PathBuf;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let lambdas: Vec<f32> = args
+        .get("lambdas")
+        .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
+        .unwrap_or_else(default_lambdas);
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = args.usize_or("qat-steps", 200);
+    cfg.search_steps = args.usize_or("search-steps", 80);
+    cfg.retrain_steps = args.usize_or("retrain-steps", 20);
+
+    let catalog = unsigned_catalog();
+    let mut pipe = Pipeline::new(&artifacts, "resnet8", cfg)?;
+    let base = pipe.baseline()?;
+    let baseline = pipe.evaluate(&base.flat, EvalMode::Qat)?.top1;
+    println!("baseline top-1: {baseline:.3}\n");
+
+    let mut pts = Vec::new();
+    for &lam in &lambdas {
+        let p = sweep_lambda(&mut pipe, &catalog, lam, false)?;
+        println!(
+            "lambda {:<5.2} energy -{:>5.1} %  top-1 {:.3}",
+            lam,
+            p.energy_reduction * 100.0,
+            p.acc_retrained
+        );
+        pts.push(Point {
+            energy_reduction: p.energy_reduction,
+            accuracy: p.acc_retrained,
+            knob: lam as f64,
+        });
+    }
+    let (front, dominated) = pareto_split(&pts);
+    println!("\npareto front ({} points, {} dominated):", front.len(), dominated.len());
+    for p in &front {
+        println!(
+            "  lambda {:<5.2} energy -{:>5.1} %  top-1 {:.3}",
+            p.knob,
+            p.energy_reduction * 100.0,
+            p.accuracy
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! Quickstart — the END-TO-END driver (DESIGN.md: E2E validation).
+//!
+//! Exercises every layer of the stack on a real small workload:
+//!   1. load the AOT'd resnet8 artifacts (L2 JAX graphs + L1 Pallas kernels
+//!      inside them) on the PJRT CPU client,
+//!   2. train the 8-bit QAT baseline on SynthCIFAR and log the loss curve,
+//!   3. run the AGN gradient search (learned per-layer sigma_l),
+//!   4. match approximate multipliers from the unsigned catalog with the
+//!      probabilistic error model,
+//!   5. retrain behaviorally under the matched LUTs (STE),
+//!   6. report baseline vs approx accuracy and the energy reduction.
+//!
+//! Run: cargo run --release --example quickstart [-- --qat-steps 200 ...]
+
+use agn_approx::coordinator::{experiments, Pipeline, RunConfig};
+use agn_approx::matching::assignment_luts;
+use agn_approx::multipliers::unsigned_catalog;
+use agn_approx::search::EvalMode;
+use agn_approx::util::cli::Args;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let model = args.str_or("models", "resnet8");
+    let lambda = args.f32_or("lambda", 0.3);
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = args.usize_or("qat-steps", 200);
+    cfg.search_steps = args.usize_or("search-steps", 100);
+    cfg.retrain_steps = args.usize_or("retrain-steps", 25);
+    cfg.eval_batches = args.usize_or("eval-batches", 8);
+
+    println!("== agn-approx quickstart: {model} on SynthCIFAR ==");
+    let t0 = Instant::now();
+    let mut pipe = Pipeline::new(&artifacts, &model, cfg)?;
+    println!(
+        "loaded {} (N={} params, L={} approximable layers), platform={}",
+        pipe.manifest.model,
+        pipe.manifest.param_count,
+        pipe.manifest.num_layers,
+        pipe.engine.platform()
+    );
+
+    // 1. QAT baseline
+    let base = pipe.baseline()?;
+    let base_acc = pipe.evaluate(&base.flat, EvalMode::Qat)?;
+    println!(
+        "[{:>6.1}s] QAT baseline: top-1 {:.3} (val n={})",
+        t0.elapsed().as_secs_f64(),
+        base_acc.top1,
+        base_acc.n
+    );
+
+    // 2. gradient search
+    let searched = pipe.search_at(&base, lambda)?;
+    println!(
+        "[{:>6.1}s] gradient search (lambda={lambda}): sigma_l = {:?}",
+        t0.elapsed().as_secs_f64(),
+        searched
+            .sigmas
+            .iter()
+            .map(|s| (s * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>()
+    );
+
+    // 3. matching
+    let catalog = unsigned_catalog();
+    let (absmax, ystd) = pipe.calibrate(&base.flat)?;
+    let ops = pipe.operands(&searched.flat, &absmax)?;
+    let preds = pipe.predictions(&catalog, &ops);
+    let outcome = pipe.match_at(&catalog, &preds, &searched.sigmas, &ystd);
+    println!(
+        "[{:>6.1}s] matched multipliers (energy reduction {:.1} %):",
+        t0.elapsed().as_secs_f64(),
+        outcome.energy_reduction * 100.0
+    );
+    for a in &outcome.assignments {
+        println!(
+            "    {:<16} -> {:<14} (power {:.3})",
+            pipe.manifest.layers[a.layer].name, a.instance_name, a.power
+        );
+    }
+
+    // 4. behavioral retraining + final evaluation
+    let luts = assignment_luts(&pipe.manifest, &catalog, &outcome.instance_indices());
+    let scales = pipe.act_scales(&absmax);
+    let mut retrained = searched.clone();
+    pipe.retrain(&mut retrained, &luts, &scales)?;
+    let approx_acc = pipe.evaluate(
+        &retrained.flat,
+        EvalMode::Approx { luts: &luts, act_scales: &scales },
+    )?;
+    println!(
+        "[{:>6.1}s] approx (retrained): top-1 {:.3} | baseline {:.3} | loss {:.2} p.p. | energy -{:.1} %",
+        t0.elapsed().as_secs_f64(),
+        approx_acc.top1,
+        base_acc.top1,
+        (base_acc.top1 - approx_acc.top1) * 100.0,
+        outcome.energy_reduction * 100.0
+    );
+    println!(
+        "engine: {} executions, {:.1}s exec, {:.1}s compile",
+        pipe.engine.exec_count, pipe.engine.exec_seconds, pipe.engine.compile_seconds
+    );
+    let _ = experiments::default_lambdas(); // anchor: sweep API is public
+    Ok(())
+}

@@ -1,0 +1,116 @@
+"""AOT pipeline: lower every (model, program) pair to HLO *text* + manifest.
+
+HLO text is the interchange format — the image's xla_extension 0.5.1 rejects
+jax>=0.5 serialized HloModuleProtos (64-bit instruction ids), while the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --models tinynet,resnet8 \
+        [--programs train_agn,eval] [--batch 32]
+
+Each model gets `<model>_<program>.hlo.txt` files plus one
+`<model>.manifest.json` describing parameter layout, the approximable-layer
+table and per-program I/O, consumed by rust/src/runtime/manifest.rs.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models as M
+from . import train as T
+
+DEFAULT_BATCH = 32
+SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_desc(s):
+    return {"dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+def _result_desc(fn, specs):
+    out = jax.eval_shape(fn, *specs)
+    flat, _ = jax.tree_util.tree_flatten(out)
+    return [_spec_desc(s) for s in flat]
+
+
+def export_model(name: str, out_dir: str, batch: int, programs=None, act_signed=False):
+    model = M.build_model(name, act_signed=act_signed)
+    params = model.init(jax.random.PRNGKey(SEED))
+    flat, unravel, leaf_index = T.flatten_params(params)
+    n = int(flat.shape[0])
+    progs = T.make_programs(model, unravel, batch)
+    wanted = programs or list(progs)
+
+    suffix = "_signed" if act_signed else ""
+    manifest = {
+        "model": name + suffix,
+        "arch": name,
+        "act_signed": act_signed,
+        "batch": batch,
+        "input_shape": list(model.input_shape),
+        "classes": model.classes,
+        "param_count": n,
+        "num_layers": len(model.tape),
+        "init_seed": SEED,
+        "leaves": leaf_index,
+        "layers": [dict(l) for l in model.tape.layers],
+        "programs": {},
+    }
+    # initial parameters, so Rust reproduces the same init without python
+    init_path = f"{name}{suffix}.init.f32"
+    import numpy as np
+
+    np.asarray(flat, dtype=np.float32).tofile(os.path.join(out_dir, init_path))
+    manifest["init_params"] = init_path
+
+    for pname in wanted:
+        fn, spec_fn = progs[pname]
+        specs = spec_fn(n)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}{suffix}_{pname}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["programs"][pname] = {
+            "file": fname,
+            "inputs": [_spec_desc(s) for s in specs],
+            "outputs": _result_desc(fn, specs),
+        }
+        print(f"  {name}{suffix}/{pname}: {len(text) / 1e6:.2f} MB HLO")
+
+    mpath = os.path.join(out_dir, f"{name}{suffix}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {mpath} (N={n}, L={len(model.tape)})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="tinynet,resnet8")
+    ap.add_argument("--programs", default="")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--signed", action="store_true", help="signed activation grid variant")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    programs = [p for p in args.programs.split(",") if p] or None
+    for name in args.models.split(","):
+        print(f"[aot] exporting {name} (batch={args.batch})")
+        export_model(name, args.out_dir, args.batch, programs, act_signed=args.signed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for agn-approx.
+
+All kernels are authored with ``interpret=True`` so they lower to plain HLO
+ops executable on the CPU PJRT client (real-TPU lowering would emit Mosaic
+custom-calls the CPU plugin cannot run; see DESIGN.md §Hardware adaptation).
+"""
+
+from .matmul import matmul_pallas
+from .agn import agn_inject, hash_u32, normal_from_counter
+from .approx_lut import approx_matmul_lut, LUT_SIDE, LUT_SIZE
+from .quant import fake_quant_act, fake_quant_weight, quantize_act, quantize_weight
+
+__all__ = [
+    "matmul_pallas",
+    "agn_inject",
+    "hash_u32",
+    "normal_from_counter",
+    "approx_matmul_lut",
+    "LUT_SIDE",
+    "LUT_SIZE",
+    "fake_quant_act",
+    "fake_quant_weight",
+    "quantize_act",
+    "quantize_weight",
+]

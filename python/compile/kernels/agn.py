@@ -1,0 +1,136 @@
+"""Additive-Gaussian-noise injection kernel (paper Eq. 7, Figure 1).
+
+``y_tilde = y + sigma_l * sigma(y) * q``, with ``q ~ N(0, 1)``.
+
+The noise is produced *inside* the kernel by a counter-based hash PRNG
+(splitmix/murmur-style finalizer) evaluated per output element and fed
+through a Box-Muller transform. This keeps the kernel stateless: the only
+randomness input is a ``u32[2]`` seed operand, so the lowered HLO is fully
+deterministic given (seed, shape) and the Rust coordinator owns
+reproducibility. On a GPU the original toolchain would call curand into a
+separate buffer; fusing generation into the epilogue removes that extra
+memory pass (DESIGN.md §Hardware adaptation).
+
+``sigma(y)`` — the batch standard deviation of the accurate pre-activation
+output — is a global reduction, so it is computed by the caller (L2) and
+passed in as a scalar; the kernel applies the element-wise part.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TWO_PI = 6.283185307179586
+
+
+def hash_u32(x):
+    """Murmur3-style 32-bit finalizer; decorrelates consecutive counters."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _uniform01(bits):
+    """Map uint32 -> float32 uniform in (0, 1]; never 0 so log() is safe."""
+    # Take the top 24 bits -> [0, 2^24), scale to (0, 1].
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / 16777216.0
+    ) + jnp.float32(1.0 / 33554432.0)
+
+
+def normal_from_counter(counter, seed0, seed1):
+    """Standard normal from a flat element counter via Box-Muller.
+
+    counter: uint32 array of element indices. seed0/seed1: uint32 scalars.
+    """
+    c = jnp.asarray(counter, jnp.uint32)
+    b1 = hash_u32(c * jnp.uint32(2) + jnp.uint32(1) ^ seed0)
+    b2 = hash_u32(c * jnp.uint32(2) ^ seed1)
+    u1 = _uniform01(b1)
+    u2 = _uniform01(b2)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(_TWO_PI * u2)
+
+
+def _agn_kernel(y_ref, scale_ref, seed_ref, o_ref, *, bm: int, n: int):
+    """One grid step over rows: o = y + scale * q(seed, element index)."""
+    i = pl.program_id(0)
+    base = i.astype(jnp.uint32) * jnp.uint32(bm * n)
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (bm, n), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (bm, n), 1)
+    counter = base + rows * jnp.uint32(n) + cols
+    q = normal_from_counter(counter, seed_ref[0], seed_ref[1])
+    o_ref[...] = y_ref[...] + scale_ref[0] * q
+
+
+def _counter_normal_full(shape, seed):
+    """Noise tensor as the kernel generates it (flat row-major counters)."""
+    m, n = shape
+    seed = jnp.asarray(seed, jnp.uint32).reshape(2)
+    counter = jnp.arange(m * n, dtype=jnp.uint32).reshape(m, n)
+    return normal_from_counter(counter, seed[0], seed[1])
+
+
+@jax.custom_vjp
+def agn_inject(y, scale, seed):
+    """Differentiable AGN injection: y + scale * q(seed).
+
+    Forward runs the Pallas kernel; backward is the analytic paper Eq. 9:
+    dL/dy = g, dL/dscale = <g, q> with q regenerated from the counter PRNG
+    (cheaper than saving the noise tensor as a residual).
+    """
+    return _agn_inject_impl(y, scale, seed)
+
+
+def _agn_fwd(y, scale, seed):
+    return _agn_inject_impl(y, scale, seed), (y.shape, seed)
+
+
+def _agn_bwd(res, g):
+    shape, seed = res
+    q = _counter_normal_full(shape, seed)
+    return g, jnp.sum(g * q), None
+
+
+agn_inject.defvjp(_agn_fwd, _agn_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def _agn_inject_impl(y, scale, seed, *, bm: int = 1024):
+    """Perturb ``y`` (f32[M, N]) with AGN of std ``scale`` (f32 scalar).
+
+    ``scale`` is ``sigma_l * sigma(y_batch)`` computed by the caller; ``seed``
+    is u32[2]. Grid iterates over row blocks only (the kernel is elementwise,
+    so a [bm, N] block keeps the interpret-mode grid short while a real-TPU
+    build would simply pick bm for VMEM residency).
+    """
+    m0, n = y.shape
+    pad = (-m0) % bm
+    if pad:
+        y = jnp.pad(y, ((0, pad), (0, 0)))
+    m = y.shape[0]
+    scale_v = jnp.reshape(jnp.asarray(scale, jnp.float32), (1,))
+    seed_v = jnp.asarray(seed, jnp.uint32).reshape(2)
+    out = pl.pallas_call(
+        functools.partial(_agn_kernel, bm=bm, n=n),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY)
+            if hasattr(pl, "ANY")
+            else pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pl.ANY)
+            if hasattr(pl, "ANY")
+            else pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(y, scale_v, seed_v)
+    return out[:m0]

@@ -1,0 +1,94 @@
+"""Behavioral simulation of approximate multipliers as a Pallas LUT matmul.
+
+This is the role TFApprox/ProxSim play in the original (GPU) toolchain: an
+int8 matmul whose per-element product is replaced by a lookup in the
+multiplier's full 256x256 product table.
+
+TPU mapping (DESIGN.md §Hardware adaptation): the table (256 KiB as i32) is
+small enough to stay resident in VMEM for the whole kernel, next to the
+streamed operand tiles — the moral equivalent of the CUDA texture cache the
+GPU implementation relies on. The lookup is a vectorized gather on the
+flattened table; accumulation is exact i32 so the behavioral semantics match
+the native Rust simulator bit-for-bit.
+
+LUT convention (shared with rust/src/multipliers/ and simulator/):
+    lut[a * 256 + b] = approx_product(x = a, w = b - 128)
+with activation codes a in [0, 255] (unsigned, post-ReLU activations) and
+weight codes w in [-128, 127] stored offset-by-128. The table contains the
+*full approximate product* (exact product + multiplier error), so the same
+kernel serves any multiplier — the hardware instance is data, not code.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LUT_SIDE = 256
+LUT_SIZE = LUT_SIDE * LUT_SIDE
+
+
+def _approx_kernel(xq_ref, wq_ref, lut_ref, o_ref, *, n_k: int):
+    """One (m, n, k) grid step: o += gather(lut, xq_tile x wq_tile).sum(k).
+
+    xq tile: i32[bm, bk] activation codes in [0, 255].
+    wq tile: i32[bk, bn] offset weight codes in [0, 255].
+    The [bm, bk, bn] index cube is the VMEM-bounding term; block shapes are
+    chosen so bm*bk*bn*4 bytes stays far below the VMEM budget.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = xq_ref[...][:, :, None] * LUT_SIDE + wq_ref[...][None, :, :]
+    prod = jnp.take(lut_ref[...], idx.reshape(-1), axis=0).reshape(idx.shape)
+    o_ref[...] += jnp.sum(prod, axis=1, dtype=jnp.int32)
+
+
+def _pad_to(x, m, axis, value=0):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def approx_matmul_lut(xq, wq_off, lut, *, bm: int = 256, bk: int = 64, bn: int = 32):
+    """Approximate int8 matmul: i32[M, N] accumulator of lut lookups.
+
+    xq:     i32[M, K] activation codes in [0, 255].
+    wq_off: i32[K, N] weight codes + 128, in [0, 255].
+    lut:    i32[65536] full product table of the simulated multiplier.
+
+    Padding uses activation code 0 and weight code 128 (= weight 0); the LUT
+    is required to map both to a zero product (true for every multiplier in
+    the catalog — checked by `rust/src/multipliers/` tests — and asserted by
+    the pytest oracle), so padded cells contribute nothing.
+    """
+    m0, k0 = xq.shape
+    k0w, n0 = wq_off.shape
+    assert k0 == k0w, f"inner dims mismatch: {xq.shape} @ {wq_off.shape}"
+    xq = _pad_to(_pad_to(xq, bm, 0), bk, 1)
+    wq_off = _pad_to(_pad_to(wq_off, bk, 0, value=128), bn, 1, value=128)
+    m, k = xq.shape
+    n = wq_off.shape[1]
+    grid = (m // bm, n // bn, k // bk)
+    out = pl.pallas_call(
+        functools.partial(_approx_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            # Full table every step: resident in VMEM on TPU.
+            pl.BlockSpec((LUT_SIZE,), lambda i, j, l: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(xq, wq_off, lut)
+    return out[:m0, :n0]

@@ -1,0 +1,111 @@
+"""8-bit fake-quantization kernels + STE wrappers.
+
+Quantization grids (shared with rust/src/quant/):
+  * activations: unsigned, code = round(x / s_x) clipped to [0, 255],
+    s_x = absmax / 255. All approximable layers see post-ReLU (non-negative)
+    inputs by construction of the model zoo, so the unsigned grid loses
+    nothing and matches the unsigned EvoApprox-style multiplier catalog.
+  * weights: signed, code = round(w / s_w) clipped to [-127, 127],
+    s_w = absmax / 127 (symmetric; -128 unused, sign-magnitude friendly).
+
+During QAT/gradient-search the scales are *dynamic* (per-batch absmax);
+deployment freezes the activation scales via the `calibrate` program
+(DESIGN.md §Key design decisions).
+
+The rounding core is a Pallas kernel; the straight-through estimator lives
+in the `custom_vjp` wrappers so the backward pass is the identity on the
+clipped region, as in standard QAT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACT_LEVELS = 255.0
+WEIGHT_LEVELS = 127.0
+_EPS = 1e-8
+
+
+def _round_clip_kernel(x_ref, s_ref, o_ref, *, lo: float, hi: float):
+    """o = clip(round(x / s), lo, hi) * s — one elementwise block."""
+    s = s_ref[0]
+    q = jnp.clip(jnp.round(x_ref[...] / s), lo, hi)
+    o_ref[...] = q * s
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "bm"))
+def _round_clip(x, s, *, lo: float, hi: float, bm: int = 4096):
+    flat = x.reshape(-1)
+    m0 = flat.shape[0]
+    pad = (-m0) % bm
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    s_v = jnp.reshape(jnp.asarray(s, jnp.float32), (1,))
+    out = pl.pallas_call(
+        functools.partial(_round_clip_kernel, lo=lo, hi=hi),
+        grid=(flat.shape[0] // bm,),
+        in_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, s_v)
+    return out[:m0].reshape(x.shape)
+
+
+@jax.custom_vjp
+def fake_quant_act(x, s):
+    """Fake-quantize activations onto the unsigned 8-bit grid with scale s."""
+    return _round_clip(x, s, lo=0.0, hi=ACT_LEVELS)
+
+
+def _fq_act_fwd(x, s):
+    return fake_quant_act(x, s), None
+
+
+def _fq_act_bwd(_, g):
+    return g, None  # STE: identity gradient to x, none to the scale
+
+
+fake_quant_act.defvjp(_fq_act_fwd, _fq_act_bwd)
+
+
+@jax.custom_vjp
+def fake_quant_weight(w, s):
+    """Fake-quantize weights onto the signed symmetric 8-bit grid."""
+    return _round_clip(w, s, lo=-WEIGHT_LEVELS, hi=WEIGHT_LEVELS)
+
+
+def _fq_w_fwd(w, s):
+    return fake_quant_weight(w, s), None
+
+
+def _fq_w_bwd(_, g):
+    return g, None
+
+
+fake_quant_weight.defvjp(_fq_w_fwd, _fq_w_bwd)
+
+
+def act_scale(x):
+    """Dynamic activation scale: absmax / 255 (floored away from zero)."""
+    return jnp.maximum(jnp.max(jnp.abs(x)), _EPS) / ACT_LEVELS
+
+
+def weight_scale(w):
+    """Weight scale: absmax / 127 (floored away from zero)."""
+    return jnp.maximum(jnp.max(jnp.abs(w)), _EPS) / WEIGHT_LEVELS
+
+
+def quantize_act(x, s):
+    """Integer activation codes i32 in [0, 255] (no dequant)."""
+    return jnp.clip(jnp.round(x / s), 0.0, ACT_LEVELS).astype(jnp.int32)
+
+
+def quantize_weight(w, s):
+    """Integer weight codes i32 in [-127, 127] (no dequant)."""
+    return jnp.clip(jnp.round(w / s), -WEIGHT_LEVELS, WEIGHT_LEVELS).astype(jnp.int32)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel must match its oracle
+(pytest + hypothesis sweep shapes, seeds and tables). They are deliberately
+written in the most direct jnp form, with none of the tiling/padding of the
+kernels.
+"""
+
+import jax.numpy as jnp
+
+from .agn import normal_from_counter
+from .approx_lut import LUT_SIDE
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def agn_inject_ref(y, scale, seed):
+    """y + scale * q with q regenerated from the same counter PRNG.
+
+    The oracle reproduces the *exact* noise stream (hash + Box-Muller over
+    the flat element index) so kernel vs oracle is an equality check, not a
+    distribution test. Distributional sanity of the PRNG itself is covered
+    by dedicated tests.
+    """
+    seed = jnp.asarray(seed, jnp.uint32).reshape(2)
+    m, n = y.shape
+    counter = jnp.arange(m * n, dtype=jnp.uint32).reshape(m, n)
+    q = normal_from_counter(counter, seed[0], seed[1])
+    return y + jnp.asarray(scale, jnp.float32) * q
+
+
+def approx_matmul_lut_ref(xq, wq_off, lut):
+    """Gather-everything reference of the LUT matmul (no tiling).
+
+    Builds the full [M, K, N] index cube; only usable for small shapes,
+    which is exactly what the tests need.
+    """
+    idx = xq[:, :, None] * LUT_SIDE + wq_off[None, :, :]
+    return jnp.take(lut, idx.reshape(-1), axis=0).reshape(idx.shape).sum(
+        axis=1, dtype=jnp.int32
+    )
+
+
+def exact_lut(act_signed: bool = False):
+    """Product table of the exact 8x8 multiplier under the LUT convention.
+
+    Row = activation code: raw value on the unsigned grid, value+128 on the
+    signed grid. Column = weight code + 128 (always signed symmetric).
+    """
+    a = jnp.arange(LUT_SIDE, dtype=jnp.int32)[:, None]
+    if act_signed:
+        a = a - 128
+    b = jnp.arange(LUT_SIDE, dtype=jnp.int32)[None, :] - 128
+    return (a * b).reshape(-1)
+
+
+def fake_quant_act_ref(x, s):
+    return jnp.clip(jnp.round(x / s), 0.0, 255.0) * s
+
+
+def fake_quant_weight_ref(w, s):
+    return jnp.clip(jnp.round(w / s), -127.0, 127.0) * s

@@ -1,0 +1,322 @@
+"""Layer-2 building blocks: quantization-aware layers with AGN / behavioral
+approximation modes.
+
+Every approximable layer (conv / depthwise-conv / fc) is registered on a
+`Tape` at model-build time, which records the static facts the Rust
+coordinator needs (fan-in, multiplication count, operand grid, parameter
+offsets). At apply time a `Ctx` selects the mode:
+
+  * ``qat``     — fake-quantized forward (dynamic per-batch scales), STE.
+  * ``agn``     — qat forward + learnable AGN on the pre-activation output
+                  (paper Eq. 7); noise magnitude ``sigmas[i] * std(y)``.
+  * ``approx``  — behavioral simulation: integer codes through the Pallas
+                  LUT kernel (frozen activation scales), STE backward
+                  through the qat forward.
+  * ``calib``   — qat forward, additionally records per-layer activation
+                  absmax and pre-activation batch std.
+
+Convolutions are expressed as im2col + matmul so the exact same operand
+stream feeds the LUT kernel, the AGN model and the native Rust simulator
+(`rust/src/simulator/` mirrors the slice ordering bit-for-bit).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import agn as agn_k
+from .kernels import approx_lut as lut_k
+from .kernels import matmul as matmul_k
+from .kernels import quant as quant_k
+
+_BN_EPS = 1e-5
+
+
+class Tape:
+    """Static registry of approximable layers, built once per model."""
+
+    def __init__(self):
+        self.layers = []
+
+    def register(self, **info):
+        self.layers.append(info)
+        return len(self.layers) - 1
+
+    def __len__(self):
+        return len(self.layers)
+
+    def mult_counts(self):
+        return [l["mults_per_image"] for l in self.layers]
+
+    def relative_costs(self):
+        """c_l = c(l) / sum c(l) — Eq. 10's relative layer cost."""
+        counts = jnp.asarray(self.mult_counts(), jnp.float32)
+        return counts / jnp.sum(counts)
+
+
+class Ctx:
+    """Per-apply dynamic context (mode, noise params, LUTs, stat sinks)."""
+
+    def __init__(
+        self,
+        mode: str,
+        sigmas=None,
+        seed=None,
+        luts=None,
+        act_scales=None,
+        use_pallas_matmul: bool = False,
+    ):
+        assert mode in ("qat", "agn", "approx", "calib")
+        self.mode = mode
+        self.sigmas = sigmas
+        self.seed = seed
+        self.luts = luts
+        self.act_scales = act_scales
+        self.use_pallas_matmul = use_pallas_matmul
+        self.layer_idx = 0
+        self.stat_absmax = []
+        self.stat_ystd = []
+
+    def next_layer(self):
+        i = self.layer_idx
+        self.layer_idx = i + 1
+        return i
+
+    def layer_seed(self, i):
+        """Derive a per-layer seed so layers draw independent noise."""
+        s = jnp.asarray(self.seed, jnp.uint32).reshape(2)
+        mix = agn_k.hash_u32(s[0] + jnp.uint32(0x9E3779B9) * jnp.uint32(i + 1))
+        return jnp.stack([mix, s[1] ^ jnp.uint32(i * 2654435761 & 0xFFFFFFFF)])
+
+
+# ---------------------------------------------------------------------------
+# im2col
+
+
+def im2col(x, kh: int, kw: int, stride: int, pad: int):
+    """x: f32[B, H, W, C] -> patches f32[B, H', W', kh*kw*C].
+
+    Feature ordering is (ki, kj, c) — ki-major — matching both the
+    [kh, kw, cin, cout] weight reshape and the Rust simulator.
+    """
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kh) // stride + 1
+    wo = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for ki in range(kh):
+        for kj in range(kw):
+            cols.append(
+                x[:, ki : ki + stride * ho : stride, kj : kj + stride * wo : stride, :]
+            )
+    return jnp.concatenate(cols, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# quant helpers shared by conv/fc
+
+
+def _operand_scales(x2d, w2d, ctx, idx, act_signed):
+    if ctx.mode == "approx":
+        s_x = ctx.act_scales[idx]
+    else:
+        levels = 127.0 if act_signed else 255.0
+        s_x = jnp.maximum(jnp.max(jnp.abs(x2d)), 1e-8) / levels
+    s_w = quant_k.weight_scale(w2d)
+    return s_x, s_w
+
+
+def _fq_act(x, s, act_signed):
+    if act_signed:
+        # signed activation grid [-128, 127]
+        return jnp.clip(jnp.round(x / s), -128.0, 127.0) * s
+    return quant_k.fake_quant_act(x, s)
+
+
+def _q_act_codes(x, s, act_signed):
+    if act_signed:
+        return jnp.clip(jnp.round(x / s), -128.0, 127.0).astype(jnp.int32) + 128
+    return quant_k.quantize_act(x, s)
+
+
+def _approx_forward(x2d, w2d, s_x, s_w, lut, ctx, act_signed, bm=256, bk=64, bn=32):
+    """Behavioral LUT forward with STE backward through the fake-quant path."""
+    xq = _q_act_codes(x2d, s_x, act_signed)  # row codes in [0, 255]
+    wq_off = quant_k.quantize_weight(w2d, s_w) + 128  # col codes in [0, 255]
+    acc = lut_k.approx_matmul_lut(xq, wq_off, lut, bm=bm, bk=bk, bn=bn)
+    y_approx = acc.astype(jnp.float32) * (s_x * s_w)
+    # STE: forward value is the behavioral result, gradient flows through the
+    # fake-quantized exact matmul (paper §4.2: STE for AM retraining).
+    xf = _fq_act(x2d, s_x, act_signed)
+    wf = quant_k.fake_quant_weight(w2d, s_w)
+    y_exact = jnp.dot(xf, wf, preferred_element_type=jnp.float32)
+    return y_exact + jax.lax.stop_gradient(y_approx - y_exact)
+
+
+def _qat_forward(x2d, w2d, s_x, s_w, ctx, act_signed):
+    xf = _fq_act(x2d, s_x, act_signed)
+    wf = quant_k.fake_quant_weight(w2d, s_w)
+    if ctx.use_pallas_matmul:
+        return matmul_k.matmul_pallas(xf, wf)
+    return jnp.dot(xf, wf, preferred_element_type=jnp.float32)
+
+
+def _maybe_agn(y2d, ctx, idx):
+    """Paper Eq. 7 on the flattened pre-activation output."""
+    if ctx.mode != "agn":
+        return y2d
+    scale = ctx.sigmas[idx] * jnp.std(y2d)
+    return agn_k.agn_inject(y2d, scale, ctx.layer_seed(idx))
+
+
+def _record_stats(ctx, x2d, y2d, act_signed):
+    if ctx.mode == "calib":
+        ctx.stat_absmax.append(jnp.max(jnp.abs(x2d)))
+        ctx.stat_ystd.append(jnp.std(y2d))
+
+
+# ---------------------------------------------------------------------------
+# layers
+
+
+def init_conv(key, cin, cout, k, *, bn=True, bias=False):
+    fan_in = k * k * cin
+    std = (2.0 / fan_in) ** 0.5
+    p = {"w": jax.random.normal(key, (k, k, cin, cout), jnp.float32) * std}
+    if bn:
+        p["gamma"] = jnp.ones((cout,), jnp.float32)
+        p["beta"] = jnp.zeros((cout,), jnp.float32)
+    if bias:
+        p["b"] = jnp.zeros((cout,), jnp.float32)
+    return p
+
+
+def conv2d(params, x, *, stride, pad, ctx, tape_idx, act_signed=False):
+    """Quantized conv via im2col; returns pre-BN, pre-activation output."""
+    b, h, w, c = x.shape
+    kh, kw, cin, cout = params["w"].shape
+    patches = im2col(x, kh, kw, stride, pad)
+    ho, wo = patches.shape[1], patches.shape[2]
+    x2d = patches.reshape(b * ho * wo, kh * kw * cin)
+    w2d = params["w"].reshape(kh * kw * cin, cout)
+    s_x, s_w = _operand_scales(x2d, w2d, ctx, tape_idx, act_signed)
+    if ctx.mode == "approx":
+        y2d = _approx_forward(x2d, w2d, s_x, s_w, ctx.luts[tape_idx], ctx, act_signed)
+    else:
+        y2d = _qat_forward(x2d, w2d, s_x, s_w, ctx, act_signed)
+    _record_stats(ctx, x2d, y2d, act_signed)
+    y2d = _maybe_agn(y2d, ctx, tape_idx)
+    y = y2d.reshape(b, ho, wo, cout)
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_dwconv(key, c, k, *, bn=True):
+    std = (2.0 / (k * k)) ** 0.5
+    p = {"w": jax.random.normal(key, (k, k, c), jnp.float32) * std}
+    if bn:
+        p["gamma"] = jnp.ones((c,), jnp.float32)
+        p["beta"] = jnp.zeros((c,), jnp.float32)
+    return p
+
+
+def dwconv2d(params, x, *, stride, pad, ctx, tape_idx, act_signed=False):
+    """Depthwise conv: fan-in k*k (the paper's low-fan-in caveat, §3.3).
+
+    Behavioral mode does a per-tap LUT gather (K is tiny, so the matmul
+    kernel's tiling buys nothing here).
+    """
+    b, h, w, c = x.shape
+    kh, kw, cw = params["w"].shape
+    patches = im2col(x, kh, kw, stride, pad)  # [B, H', W', kh*kw*C]
+    ho, wo = patches.shape[1], patches.shape[2]
+    pt = patches.reshape(b, ho, wo, kh * kw, c)
+    wt = params["w"].reshape(kh * kw, c)
+    flat_x = pt.reshape(-1, kh * kw, c)
+    s_x, s_w = _operand_scales(flat_x, wt, ctx, tape_idx, act_signed)
+    if ctx.mode == "approx":
+        xq = _q_act_codes(flat_x, s_x, act_signed)
+        wq_off = quant_k.quantize_weight(wt, s_w) + 128
+        idx = xq * lut_k.LUT_SIDE + wq_off[None, :, :]
+        prod = jnp.take(ctx.luts[tape_idx], idx.reshape(-1), axis=0).reshape(idx.shape)
+        y_approx = prod.sum(axis=1, dtype=jnp.int32).astype(jnp.float32) * (s_x * s_w)
+        xf = _fq_act(flat_x, s_x, act_signed)
+        wf = quant_k.fake_quant_weight(wt, s_w)
+        y_exact = jnp.sum(xf * wf[None, :, :], axis=1)
+        y2d = y_exact + jax.lax.stop_gradient(y_approx - y_exact)
+    else:
+        xf = _fq_act(flat_x, s_x, act_signed)
+        wf = quant_k.fake_quant_weight(wt, s_w)
+        y2d = jnp.sum(xf * wf[None, :, :], axis=1)
+    _record_stats(ctx, flat_x, y2d, act_signed)
+    y2d = _maybe_agn(y2d, ctx, tape_idx)
+    return y2d.reshape(b, ho, wo, c)
+
+
+def init_fc(key, cin, cout, *, bias=True):
+    std = (2.0 / cin) ** 0.5
+    p = {"w": jax.random.normal(key, (cin, cout), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((cout,), jnp.float32)
+    return p
+
+
+def fc(params, x, *, ctx, tape_idx, act_signed=False):
+    s_x, s_w = _operand_scales(x, params["w"], ctx, tape_idx, act_signed)
+    if ctx.mode == "approx":
+        y = _approx_forward(x, params["w"], s_x, s_w, ctx.luts[tape_idx], ctx, act_signed)
+    else:
+        y = _qat_forward(x, params["w"], s_x, s_w, ctx, act_signed)
+    _record_stats(ctx, x, y, act_signed)
+    y = _maybe_agn(y, ctx, tape_idx)
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# non-approximable ops
+
+
+def batchnorm(params, x):
+    """Batch-statistics BN (training semantics everywhere; see DESIGN.md)."""
+    axes = tuple(range(x.ndim - 1))
+    mean = jnp.mean(x, axis=axes)
+    var = jnp.var(x, axis=axes)
+    inv = params["gamma"] / jnp.sqrt(var + _BN_EPS)
+    return (x - mean) * inv + params["beta"]
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def avg_pool(x, k: int, stride: int):
+    b, h, w, c = x.shape
+    ho, wo = (h - k) // stride + 1, (w - k) // stride + 1
+    acc = jnp.zeros((b, ho, wo, c), jnp.float32)
+    for ki in range(k):
+        for kj in range(k):
+            acc = acc + x[:, ki : ki + stride * ho : stride, kj : kj + stride * wo : stride, :]
+    return acc / (k * k)
+
+
+def max_pool(x, k: int, stride: int):
+    b, h, w, c = x.shape
+    ho, wo = (h - k) // stride + 1, (w - k) // stride + 1
+    out = jnp.full((b, ho, wo, c), -jnp.inf, jnp.float32)
+    for ki in range(k):
+        for kj in range(k):
+            out = jnp.maximum(
+                out, x[:, ki : ki + stride * ho : stride, kj : kj + stride * wo : stride, :]
+            )
+    return out
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(1, 2))

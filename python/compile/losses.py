@@ -1,0 +1,42 @@
+"""Task loss + the paper's noise loss (Eq. 10/11)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def correct_count(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def topk_correct_count(logits, labels, k: int = 5):
+    """Top-k correct count (paper reports Top-5 for Tiny ImageNet).
+
+    Formulated as a rank test (count of strictly-larger logits < k) instead
+    of `jax.lax.top_k`: the TopK HLO op is newer than the xla_extension
+    0.5.1 text parser the Rust runtime links against.
+    """
+    label_logit = jnp.take_along_axis(logits, labels[:, None], axis=-1)
+    rank = jnp.sum((logits > label_logit).astype(jnp.int32), axis=-1)
+    return jnp.sum((rank < k).astype(jnp.float32))
+
+
+def noise_loss(sigmas, rel_costs, sigma_max):
+    """Paper Eq. 10: L_N = -sum_l min(|sigma_l|, sigma_max) * c_l.
+
+    The gradient w.r.t. sigma_l is -c_l inside the cap and 0 outside
+    (Eq. 12), which jnp.minimum's subgradient provides for free.
+    """
+    capped = jnp.minimum(jnp.abs(sigmas), sigma_max)
+    return -jnp.sum(capped * rel_costs)
+
+
+def total_loss(task, noise, lam):
+    """Paper Eq. 11: L = L_T + lambda * L_N."""
+    return task + lam * noise

@@ -1,0 +1,416 @@
+"""Model zoo (L2): QAT CNNs over the approximable layer primitives.
+
+Each `ModelDef` carries:
+  * ``init(key)``            — parameter pytree
+  * ``apply(params, x, ctx)``— logits, mode-dependent (see layers.Ctx)
+  * ``tape``                 — static registry of approximable layers
+  * metadata used by aot.py to emit the Rust-facing manifest
+
+Architectures (paper §4.2/§4.3, scaled per DESIGN.md §Substitutions):
+  * tinynet             — 3-layer test model (fast artifact for CI/tests)
+  * resnet8/14/20/32    — CIFAR-style 6n+2 ResNet, stages 16/32/64
+  * vgg16               — VGG16+BN, width-scaled
+  * alexnet             — 5 conv + 3 fc, width-scaled
+  * mobilenetv2         — inverted residuals (depthwise = low fan-in case;
+                          expansion convs consume signed activations)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+class ModelDef:
+    def __init__(self, name, init, apply, tape, input_shape, classes):
+        self.name = name
+        self.init = init
+        self.apply = apply
+        self.tape = tape
+        self.input_shape = input_shape  # (H, W, C)
+        self.classes = classes
+
+
+def _conv_out(h, k, s, p):
+    return (h + 2 * p - k) // s + 1
+
+
+def _reg_conv(tape, name, cin, cout, k, stride, pad, h, w, act_signed=False):
+    ho, wo = _conv_out(h, k, stride, pad), _conv_out(w, k, stride, pad)
+    idx = tape.register(
+        name=name,
+        kind="conv",
+        cin=cin,
+        cout=cout,
+        k=k,
+        stride=stride,
+        pad=pad,
+        in_hw=[h, w],
+        out_hw=[ho, wo],
+        fan_in=k * k * cin,
+        mults_per_image=ho * wo * k * k * cin * cout,
+        act_signed=act_signed,
+    )
+    return idx, ho, wo
+
+
+def _reg_dwconv(tape, name, c, k, stride, pad, h, w, act_signed=False):
+    ho, wo = _conv_out(h, k, stride, pad), _conv_out(w, k, stride, pad)
+    idx = tape.register(
+        name=name,
+        kind="dwconv",
+        cin=c,
+        cout=c,
+        k=k,
+        stride=stride,
+        pad=pad,
+        in_hw=[h, w],
+        out_hw=[ho, wo],
+        fan_in=k * k,
+        mults_per_image=ho * wo * k * k * c,
+        act_signed=act_signed,
+    )
+    return idx, ho, wo
+
+
+def _reg_fc(tape, name, cin, cout, act_signed=False):
+    return tape.register(
+        name=name,
+        kind="fc",
+        cin=cin,
+        cout=cout,
+        k=1,
+        stride=1,
+        pad=0,
+        in_hw=[1, 1],
+        out_hw=[1, 1],
+        fan_in=cin,
+        mults_per_image=cin * cout,
+        act_signed=act_signed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# TinyNet
+
+
+def tinynet(hw=(8, 8), classes=10, width=1.0, act_signed=False):
+    h, w = hw
+    c1, c2 = max(4, int(8 * width)), max(8, int(16 * width))
+    tape = L.Tape()
+    i0, h1, w1 = _reg_conv(tape, "conv0", 3, c1, 3, 1, 1, h, w, act_signed)
+    i1, h2, w2 = _reg_conv(tape, "conv1", c1, c2, 3, 2, 1, h1, w1, act_signed)
+    i2 = _reg_fc(tape, "fc", c2, classes, act_signed)
+
+    def init(key):
+        k = jax.random.split(key, 3)
+        return {
+            "conv0": L.init_conv(k[0], 3, c1, 3),
+            "conv1": L.init_conv(k[1], c1, c2, 3),
+            "fc": L.init_fc(k[2], c2, classes),
+        }
+
+    def apply(params, x, ctx):
+        y = L.conv2d(params["conv0"], x, stride=1, pad=1, ctx=ctx, tape_idx=i0, act_signed=act_signed)
+        y = L.relu(L.batchnorm(params["conv0"], y))
+        y = L.conv2d(params["conv1"], y, stride=2, pad=1, ctx=ctx, tape_idx=i1, act_signed=act_signed)
+        y = L.relu(L.batchnorm(params["conv1"], y))
+        y = L.global_avg_pool(y)
+        return L.fc(params["fc"], y, ctx=ctx, tape_idx=i2, act_signed=act_signed)
+
+    return ModelDef("tinynet", init, apply, tape, (h, w, 3), classes)
+
+
+# ---------------------------------------------------------------------------
+# CIFAR ResNet (6n+2): conv1 + 3 stages x n blocks x 2 convs + fc
+
+
+def resnet(n: int, hw=(32, 32), classes=10, width=1.0, act_signed=False):
+    h, w = hw
+    widths = [max(4, int(c * width)) for c in (16, 32, 64)]
+    tape = L.Tape()
+    spec = []  # (kind, name, meta) in apply order
+
+    i0, ch, cw = _reg_conv(tape, "conv0", 3, widths[0], 3, 1, 1, h, w, act_signed)
+    spec.append(("stem", "conv0", i0))
+    cin = widths[0]
+    for s, cout in enumerate(widths):
+        for b in range(n):
+            stride = 2 if (s > 0 and b == 0) else 1
+            base = f"s{s}b{b}"
+            ia, ch2, cw2 = _reg_conv(tape, base + "_conv1", cin, cout, 3, stride, 1, ch, cw, act_signed)
+            ib, _, _ = _reg_conv(tape, base + "_conv2", cout, cout, 3, 1, 1, ch2, cw2, act_signed)
+            ishort = None
+            if stride != 1 or cin != cout:
+                ishort, _, _ = _reg_conv(tape, base + "_short", cin, cout, 1, stride, 0, ch, cw, act_signed)
+            spec.append(("block", base, (ia, ib, ishort, cin, cout, stride)))
+            ch, cw = ch2, cw2
+            cin = cout
+    ifc = _reg_fc(tape, "fc", widths[2], classes, act_signed)
+    spec.append(("fc", "fc", ifc))
+
+    def init(key):
+        params = {}
+        keys = iter(jax.random.split(key, 4 * len(tape.layers) + 4))
+        params["conv0"] = L.init_conv(next(keys), 3, widths[0], 3)
+        c_in = widths[0]
+        for s, cout in enumerate(widths):
+            for b in range(n):
+                stride = 2 if (s > 0 and b == 0) else 1
+                base = f"s{s}b{b}"
+                params[base + "_conv1"] = L.init_conv(next(keys), c_in, cout, 3)
+                params[base + "_conv2"] = L.init_conv(next(keys), cout, cout, 3)
+                if stride != 1 or c_in != cout:
+                    params[base + "_short"] = L.init_conv(next(keys), c_in, cout, 1)
+                c_in = cout
+        params["fc"] = L.init_fc(next(keys), widths[2], classes)
+        return params
+
+    def apply(params, x, ctx):
+        y = L.conv2d(params["conv0"], x, stride=1, pad=1, ctx=ctx, tape_idx=i0, act_signed=act_signed)
+        y = L.relu(L.batchnorm(params["conv0"], y))
+        for kind, base, meta in spec:
+            if kind != "block":
+                continue
+            ia, ib, ishort, c_in, cout, stride = meta
+            z = L.conv2d(params[base + "_conv1"], y, stride=stride, pad=1, ctx=ctx, tape_idx=ia, act_signed=act_signed)
+            z = L.relu(L.batchnorm(params[base + "_conv1"], z))
+            z = L.conv2d(params[base + "_conv2"], z, stride=1, pad=1, ctx=ctx, tape_idx=ib, act_signed=act_signed)
+            z = L.batchnorm(params[base + "_conv2"], z)
+            if ishort is not None:
+                sc = L.conv2d(params[base + "_short"], y, stride=stride, pad=0, ctx=ctx, tape_idx=ishort, act_signed=act_signed)
+                sc = L.batchnorm(params[base + "_short"], sc)
+            else:
+                sc = y
+            y = L.relu(z + sc)
+        y = L.global_avg_pool(y)
+        return L.fc(params["fc"], y, ctx=ctx, tape_idx=ifc, act_signed=act_signed)
+
+    return ModelDef(f"resnet{6 * n + 2}", init, apply, tape, (h, w, 3), classes)
+
+
+# ---------------------------------------------------------------------------
+# VGG16 (+BN), width-scaled
+
+
+_VGG16_CFG = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M", 512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def vgg16(hw=(32, 32), classes=20, width=0.25, act_signed=False):
+    h, w = hw
+    tape = L.Tape()
+    convs = []
+    cin, ch, cw = 3, h, w
+    ci = 0
+    for v in _VGG16_CFG:
+        if v == "M":
+            convs.append(("M", None, None))
+            ch, cw = ch // 2, cw // 2
+            continue
+        cout = max(8, int(v * width))
+        idx, ch, cw = _reg_conv(tape, f"conv{ci}", cin, cout, 3, 1, 1, ch, cw, act_signed)
+        convs.append(("C", f"conv{ci}", (idx, cin, cout)))
+        cin = cout
+        ci += 1
+    feat = cin * ch * cw
+    fdim = max(32, int(256 * width * 2))
+    ifc1 = _reg_fc(tape, "fc1", feat, fdim, act_signed)
+    ifc2 = _reg_fc(tape, "fc2", fdim, fdim, act_signed)
+    ifc3 = _reg_fc(tape, "fc3", fdim, classes, act_signed)
+
+    def init(key):
+        params = {}
+        keys = iter(jax.random.split(key, len(tape.layers) + 2))
+        for kind, name, meta in convs:
+            if kind == "C":
+                _, c_in, c_out = meta
+                params[name] = L.init_conv(next(keys), c_in, c_out, 3)
+        params["fc1"] = L.init_fc(next(keys), feat, fdim)
+        params["fc2"] = L.init_fc(next(keys), fdim, fdim)
+        params["fc3"] = L.init_fc(next(keys), fdim, classes)
+        return params
+
+    def apply(params, x, ctx):
+        y = x
+        for kind, name, meta in convs:
+            if kind == "M":
+                y = L.max_pool(y, 2, 2)
+            else:
+                idx, _, _ = meta
+                y = L.conv2d(params[name], y, stride=1, pad=1, ctx=ctx, tape_idx=idx, act_signed=act_signed)
+                y = L.relu(L.batchnorm(params[name], y))
+        y = y.reshape(y.shape[0], -1)
+        y = L.relu(L.fc(params["fc1"], y, ctx=ctx, tape_idx=ifc1, act_signed=act_signed))
+        y = L.relu(L.fc(params["fc2"], y, ctx=ctx, tape_idx=ifc2, act_signed=act_signed))
+        return L.fc(params["fc3"], y, ctx=ctx, tape_idx=ifc3, act_signed=act_signed)
+
+    return ModelDef("vgg16", init, apply, tape, (h, w, 3), classes)
+
+
+# ---------------------------------------------------------------------------
+# AlexNet (CIFAR-scaled)
+
+
+def alexnet(hw=(32, 32), classes=10, width=0.5, act_signed=False):
+    h, w = hw
+    cs = [max(8, int(c * width)) for c in (64, 192, 384, 256, 256)]
+    tape = L.Tape()
+    i0, h1, w1 = _reg_conv(tape, "conv0", 3, cs[0], 3, 1, 1, h, w, act_signed)
+    h1, w1 = h1 // 2, w1 // 2  # maxpool
+    i1, h2, w2 = _reg_conv(tape, "conv1", cs[0], cs[1], 3, 1, 1, h1, w1, act_signed)
+    h2, w2 = h2 // 2, w2 // 2
+    i2, h3, w3 = _reg_conv(tape, "conv2", cs[1], cs[2], 3, 1, 1, h2, w2, act_signed)
+    i3, h4, w4 = _reg_conv(tape, "conv3", cs[2], cs[3], 3, 1, 1, h3, w3, act_signed)
+    i4, h5, w5 = _reg_conv(tape, "conv4", cs[3], cs[4], 3, 1, 1, h4, w4, act_signed)
+    h5, w5 = h5 // 2, w5 // 2
+    feat = cs[4] * h5 * w5
+    fdim = max(64, int(512 * width))
+    if1 = _reg_fc(tape, "fc1", feat, fdim, act_signed)
+    if2 = _reg_fc(tape, "fc2", fdim, fdim, act_signed)
+    if3 = _reg_fc(tape, "fc3", fdim, classes, act_signed)
+
+    def init(key):
+        k = iter(jax.random.split(key, 9))
+        return {
+            "conv0": L.init_conv(next(k), 3, cs[0], 3),
+            "conv1": L.init_conv(next(k), cs[0], cs[1], 3),
+            "conv2": L.init_conv(next(k), cs[1], cs[2], 3),
+            "conv3": L.init_conv(next(k), cs[2], cs[3], 3),
+            "conv4": L.init_conv(next(k), cs[3], cs[4], 3),
+            "fc1": L.init_fc(next(k), feat, fdim),
+            "fc2": L.init_fc(next(k), fdim, fdim),
+            "fc3": L.init_fc(next(k), fdim, classes),
+        }
+
+    def apply(params, x, ctx):
+        y = L.relu(L.batchnorm(params["conv0"], L.conv2d(params["conv0"], x, stride=1, pad=1, ctx=ctx, tape_idx=i0, act_signed=act_signed)))
+        y = L.max_pool(y, 2, 2)
+        y = L.relu(L.batchnorm(params["conv1"], L.conv2d(params["conv1"], y, stride=1, pad=1, ctx=ctx, tape_idx=i1, act_signed=act_signed)))
+        y = L.max_pool(y, 2, 2)
+        y = L.relu(L.batchnorm(params["conv2"], L.conv2d(params["conv2"], y, stride=1, pad=1, ctx=ctx, tape_idx=i2, act_signed=act_signed)))
+        y = L.relu(L.batchnorm(params["conv3"], L.conv2d(params["conv3"], y, stride=1, pad=1, ctx=ctx, tape_idx=i3, act_signed=act_signed)))
+        y = L.relu(L.batchnorm(params["conv4"], L.conv2d(params["conv4"], y, stride=1, pad=1, ctx=ctx, tape_idx=i4, act_signed=act_signed)))
+        y = L.max_pool(y, 2, 2)
+        y = y.reshape(y.shape[0], -1)
+        y = L.relu(L.fc(params["fc1"], y, ctx=ctx, tape_idx=if1, act_signed=act_signed))
+        y = L.relu(L.fc(params["fc2"], y, ctx=ctx, tape_idx=if2, act_signed=act_signed))
+        return L.fc(params["fc3"], y, ctx=ctx, tape_idx=if3, act_signed=act_signed)
+
+    return ModelDef("alexnet", init, apply, tape, (h, w, 3), classes)
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV2 (scaled). Expansion convs read the (possibly negative) linear
+# bottleneck output -> signed activation grid for those layers.
+
+
+_MBV2_CFG = [  # (expansion t, cout, blocks n, stride)
+    (1, 16, 1, 1),
+    (6, 24, 2, 1),
+    (6, 32, 2, 2),
+    (6, 64, 2, 2),
+]
+
+
+def mobilenetv2(hw=(32, 32), classes=10, width=0.5, act_signed=False):
+    h, w = hw
+    tape = L.Tape()
+    blocks = []
+    stem_c = max(8, int(32 * width))
+    i_stem, ch, cw = _reg_conv(tape, "stem", 3, stem_c, 3, 1, 1, h, w, act_signed)
+    cin = stem_c
+    bi = 0
+    for t, c, n, s in _MBV2_CFG:
+        cout = max(8, int(c * width))
+        for b in range(n):
+            stride = s if b == 0 else 1
+            base = f"b{bi}"
+            hidden = cin * t
+            iexp = None
+            if t != 1:
+                # expansion input is a linear bottleneck output: signed grid
+                iexp, _, _ = _reg_conv(tape, base + "_exp", cin, hidden, 1, 1, 0, ch, cw, act_signed=True)
+            idw, ch2, cw2 = _reg_dwconv(tape, base + "_dw", hidden, 3, stride, 1, ch, cw, act_signed)
+            iprj, _, _ = _reg_conv(tape, base + "_prj", hidden, cout, 1, 1, 0, ch2, cw2, act_signed)
+            blocks.append((base, iexp, idw, iprj, cin, hidden, cout, stride))
+            ch, cw = ch2, cw2
+            cin = cout
+            bi += 1
+    head_c = max(16, int(128 * width))
+    i_head, _, _ = _reg_conv(tape, "head", cin, head_c, 1, 1, 0, ch, cw, act_signed)
+    ifc = _reg_fc(tape, "fc", head_c, classes, act_signed)
+
+    def init(key):
+        params = {}
+        keys = iter(jax.random.split(key, 4 * len(blocks) + 8))
+        params["stem"] = L.init_conv(next(keys), 3, stem_c, 3)
+        for base, iexp, idw, iprj, c_in, hidden, cout, stride in blocks:
+            if iexp is not None:
+                params[base + "_exp"] = L.init_conv(next(keys), c_in, hidden, 1)
+            params[base + "_dw"] = L.init_dwconv(next(keys), hidden, 3)
+            params[base + "_prj"] = L.init_conv(next(keys), hidden, cout, 1)
+        params["head"] = L.init_conv(next(keys), cin, head_c, 1)
+        params["fc"] = L.init_fc(next(keys), head_c, classes)
+        return params
+
+    def apply(params, x, ctx):
+        y = L.relu6(L.batchnorm(params["stem"], L.conv2d(params["stem"], x, stride=1, pad=1, ctx=ctx, tape_idx=i_stem, act_signed=act_signed)))
+        for base, iexp, idw, iprj, c_in, hidden, cout, stride in blocks:
+            inp = y
+            z = y
+            if iexp is not None:
+                z = L.conv2d(params[base + "_exp"], z, stride=1, pad=0, ctx=ctx, tape_idx=iexp, act_signed=True)
+                z = L.relu6(L.batchnorm(params[base + "_exp"], z))
+            z = L.dwconv2d(params[base + "_dw"], z, stride=stride, pad=1, ctx=ctx, tape_idx=idw, act_signed=act_signed)
+            z = L.relu6(L.batchnorm(params[base + "_dw"], z))
+            z = L.conv2d(params[base + "_prj"], z, stride=1, pad=0, ctx=ctx, tape_idx=iprj, act_signed=act_signed)
+            z = L.batchnorm(params[base + "_prj"], z)  # linear bottleneck
+            if stride == 1 and c_in == cout:
+                z = z + inp
+            y = z
+        y = L.relu6(L.batchnorm(params["head"], L.conv2d(params["head"], y, stride=1, pad=0, ctx=ctx, tape_idx=i_head, act_signed=act_signed)))
+        y = L.global_avg_pool(y)
+        return L.fc(params["fc"], y, ctx=ctx, tape_idx=ifc, act_signed=act_signed)
+
+    return ModelDef("mobilenetv2", init, apply, tape, (h, w, 3), classes)
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def build_model(name: str, hw=None, classes=None, width=None, act_signed=False) -> ModelDef:
+    """Construct a model by name with optional overrides of the defaults."""
+    defaults = {
+        "tinynet": dict(fn=tinynet, hw=(8, 8), classes=10, width=1.0),
+        "resnet8": dict(fn=functools.partial(resnet, 1), hw=(16, 16), classes=10, width=1.0),
+        "resnet14": dict(fn=functools.partial(resnet, 2), hw=(16, 16), classes=10, width=1.0),
+        "resnet20": dict(fn=functools.partial(resnet, 3), hw=(16, 16), classes=10, width=1.0),
+        "resnet32": dict(fn=functools.partial(resnet, 5), hw=(16, 16), classes=10, width=1.0),
+        "vgg16": dict(fn=vgg16, hw=(32, 32), classes=20, width=0.25),
+        "alexnet": dict(fn=alexnet, hw=(16, 16), classes=10, width=0.5),
+        "mobilenetv2": dict(fn=mobilenetv2, hw=(16, 16), classes=10, width=0.5),
+    }
+    if name not in defaults:
+        raise ValueError(f"unknown model {name!r}; have {sorted(defaults)}")
+    d = defaults[name]
+    return d["fn"](
+        hw=hw or d["hw"],
+        classes=classes or d["classes"],
+        width=width or d["width"],
+        act_signed=act_signed,
+    )
+
+
+MODEL_NAMES = [
+    "tinynet",
+    "resnet8",
+    "resnet14",
+    "resnet20",
+    "resnet32",
+    "vgg16",
+    "alexnet",
+    "mobilenetv2",
+]

@@ -1,0 +1,167 @@
+"""Program builders: the jittable functions that aot.py lowers to HLO.
+
+All programs operate on a single flat f32 parameter vector (and a flat
+momentum vector of the same length) so the Rust runtime never needs to know
+the pytree structure; the manifest records per-leaf offsets for the pieces
+Rust *does* introspect (conv weights, BN affine, fc bias).
+
+Program signatures (all shapes static; B = batch, L = #approximable layers,
+N = #params):
+
+  train_qat    (p[N], m[N], x, y, lr)                        -> (p', m', metrics[3])
+  train_agn    (p[N], m[N], s[L], sm[L], x, y, seed[2],
+                lr, lam, sigma_max)                          -> (p', m', s', sm', metrics[5])
+  train_approx (p[N], m[N], x, y, lr, luts[L,65536], as[L])  -> (p', m', metrics[3])
+  eval         (p[N], x, y)                                  -> metrics[3]
+  eval_agn     (p[N], s[L], x, y, seed[2])                   -> metrics[3]
+  eval_approx  (p[N], x, y, luts[L,65536], as[L])            -> metrics[3]
+  calibrate    (p[N], x, y)                                  -> (absmax[L], ystd[L], metrics[3])
+
+metrics[3] = [loss, correct, topk_correct]; train_agn's metrics[5] =
+[total_loss, task_loss, noise_loss, correct, topk_correct].
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import losses
+from .layers import Ctx
+
+MOMENTUM = 0.9
+TOPK = 5
+
+
+def flatten_params(params):
+    """Deterministic flatten; returns (flat, unravel, leaf index).
+
+    The leaf index is a list of (path, offset, shape) in flattening order —
+    emitted into the manifest so the Rust side can slice out weights.
+    """
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params)
+    leaves = [l for _, l in leaves_with_path]
+    shapes = [l.shape for l in leaves]
+    sizes = [int(l.size) for l in leaves]
+    index = []
+    off = 0
+    for (path, leaf), size in zip(leaves_with_path, sizes):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        index.append({"path": name, "offset": off, "shape": list(leaf.shape)})
+        off += size
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+    def unravel(v):
+        out = []
+        o = 0
+        for shape, size in zip(shapes, sizes):
+            out.append(v[o : o + size].reshape(shape))
+            o += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unravel, index
+
+
+def _sgd(flat, mom, grad, lr):
+    mom2 = MOMENTUM * mom + grad
+    return flat - lr * mom2, mom2
+
+
+def _metrics3(logits, y, loss):
+    return jnp.stack(
+        [loss, losses.correct_count(logits, y), losses.topk_correct_count(logits, y, TOPK)]
+    )
+
+
+def make_programs(model, unravel, batch: int):
+    """Build the full program dict for `model` (ModelDef) at batch size B."""
+    L = len(model.tape)
+    rel_costs = model.tape.relative_costs()
+
+    def fwd(flat, x, ctx):
+        return model.apply(unravel(flat), x, ctx)
+
+    # -- qat ---------------------------------------------------------------
+    def train_qat(flat, mom, x, y, lr):
+        def loss_fn(p):
+            logits = fwd(p, x, Ctx("qat"))
+            return losses.cross_entropy(logits, y), logits
+
+        (loss, logits), grad = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        flat2, mom2 = _sgd(flat, mom, grad, lr)
+        return flat2, mom2, _metrics3(logits, y, loss)
+
+    # -- gradient search (paper §3.2) ---------------------------------------
+    def train_agn(flat, mom, sig, sig_mom, x, y, seed, lr, lam, sigma_max):
+        def loss_fn(p, s):
+            logits = fwd(p, x, Ctx("agn", sigmas=s, seed=seed))
+            lt = losses.cross_entropy(logits, y)
+            ln = losses.noise_loss(s, rel_costs, sigma_max)
+            return losses.total_loss(lt, ln, lam), (lt, ln, logits)
+
+        (total, (lt, ln, logits)), (gp, gs) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(flat, sig)
+        flat2, mom2 = _sgd(flat, mom, gp, lr)
+        sig2, sig_mom2 = _sgd(sig, sig_mom, gs, lr)
+        metrics = jnp.stack(
+            [total, lt, ln, losses.correct_count(logits, y), losses.topk_correct_count(logits, y, TOPK)]
+        )
+        return flat2, mom2, sig2, sig_mom2, metrics
+
+    # -- behavioral retraining (paper §4.2, STE) -----------------------------
+    def train_approx(flat, mom, x, y, lr, luts, act_scales):
+        def loss_fn(p):
+            logits = fwd(p, x, Ctx("approx", luts=luts, act_scales=act_scales))
+            return losses.cross_entropy(logits, y), logits
+
+        (loss, logits), grad = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+        flat2, mom2 = _sgd(flat, mom, grad, lr)
+        return flat2, mom2, _metrics3(logits, y, loss)
+
+    # -- evaluation ----------------------------------------------------------
+    def eval_qat(flat, x, y):
+        logits = fwd(flat, x, Ctx("qat"))
+        return _metrics3(logits, y, losses.cross_entropy(logits, y))
+
+    def eval_agn(flat, sig, x, y, seed):
+        logits = fwd(flat, x, Ctx("agn", sigmas=sig, seed=seed))
+        return _metrics3(logits, y, losses.cross_entropy(logits, y))
+
+    def eval_approx(flat, x, y, luts, act_scales):
+        logits = fwd(flat, x, Ctx("approx", luts=luts, act_scales=act_scales))
+        return _metrics3(logits, y, losses.cross_entropy(logits, y))
+
+    # -- calibration ---------------------------------------------------------
+    def calibrate(flat, x, y):
+        ctx = Ctx("calib")
+        logits = fwd(flat, x, ctx)
+        absmax = jnp.stack(ctx.stat_absmax)
+        ystd = jnp.stack(ctx.stat_ystd)
+        return absmax, ystd, _metrics3(logits, y, losses.cross_entropy(logits, y))
+
+    h, w, c = model.input_shape
+    x_spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+    y_spec = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    seed_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    lut_spec = jax.ShapeDtypeStruct((L, 256 * 256), jnp.int32)
+    asc_spec = jax.ShapeDtypeStruct((L,), jnp.float32)
+    sig_spec = jax.ShapeDtypeStruct((L,), jnp.float32)
+
+    def pm(n):
+        return jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    return {
+        "train_qat": (train_qat, lambda n: (pm(n), pm(n), x_spec, y_spec, scalar)),
+        "train_agn": (
+            train_agn,
+            lambda n: (pm(n), pm(n), sig_spec, sig_spec, x_spec, y_spec, seed_spec, scalar, scalar, scalar),
+        ),
+        "train_approx": (
+            train_approx,
+            lambda n: (pm(n), pm(n), x_spec, y_spec, scalar, lut_spec, asc_spec),
+        ),
+        "eval": (eval_qat, lambda n: (pm(n), x_spec, y_spec)),
+        "eval_agn": (eval_agn, lambda n: (pm(n), sig_spec, x_spec, y_spec, seed_spec)),
+        "eval_approx": (eval_approx, lambda n: (pm(n), x_spec, y_spec, lut_spec, asc_spec)),
+        "calibrate": (calibrate, lambda n: (pm(n), x_spec, y_spec)),
+    }

@@ -1,0 +1,84 @@
+"""AGN injection kernel: exact equality vs the oracle, PRNG statistics, and
+the custom-vjp gradient (paper Eq. 9)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import agn, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+@given(
+    m=st.integers(1, 200),
+    n=st.integers(1, 40),
+    scale=st.floats(0.0, 3.0),
+    s0=st.integers(0, 2**32 - 1),
+    s1=st.integers(0, 2**32 - 1),
+)
+def test_kernel_matches_oracle_exactly(m, n, scale, s0, s1):
+    r = np.random.default_rng(1)
+    y = jnp.asarray(r.normal(size=(m, n)).astype(np.float32))
+    seed = jnp.asarray([s0, s1], jnp.uint32)
+    out = agn.agn_inject(y, scale, seed)
+    want = ref.agn_inject_ref(y, scale, seed)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_noise_is_standard_normal():
+    y = jnp.zeros((400, 100), jnp.float32)
+    out = np.asarray(agn.agn_inject(y, 1.0, jnp.asarray([3, 9], jnp.uint32)))
+    assert abs(out.mean()) < 0.02
+    assert abs(out.std() - 1.0) < 0.02
+    # no stuck values
+    assert len(np.unique(out)) > 39000
+
+
+def test_seeds_decorrelate():
+    y = jnp.zeros((100, 100), jnp.float32)
+    a = np.asarray(agn.agn_inject(y, 1.0, jnp.asarray([1, 2], jnp.uint32)))
+    b = np.asarray(agn.agn_inject(y, 1.0, jnp.asarray([1, 3], jnp.uint32)))
+    corr = np.corrcoef(a.ravel(), b.ravel())[0, 1]
+    assert abs(corr) < 0.05
+
+
+def test_zero_scale_is_identity():
+    r = np.random.default_rng(2)
+    y = jnp.asarray(r.normal(size=(37, 13)).astype(np.float32))
+    out = agn.agn_inject(y, 0.0, jnp.asarray([5, 6], jnp.uint32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(y))
+
+
+def test_gradient_matches_paper_eq9():
+    # dL/dscale for L = sum(out * g) must equal <g, q>
+    r = np.random.default_rng(3)
+    y = jnp.asarray(r.normal(size=(50, 20)).astype(np.float32))
+    g = jnp.asarray(r.normal(size=(50, 20)).astype(np.float32))
+    seed = jnp.asarray([11, 22], jnp.uint32)
+
+    def loss(scale):
+        return jnp.sum(agn.agn_inject(y, scale, seed) * g)
+
+    grad = jax.grad(loss)(0.37)
+    q = np.asarray(ref.agn_inject_ref(jnp.zeros_like(y), 1.0, seed))
+    want = float((np.asarray(g) * q).sum())
+    assert abs(float(grad) - want) < 1e-2 * max(1.0, abs(want))
+
+
+def test_gradient_wrt_y_is_identity():
+    r = np.random.default_rng(4)
+    y = jnp.asarray(r.normal(size=(10, 10)).astype(np.float32))
+    grad = jax.grad(lambda v: jnp.sum(agn.agn_inject(v, 0.5, jnp.asarray([1, 1], jnp.uint32))))(y)
+    np.testing.assert_allclose(np.asarray(grad), 1.0)
+
+
+def test_hash_avalanche():
+    # flipping one input bit should flip ~half the output bits
+    x = jnp.arange(1024, dtype=jnp.uint32)
+    h0 = np.asarray(agn.hash_u32(x))
+    h1 = np.asarray(agn.hash_u32(x ^ jnp.uint32(1)))
+    flips = np.unpackbits((h0 ^ h1).view(np.uint8)).mean()
+    assert 0.4 < flips < 0.6

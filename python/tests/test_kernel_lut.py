@@ -1,0 +1,84 @@
+"""Behavioral LUT matmul kernel: exact-LUT equivalence with integer matmul,
+random-LUT equivalence with the gather oracle, padding invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import approx_lut, ref
+
+settings.register_profile("kernels", max_examples=20, deadline=None)
+settings.load_profile("kernels")
+
+
+def random_zero_preserving_lut(seed):
+    """Random LUT satisfying the padded-kernel zero invariant."""
+    r = np.random.default_rng(seed)
+    lut = r.integers(-(2**14), 2**14, size=65536, dtype=np.int32)
+    lut = lut.reshape(256, 256)
+    lut[0, :] = 0
+    lut[:, 128] = 0
+    return jnp.asarray(lut.reshape(-1))
+
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exact_lut_equals_integer_matmul(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    xq = jnp.asarray(r.integers(0, 256, size=(m, k)), jnp.int32)
+    wq = jnp.asarray(r.integers(0, 256, size=(k, n)), jnp.int32)
+    acc = approx_lut.approx_matmul_lut(xq, wq, ref.exact_lut(), bm=16, bk=8, bn=8)
+    want = np.asarray(xq) @ (np.asarray(wq) - 128)
+    np.testing.assert_array_equal(np.asarray(acc), want)
+
+
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 16),
+    lut_seed=st.integers(0, 1000),
+)
+def test_random_lut_matches_oracle(m, k, n, lut_seed):
+    r = np.random.default_rng(lut_seed + 5)
+    xq = jnp.asarray(r.integers(0, 256, size=(m, k)), jnp.int32)
+    wq = jnp.asarray(r.integers(0, 256, size=(k, n)), jnp.int32)
+    lut = random_zero_preserving_lut(lut_seed)
+    acc = approx_lut.approx_matmul_lut(xq, wq, lut, bm=16, bk=16, bn=8)
+    want = ref.approx_matmul_lut_ref(xq, wq, lut)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(want))
+
+
+@given(bm=st.sampled_from([8, 32, 128]), bk=st.sampled_from([8, 64]), bn=st.sampled_from([8, 32]))
+def test_block_shape_invariance(bm, bk, bn):
+    r = np.random.default_rng(9)
+    xq = jnp.asarray(r.integers(0, 256, size=(19, 23)), jnp.int32)
+    wq = jnp.asarray(r.integers(0, 256, size=(23, 11)), jnp.int32)
+    lut = random_zero_preserving_lut(3)
+    acc = approx_lut.approx_matmul_lut(xq, wq, lut, bm=bm, bk=bk, bn=bn)
+    want = ref.approx_matmul_lut_ref(xq, wq, lut)
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(want))
+
+
+def test_padding_contributes_nothing():
+    # shapes straddling block boundaries with the zero-invariant LUT
+    lut = random_zero_preserving_lut(1)
+    r = np.random.default_rng(2)
+    for m, k, n in [(17, 9, 9), (16, 8, 8), (1, 1, 1), (33, 65, 5)]:
+        xq = jnp.asarray(r.integers(0, 256, size=(m, k)), jnp.int32)
+        wq = jnp.asarray(r.integers(0, 256, size=(k, n)), jnp.int32)
+        acc = approx_lut.approx_matmul_lut(xq, wq, lut, bm=16, bk=8, bn=8)
+        want = ref.approx_matmul_lut_ref(xq, wq, lut)
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(want))
+
+
+def test_i32_accumulation_no_overflow_loss():
+    # worst-case positive accumulation stays exact in i32
+    k = 512
+    xq = jnp.full((2, k), 255, jnp.int32)
+    wq = jnp.full((k, 2), 255, jnp.int32)  # weight code +127
+    acc = approx_lut.approx_matmul_lut(xq, wq, ref.exact_lut(), bm=8, bk=64, bn=8)
+    assert int(np.asarray(acc)[0, 0]) == 255 * 127 * k

@@ -1,0 +1,143 @@
+"""Model zoo: shapes, tape consistency, all four modes, and the
+exact-LUT == QAT equivalence that anchors the behavioral path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import models as M
+from compile import train as T
+from compile.layers import Ctx
+from compile.kernels.ref import exact_lut
+
+SMALL = {
+    "tinynet": dict(hw=(8, 8)),
+    "resnet8": dict(hw=(8, 8)),
+    "vgg16": dict(hw=(32, 32)),
+    "alexnet": dict(hw=(16, 16)),
+    "mobilenetv2": dict(hw=(16, 16)),
+}
+
+
+def build(name):
+    return M.build_model(name, **SMALL.get(name, {}))
+
+
+@pytest.fixture(scope="module")
+def batch():
+    # fresh generator per call: test data must not depend on execution order
+    return lambda hw, b=4: (
+        jnp.asarray(
+            np.random.default_rng(hw[0] * 1000 + b).random(
+                (b, hw[0], hw[1], 3), dtype=np.float32
+            )
+        ),
+    )
+
+
+@pytest.mark.parametrize("name", ["tinynet", "resnet8", "vgg16", "alexnet", "mobilenetv2"])
+def test_build_apply_qat(name, batch):
+    model = build(name)
+    params = model.init(jax.random.PRNGKey(0))
+    (x,) = batch(model.input_shape[:2])
+    logits = model.apply(params, x, Ctx("qat"))
+    assert logits.shape == (4, model.classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("name", ["tinynet", "resnet8", "mobilenetv2"])
+def test_agn_mode_with_zero_sigma_equals_qat(name, batch):
+    model = build(name)
+    params = model.init(jax.random.PRNGKey(0))
+    (x,) = batch(model.input_shape[:2])
+    sig = jnp.zeros((len(model.tape),))
+    base = model.apply(params, x, Ctx("qat"))
+    agn = model.apply(
+        params, x, Ctx("agn", sigmas=sig, seed=jnp.asarray([1, 2], jnp.uint32))
+    )
+    np.testing.assert_allclose(np.asarray(base), np.asarray(agn), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["tinynet", "resnet8"])
+def test_agn_mode_perturbs(name, batch):
+    model = build(name)
+    params = model.init(jax.random.PRNGKey(0))
+    (x,) = batch(model.input_shape[:2])
+    sig = jnp.full((len(model.tape),), 0.3)
+    base = model.apply(params, x, Ctx("qat"))
+    agn = model.apply(
+        params, x, Ctx("agn", sigmas=sig, seed=jnp.asarray([1, 2], jnp.uint32))
+    )
+    assert not np.allclose(np.asarray(base), np.asarray(agn))
+
+
+@pytest.mark.parametrize("name", ["tinynet", "resnet8", "mobilenetv2"])
+def test_approx_with_exact_lut_matches_qat(name, batch):
+    """The anchor equivalence: behavioral path under the exact multiplier
+    must reproduce the fake-quant forward bit-for-bit (same scales)."""
+    model = build(name)
+    params = model.init(jax.random.PRNGKey(0))
+    (x,) = batch(model.input_shape[:2])
+    # calibrate scales from the same batch so dynamic == frozen; grid
+    # divisor depends on each layer's activation grid (255 unsigned, 127
+    # signed — mobilenetv2 expansion convs are signed)
+    ctx = Ctx("calib")
+    base = model.apply(params, x, ctx)
+    absmax = jnp.stack(ctx.stat_absmax)
+    levels = jnp.asarray(
+        [127.0 if l["act_signed"] else 255.0 for l in model.tape.layers]
+    )
+    luts = jnp.stack(
+        [exact_lut(l["act_signed"]) for l in model.tape.layers]
+    )
+    approx = model.apply(params, x, Ctx("approx", luts=luts, act_scales=absmax / levels))
+    # the integer path accumulates exactly and dequantizes once; the
+    # fake-quant path accumulates in f32 — allow small fp divergence
+    np.testing.assert_allclose(np.asarray(base), np.asarray(approx), rtol=2e-3, atol=2e-3)
+
+
+def test_tape_mult_counts_positive():
+    for name in SMALL:
+        model = build(name)
+        assert len(model.tape) > 0
+        for layer in model.tape.layers:
+            assert layer["mults_per_image"] > 0
+            assert layer["fan_in"] > 0
+        costs = np.asarray(model.tape.relative_costs())
+        assert abs(costs.sum() - 1.0) < 1e-5
+
+
+def test_resnet_depths():
+    assert M.build_model("resnet8").name == "resnet8"
+    assert len(M.build_model("resnet8", hw=(8, 8)).tape) == 10  # 1+6+2 short+fc
+    assert len(M.build_model("resnet20", hw=(8, 8)).tape) == 22
+    assert M.build_model("resnet32").name == "resnet32"
+
+
+def test_flatten_roundtrip():
+    model = build("tinynet")
+    params = model.init(jax.random.PRNGKey(0))
+    flat, unravel, index = T.flatten_params(params)
+    back = unravel(flat)
+    for (p1, l1), (p2, l2) in zip(
+        jax.tree_util.tree_flatten_with_path(params)[0],
+        jax.tree_util.tree_flatten_with_path(back)[0],
+    ):
+        assert p1 == p2
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    # offsets are contiguous and cover the vector
+    total = sum(int(np.prod(e["shape"])) for e in index)
+    assert total == flat.shape[0]
+    offs = sorted(e["offset"] for e in index)
+    assert offs[0] == 0
+
+
+def test_mobilenet_expansion_layers_signed():
+    model = build("mobilenetv2")
+    kinds = {l["name"]: l for l in model.tape.layers}
+    exp = [l for n, l in kinds.items() if n.endswith("_exp")]
+    assert exp, "mobilenetv2 should have expansion convs"
+    assert all(l["act_signed"] for l in exp)
+    dw = [l for n, l in kinds.items() if n.endswith("_dw")]
+    assert all(l["fan_in"] == 9 for l in dw)

@@ -1,0 +1,114 @@
+"""Fake-quant kernels + loss functions (Eq. 10/11) tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import losses
+from compile.kernels import quant, ref
+
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+@given(seed=st.integers(0, 2**31 - 1), absmax=st.floats(0.01, 50.0))
+def test_fake_quant_act_matches_ref(seed, absmax):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray((r.random((13, 7)) * absmax).astype(np.float32))
+    s = quant.act_scale(x)
+    np.testing.assert_allclose(
+        np.asarray(quant.fake_quant_act(x, s)),
+        np.asarray(ref.fake_quant_act_ref(x, s)),
+        rtol=1e-6,
+        atol=1e-7,
+    )
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_weight_matches_ref(seed):
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(9, 5)).astype(np.float32))
+    s = quant.weight_scale(w)
+    np.testing.assert_allclose(
+        np.asarray(quant.fake_quant_weight(w, s)),
+        np.asarray(ref.fake_quant_weight_ref(w, s)),
+        rtol=1e-6,
+        atol=1e-7,
+    )
+
+
+def test_quantization_error_bounded_by_half_step():
+    r = np.random.default_rng(5)
+    x = jnp.asarray((r.random((100,)) * 3.0).astype(np.float32))
+    s = quant.act_scale(x)
+    err = np.abs(np.asarray(quant.fake_quant_act(x, s)) - np.asarray(x))
+    assert err.max() <= 0.5 * float(s) + 1e-6
+
+
+def test_ste_gradients():
+    r = np.random.default_rng(6)
+    x = jnp.asarray((r.random((8, 8)) * 2.0).astype(np.float32))
+    s = quant.act_scale(x)
+    g = jax.grad(lambda v: jnp.sum(quant.fake_quant_act(v, s) ** 2))(x)
+    # STE: gradient = 2 * fake_quant(x)
+    want = 2.0 * np.asarray(quant.fake_quant_act(x, s))
+    np.testing.assert_allclose(np.asarray(g), want, rtol=1e-5)
+
+
+def test_codes_roundtrip():
+    r = np.random.default_rng(7)
+    x = jnp.asarray((r.random((64,)) * 4.0).astype(np.float32))
+    s = quant.act_scale(x)
+    codes = quant.quantize_act(x, s)
+    assert int(jnp.min(codes)) >= 0 and int(jnp.max(codes)) <= 255
+    back = codes.astype(jnp.float32) * s
+    np.testing.assert_allclose(np.asarray(back), np.asarray(quant.fake_quant_act(x, s)), rtol=1e-6)
+
+
+# -- losses -----------------------------------------------------------------
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 0.0, 0.0]])
+    labels = jnp.asarray([0, 2], jnp.int32)
+    got = float(losses.cross_entropy(logits, labels))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    want = (-np.log(p0) - np.log(1 / 3)) / 2
+    assert abs(got - want) < 1e-6
+
+
+def test_noise_loss_eq10():
+    sigmas = jnp.asarray([0.1, -0.2, 0.9])
+    costs = jnp.asarray([0.5, 0.3, 0.2])
+    got = float(losses.noise_loss(sigmas, costs, 0.5))
+    want = -(0.1 * 0.5 + 0.2 * 0.3 + 0.5 * 0.2)
+    assert abs(got - want) < 1e-7
+
+
+def test_noise_loss_gradient_eq12():
+    costs = jnp.asarray([0.5, 0.3, 0.2])
+    g = jax.grad(lambda s: losses.noise_loss(s, costs, 0.5))(jnp.asarray([0.1, 0.2, 0.9]))
+    # below the cap: -c_l ; above: 0
+    np.testing.assert_allclose(np.asarray(g), [-0.5, -0.3, 0.0], atol=1e-7)
+
+
+def test_total_loss_eq11():
+    assert float(losses.total_loss(1.0, -0.5, 0.4)) == 1.0 - 0.2
+
+
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 6))
+def test_topk_rank_formulation_matches_lax_topk(seed, k):
+    r = np.random.default_rng(seed)
+    logits = jnp.asarray(r.normal(size=(16, 10)).astype(np.float32))
+    labels = jnp.asarray(r.integers(0, 10, 16), jnp.int32)
+    got = float(losses.topk_correct_count(logits, labels, k))
+    top = jax.lax.top_k(logits, k)[1]
+    want = float(jnp.sum(jnp.any(top == labels[:, None], axis=-1)))
+    assert got == want
+
+
+def test_correct_count():
+    logits = jnp.asarray([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    labels = jnp.asarray([0, 1, 1], jnp.int32)
+    assert float(losses.correct_count(logits, labels)) == 2.0

@@ -1,0 +1,72 @@
+//! Error-model benchmarks (paper §4.2 claims matching "completes in around
+//! one minute" for 36 multipliers x all layers on a 12-core desktop —
+//! Table 1 / Table 2's machinery). Our target: < 2 s for 49 x ResNet8
+//! single-core (DESIGN.md §Perf).
+
+use agn_approx::benchkit::Bench;
+use agn_approx::errormodel::layer_error_map;
+use agn_approx::errormodel::mc;
+use agn_approx::errormodel::model::{
+    estimate_layer, estimate_with_aggregates, row_aggregates, LayerOperands,
+};
+use agn_approx::multipliers::{signed_catalog, unsigned_catalog};
+use agn_approx::util::rng::Pcg32;
+
+fn synthetic_ops(fan_in: usize, k: usize, seed: u64) -> LayerOperands {
+    let mut rng = Pcg32::seeded(seed);
+    LayerOperands {
+        weight_cols: (0..fan_in * 16).map(|_| rng.below(256) as u8).collect(),
+        patches: (0..k)
+            .map(|_| (0..fan_in).map(|_| rng.below(256) as u8).collect())
+            .collect(),
+        fan_in,
+        s_x: 0.01,
+        s_w: 0.005,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("error_model");
+    let cat = unsigned_catalog();
+    let inst = cat.get("mul8u_etm6").unwrap();
+    let em = layer_error_map(inst, false);
+
+    for (fan_in, k) in [(27, 128), (144, 512), (576, 512)] {
+        let ops = synthetic_ops(fan_in, k, 3);
+        b.bench(&format!("estimate_layer/fanin{fan_in}_k{k}"), || {
+            estimate_layer(&em, &ops)
+        });
+    }
+
+    let ops = synthetic_ops(144, 512, 5);
+    let agg = row_aggregates(&em, &ops.weight_cols);
+    b.bench("row_aggregates/one_pair", || row_aggregates(&em, &ops.weight_cols));
+    b.bench("estimate_with_aggregates/fanin144_k512", || {
+        estimate_with_aggregates(&agg, &ops)
+    });
+    b.bench("mc_baseline/trials2000_fanin144", || {
+        mc::mc_sigma_e(&em, &ops, 2000, 11)
+    });
+
+    // the full matching-pass inner loop: 49 instances x 10 resnet8-ish layers
+    let layers: Vec<LayerOperands> = (0..10)
+        .map(|i| synthetic_ops(if i == 0 { 27 } else { 144 }, 512, i as u64))
+        .collect();
+    let both: Vec<_> = unsigned_catalog()
+        .instances
+        .into_iter()
+        .chain(signed_catalog().instances)
+        .collect();
+    b.bench("full_matching_pass/49x10", || {
+        let mut total = 0.0;
+        for inst in &both {
+            let em = layer_error_map(inst, false);
+            for ops in &layers {
+                let agg = row_aggregates(&em, &ops.weight_cols);
+                total += estimate_with_aggregates(&agg, ops).sigma_e;
+            }
+        }
+        total
+    });
+    b.finish();
+}

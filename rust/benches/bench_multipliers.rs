@@ -1,0 +1,43 @@
+//! Multiplier-library benchmarks: core mul throughput per family, error-map
+//! and layer-LUT generation (these sit on the critical path of every
+//! matching pass and of LUT upload to the AOT programs).
+
+use agn_approx::benchkit::Bench;
+use agn_approx::multipliers::{build_layer_lut, error_map, unsigned_catalog, MulKind};
+
+fn main() {
+    let mut b = Bench::new("multipliers");
+    let kinds = [
+        ("exact", MulKind::Exact),
+        ("truncated4", MulKind::Truncated { k: 4 }),
+        ("bam62", MulKind::Bam { h: 6, v: 2 }),
+        ("etm6", MulKind::Etm { k: 6 }),
+        ("drum4", MulKind::Drum { k: 4 }),
+        ("mitchell4", MulKind::Mitchell { t: 4 }),
+    ];
+    for (name, kind) in kinds {
+        b.bench(&format!("mul_full_space/{name}"), || {
+            let mut acc = 0u64;
+            for a in 0..256u32 {
+                for bb in 0..256u32 {
+                    acc = acc.wrapping_add(kind.mul_u(a, bb));
+                }
+            }
+            acc
+        });
+        b.throughput(65536.0, "mults");
+    }
+
+    let cat = unsigned_catalog();
+    let inst = cat.get("mul8u_drm4").unwrap().clone();
+    b.bench("error_map/drum4", || error_map(&inst));
+    b.bench("layer_lut/drum4_unsigned", || build_layer_lut(&inst, false));
+    b.bench("catalog_luts/all36_unsigned", || {
+        cat.instances
+            .iter()
+            .map(|i| build_layer_lut(i, false).len())
+            .sum::<usize>()
+    });
+    b.bench("mre/drum4", || inst.mre());
+    b.finish();
+}

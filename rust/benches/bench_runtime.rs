@@ -1,0 +1,124 @@
+//! PJRT runtime benchmarks: per-program execute latency for the AOT
+//! artifacts — the denominators of every training-loop timing in
+//! EXPERIMENTS.md (paper §4.2 reports gradient-search wall-clock).
+
+use agn_approx::benchkit::Bench;
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
+use agn_approx::runtime::{Engine, Value};
+use agn_approx::util::rng::Pcg32;
+use std::path::Path;
+
+fn main() {
+    let artifacts = Path::new("artifacts");
+    let Ok(mut engine) = Engine::new(artifacts) else {
+        println!("(no PJRT client — skipping)");
+        return;
+    };
+    let Ok(manifest) = engine.manifest("resnet8") else {
+        println!("(artifacts/ missing resnet8 — run `make artifacts` first)");
+        return;
+    };
+    let mut b = Bench::new("runtime");
+    let flat = manifest.load_init_params().expect("init");
+    let spec = DatasetSpec::synth_cifar(
+        (manifest.input_shape[0], manifest.input_shape[1]),
+        42,
+    );
+    let data = Dataset::load(&spec, Split::Train);
+    let (xs, ys) = data.batch(manifest.batch, 0);
+    let xv = Value::f32(
+        &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+        xs,
+    );
+    let yv = Value::i32(&[manifest.batch], ys);
+    let l = manifest.num_layers;
+    let zeros = vec![0f32; flat.len()];
+    let sig = vec![0.1f32; l];
+
+    b.bench("compile/eval_cold", || {
+        // fresh engine -> cold compile
+        let mut e2 = Engine::new(artifacts).unwrap();
+        let m2 = e2.manifest("resnet8").unwrap();
+        e2.warmup(&m2, "eval").unwrap();
+    });
+
+    b.bench("execute/eval_b32", || {
+        engine
+            .run(
+                &manifest,
+                "eval",
+                &[Value::vec_f32(flat.clone()), xv.clone(), yv.clone()],
+            )
+            .unwrap()
+    });
+    b.throughput(manifest.batch as f64, "images");
+
+    b.bench("execute/train_qat_b32", || {
+        engine
+            .run(
+                &manifest,
+                "train_qat",
+                &[
+                    Value::vec_f32(flat.clone()),
+                    Value::vec_f32(zeros.clone()),
+                    xv.clone(),
+                    yv.clone(),
+                    Value::scalar_f32(0.01),
+                ],
+            )
+            .unwrap()
+    });
+    b.throughput(manifest.batch as f64, "images");
+
+    let mut rng = Pcg32::seeded(3);
+    b.bench("execute/train_agn_b32", || {
+        engine
+            .run(
+                &manifest,
+                "train_agn",
+                &[
+                    Value::vec_f32(flat.clone()),
+                    Value::vec_f32(zeros.clone()),
+                    Value::vec_f32(sig.clone()),
+                    Value::vec_f32(vec![0.0; l]),
+                    xv.clone(),
+                    yv.clone(),
+                    Value::seed(rng.next_u32(), rng.next_u32()),
+                    Value::scalar_f32(0.01),
+                    Value::scalar_f32(0.3),
+                    Value::scalar_f32(0.5),
+                ],
+            )
+            .unwrap()
+    });
+    b.throughput(manifest.batch as f64, "images");
+
+    let cat = unsigned_catalog();
+    let lut = build_layer_lut(cat.get("mul8u_trc3").unwrap(), false);
+    let mut luts_flat = Vec::with_capacity(l * 65536);
+    for _ in 0..l {
+        luts_flat.extend_from_slice(&lut);
+    }
+    let lut_v = Value::i32(&[l, 65536], luts_flat);
+    let asc = Value::vec_f32(vec![6.0; l]);
+    b.bench("execute/train_approx_b32 (Pallas LUT kernel)", || {
+        engine
+            .run(
+                &manifest,
+                "train_approx",
+                &[
+                    Value::vec_f32(flat.clone()),
+                    Value::vec_f32(zeros.clone()),
+                    xv.clone(),
+                    yv.clone(),
+                    Value::scalar_f32(0.001),
+                    lut_v.clone(),
+                    asc.clone(),
+                ],
+            )
+            .unwrap()
+    });
+    b.throughput(manifest.batch as f64, "images");
+    b.finish();
+}

@@ -1,0 +1,45 @@
+//! Search-machinery benchmarks: NSGA-II generations (ALWANN baseline cost),
+//! Pareto tooling, dataset batch synthesis (all pure coordinator work that
+//! must stay negligible next to PJRT execute time).
+
+use agn_approx::baselines::{nsga2_search, AlwannConfig};
+use agn_approx::benchkit::Bench;
+use agn_approx::coordinator::pareto::{pareto_split, Point};
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::matching::tests_support::fake_manifest;
+use agn_approx::multipliers::unsigned_catalog;
+use agn_approx::util::rng::Pcg32;
+
+fn main() {
+    let mut b = Bench::new("search");
+    let cat = unsigned_catalog();
+    let manifest = fake_manifest(&[110592, 442368, 442368, 884736, 327680, 640]);
+
+    b.bench("nsga2/pop16_gen8_synthetic_fitness", || {
+        let cfg = AlwannConfig { population: 16, generations: 8, ..Default::default() };
+        nsga2_search(&manifest, &cat, &cfg, |genome| {
+            let e: f64 = genome.iter().map(|&i| cat.instances[i].power).sum::<f64>();
+            (e, 1.0 / (1.0 + e))
+        })
+        .len()
+    });
+
+    let mut rng = Pcg32::seeded(9);
+    let pts: Vec<Point> = (0..200)
+        .map(|i| Point {
+            energy_reduction: rng.f64(),
+            accuracy: rng.f64(),
+            knob: i as f64,
+        })
+        .collect();
+    b.bench("pareto_split/200pts", || pareto_split(&pts));
+
+    let spec = DatasetSpec::synth_cifar((16, 16), 42);
+    b.bench("dataset_load/train4096_16x16", || {
+        Dataset::load(&spec, Split::Train).len()
+    });
+    let data = Dataset::load(&spec, Split::Train);
+    b.bench("dataset_batch/b32_augmented", || data.batch(32, 7));
+    b.throughput(32.0, "images");
+    b.finish();
+}

@@ -1,0 +1,76 @@
+//! Behavioral-simulator benchmarks: LUT matmul throughput (the deployment
+//! evaluation hot path behind Tables 2/3 and the ALWANN baseline) and a
+//! full resnet8 forward. Target: >= 5e7 approx-MACs/s single core
+//! (DESIGN.md §Perf).
+
+use agn_approx::benchkit::Bench;
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
+use agn_approx::runtime::Manifest;
+use agn_approx::simulator::matmul::approx_matmul_naive;
+use agn_approx::simulator::{approx_matmul, exact_matmul, LutSet, SimNet};
+use agn_approx::tensor::TensorF;
+use agn_approx::util::rng::Pcg32;
+use std::path::Path;
+
+fn main() {
+    let mut b = Bench::new("simulator");
+    let cat = unsigned_catalog();
+    let lut = build_layer_lut(cat.get("mul8u_etm6").unwrap(), false);
+    let mut rng = Pcg32::seeded(1);
+
+    for (m, k, n) in [(1024, 144, 32), (4096, 144, 32), (1024, 576, 64)] {
+        let x: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        b.bench(&format!("approx_matmul/{m}x{k}x{n}"), || {
+            approx_matmul(&x, &w, &lut, m, k, n)
+        });
+        b.throughput((m * k * n) as f64 / 1e6, "M-MACs");
+        b.bench(&format!("exact_matmul/{m}x{k}x{n}"), || {
+            exact_matmul(&x, &w, false, m, k, n)
+        });
+        b.throughput((m * k * n) as f64 / 1e6, "M-MACs");
+        // §Perf before/after: the naive (m,n,k) loop order vs the
+        // LUT-row-hot (m,k,n) order shipped in approx_matmul
+        b.bench(&format!("approx_matmul_naive/{m}x{k}x{n}"), || {
+            approx_matmul_naive(&x, &w, &lut, m, k, n)
+        });
+        b.throughput((m * k * n) as f64 / 1e6, "M-MACs");
+    }
+
+    // full-network forward (needs artifacts/)
+    if let Ok(manifest) = Manifest::load(Path::new("artifacts"), "resnet8") {
+        let flat = manifest.load_init_params().expect("init params");
+        let net = SimNet::new(&manifest, &flat).expect("simnet");
+        let spec = DatasetSpec::synth_cifar(net.input_hw, 42);
+        let data = Dataset::load(&spec, Split::Val);
+        let (xs, _) = data.eval_batch(manifest.batch, 0);
+        let x = TensorF::from_vec(
+            &[manifest.batch, net.input_hw.0, net.input_hw.1, 3],
+            xs,
+        );
+        let absmax = vec![6.0f32; manifest.num_layers];
+        let luts: Vec<Vec<i32>> = manifest
+            .layers
+            .iter()
+            .map(|l| build_layer_lut(cat.get("mul8u_etm6").unwrap(), l.act_signed))
+            .collect();
+        let macs: f64 = manifest
+            .layers
+            .iter()
+            .map(|l| l.mults_per_image as f64)
+            .sum::<f64>()
+            * manifest.batch as f64;
+        b.bench("resnet8_forward_exact/batch32", || {
+            net.forward(&x, &absmax, &LutSet::Exact, None)
+        });
+        b.throughput(macs / 1e6, "M-MACs");
+        b.bench("resnet8_forward_lut/batch32", || {
+            net.forward(&x, &absmax, &LutSet::PerLayer(&luts), None)
+        });
+        b.throughput(macs / 1e6, "M-MACs");
+    } else {
+        println!("(artifacts/ missing — skipping full-network benches)");
+    }
+    b.finish();
+}

@@ -1,0 +1,75 @@
+//! End-to-end machinery benches, one per paper artifact: the compute
+//! behind Table 1 (error-model scoring vs behavioral ground truth),
+//! Table 2/3 (matching over the catalog at learned sigmas) and Figure 5
+//! (per-layer accounting). Training loops are excluded here (they are
+//! measured in bench_runtime and reported in EXPERIMENTS.md); these benches
+//! isolate the coordinator-side cost of regenerating each artifact.
+
+use agn_approx::benchkit::Bench;
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::errormodel::layer_error_map;
+use agn_approx::errormodel::model::{estimate_with_aggregates, row_aggregates};
+use agn_approx::matching::{self, collect_operands};
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
+use agn_approx::runtime::Manifest;
+use agn_approx::simulator::{approx_matmul, LutSet, SimNet};
+use agn_approx::tensor::TensorF;
+use agn_approx::util::stats;
+use std::path::Path;
+
+fn main() {
+    let Ok(manifest) = Manifest::load(Path::new("artifacts"), "resnet8") else {
+        println!("(artifacts/ missing — run `make artifacts` first)");
+        return;
+    };
+    let mut b = Bench::new("tables");
+    let flat = manifest.load_init_params().expect("init");
+    let net = SimNet::new(&manifest, &flat).expect("simnet");
+    let spec = DatasetSpec::synth_cifar(net.input_hw, 42);
+    let data = Dataset::load(&spec, Split::Train);
+    let absmax = vec![6.0f32; manifest.num_layers];
+    let cat = unsigned_catalog();
+
+    // Table 1: one (layer, multiplier) scoring round incl. ground truth
+    let ops = collect_operands(&net, &manifest, &data, &absmax, 512, 1).unwrap();
+    let (xs, _) = data.eval_batch(manifest.batch, 0);
+    let x = TensorF::from_vec(&[manifest.batch, net.input_hw.0, net.input_hw.1, 3], xs);
+    let mut caps = Vec::new();
+    net.forward(&x, &absmax, &LutSet::Exact, Some(&mut caps));
+    let inst = cat.get("mul8u_drm4").unwrap();
+    let em = layer_error_map(inst, false);
+    let lut = build_layer_lut(inst, false);
+    b.bench("table1/one_pair_prediction", || {
+        let agg = row_aggregates(&em, &ops[1].weight_cols);
+        estimate_with_aggregates(&agg, &ops[1]).sigma_e
+    });
+    b.bench("table1/one_pair_ground_truth", || {
+        let cap = caps.iter().find(|c| c.layer == 1).unwrap();
+        let approx = approx_matmul(&cap.x_codes, &net.layers[1].w_cols, &lut, cap.m, cap.k, cap.n);
+        let errs: Vec<f64> = approx
+            .iter()
+            .zip(&cap.exact_acc)
+            .map(|(&a, &e)| (a - e) as f64)
+            .collect();
+        stats::std_dev(&errs)
+    });
+
+    // Table 2/3: full §3.4 matching at learned sigmas over the 36-catalog
+    let act_signed: Vec<bool> = manifest.layers.iter().map(|l| l.act_signed).collect();
+    b.bench("table2/predict_all_36x10", || {
+        matching::predict_all(&cat, &ops, &act_signed)
+    });
+    let preds = matching::predict_all(&cat, &ops, &act_signed);
+    let sigmas = vec![0.1f32; manifest.num_layers];
+    let ystd = vec![1.0f32; manifest.num_layers];
+    b.bench("table2/match_multipliers", || {
+        matching::match_multipliers(&manifest, &cat, &preds, &sigmas, &ystd, 1.0)
+    });
+
+    // Figure 5: per-layer energy accounting
+    let outcome = matching::match_multipliers(&manifest, &cat, &preds, &sigmas, &ystd, 1.0);
+    b.bench("fig5/per_layer_accounting", || {
+        matching::per_layer_reduction(&cat, &outcome.instance_indices())
+    });
+    b.finish();
+}

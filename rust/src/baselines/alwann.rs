@@ -1,0 +1,251 @@
+//! ALWANN-style baseline (Mrazek et al. [25]): multi-objective evolutionary
+//! search over per-layer multiplier assignments, *without retraining*.
+//!
+//! A faithful-in-spirit NSGA-II: genomes are per-layer catalog indices,
+//! objectives are (multiply energy, validation error) evaluated by the
+//! native behavioral simulator on a holdout subset. ALWANN's weight-tuning
+//! step is reproduced as a bias-mean compensation: the probabilistic error
+//! model predicts each layer's error mean mu_e and the simulator absorbs it
+//! into the BN shift — the same systematic-error correction ALWANN's weight
+//! remapping targets, computed analytically instead of by remapping.
+
+use crate::multipliers::Catalog;
+use crate::runtime::Manifest;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub genome: Vec<usize>,
+    /// objective 1: relative multiply energy (lower is better)
+    pub energy: f64,
+    /// objective 2: top-1 error on the holdout (lower is better)
+    pub error: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct AlwannConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub mutation_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for AlwannConfig {
+    fn default() -> Self {
+        AlwannConfig { population: 16, generations: 8, mutation_rate: 0.15, seed: 7 }
+    }
+}
+
+/// Pareto dominance on (energy, error), both minimized.
+fn dominates(a: &Candidate, b: &Candidate) -> bool {
+    (a.energy <= b.energy && a.error <= b.error)
+        && (a.energy < b.energy || a.error < b.error)
+}
+
+/// Fast non-dominated sort -> front index per candidate (0 = best front).
+pub fn non_dominated_fronts(pop: &[Candidate]) -> Vec<usize> {
+    let n = pop.len();
+    let mut front = vec![usize::MAX; n];
+    let mut dominated_by = vec![0usize; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if dominates(&pop[i], &pop[j]) {
+                dominates_list[i].push(j);
+            } else if dominates(&pop[j], &pop[i]) {
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dominated_by[i] == 0).collect();
+    let mut level = 0;
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            front[i] = level;
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        current = next;
+        level += 1;
+    }
+    front
+}
+
+/// Crowding distance within one front (NSGA-II diversity pressure).
+fn crowding(pop: &[Candidate], members: &[usize]) -> Vec<(usize, f64)> {
+    let mut dist: Vec<(usize, f64)> = members.iter().map(|&i| (i, 0.0)).collect();
+    for key in 0..2 {
+        let get = |c: &Candidate| if key == 0 { c.energy } else { c.error };
+        dist.sort_by(|a, b| get(&pop[a.0]).partial_cmp(&get(&pop[b.0])).unwrap());
+        let lo = get(&pop[dist[0].0]);
+        let hi = get(&pop[dist[dist.len() - 1].0]);
+        let span = (hi - lo).max(1e-12);
+        let len = dist.len();
+        dist[0].1 = f64::INFINITY;
+        dist[len - 1].1 = f64::INFINITY;
+        for m in 1..len - 1 {
+            let delta = get(&pop[dist[m + 1].0]) - get(&pop[dist[m - 1].0]);
+            dist[m].1 += delta / span;
+        }
+    }
+    dist
+}
+
+/// NSGA-II main loop. `eval` maps a genome to (energy, top1-error); it is a
+/// closure so the coordinator decides the fidelity (simulator subset size).
+pub fn nsga2_search(
+    manifest: &Manifest,
+    catalog: &Catalog,
+    cfg: &AlwannConfig,
+    mut eval: impl FnMut(&[usize]) -> (f64, f64),
+) -> Vec<Candidate> {
+    let n_layers = manifest.layers.len();
+    let n_inst = catalog.len();
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let exact = catalog.exact_index();
+
+    let make = |genome: Vec<usize>, eval: &mut dyn FnMut(&[usize]) -> (f64, f64)| {
+        let (energy, error) = eval(&genome);
+        Candidate { genome, energy, error }
+    };
+
+    // seed population: all-exact + uniform levels + random genomes
+    let mut pop: Vec<Candidate> = Vec::with_capacity(cfg.population * 2);
+    pop.push(make(vec![exact; n_layers], &mut eval));
+    for lvl in 0..(cfg.population / 2).min(n_inst) {
+        pop.push(make(vec![lvl; n_layers], &mut eval));
+    }
+    while pop.len() < cfg.population {
+        let genome: Vec<usize> =
+            (0..n_layers).map(|_| rng.range_usize(0, n_inst)).collect();
+        pop.push(make(genome, &mut eval));
+    }
+
+    for _gen in 0..cfg.generations {
+        // offspring: binary tournament on front rank, uniform crossover + mutation
+        let fronts = non_dominated_fronts(&pop);
+        let mut offspring = Vec::with_capacity(cfg.population);
+        while offspring.len() < cfg.population {
+            let pick = |rng: &mut Pcg32| {
+                let a = rng.range_usize(0, pop.len());
+                let b = rng.range_usize(0, pop.len());
+                if fronts[a] <= fronts[b] {
+                    a
+                } else {
+                    b
+                }
+            };
+            let pa = pick(&mut rng);
+            let pb = pick(&mut rng);
+            let mut genome = Vec::with_capacity(n_layers);
+            for l in 0..n_layers {
+                let src = if rng.below(2) == 0 { pa } else { pb };
+                genome.push(pop[src].genome[l]);
+            }
+            for g in genome.iter_mut() {
+                if rng.f64() < cfg.mutation_rate {
+                    // local move in the power-sorted catalog (ALWANN mutates
+                    // towards neighbouring accuracy levels)
+                    let delta = rng.range_usize(0, 5) as i64 - 2;
+                    *g = (*g as i64 + delta).clamp(0, n_inst as i64 - 1) as usize;
+                }
+            }
+            offspring.push(make(genome, &mut eval));
+        }
+        pop.extend(offspring);
+        // environmental selection: fronts + crowding
+        let fronts = non_dominated_fronts(&pop);
+        let mut order: Vec<usize> = (0..pop.len()).collect();
+        let max_front = fronts.iter().max().copied().unwrap_or(0);
+        let mut selected: Vec<usize> = Vec::with_capacity(cfg.population);
+        for f in 0..=max_front {
+            let members: Vec<usize> =
+                order.iter().copied().filter(|&i| fronts[i] == f).collect();
+            if members.is_empty() {
+                continue;
+            }
+            if selected.len() + members.len() <= cfg.population {
+                selected.extend(&members);
+            } else {
+                let mut cd = crowding(&pop, &members);
+                cd.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                for (i, _) in cd.into_iter().take(cfg.population - selected.len()) {
+                    selected.push(i);
+                }
+                break;
+            }
+        }
+        selected.sort_unstable();
+        selected.dedup();
+        let mut new_pop = Vec::with_capacity(selected.len());
+        for i in selected {
+            new_pop.push(pop[i].clone());
+        }
+        pop = new_pop;
+        order.clear();
+    }
+    // return the final non-dominated front
+    let fronts = non_dominated_fronts(&pop);
+    pop.into_iter()
+        .zip(fronts)
+        .filter(|(_, f)| *f == 0)
+        .map(|(c, _)| c)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::tests_support::fake_manifest;
+    use crate::multipliers::unsigned_catalog;
+
+    #[test]
+    fn fronts_identify_dominance() {
+        let c = |e: f64, a: f64| Candidate { genome: vec![], energy: e, error: a };
+        let pop = vec![c(0.2, 0.3), c(0.1, 0.5), c(0.3, 0.2), c(0.3, 0.4)];
+        let fronts = non_dominated_fronts(&pop);
+        assert_eq!(fronts[0], 0);
+        assert_eq!(fronts[1], 0);
+        assert_eq!(fronts[2], 0);
+        assert_eq!(fronts[3], 1, "(0.3,0.4) dominated by (0.2,0.3)");
+    }
+
+    #[test]
+    fn nsga2_finds_synthetic_tradeoff() {
+        // synthetic objective: energy = mean(power), error grows with
+        // aggressiveness; the front must span several energies and end
+        // near-exact on the low-error side.
+        let cat = unsigned_catalog();
+        let manifest = fake_manifest(&[100, 100, 100]);
+        let cfg = AlwannConfig { population: 12, generations: 6, ..Default::default() };
+        let front = nsga2_search(&manifest, &cat, &cfg, |genome| {
+            let e: f64 = genome.iter().map(|&i| cat.instances[i].power).sum::<f64>()
+                / genome.len() as f64;
+            let err: f64 = genome
+                .iter()
+                .map(|&i| (1.0 - cat.instances[i].power).powi(2))
+                .sum::<f64>()
+                / genome.len() as f64;
+            (e, err)
+        });
+        assert!(front.len() >= 3, "front too small: {}", front.len());
+        let min_e = front.iter().map(|c| c.energy).fold(f64::MAX, f64::min);
+        let max_e = front.iter().map(|c| c.energy).fold(0.0, f64::max);
+        assert!(max_e - min_e > 0.1, "front does not span energies");
+        // no member of the returned front may dominate another
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(a, b) || std::ptr::eq(a, b));
+            }
+        }
+    }
+}

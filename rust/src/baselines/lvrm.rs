@@ -1,0 +1,82 @@
+//! LVRM-style baseline (Tasoulas et al. [31]): weight-oriented heterogeneous
+//! assignment *without* learned robustness and without retraining.
+//!
+//! Stand-in rule: a single global relative-error threshold tau is applied
+//! to every layer — each layer takes the cheapest multiplier whose
+//! predicted relative output error stays below tau. This captures the
+//! class of methods that pick per-layer approximation from a hand-set
+//! global tolerance rather than a learned, layer-individual one; the gap
+//! to Gradient Search in Table 2 is precisely the value of learning
+//! sigma_l per layer.
+
+use crate::matching::{energy_reduction, MatchOutcome, LayerAssignment};
+use crate::multipliers::Catalog;
+use crate::runtime::Manifest;
+
+/// Assign with a uniform relative threshold `tau` (relative to sigma(y_l)).
+pub fn lvrm_assign(
+    manifest: &Manifest,
+    catalog: &Catalog,
+    predictions: &[Vec<f64>],
+    y_std: &[f32],
+    tau: f64,
+) -> MatchOutcome {
+    let exact = catalog.exact_index();
+    let mut assignments = Vec::with_capacity(predictions.len());
+    for (li, preds) in predictions.iter().enumerate() {
+        let threshold = tau * y_std[li] as f64;
+        let mut chosen = exact;
+        for ii in 0..catalog.len() {
+            if preds[ii] <= threshold {
+                chosen = ii;
+                break;
+            }
+        }
+        assignments.push(LayerAssignment {
+            layer: li,
+            instance: chosen,
+            instance_name: catalog.instances[chosen].name.clone(),
+            power: catalog.instances[chosen].power,
+            sigma_pred_rel: if y_std[li] > 0.0 {
+                preds[chosen] / y_std[li] as f64
+            } else {
+                0.0
+            },
+        });
+    }
+    let idxs: Vec<usize> = assignments.iter().map(|a| a.instance).collect();
+    MatchOutcome {
+        energy_reduction: energy_reduction(manifest, catalog, &idxs),
+        assignments,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::tests_support::fake_manifest;
+    use crate::multipliers::unsigned_catalog;
+
+    #[test]
+    fn tau_zero_is_all_exact() {
+        let cat = unsigned_catalog();
+        let m = fake_manifest(&[10, 10]);
+        let preds: Vec<Vec<f64>> = vec![
+            cat.instances.iter().map(|i| if i.power < 1.0 { 1.0 } else { 0.0 }).collect();
+            2
+        ];
+        let out = lvrm_assign(&m, &cat, &preds, &[1.0, 1.0], 0.0);
+        assert!(out.energy_reduction.abs() < 1e-12);
+    }
+
+    #[test]
+    fn larger_tau_more_savings() {
+        let cat = unsigned_catalog();
+        let m = fake_manifest(&[10, 10]);
+        let preds: Vec<Vec<f64>> =
+            vec![cat.instances.iter().map(|i| 1.0 - i.power).collect(); 2];
+        let lo = lvrm_assign(&m, &cat, &preds, &[1.0, 1.0], 0.05);
+        let hi = lvrm_assign(&m, &cat, &preds, &[1.0, 1.0], 0.5);
+        assert!(hi.energy_reduction >= lo.energy_reduction);
+    }
+}

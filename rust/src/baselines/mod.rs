@@ -1,0 +1,9 @@
+//! Baseline methods the paper compares against in Tables 2/3.
+
+pub mod alwann;
+pub mod lvrm;
+pub mod uniform;
+
+pub use alwann::{nsga2_search, AlwannConfig, Candidate};
+pub use lvrm::lvrm_assign;
+pub use uniform::{uniform_candidates, UniformResult};

@@ -1,0 +1,79 @@
+//! Uniform-multiplier baseline (De la Parra et al. [3]): one approximate
+//! multiplier for the *whole* network + retraining. The coordinator sweeps
+//! the catalog and retrains each candidate; this module provides the
+//! enumeration and bookkeeping.
+
+use crate::matching::energy_reduction;
+use crate::multipliers::Catalog;
+use crate::runtime::Manifest;
+
+#[derive(Clone, Debug)]
+pub struct UniformResult {
+    pub instance: usize,
+    pub instance_name: String,
+    pub energy_reduction: f64,
+    /// filled by the coordinator after retraining + evaluation
+    pub top1: f64,
+    pub topk: f64,
+}
+
+/// All uniform configurations, most aggressive (cheapest) first, with their
+/// energy reductions precomputed.
+pub fn uniform_candidates(manifest: &Manifest, catalog: &Catalog) -> Vec<UniformResult> {
+    (0..catalog.len())
+        .map(|i| UniformResult {
+            instance: i,
+            instance_name: catalog.instances[i].name.clone(),
+            energy_reduction: energy_reduction(
+                manifest,
+                catalog,
+                &vec![i; manifest.layers.len()],
+            ),
+            top1: 0.0,
+            topk: 0.0,
+        })
+        .collect()
+}
+
+/// Best uniform candidate meeting an accuracy floor (paper Table 2 protocol:
+/// highest energy reduction whose accuracy loss stays under the budget).
+pub fn best_within_budget(results: &[UniformResult], baseline_top1: f64, budget_pp: f64) -> Option<&UniformResult> {
+    results
+        .iter()
+        .filter(|r| baseline_top1 - r.top1 <= budget_pp / 100.0 + 1e-9)
+        .max_by(|a, b| a.energy_reduction.partial_cmp(&b.energy_reduction).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::tests_support::fake_manifest;
+    use crate::multipliers::unsigned_catalog;
+
+    #[test]
+    fn candidates_cover_catalog_sorted_by_power() {
+        let cat = unsigned_catalog();
+        let m = fake_manifest(&[10, 20]);
+        let cands = uniform_candidates(&m, &cat);
+        assert_eq!(cands.len(), cat.len());
+        // catalog is power-sorted -> energy reduction is non-increasing
+        for w in cands.windows(2) {
+            assert!(w[0].energy_reduction >= w[1].energy_reduction - 1e-12);
+        }
+    }
+
+    #[test]
+    fn budget_filter() {
+        let mk = |e: f64, t: f64| UniformResult {
+            instance: 0,
+            instance_name: "x".into(),
+            energy_reduction: e,
+            top1: t,
+            topk: t,
+        };
+        let rs = vec![mk(0.9, 0.50), mk(0.6, 0.79), mk(0.3, 0.80)];
+        let best = best_within_budget(&rs, 0.80, 1.0).unwrap();
+        assert_eq!(best.energy_reduction, 0.6);
+        assert!(best_within_budget(&rs, 0.99, 1.0).is_none());
+    }
+}

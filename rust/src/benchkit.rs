@@ -1,0 +1,109 @@
+//! Minimal benchmark harness (criterion is not in the offline crate set).
+//!
+//! Benches are plain binaries with `harness = false`; this module provides
+//! warmup + repeated timed runs, robust summary statistics, and a uniform
+//! report format so `cargo bench` output is comparable across benches.
+//!
+//! ```ignore
+//! let mut b = benchkit::Bench::new("error_model");
+//! b.bench("row_aggregates/resnet8", || { ...work... });
+//! b.finish();
+//! ```
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+}
+
+pub struct Bench {
+    pub group: String,
+    pub results: Vec<BenchResult>,
+    /// Target wall-clock per measurement (seconds).
+    pub budget_s: f64,
+    pub min_iters: usize,
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Bench {
+        println!("\n=== bench group: {group} ===");
+        Bench {
+            group: group.to_string(),
+            results: Vec::new(),
+            budget_s: std::env::var("BENCH_BUDGET_S")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(1.0),
+            min_iters: 3,
+        }
+    }
+
+    /// Time `f` repeatedly until the budget is used (>= min_iters runs).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let once = t0.elapsed().as_secs_f64();
+        let iters = ((self.budget_s / once.max(1e-9)) as usize)
+            .clamp(self.min_iters, 10_000);
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            min_s: samples[0],
+            p50_s: samples[samples.len() / 2],
+            p90_s: samples[samples.len() * 9 / 10],
+        };
+        println!(
+            "{:<44} {:>12} (p50 {:>12}, p90 {:>12}, min {:>12}, n={})",
+            name,
+            fmt_time(result.mean_s),
+            fmt_time(result.p50_s),
+            fmt_time(result.p90_s),
+            fmt_time(result.min_s),
+            iters
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Report a derived throughput for the last result.
+    pub fn throughput(&self, units: f64, unit_name: &str) {
+        if let Some(last) = self.results.last() {
+            println!(
+                "{:<44} {:>12.2} {unit_name}/s",
+                format!("  -> {}", last.name),
+                units / last.p50_s
+            );
+        }
+    }
+
+    pub fn finish(self) {
+        println!("=== end group: {} ({} benches) ===", self.group, self.results.len());
+    }
+}

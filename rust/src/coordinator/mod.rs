@@ -1,0 +1,9 @@
+//! Layer-3 coordination: experiment registry, shared pipeline, Pareto
+//! tooling, and report rendering.
+
+pub mod experiments;
+pub mod pareto;
+pub mod pipeline;
+pub mod report;
+
+pub use pipeline::{Pipeline, RunConfig};

@@ -1,0 +1,85 @@
+//! Pareto-front utilities for the energy/accuracy tradeoff plots (Fig. 3).
+
+/// One evaluated operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    /// Energy reduction (higher is better).
+    pub energy_reduction: f64,
+    /// Top-1 (or top-5) accuracy (higher is better).
+    pub accuracy: f64,
+    /// The lambda (or other knob) that produced the point.
+    pub knob: f64,
+}
+
+/// True iff a dominates b (both objectives maximized).
+pub fn dominates(a: &Point, b: &Point) -> bool {
+    a.energy_reduction >= b.energy_reduction
+        && a.accuracy >= b.accuracy
+        && (a.energy_reduction > b.energy_reduction || a.accuracy > b.accuracy)
+}
+
+/// Split points into (front, dominated), front sorted by energy reduction.
+pub fn pareto_split(points: &[Point]) -> (Vec<Point>, Vec<Point>) {
+    let mut front = Vec::new();
+    let mut dominated = Vec::new();
+    for (i, p) in points.iter().enumerate() {
+        let is_dominated = points
+            .iter()
+            .enumerate()
+            .any(|(j, q)| j != i && dominates(q, p));
+        if is_dominated {
+            dominated.push(*p);
+        } else {
+            front.push(*p);
+        }
+    }
+    front.sort_by(|a, b| a.energy_reduction.partial_cmp(&b.energy_reduction).unwrap());
+    (front, dominated)
+}
+
+/// Highest energy reduction whose accuracy loss vs `baseline` stays within
+/// `budget_pp` percentage points (the Table 2 summary statistic).
+pub fn best_within_loss(points: &[Point], baseline: f64, budget_pp: f64) -> Option<Point> {
+    points
+        .iter()
+        .filter(|p| (baseline - p.accuracy) * 100.0 <= budget_pp + 1e-9)
+        .max_by(|a, b| a.energy_reduction.partial_cmp(&b.energy_reduction).unwrap())
+        .copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(e: f64, a: f64) -> Point {
+        Point { energy_reduction: e, accuracy: a, knob: 0.0 }
+    }
+
+    #[test]
+    fn split_basic() {
+        let pts = vec![p(0.3, 0.9), p(0.5, 0.85), p(0.4, 0.8), p(0.7, 0.6)];
+        let (front, dom) = pareto_split(&pts);
+        assert_eq!(front.len(), 3);
+        assert_eq!(dom.len(), 1);
+        assert_eq!(dom[0], p(0.4, 0.8));
+        // sorted by energy
+        assert!(front.windows(2).all(|w| w[0].energy_reduction <= w[1].energy_reduction));
+    }
+
+    #[test]
+    fn best_within_budget() {
+        let pts = vec![p(0.3, 0.90), p(0.6, 0.885), p(0.8, 0.86)];
+        let best = best_within_loss(&pts, 0.89, 1.0).unwrap();
+        assert_eq!(best.energy_reduction, 0.6);
+        assert_eq!(best_within_loss(&pts, 0.89, 5.0).unwrap().energy_reduction, 0.8);
+        assert!(best_within_loss(&pts, 0.999, 0.1).is_none());
+    }
+
+    #[test]
+    fn identical_points_not_mutually_dominated() {
+        let pts = vec![p(0.5, 0.5), p(0.5, 0.5)];
+        let (front, dom) = pareto_split(&pts);
+        assert_eq!(front.len(), 2);
+        assert!(dom.is_empty());
+    }
+}

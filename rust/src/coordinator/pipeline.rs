@@ -1,0 +1,299 @@
+//! Shared experiment pipeline: QAT baseline -> calibration -> gradient
+//! search -> matching -> retraining -> evaluation, with on-disk caching of
+//! trained states so experiments compose without retraining from scratch.
+
+use crate::datasets::{Dataset, DatasetSpec, Split};
+use crate::errormodel::model::LayerOperands;
+use crate::matching::{self, MatchOutcome};
+use crate::multipliers::Catalog;
+use crate::runtime::{Engine, Manifest};
+use crate::search::{self, EvalMetrics, EvalMode, LrSchedule, TrainState};
+use crate::simulator::{accuracy, LutSet, SimNet};
+use crate::tensor::TensorF;
+use crate::util::timer::Timings;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Step counts / schedules for one experiment run. Defaults are sized for
+/// the single-core CPU testbed (DESIGN.md §Substitutions); `--paper` on the
+/// CLI scales them up.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub qat_steps: usize,
+    pub search_steps: usize,
+    pub retrain_steps: usize,
+    pub eval_batches: usize,
+    pub calib_batches: usize,
+    pub k_samples: usize,
+    pub seed: u64,
+    pub sigma_init: f32,
+    pub sigma_max: f32,
+    pub lr_qat: LrSchedule,
+    pub lr_search: LrSchedule,
+    pub lr_retrain: LrSchedule,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            qat_steps: 300,
+            search_steps: 120,
+            retrain_steps: 30,
+            eval_batches: 8,
+            calib_batches: 4,
+            k_samples: 512,
+            seed: 42,
+            sigma_init: 0.1,
+            sigma_max: 0.5,
+            lr_qat: LrSchedule { base: 0.05, decay: 0.9, every: 60 },
+            lr_search: LrSchedule { base: 0.01, decay: 0.9, every: 40 },
+            lr_retrain: LrSchedule { base: 0.001, decay: 0.9, every: 10 },
+        }
+    }
+}
+
+pub struct Pipeline {
+    pub engine: Engine,
+    pub manifest: Manifest,
+    pub train: Dataset,
+    pub val: Dataset,
+    pub cfg: RunConfig,
+    pub cache_dir: PathBuf,
+    pub timings: Timings,
+}
+
+impl Pipeline {
+    pub fn new(artifacts: &Path, model: &str, cfg: RunConfig) -> Result<Pipeline> {
+        let engine = Engine::new(artifacts)?;
+        let manifest = engine.manifest(model)?;
+        let hw = (manifest.input_shape[0], manifest.input_shape[1]);
+        let spec = if manifest.classes >= 20 {
+            DatasetSpec::synth_tin(hw, cfg.seed)
+        } else {
+            DatasetSpec::synth_cifar(hw, cfg.seed)
+        };
+        let train = Dataset::load(&spec, Split::Train);
+        let val = Dataset::load(&spec, Split::Val);
+        let cache_dir = PathBuf::from("results/cache");
+        std::fs::create_dir_all(&cache_dir).context("creating results/cache")?;
+        Ok(Pipeline {
+            engine,
+            manifest,
+            train,
+            val,
+            cfg,
+            cache_dir,
+            timings: Timings::default(),
+        })
+    }
+
+    // -- state caching -------------------------------------------------------
+
+    fn cache_path(&self, tag: &str) -> PathBuf {
+        self.cache_dir.join(format!(
+            "{}_{tag}_seed{}.f32",
+            self.manifest.model, self.cfg.seed
+        ))
+    }
+
+    fn save_vec(&self, path: &Path, v: &[f32]) -> Result<()> {
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))
+    }
+
+    fn load_vec(&self, path: &Path, len: usize) -> Option<Vec<f32>> {
+        let bytes = std::fs::read(path).ok()?;
+        if bytes.len() != len * 4 {
+            return None;
+        }
+        Some(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        )
+    }
+
+    // -- stages --------------------------------------------------------------
+
+    /// QAT baseline parameters (cached across experiments).
+    pub fn baseline(&mut self) -> Result<TrainState> {
+        let tag = format!("qat{}", self.cfg.qat_steps);
+        let path = self.cache_path(&tag);
+        if let Some(flat) = self.load_vec(&path, self.manifest.param_count) {
+            log::info!("{}: loaded cached QAT baseline", self.manifest.model);
+            return Ok(TrainState::with_params(&self.manifest, flat, self.cfg.sigma_init));
+        }
+        let mut state = TrainState::init(&self.manifest, self.cfg.sigma_init)?;
+        let (manifest, train, cfg) = (self.manifest.clone(), &self.train, self.cfg.clone());
+        let hist = {
+            let engine = &mut self.engine;
+            search::train_qat(engine, &manifest, train, &mut state, cfg.qat_steps, cfg.lr_qat, cfg.seed)?
+        };
+        self.timings.add("qat_train", 0.0); // wall time tracked by engine
+        log::info!(
+            "{}: QAT baseline trained, tail acc {:.3}",
+            self.manifest.model,
+            hist.tail_accuracy(20, self.manifest.batch)
+        );
+        self.save_vec(&path, &state.flat)?;
+        Ok(state)
+    }
+
+    /// Calibration (frozen activation absmax + pre-activation std).
+    pub fn calibrate(&mut self, flat: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let manifest = self.manifest.clone();
+        search::calibrate(&mut self.engine, &manifest, &self.train, flat, self.cfg.calib_batches)
+    }
+
+    /// Convert calibrated per-layer absmax to the activation *scales* the
+    /// AOT approx programs consume (absmax/255 unsigned, absmax/127 signed —
+    /// the grid convention of python/compile/kernels/quant.py).
+    pub fn act_scales(&self, absmax: &[f32]) -> Vec<f32> {
+        self.manifest
+            .layers
+            .iter()
+            .zip(absmax)
+            .map(|(l, &am)| {
+                if l.act_signed {
+                    crate::quant::act_scale_signed(am)
+                } else {
+                    crate::quant::act_scale(am)
+                }
+            })
+            .collect()
+    }
+
+    /// One gradient-search run at a given lambda, starting from `base`.
+    /// Cached per (lambda, steps).
+    pub fn search_at(&mut self, base: &TrainState, lambda: f32) -> Result<TrainState> {
+        let tag = format!(
+            "agn{}_lam{:.3}",
+            self.cfg.search_steps,
+            lambda
+        );
+        let ppath = self.cache_path(&format!("{tag}_p"));
+        let spath = self.cache_path(&format!("{tag}_s"));
+        if let (Some(flat), Some(sig)) = (
+            self.load_vec(&ppath, self.manifest.param_count),
+            self.load_vec(&spath, self.manifest.num_layers),
+        ) {
+            let mut st = TrainState::with_params(&self.manifest, flat, 0.0);
+            st.sigmas = sig;
+            return Ok(st);
+        }
+        let mut state = base.clone();
+        state.sigmas = vec![self.cfg.sigma_init; self.manifest.num_layers];
+        state.sig_mom = vec![0.0; self.manifest.num_layers];
+        let manifest = self.manifest.clone();
+        let cfg = self.cfg.clone();
+        search::gradient_search(
+            &mut self.engine,
+            &manifest,
+            &self.train,
+            &mut state,
+            cfg.search_steps,
+            cfg.lr_search,
+            lambda,
+            cfg.sigma_max,
+            cfg.seed ^ (lambda.to_bits() as u64),
+        )?;
+        self.save_vec(&ppath, &state.flat)?;
+        self.save_vec(&spath, &state.sigmas)?;
+        Ok(state)
+    }
+
+    /// Behavioral retraining under an assignment's LUTs.
+    pub fn retrain(
+        &mut self,
+        state: &mut TrainState,
+        luts: &[Vec<i32>],
+        act_scales: &[f32],
+    ) -> Result<()> {
+        let manifest = self.manifest.clone();
+        let cfg = self.cfg.clone();
+        search::retrain_approx(
+            &mut self.engine,
+            &manifest,
+            &self.train,
+            state,
+            luts,
+            act_scales,
+            cfg.retrain_steps,
+            cfg.lr_retrain,
+            cfg.seed,
+        )?;
+        Ok(())
+    }
+
+    /// PJRT evaluation on the validation split.
+    pub fn evaluate(&mut self, flat: &[f32], mode: EvalMode) -> Result<EvalMetrics> {
+        let manifest = self.manifest.clone();
+        search::evaluate(&mut self.engine, &manifest, &self.val, flat, mode, self.cfg.eval_batches)
+    }
+
+    /// Native-simulator evaluation (fast path for sweeps; full val split).
+    pub fn evaluate_sim(
+        &self,
+        flat: &[f32],
+        act_absmax: &[f32],
+        luts: &LutSet,
+        images: usize,
+    ) -> Result<EvalMetrics> {
+        let net = SimNet::new(&self.manifest, flat)?;
+        let (h, w) = net.input_hw;
+        let batch = self.manifest.batch;
+        let n = images.min(self.val.len());
+        let mut top1 = 0usize;
+        let mut topk = 0usize;
+        let mut seen = 0usize;
+        let mut start = 0;
+        while seen < n {
+            let (xs, ys) = self.val.eval_batch(batch, start);
+            let x = TensorF::from_vec(&[batch, h, w, 3], xs);
+            let logits = net.forward(&x, act_absmax, luts, None);
+            let (t1, tk) = accuracy(&logits, &ys, 5);
+            top1 += t1;
+            topk += tk;
+            seen += batch;
+            start += batch;
+        }
+        Ok(EvalMetrics {
+            loss: 0.0,
+            top1: top1 as f64 / seen as f64,
+            topk: topk as f64 / seen as f64,
+            n: seen,
+        })
+    }
+
+    /// Operand collection for the error model (k patches per layer).
+    pub fn operands(&self, flat: &[f32], act_absmax: &[f32]) -> Result<Vec<LayerOperands>> {
+        let net = SimNet::new(&self.manifest, flat)?;
+        matching::collect_operands(
+            &net,
+            &self.manifest,
+            &self.train,
+            act_absmax,
+            self.cfg.k_samples,
+            self.cfg.seed,
+        )
+    }
+
+    /// Error-model predictions for every (layer, instance).
+    pub fn predictions(&self, catalog: &Catalog, operands: &[LayerOperands]) -> Vec<Vec<f64>> {
+        let act_signed: Vec<bool> =
+            self.manifest.layers.iter().map(|l| l.act_signed).collect();
+        matching::predict_all(catalog, operands, &act_signed)
+    }
+
+    /// §3.4 matching at the learned sigmas.
+    pub fn match_at(
+        &self,
+        catalog: &Catalog,
+        predictions: &[Vec<f64>],
+        sigmas: &[f32],
+        y_std: &[f32],
+    ) -> MatchOutcome {
+        matching::match_multipliers(&self.manifest, catalog, predictions, sigmas, y_std, 1.0)
+    }
+}

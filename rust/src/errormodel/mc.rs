@@ -1,0 +1,126 @@
+//! Single-distribution Monte-Carlo baseline (paper Table 1; the ReD-CaNe
+//! methodology of Marchisio et al. [21]).
+//!
+//! Draws (activation, weight) operand pairs from the layer's *global*
+//! frequency distributions, accumulates fan-in errors per trial neuron and
+//! reports the std over trials. This is an MC simulation of exactly the
+//! process the probabilistic model integrates analytically — minus the
+//! local-distribution correction, which is what costs it accuracy
+//! (paper: Pearson 0.767 vs 0.997).
+
+use crate::errormodel::model::LayerOperands;
+use crate::util::rng::Pcg32;
+use crate::util::stats::Welford;
+
+/// Alias-free cumulative-table sampler over a 256-bin histogram.
+struct HistSampler {
+    cdf: Vec<f64>,
+}
+
+impl HistSampler {
+    fn from_codes<I: IntoIterator<Item = u8>>(codes: I) -> Self {
+        let mut hist = [0f64; 256];
+        let mut n = 0f64;
+        for c in codes {
+            hist[c as usize] += 1.0;
+            n += 1.0;
+        }
+        let mut cdf = Vec::with_capacity(256);
+        let mut acc = 0.0;
+        for h in hist {
+            acc += h / n.max(1.0);
+            cdf.push(acc);
+        }
+        HistSampler { cdf }
+    }
+
+    fn draw(&self, rng: &mut Pcg32) -> u8 {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i.min(255) as u8,
+        }
+    }
+}
+
+/// MC estimate of the neuron-output error std (integer accumulator units).
+pub fn mc_sigma_e(
+    err_map: &[i32],
+    ops: &LayerOperands,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let xs = HistSampler::from_codes(ops.patches.iter().flatten().copied());
+    let ws = HistSampler::from_codes(ops.weight_cols.iter().copied());
+    let mut rng = Pcg32::seeded(seed);
+    let mut agg = Welford::default();
+    for _ in 0..trials {
+        let mut sum = 0i64;
+        for _ in 0..ops.fan_in {
+            let a = xs.draw(&mut rng) as usize;
+            let b = ws.draw(&mut rng) as usize;
+            sum += err_map[a * 256 + b] as i64;
+        }
+        agg.push(sum as f64);
+    }
+    agg.std_dev()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::errormodel::layer_error_map;
+    use crate::errormodel::model::estimate_single_dist;
+    use crate::multipliers::unsigned_catalog;
+
+    fn ops() -> LayerOperands {
+        let mut rng = Pcg32::seeded(11);
+        LayerOperands {
+            weight_cols: (0..300).map(|_| rng.below(256) as u8).collect(),
+            patches: (0..16)
+                .map(|_| (0..64).map(|_| rng.below(256) as u8).collect())
+                .collect(),
+            fan_in: 64,
+            s_x: 1.0,
+            s_w: 1.0,
+        }
+    }
+
+    #[test]
+    fn mc_converges_to_single_dist_analytic() {
+        // With i.i.d. global draws, MC should approach the analytic
+        // single-distribution sigma_e as trials grow.
+        let cat = unsigned_catalog();
+        let inst = cat.get("mul8u_trc5").unwrap();
+        let em = layer_error_map(inst, false);
+        let o = ops();
+        let analytic = estimate_single_dist(&em, &o).sigma_e;
+        let mc = mc_sigma_e(&em, &o, 4000, 7);
+        let rel = (mc - analytic).abs() / analytic;
+        assert!(rel < 0.08, "mc {mc} analytic {analytic} rel {rel}");
+    }
+
+    #[test]
+    fn mc_zero_for_exact() {
+        let cat = unsigned_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        let em = layer_error_map(exact, false);
+        assert_eq!(mc_sigma_e(&em, &ops(), 100, 3), 0.0);
+    }
+
+    #[test]
+    fn sampler_respects_histogram() {
+        let codes: Vec<u8> = std::iter::repeat(7u8)
+            .take(900)
+            .chain(std::iter::repeat(200u8).take(100))
+            .collect();
+        let s = HistSampler::from_codes(codes);
+        let mut rng = Pcg32::seeded(1);
+        let mut c7 = 0;
+        for _ in 0..10_000 {
+            if s.draw(&mut rng) == 7 {
+                c7 += 1;
+            }
+        }
+        assert!((c7 as f64 / 10_000.0 - 0.9).abs() < 0.02, "{c7}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Probabilistic error models linking a multiplier's error map to the AGN
+//! parameter space (paper §3.3), plus the two baseline predictors of
+//! Table 1 (multiplier MRE and single-distribution Monte Carlo).
+
+pub mod mc;
+pub mod model;
+pub mod mre;
+
+pub use model::{estimate_layer, ErrorEstimate, LayerOperands};
+
+/// Error map in the *layer* operand convention: err[row*256+col] where row
+/// is the activation code and col the weight code + 128. Built as
+/// `build_layer_lut - exact products` so it reflects exactly what the layer
+/// experiences (sign-magnitude wrapping included for unsigned cores).
+pub fn layer_error_map(
+    inst: &crate::multipliers::Instance,
+    act_signed: bool,
+) -> Vec<i32> {
+    let lut = crate::multipliers::build_layer_lut(inst, act_signed);
+    let mut err = vec![0i32; lut.len()];
+    for row in 0..256 {
+        let x = if act_signed { row as i32 - 128 } else { row as i32 };
+        for col in 0..256 {
+            let w = col as i32 - 128;
+            err[row * 256 + col] = lut[row * 256 + col] - x * w;
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::unsigned_catalog;
+
+    #[test]
+    fn exact_layer_error_map_is_zero() {
+        let cat = unsigned_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        assert!(layer_error_map(exact, false).iter().all(|&e| e == 0));
+        assert!(layer_error_map(exact, true).iter().all(|&e| e == 0));
+    }
+
+    #[test]
+    fn truncated_layer_error_nonpositive_for_positive_weights() {
+        // truncation underestimates the magnitude -> for w > 0 the signed
+        // error is <= 0 on the unsigned grid
+        let cat = unsigned_catalog();
+        let inst = cat.get("mul8u_trc4").expect("trc4 in catalog");
+        let err = layer_error_map(inst, false);
+        for row in 0..256 {
+            for col in 129..256 {
+                assert!(err[row * 256 + col] <= 0, "row {row} col {col}");
+            }
+        }
+    }
+}

@@ -1,0 +1,61 @@
+//! Multiplier MRE baseline predictor (paper Table 1, Hammad et al. [9]).
+//!
+//! The MRE is a property of the multiplier alone — it knows nothing about
+//! operand distributions or fan-in, which is exactly why its predictive
+//! power for the layer-output error std is poor (paper: Pearson 0.546).
+
+use crate::multipliers::Instance;
+use std::collections::HashMap;
+
+/// Memoized MRE per instance name (the full-space scan costs ~65k ops).
+#[derive(Default)]
+pub struct MreCache {
+    cache: HashMap<String, f64>,
+}
+
+impl MreCache {
+    pub fn get(&mut self, inst: &Instance) -> f64 {
+        if let Some(&v) = self.cache.get(&inst.name) {
+            return v;
+        }
+        let v = inst.mre();
+        self.cache.insert(inst.name.clone(), v);
+        v
+    }
+}
+
+/// The MRE "prediction" for a layer is the MRE itself scaled by the layer's
+/// output magnitude proxy — the best-faith single-value use of the metric:
+/// predicted sigma_e ~ MRE * mean(|y|)-scale. Since Table 1 scores it via
+/// Pearson correlation (scale-invariant) the proxy constant cancels; we
+/// still expose a scaled value for the relative-error column, where the
+/// paper reports "n.a." for exactly this reason.
+pub fn mre_prediction(mre: f64, fan_in: usize, mean_abs_product: f64) -> f64 {
+    mre * mean_abs_product * (fan_in as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::unsigned_catalog;
+
+    #[test]
+    fn cache_hits_are_stable() {
+        let cat = unsigned_catalog();
+        let inst = cat.get("mul8u_trc3").unwrap();
+        let mut cache = MreCache::default();
+        let a = cache.get(inst);
+        let b = cache.get(inst);
+        assert_eq!(a, b);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn mre_ordering_roughly_tracks_truncation() {
+        let cat = unsigned_catalog();
+        let mut cache = MreCache::default();
+        let m2 = cache.get(cat.get("mul8u_trc2").unwrap());
+        let m6 = cache.get(cat.get("mul8u_trc6").unwrap());
+        assert!(m6 > m2, "more truncation must raise MRE: {m2} vs {m6}");
+    }
+}

@@ -1,0 +1,28 @@
+//! # agn-approx
+//!
+//! Production reproduction of **"Combining Gradients and Probabilities for
+//! Heterogeneous Approximation of Neural Networks"** (Trommer, Waschneck,
+//! Kumar — ICCAD 2022) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is the Layer-3 coordinator: it owns datasets, the gradient
+//! search driver, the probabilistic multiplier error model, the multiplier
+//! catalog, matching/energy accounting, the baselines and the experiment
+//! registry. Compute graphs (Layer 2, JAX) and kernels (Layer 1, Pallas)
+//! are AOT-compiled to HLO text by `python/compile/` and executed through
+//! [`runtime`] on the PJRT CPU client — Python never runs at run time.
+//!
+//! See DESIGN.md for the system inventory and the experiment index.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod coordinator;
+pub mod datasets;
+pub mod errormodel;
+pub mod matching;
+pub mod multipliers;
+pub mod quant;
+pub mod runtime;
+pub mod search;
+pub mod simulator;
+pub mod tensor;
+pub mod util;

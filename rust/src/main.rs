@@ -1,0 +1,159 @@
+//! agn-approx CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands (one per paper artifact + utilities):
+//!   table1 | table2 | table3 | fig3 | fig4 | fig5   — regenerate results
+//!   train | search | eval                            — pipeline stages
+//!   info                                             — artifact inventory
+//!
+//! Common flags: --artifacts DIR --qat-steps N --search-steps N
+//!               --retrain-steps N --lambdas 0.0,0.1,... --seed N --models a,b
+//! Run `agn-approx help` for details.
+
+use agn_approx::coordinator::experiments as exp;
+use agn_approx::coordinator::{Pipeline, RunConfig};
+use agn_approx::multipliers::{signed_catalog, unsigned_catalog};
+use agn_approx::runtime::Engine;
+use agn_approx::search::EvalMode;
+use agn_approx::util::cli::Args;
+use anyhow::Result;
+use std::path::PathBuf;
+
+const HELP: &str = "\
+agn-approx — heterogeneous approximation of neural networks (ICCAD'22 repro)
+
+USAGE: agn-approx <command> [flags]
+
+COMMANDS
+  table1            error-model quality (Pearson / median rel. error)
+  table2            energy reduction vs baselines for the ResNet family
+  table3            homogeneous vs heterogeneous VGG16 (SynthTIN)
+  fig3              Pareto fronts of the lambda sweep
+  fig4              AGN-space vs behavioral accuracy (default: resnet20)
+  fig5              per-layer assignment breakdown (default: vgg16)
+  train             QAT-train a model and report validation accuracy
+  search            one gradient-search run; prints learned sigma_l
+  eval              evaluate the cached QAT baseline
+  catalog           print the multiplier catalogs
+  info              list artifacts and manifest facts
+  help              this text
+
+COMMON FLAGS
+  --artifacts DIR      artifact directory        [artifacts]
+  --models a,b         model list                [command-specific]
+  --qat-steps N        QAT baseline steps        [300]
+  --search-steps N     gradient-search steps     [120]
+  --retrain-steps N    behavioral retrain steps  [30]
+  --eval-batches N     eval batches (PJRT path)  [8]
+  --lambdas l1,l2,...  lambda sweep              [0,0.05,0.1,0.2,0.3,0.45,0.6]
+  --lambda X           single lambda             [0.3]
+  --budget-pp X        accuracy-loss budget      [1.0]
+  --seed N             global seed               [42]
+  --no-baselines       table2: skip ALWANN/LVRM/uniform
+  --mc-trials N        table1 MC trials          [2000]
+";
+
+fn run_config(args: &Args) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = args.usize_or("qat-steps", cfg.qat_steps);
+    cfg.search_steps = args.usize_or("search-steps", cfg.search_steps);
+    cfg.retrain_steps = args.usize_or("retrain-steps", cfg.retrain_steps);
+    cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches);
+    cfg.calib_batches = args.usize_or("calib-batches", cfg.calib_batches);
+    cfg.k_samples = args.usize_or("k-samples", cfg.k_samples);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.sigma_init = args.f32_or("sigma-init", cfg.sigma_init);
+    cfg.sigma_max = args.f32_or("sigma-max", cfg.sigma_max);
+    cfg
+}
+
+fn lambdas(args: &Args) -> Vec<f32> {
+    args.get("lambdas")
+        .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
+        .unwrap_or_else(exp::default_lambdas)
+}
+
+fn main() -> Result<()> {
+    agn_approx::util::logging::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let cfg = run_config(&args);
+    let budget = args.f64_or("budget-pp", 1.0);
+
+    match cmd {
+        "table1" => exp::table1(&artifacts, cfg, args.usize_or("mc-trials", 2000))?,
+        "table2" => {
+            let models = args.list_or("models", "resnet8,resnet14,resnet20,resnet32");
+            exp::table2(&artifacts, &models, cfg, &lambdas(&args), budget, !args.has("no-baselines"))?;
+        }
+        "table3" => exp::table3(&artifacts, cfg, args.f32_or("lambda", 0.3))?,
+        "fig3" => {
+            let models = args.list_or("models", "resnet8,resnet14,resnet20,resnet32");
+            exp::fig3(&artifacts, &models, cfg, &lambdas(&args))?;
+        }
+        "fig4" => {
+            let model = args.str_or("models", "resnet20");
+            exp::fig4(&artifacts, &model, cfg, &lambdas(&args))?;
+        }
+        "fig5" => {
+            let models = args.list_or("models", "vgg16");
+            exp::fig5(&artifacts, &models, cfg, args.f32_or("lambda", 0.3))?;
+        }
+        "train" | "eval" => {
+            let model = args.str_or("models", "resnet8");
+            let mut pipe = Pipeline::new(&artifacts, &model, cfg)?;
+            let base = pipe.baseline()?;
+            let m = pipe.evaluate(&base.flat, EvalMode::Qat)?;
+            println!(
+                "{model}: QAT baseline top-1 {:.3} top-5 {:.3} (loss {:.3}, n={})",
+                m.top1, m.topk, m.loss, m.n
+            );
+            println!(
+                "engine: {} executions, {:.2}s exec, {:.2}s compile",
+                pipe.engine.exec_count, pipe.engine.exec_seconds, pipe.engine.compile_seconds
+            );
+        }
+        "search" => {
+            let model = args.str_or("models", "resnet8");
+            let lam = args.f32_or("lambda", 0.3);
+            let mut pipe = Pipeline::new(&artifacts, &model, cfg)?;
+            let base = pipe.baseline()?;
+            let searched = pipe.search_at(&base, lam)?;
+            println!("{model} lambda={lam}: learned sigma_l per layer:");
+            for (info, s) in pipe.manifest.layers.iter().zip(&searched.sigmas) {
+                println!("  {:<16} sigma = {s:.4}", info.name);
+            }
+        }
+        "catalog" => {
+            for cat in [unsigned_catalog(), signed_catalog()] {
+                println!("catalog {} ({} instances):", cat.name, cat.len());
+                for i in &cat.instances {
+                    println!("  {:<16} power {:.3}  mre {:.4}", i.name, i.power, i.mre());
+                }
+            }
+        }
+        "info" => {
+            let engine = Engine::new(&artifacts)?;
+            println!("platform: {}", engine.platform());
+            for entry in std::fs::read_dir(&artifacts)? {
+                let p = entry?.path();
+                if p.to_string_lossy().ends_with(".manifest.json") {
+                    let model = p.file_name().unwrap().to_string_lossy().replace(".manifest.json", "");
+                    let m = engine.manifest(&model)?;
+                    println!(
+                        "  {:<16} arch={:<12} N={:<8} L={:<3} batch={} input={:?} programs={}",
+                        m.model,
+                        m.arch,
+                        m.param_count,
+                        m.num_layers,
+                        m.batch,
+                        m.input_shape,
+                        m.programs.len()
+                    );
+                }
+            }
+        }
+        _ => print!("{HELP}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,264 @@
+//! Multiplier matching (paper §3.4) + energy accounting.
+//!
+//! Given the learned robustness sigma_l, the calibrated pre-activation
+//! batch std sigma(y_l) and the multiplier catalog, predict every
+//! (layer, instance) error std with the probabilistic model and keep, per
+//! layer, the cheapest instance whose predicted *relative* error
+//! sigma_e_float / sigma(y_l) stays below sigma_l.
+
+use crate::datasets::Dataset;
+use crate::errormodel::model::{estimate_with_aggregates, row_aggregates, LayerOperands};
+use crate::errormodel::layer_error_map;
+use crate::multipliers::{build_layer_lut, Catalog};
+use crate::quant;
+use crate::runtime::Manifest;
+use crate::simulator::{LutSet, SimNet};
+use crate::tensor::TensorF;
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// Operand statistics for every layer, sampled from an exact forward pass.
+pub fn collect_operands(
+    net: &SimNet,
+    manifest: &Manifest,
+    data: &Dataset,
+    act_absmax: &[f32],
+    k_samples: usize,
+    seed: u64,
+) -> Result<Vec<LayerOperands>> {
+    let (h, w) = net.input_hw;
+    let batch = manifest.batch.min(data.len());
+    let (xs, _ys) = data.eval_batch(batch, 0);
+    let x = TensorF::from_vec(&[batch, h, w, 3], xs);
+    let mut captures = Vec::new();
+    net.forward(&x, act_absmax, &LutSet::Exact, Some(&mut captures));
+    let mut rng = Pcg32::seeded(seed ^ 0x0b5e);
+    let mut out = Vec::with_capacity(net.layers.len());
+    for (idx, layer) in net.layers.iter().enumerate() {
+        let cap = captures
+            .iter()
+            .find(|c| c.layer == idx)
+            .ok_or_else(|| anyhow::anyhow!("no capture for layer {idx}"))?;
+        // sample k receptive-field rows (paper: k = 512 input samples)
+        let k = cap.k;
+        let rows = rng.sample_indices(cap.m, k_samples.min(cap.m));
+        let patches: Vec<Vec<u8>> = rows
+            .iter()
+            .map(|&r| cap.x_codes[r * k..(r + 1) * k].to_vec())
+            .collect();
+        let signed = layer.info.act_signed;
+        let s_x = if signed {
+            quant::act_scale_signed(act_absmax[idx])
+        } else {
+            quant::act_scale(act_absmax[idx])
+        };
+        out.push(LayerOperands {
+            weight_cols: layer.w_cols.clone(),
+            patches,
+            fan_in: layer.info.fan_in,
+            s_x,
+            s_w: layer.s_w,
+        });
+    }
+    Ok(out)
+}
+
+/// Predicted error std (float units) for every (layer, instance) pair.
+/// Row-major [layer][instance].
+pub fn predict_all(catalog: &Catalog, operands: &[LayerOperands], act_signed: &[bool]) -> Vec<Vec<f64>> {
+    let mut table = vec![vec![0.0f64; catalog.len()]; operands.len()];
+    for (ii, inst) in catalog.instances.iter().enumerate() {
+        // error maps depend on the activation grid; compute per distinct grid
+        let mut maps: [Option<Vec<i32>>; 2] = [None, None];
+        for (li, ops) in operands.iter().enumerate() {
+            let grid = act_signed[li] as usize;
+            if maps[grid].is_none() {
+                maps[grid] = Some(layer_error_map(inst, act_signed[li]));
+            }
+            let agg = row_aggregates(maps[grid].as_ref().unwrap(), &ops.weight_cols);
+            table[li][ii] = estimate_with_aggregates(&agg, ops).sigma_e_float;
+        }
+    }
+    table
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerAssignment {
+    pub layer: usize,
+    pub instance: usize,
+    pub instance_name: String,
+    pub power: f64,
+    pub sigma_pred_rel: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct MatchOutcome {
+    pub assignments: Vec<LayerAssignment>,
+    /// 1 - relative multiply energy vs. the all-exact configuration.
+    pub energy_reduction: f64,
+}
+
+impl MatchOutcome {
+    pub fn instance_indices(&self) -> Vec<usize> {
+        self.assignments.iter().map(|a| a.instance).collect()
+    }
+}
+
+/// Multiply-energy reduction of an assignment (power weighted by each
+/// layer's multiplication count, normalized to all-exact).
+pub fn energy_reduction(manifest: &Manifest, catalog: &Catalog, instances: &[usize]) -> f64 {
+    let total: f64 = manifest.layers.iter().map(|l| l.mults_per_image as f64).sum();
+    let spent: f64 = manifest
+        .layers
+        .iter()
+        .zip(instances)
+        .map(|(l, &i)| l.mults_per_image as f64 * catalog.instances[i].power)
+        .sum();
+    1.0 - spent / total
+}
+
+/// Per-layer energy reduction (Figure 5's y-axis).
+pub fn per_layer_reduction(catalog: &Catalog, instances: &[usize]) -> Vec<f64> {
+    instances.iter().map(|&i| 1.0 - catalog.instances[i].power).collect()
+}
+
+/// The §3.4 matching rule. `margin` scales the threshold (1.0 = paper rule).
+pub fn match_multipliers(
+    manifest: &Manifest,
+    catalog: &Catalog,
+    predictions: &[Vec<f64>],
+    sigmas: &[f32],
+    y_std: &[f32],
+    margin: f64,
+) -> MatchOutcome {
+    let exact = catalog.exact_index();
+    let mut assignments = Vec::with_capacity(predictions.len());
+    for (li, preds) in predictions.iter().enumerate() {
+        let threshold = (sigmas[li].abs() as f64) * (y_std[li] as f64) * margin;
+        // catalog is power-sorted: first admissible instance is cheapest
+        let mut chosen = exact;
+        for (ii, inst) in catalog.instances.iter().enumerate() {
+            if preds[ii] <= threshold {
+                chosen = ii;
+                break;
+            }
+            let _ = inst;
+        }
+        assignments.push(LayerAssignment {
+            layer: li,
+            instance: chosen,
+            instance_name: catalog.instances[chosen].name.clone(),
+            power: catalog.instances[chosen].power,
+            sigma_pred_rel: if y_std[li] > 0.0 {
+                preds[chosen] / y_std[li] as f64
+            } else {
+                0.0
+            },
+        });
+    }
+    let idxs: Vec<usize> = assignments.iter().map(|a| a.instance).collect();
+    MatchOutcome {
+        energy_reduction: energy_reduction(manifest, catalog, &idxs),
+        assignments,
+    }
+}
+
+/// Build the per-layer full-product LUTs for an assignment (the tensors the
+/// AOT `train_approx`/`eval_approx` programs and the simulator consume).
+pub fn assignment_luts(
+    manifest: &Manifest,
+    catalog: &Catalog,
+    instances: &[usize],
+) -> Vec<Vec<i32>> {
+    manifest
+        .layers
+        .iter()
+        .zip(instances)
+        .map(|(l, &i)| build_layer_lut(&catalog.instances[i], l.act_signed))
+        .collect()
+}
+
+/// Test-support helpers shared across the test suites.
+#[doc(hidden)]
+pub mod tests_support {
+    use super::Manifest;
+
+    /// Minimal manifest with the given per-layer mult counts (via the JSON
+    /// parser so the parse path is exercised too).
+    pub fn fake_manifest(mults: &[usize]) -> Manifest {
+        let layers: Vec<String> = mults
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                format!(
+                    r#"{{"name": "l{i}", "kind": "conv", "cin": 3, "cout": 4,
+                        "k": 3, "stride": 1, "pad": 1, "in_hw": [8, 8],
+                        "out_hw": [8, 8], "fan_in": 27,
+                        "mults_per_image": {m}, "act_signed": false}}"#
+                )
+            })
+            .collect();
+        let text = format!(
+            r#"{{"model": "m", "arch": "tinynet", "act_signed": false,
+                "batch": 4, "input_shape": [8, 8, 3], "classes": 10,
+                "param_count": 0, "num_layers": {}, "init_seed": 0,
+                "init_params": "x.f32", "leaves": [], "programs": {{}},
+                "layers": [{}]}}"#,
+            mults.len(),
+            layers.join(",")
+        );
+        let v = crate::util::json::parse(&text).unwrap();
+        Manifest::from_json(std::path::Path::new("/tmp"), &v).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::fake_manifest as fake_manifest_layers;
+    use super::*;
+    use crate::multipliers::unsigned_catalog;
+
+    #[test]
+    fn energy_reduction_exact_is_zero() {
+        let cat = unsigned_catalog();
+        let m = fake_manifest_layers(&[100, 200]);
+        let exact = cat.exact_index();
+        assert!((energy_reduction(&m, &cat, &[exact, exact])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_reduction_weights_by_mults() {
+        let cat = unsigned_catalog();
+        let m = fake_manifest_layers(&[900, 100]);
+        let exact = cat.exact_index();
+        let cheap = 0; // power-sorted: index 0 is the cheapest instance
+        let big_cheap = energy_reduction(&m, &cat, &[cheap, exact]);
+        let small_cheap = energy_reduction(&m, &cat, &[exact, cheap]);
+        assert!(big_cheap > small_cheap, "{big_cheap} vs {small_cheap}");
+    }
+
+    #[test]
+    fn matching_threshold_monotone() {
+        // a larger sigma_l can only pick an instance of equal or lower power
+        let cat = unsigned_catalog();
+        let m = fake_manifest_layers(&[100]);
+        // synthetic predictions: instance i has error ~ (1 - power)
+        let preds =
+            vec![cat.instances.iter().map(|i| 1.0 - i.power).collect::<Vec<f64>>()];
+        let low = match_multipliers(&m, &cat, &preds, &[0.05], &[1.0], 1.0);
+        let high = match_multipliers(&m, &cat, &preds, &[0.5], &[1.0], 1.0);
+        assert!(high.assignments[0].power <= low.assignments[0].power);
+        assert!(high.energy_reduction >= low.energy_reduction);
+    }
+
+    #[test]
+    fn zero_sigma_picks_exact() {
+        let cat = unsigned_catalog();
+        let m = fake_manifest_layers(&[100]);
+        let preds =
+            vec![cat.instances.iter().map(|i| if i.power < 1.0 { 9e9 } else { 0.0 }).collect()];
+        let out = match_multipliers(&m, &cat, &preds, &[0.0], &[1.0], 1.0);
+        assert_eq!(out.assignments[0].instance_name, "mul8u_exact");
+        assert!(out.energy_reduction.abs() < 1e-12);
+    }
+}

@@ -1,0 +1,193 @@
+//! The multiplier catalogs: 36 unsigned + 13 signed instances, mirroring the
+//! EvoApprox8b search-space sizes the paper uses (§4.2: 36 unsigned 8-bit
+//! multipliers; §4.3: 13 signed).
+//!
+//! Instances are chosen to cover a wide accuracy/power range with several
+//! points per family, so the matching step has dense Pareto choices.
+
+use super::families::MulKind;
+use super::Instance;
+
+/// A named set of instances, sorted by ascending power.
+#[derive(Clone, Debug)]
+pub struct Catalog {
+    pub name: String,
+    pub instances: Vec<Instance>,
+}
+
+impl Catalog {
+    pub fn len(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instances.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Instance> {
+        self.instances.iter().find(|i| i.name == name)
+    }
+
+    /// Index of the exact instance (always present).
+    pub fn exact_index(&self) -> usize {
+        self.instances
+            .iter()
+            .position(|i| i.kind == MulKind::Exact)
+            .expect("catalog always contains the exact multiplier")
+    }
+}
+
+fn inst(prefix: &str, kind: MulKind, signed: bool) -> Instance {
+    Instance {
+        name: format!("{prefix}_{}", kind.tag()),
+        kind,
+        signed,
+        power: kind.power(),
+    }
+}
+
+/// The 36-instance unsigned catalog (paper §4.2 search space).
+pub fn unsigned_catalog() -> Catalog {
+    let kinds = unsigned_kinds();
+    assert_eq!(kinds.len(), 36, "unsigned catalog must have 36 instances");
+    let mut instances: Vec<Instance> =
+        kinds.into_iter().map(|k| inst("mul8u", k, false)).collect();
+    instances.sort_by(|a, b| a.power.partial_cmp(&b.power).unwrap());
+    Catalog { name: "evo8u".into(), instances }
+}
+
+fn unsigned_kinds() -> Vec<MulKind> {
+    let mut kinds = vec![MulKind::Exact];
+    // truncated: fine-grained low-error end
+    for k in 1..=7 {
+        kinds.push(MulKind::Truncated { k });
+    }
+    // broken-array combinations
+    for (h, v) in [(2, 1), (4, 1), (4, 2), (6, 2), (6, 3), (8, 3), (8, 4), (10, 4)] {
+        kinds.push(MulKind::Bam { h, v });
+    }
+    // row perforation patterns (LSB rows first, then mixed)
+    for mask in [0x01u8, 0x03, 0x07, 0x0f, 0x05, 0x15] {
+        kinds.push(MulKind::Perforated { mask });
+    }
+    // error-tolerant OR-compression
+    for k in [2, 4, 6, 8, 10] {
+        kinds.push(MulKind::Etm { k });
+    }
+    // dynamic-range
+    for k in [3, 4, 5, 6] {
+        kinds.push(MulKind::Drum { k });
+    }
+    // logarithmic
+    for t in [0, 2, 4, 6, 16] {
+        kinds.push(MulKind::Mitchell { t });
+    }
+    kinds
+}
+
+/// The 13-instance signed catalog (paper §4.3: signed search space).
+pub fn signed_catalog() -> Catalog {
+    let kinds = vec![
+        MulKind::Exact,
+        MulKind::Truncated { k: 1 },
+        MulKind::Truncated { k: 2 },
+        MulKind::Truncated { k: 3 },
+        MulKind::Truncated { k: 5 },
+        MulKind::Bam { h: 4, v: 2 },
+        MulKind::Bam { h: 6, v: 3 },
+        MulKind::Perforated { mask: 0x03 },
+        MulKind::Etm { k: 4 },
+        MulKind::Drum { k: 4 },
+        MulKind::Drum { k: 6 },
+        MulKind::Mitchell { t: 4 },
+        MulKind::Mitchell { t: 16 },
+    ];
+    assert_eq!(kinds.len(), 13, "signed catalog must have 13 instances");
+    let mut instances: Vec<Instance> =
+        kinds.into_iter().map(|k| inst("mul8s", k, true)).collect();
+    // Signed (sign-magnitude) wrappers cost extra XOR/negate stages: the
+    // paper notes signed multipliers have "lower overall energy reduction
+    // for similar performance" — model that with a fixed wrapper overhead.
+    for i in &mut instances {
+        i.power = (i.power * 0.92 + 0.08).min(1.0);
+    }
+    instances.sort_by(|a, b| a.power.partial_cmp(&b.power).unwrap());
+    Catalog { name: "evo8s".into(), instances }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::error_map;
+    use crate::util::stats;
+
+    #[test]
+    fn catalog_sizes_match_paper() {
+        assert_eq!(unsigned_catalog().len(), 36);
+        assert_eq!(signed_catalog().len(), 13);
+    }
+
+    #[test]
+    fn names_unique() {
+        for cat in [unsigned_catalog(), signed_catalog()] {
+            let mut names: Vec<&str> =
+                cat.instances.iter().map(|i| i.name.as_str()).collect();
+            names.sort_unstable();
+            let n = names.len();
+            names.dedup();
+            assert_eq!(n, names.len(), "duplicate names in {}", cat.name);
+        }
+    }
+
+    #[test]
+    fn exact_present_and_power_one() {
+        for cat in [unsigned_catalog(), signed_catalog()] {
+            let e = &cat.instances[cat.exact_index()];
+            assert!((e.power - 1.0).abs() < 1e-12, "{}: {}", cat.name, e.power);
+        }
+    }
+
+    #[test]
+    fn error_std_spans_orders_of_magnitude() {
+        // Paper §4.1: observed error stds span ~5 orders of magnitude.
+        let cat = unsigned_catalog();
+        let mut stds: Vec<f64> = Vec::new();
+        for inst in &cat.instances {
+            if inst.kind == MulKind::Exact {
+                continue;
+            }
+            let em = error_map(inst);
+            let errs: Vec<f64> = em.iter().map(|&e| e as f64).collect();
+            let sd = stats::std_dev(&errs);
+            assert!(sd > 0.0, "{} has zero error", inst.name);
+            stds.push(sd);
+        }
+        let min = stds.iter().cloned().fold(f64::MAX, f64::min);
+        let max = stds.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            max / min > 1e3,
+            "span too small: min {min:.3} max {max:.1}"
+        );
+    }
+
+    #[test]
+    fn powers_strictly_below_one_for_approx() {
+        for cat in [unsigned_catalog(), signed_catalog()] {
+            for i in &cat.instances {
+                if i.kind != MulKind::Exact {
+                    assert!(i.power < 1.0, "{} power {}", i.name, i.power);
+                }
+                assert!(i.power > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_by_power() {
+        for cat in [unsigned_catalog(), signed_catalog()] {
+            for w in cat.instances.windows(2) {
+                assert!(w[0].power <= w[1].power);
+            }
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Structural approximate multiplier families: exact enumeration of the
+//! unsigned 8x8 core for each family, plus the gate-activity power proxy.
+//!
+//! All cores are pure integer functions of (a, b) in [0, 255]^2 — no tables,
+//! so the error-map generation in `lut.rs` is the ground truth by
+//! construction.
+
+/// Family + parameters of one multiplier core.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MulKind {
+    /// Exact 8x8 array multiplier.
+    Exact,
+    /// Truncated array: PP bits with column index i+j < k discarded.
+    Truncated { k: u32 },
+    /// Broken-array multiplier: keep PP bit (i,j) iff i+j >= h && j >= v.
+    Bam { h: u32, v: u32 },
+    /// Row perforation: PP rows j with mask bit set are skipped.
+    Perforated { mask: u8 },
+    /// Error-tolerant multiplier: columns < k accumulate carry-free (OR).
+    Etm { k: u32 },
+    /// DRUM-style dynamic-range multiplier with k-bit segments.
+    Drum { k: u32 },
+    /// Mitchell logarithmic multiplier, mantissas truncated to t fractional
+    /// bits (t = 8 is the classic full-precision Mitchell).
+    Mitchell { t: u32 },
+}
+
+impl MulKind {
+    /// Unsigned core product for a, b in [0, 255].
+    pub fn mul_u(&self, a: u32, b: u32) -> u64 {
+        debug_assert!(a < 256 && b < 256);
+        match *self {
+            MulKind::Exact => (a as u64) * (b as u64),
+            MulKind::Truncated { k } => pp_sum(a, b, |i, j| i + j >= k),
+            MulKind::Bam { h, v } => pp_sum(a, b, |i, j| i + j >= h && j >= v),
+            MulKind::Perforated { mask } => pp_sum(a, b, |_, j| mask & (1 << j) == 0),
+            MulKind::Etm { k } => etm(a, b, k),
+            MulKind::Drum { k } => drum(a, b, k),
+            MulKind::Mitchell { t } => mitchell(a, b, t),
+        }
+    }
+
+    /// Gate-activity power proxy, normalized so `Exact` == 1.0.
+    ///
+    /// Model: an 8x8 array multiplier spends its switching energy in the 64
+    /// AND cells (weight 0.3) and 56 adder cells (weight 0.7). Structural
+    /// families remove cells; OR-compression replaces an adder cell at ~1/4
+    /// the energy; log/dynamic-range families are costed from their datapath
+    /// components (LOD ~ 4 adder-equivalents, k-bit adder ~ k cells, barrel
+    /// shifter ~ 6). The absolute numbers are a proxy for `pdk45_pwr` — the
+    /// method only needs a consistent relative ordering (DESIGN.md).
+    pub fn power(&self) -> f64 {
+        const AND_W: f64 = 0.3 / 64.0;
+        const ADD_W: f64 = 0.7 / 56.0;
+        match *self {
+            MulKind::Exact => 1.0,
+            MulKind::Truncated { k } => {
+                let bits = pp_count(|i, j| i + j >= k);
+                bits as f64 * AND_W + adder_cells(bits) as f64 * ADD_W
+            }
+            MulKind::Bam { h, v } => {
+                let bits = pp_count(|i, j| i + j >= h && j >= v);
+                bits as f64 * AND_W + adder_cells(bits) as f64 * ADD_W
+            }
+            MulKind::Perforated { mask } => {
+                let bits = pp_count(|_, j| mask & (1 << j) == 0);
+                bits as f64 * AND_W + adder_cells(bits) as f64 * ADD_W
+            }
+            MulKind::Etm { k } => {
+                let hi = pp_count(|i, j| i + j >= k);
+                let lo = 64 - hi;
+                // low columns: AND cells still switch, OR tree at 1/4 adder cost
+                (hi + lo) as f64 * AND_W
+                    + adder_cells(hi) as f64 * ADD_W
+                    + lo as f64 * ADD_W * 0.25
+            }
+            MulKind::Drum { k } => {
+                // two LODs + two k-bit muxes + k x k core + 2k-bit shifter
+                let core_bits = k * k;
+                let core = core_bits as f64 * AND_W + adder_cells(core_bits) as f64 * ADD_W;
+                core + 8.0 * ADD_W /* LODs */ + 6.0 * ADD_W /* shifter */
+            }
+            MulKind::Mitchell { t } => {
+                // two LODs, one (8+t)-bit adder, decoder/shifter
+                (8.0 + (8 + t) as f64 + 6.0) * ADD_W + 8.0 * AND_W
+            }
+        }
+    }
+
+    /// Short family tag used in instance names.
+    pub fn tag(&self) -> String {
+        match *self {
+            MulKind::Exact => "exact".into(),
+            MulKind::Truncated { k } => format!("trc{k}"),
+            MulKind::Bam { h, v } => format!("bam{h}{v}"),
+            MulKind::Perforated { mask } => format!("prf{mask:02x}"),
+            MulKind::Etm { k } => format!("etm{k}"),
+            MulKind::Drum { k } => format!("drm{k}"),
+            MulKind::Mitchell { t } => format!("log{t}"),
+        }
+    }
+}
+
+/// Sum of the partial-product bits (i = bit of a, j = bit of b) selected by
+/// `keep`, with full carry propagation (i.e. plain binary addition).
+fn pp_sum(a: u32, b: u32, keep: impl Fn(u32, u32) -> bool) -> u64 {
+    let mut acc: u64 = 0;
+    for j in 0..8 {
+        if (b >> j) & 1 == 0 {
+            continue;
+        }
+        let mut row: u64 = 0;
+        for i in 0..8 {
+            if (a >> i) & 1 == 1 && keep(i, j) {
+                row |= 1 << i;
+            }
+        }
+        acc += row << j;
+    }
+    acc
+}
+
+/// Number of PP bits kept by the predicate (for the power model).
+fn pp_count(keep: impl Fn(u32, u32) -> bool) -> u32 {
+    let mut n = 0;
+    for i in 0..8 {
+        for j in 0..8 {
+            if keep(i, j) {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Adder-cell count for an array summing `bits` PP bits: the exact 8x8 array
+/// uses 56 cells for 64 bits; scale proportionally (saturating).
+fn adder_cells(bits: u32) -> u32 {
+    ((bits as f64) * 56.0 / 64.0).round() as u32
+}
+
+/// Error-tolerant multiplier: columns below k are compressed with OR instead
+/// of addition (no carries generated or consumed there); columns >= k add
+/// exactly, but receive no carry-in from the low part.
+fn etm(a: u32, b: u32, k: u32) -> u64 {
+    let mut low: u64 = 0;
+    for c in 0..k.min(15) {
+        // OR of all PP bits in column c
+        let mut bit = 0u64;
+        for j in 0..8 {
+            if c >= j && c - j < 8 && (b >> j) & 1 == 1 && (a >> (c - j)) & 1 == 1 {
+                bit = 1;
+                break;
+            }
+        }
+        low |= bit << c;
+    }
+    let high = pp_sum(a, b, |i, j| i + j >= k);
+    high + low
+}
+
+/// DRUM-style: take the k-bit segment below the leading one of each operand
+/// (forcing the segment LSB to 1 for unbiasing), multiply segments, shift
+/// back. Operands smaller than 2^k pass through exactly.
+fn drum(a: u32, b: u32, k: u32) -> u64 {
+    let (sa, sha) = drum_segment(a, k);
+    let (sb, shb) = drum_segment(b, k);
+    ((sa as u64) * (sb as u64)) << (sha + shb)
+}
+
+fn drum_segment(x: u32, k: u32) -> (u32, u32) {
+    if x < (1 << k) {
+        return (x, 0);
+    }
+    let msb = 31 - x.leading_zeros();
+    let shift = msb + 1 - k;
+    ((x >> shift) | 1, shift)
+}
+
+/// Mitchell logarithmic multiplication with t-bit truncated mantissas,
+/// computed exactly in fixed point (F = 16 fractional bits internally).
+fn mitchell(a: u32, b: u32, t: u32) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    const F: u32 = 16;
+    let (la, ma) = log_parts(a, t, F);
+    let (lb, mb) = log_parts(b, t, F);
+    let char_sum = la + lb;
+    let mant_sum = ma + mb; // in [0, 2) as Q16
+    if mant_sum < (1 << F) {
+        // 2^(la+lb) * (1 + mant_sum)
+        shift_q(((1u64 << F) + mant_sum as u64) as u64, char_sum, F)
+    } else {
+        // 2^(la+lb+1) * (mant_sum - 1 + 1) = 2^(la+lb+1) * mant_sum/1... per
+        // Mitchell: result = 2^(la+lb+1) * (mant_sum) with mant_sum >= 1
+        shift_q(mant_sum as u64, char_sum + 1, F)
+    }
+}
+
+/// (characteristic, mantissa as Q`f` truncated to t bits) of x >= 1.
+fn log_parts(x: u32, t: u32, f: u32) -> (u32, u32) {
+    let c = 31 - x.leading_zeros();
+    // mantissa = (x - 2^c) / 2^c in Qf
+    let frac = ((x as u64 - (1u64 << c)) << f) >> c;
+    let keep = t.min(f);
+    let mask = if keep == 0 { 0 } else { !0u64 << (f - keep) };
+    (c, (frac & mask) as u32)
+}
+
+/// value_qf * 2^shift where value is Qf fixed point -> integer (truncating).
+fn shift_q(v: u64, shift: u32, f: u32) -> u64 {
+    if shift >= f {
+        v << (shift - f)
+    } else {
+        v >> (f - shift)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncated_zero_is_exact() {
+        let m = MulKind::Truncated { k: 0 };
+        for a in (0..256).step_by(7) {
+            for b in (0..256).step_by(11) {
+                assert_eq!(m.mul_u(a, b), (a * b) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_underestimates() {
+        let m = MulKind::Truncated { k: 4 };
+        for a in 0..256 {
+            for b in 0..256 {
+                assert!(m.mul_u(a, b) <= (a * b) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_error_bounded() {
+        // dropping columns < k can remove at most sum_{c<k} (c+1) * 2^c
+        for k in 1..8u32 {
+            let m = MulKind::Truncated { k };
+            let bound: u64 = (0..k).map(|c| ((c + 1) as u64) << c).sum();
+            for a in (0..256).step_by(3) {
+                for b in (0..256).step_by(5) {
+                    let e = (a * b) as u64 - m.mul_u(a as u32, b as u32);
+                    assert!(e <= bound, "k={k} a={a} b={b} e={e} bound={bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn perforation_by_zero_mask_is_exact() {
+        let m = MulKind::Perforated { mask: 0 };
+        assert_eq!(m.mul_u(251, 253), 251 * 253);
+    }
+
+    #[test]
+    fn etm_matches_exact_when_k0() {
+        let m = MulKind::Etm { k: 0 };
+        for a in (0..256).step_by(13) {
+            for b in (0..256).step_by(17) {
+                assert_eq!(m.mul_u(a, b), (a * b) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn drum_exact_for_small_operands() {
+        let m = MulKind::Drum { k: 4 };
+        for a in 0..16 {
+            for b in 0..16 {
+                assert_eq!(m.mul_u(a, b), (a * b) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn drum_relative_error_bounded() {
+        // DRUM-k relative error is bounded by ~2^-(k-1) per operand
+        let m = MulKind::Drum { k: 6 };
+        for a in 1..256u32 {
+            for b in 1..256u32 {
+                let e = (m.mul_u(a, b) as i64 - (a * b) as i64).abs() as f64;
+                let rel = e / (a * b) as f64;
+                assert!(rel < 0.07, "a={a} b={b} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn mitchell_relative_error_within_known_bound() {
+        // Mitchell's classic worst case is ~11.1% underestimation.
+        let m = MulKind::Mitchell { t: 16 };
+        for a in 1..256u32 {
+            for b in 1..256u32 {
+                let approx = m.mul_u(a, b) as f64;
+                let exact = (a * b) as f64;
+                let rel = (approx - exact) / exact;
+                assert!(rel <= 0.001 && rel > -0.12, "a={a} b={b} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn mitchell_powers_of_two_exact() {
+        let m = MulKind::Mitchell { t: 16 };
+        for pa in 0..8 {
+            for pb in 0..8 {
+                let (a, b) = (1u32 << pa, 1u32 << pb);
+                assert_eq!(m.mul_u(a, b), (a * b) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn power_ordering_within_truncated_family() {
+        let mut last = 1.0;
+        for k in 1..8 {
+            let p = MulKind::Truncated { k }.power();
+            assert!(p < last, "power must shrink with more truncation");
+            last = p;
+        }
+    }
+
+    #[test]
+    fn all_powers_in_unit_range() {
+        let kinds = [
+            MulKind::Exact,
+            MulKind::Truncated { k: 3 },
+            MulKind::Bam { h: 4, v: 2 },
+            MulKind::Perforated { mask: 0x15 },
+            MulKind::Etm { k: 6 },
+            MulKind::Drum { k: 4 },
+            MulKind::Mitchell { t: 4 },
+        ];
+        for k in kinds {
+            let p = k.power();
+            assert!(p > 0.0 && p <= 1.0, "{k:?} power {p}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Error maps and layer LUTs.
+//!
+//! Two table flavours:
+//! * `error_map(inst)`   — e(x, w) over the instance's native operand domain,
+//!   row-major [a][b]; the input of the probabilistic error model (§3.3).
+//! * `build_layer_lut(inst, act_signed)` — the *full product* table in the
+//!   layer operand convention shared with the Pallas kernel and the Rust
+//!   simulator: row = activation code (0..255; signed grids store code+128),
+//!   col = weight code + 128 (weights always signed symmetric in [-127,127]).
+//!
+//! For unsigned instances the layer LUT applies the sign-magnitude wrapper
+//! (`sign(w) * mul_u(a, |w|)`); for signed instances the row is interpreted
+//! on the signed grid and the core multiplies signed operands directly.
+
+use super::Instance;
+
+pub const LUT_SIDE: usize = 256;
+pub const LUT_SIZE: usize = LUT_SIDE * LUT_SIDE;
+
+/// e(a, b) = approx(a, b) - a*b over the native operand domain.
+///
+/// Unsigned: index = a * 256 + b with a, b in [0, 255].
+/// Signed:   index = (a + 128) * 256 + (b + 128) with a, b in [-128, 127].
+pub fn error_map(inst: &Instance) -> Vec<i32> {
+    let mut map = vec![0i32; LUT_SIZE];
+    if inst.signed {
+        for a in -128..=127i32 {
+            for b in -128..=127i32 {
+                map[((a + 128) as usize) * LUT_SIDE + (b + 128) as usize] =
+                    inst.error(a, b);
+            }
+        }
+    } else {
+        for a in 0..=255i32 {
+            for b in 0..=255i32 {
+                map[(a as usize) * LUT_SIDE + b as usize] = inst.error(a, b);
+            }
+        }
+    }
+    map
+}
+
+/// Full product table (exact + error) in the native domain — same indexing
+/// as `error_map`.
+pub fn product_map(inst: &Instance) -> Vec<i32> {
+    let mut map = vec![0i32; LUT_SIZE];
+    if inst.signed {
+        for a in -128..=127i32 {
+            for b in -128..=127i32 {
+                map[((a + 128) as usize) * LUT_SIDE + (b + 128) as usize] = inst.mul(a, b);
+            }
+        }
+    } else {
+        for a in 0..=255i32 {
+            for b in 0..=255i32 {
+                map[(a as usize) * LUT_SIDE + b as usize] = inst.mul(a, b);
+            }
+        }
+    }
+    map
+}
+
+/// Layer LUT in the network convention (see module docs). This is the table
+/// fed to `approx_matmul_lut` (L1 kernel) and `simulator::approx_matmul`.
+pub fn build_layer_lut(inst: &Instance, act_signed: bool) -> Vec<i32> {
+    let mut lut = vec![0i32; LUT_SIZE];
+    for row in 0..LUT_SIDE {
+        // activation value represented by this row
+        let x = if act_signed { row as i32 - 128 } else { row as i32 };
+        for col in 0..LUT_SIDE {
+            let w = col as i32 - 128; // weight code
+            let prod = if inst.signed {
+                inst.mul(x.clamp(-128, 127), w.clamp(-128, 127))
+            } else {
+                // sign-magnitude application of the unsigned core
+                let sign = (x < 0) != (w < 0);
+                let m = inst.mul(x.unsigned_abs().min(255) as i32, w.unsigned_abs().min(255) as i32);
+                if sign {
+                    -m
+                } else {
+                    m
+                }
+            };
+            lut[row * LUT_SIDE + col] = prod;
+        }
+    }
+    lut
+}
+
+/// Invariant required by the padded Pallas kernel: code (0-activation row,
+/// weight 0 column) must produce a zero product.
+pub fn lut_zero_invariant(lut: &[i32], act_signed: bool) -> bool {
+    let zero_row = if act_signed { 128 } else { 0 };
+    let zero_col = 128;
+    // zero activation row x any weight, and any activation x zero weight
+    (0..LUT_SIDE).all(|c| lut[zero_row * LUT_SIDE + c] == 0)
+        && (0..LUT_SIDE).all(|r| lut[r * LUT_SIDE + zero_col] == 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{signed_catalog, unsigned_catalog};
+
+    #[test]
+    fn exact_error_map_all_zero() {
+        let cat = unsigned_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        assert!(error_map(exact).iter().all(|&e| e == 0));
+    }
+
+    #[test]
+    fn product_minus_error_is_exact() {
+        let cat = unsigned_catalog();
+        for inst in cat.instances.iter().take(5) {
+            let em = error_map(inst);
+            let pm = product_map(inst);
+            for a in (0..256).step_by(37) {
+                for b in (0..256).step_by(29) {
+                    let i = a * LUT_SIDE + b;
+                    assert_eq!(pm[i] - em[i], (a * b) as i32, "{}", inst.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_invariant_holds_for_all_instances() {
+        for cat in [unsigned_catalog(), signed_catalog()] {
+            for inst in &cat.instances {
+                for act_signed in [false, true] {
+                    let lut = build_layer_lut(inst, act_signed);
+                    assert!(
+                        lut_zero_invariant(&lut, act_signed),
+                        "{} act_signed={act_signed}",
+                        inst.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn layer_lut_exact_instance_matches_product() {
+        let cat = unsigned_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        let lut = build_layer_lut(exact, false);
+        for a in (0..256).step_by(31) {
+            for wcode in -127..=127i32 {
+                let got = lut[a * LUT_SIDE + (wcode + 128) as usize];
+                assert_eq!(got, a as i32 * wcode);
+            }
+        }
+    }
+
+    #[test]
+    fn layer_lut_signed_grid() {
+        let cat = signed_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        let lut = build_layer_lut(exact, true);
+        for acode in -128..=127i32 {
+            for wcode in (-127..=127i32).step_by(17) {
+                let got = lut[(acode + 128) as usize * LUT_SIDE + (wcode + 128) as usize];
+                assert_eq!(got, acode.max(-128) * wcode);
+            }
+        }
+    }
+}

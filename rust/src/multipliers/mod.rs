@@ -1,0 +1,136 @@
+//! Approximate 8-bit multiplier library (EvoApprox8b stand-in).
+//!
+//! The paper consumes two things from a multiplier library: a full 256x256
+//! *error map* `e(x, w)` and a relative power number (`pdk45_pwr`). This
+//! module provides both from first principles: six *structural* families of
+//! approximate array/log multipliers whose behaviour is exactly enumerable
+//! and whose power is estimated from a gate-activity proxy (see `power`).
+//! The catalog instantiates 36 unsigned and 13 signed instances spanning
+//! ~5 orders of magnitude of error std — the same axes the EvoApprox
+//! library covers (DESIGN.md §Substitutions).
+//!
+//! Families:
+//! * `Exact`            — reference 8x8 array multiplier (power = 1.0)
+//! * `Truncated{k}`     — partial-product bits in columns < k discarded
+//! * `Bam{h, v}`        — broken-array: PP bit (i,j) kept iff i+j >= h && j >= v
+//! * `Perforated{mask}` — whole PP rows omitted (operand-b bit rows)
+//! * `Etm{k}`           — error-tolerant: columns < k use carry-free OR
+//! * `Drum{k}`          — dynamic-range: leading-k-bit segments, LSB set
+//! * `Mitchell{t}`      — logarithmic multiplier, mantissa truncated to t bits
+
+pub mod catalog;
+pub mod families;
+pub mod lut;
+
+pub use catalog::{signed_catalog, unsigned_catalog, Catalog};
+pub use families::MulKind;
+pub use lut::{build_layer_lut, error_map, product_map, LUT_SIDE, LUT_SIZE};
+
+/// One hardware instance in the search space.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    /// EvoApprox-style name, e.g. `mul8u_trc4`.
+    pub name: String,
+    pub kind: MulKind,
+    /// true = operands are two's-complement signed 8-bit; false = unsigned.
+    pub signed: bool,
+    /// Relative power vs. the exact array multiplier (pdk45_pwr stand-in).
+    pub power: f64,
+}
+
+impl Instance {
+    /// The approximate product for operand codes in the instance's domain
+    /// (unsigned: 0..=255 x 0..=255; signed: -128..=127 x -128..=127).
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        if self.signed {
+            // sign-magnitude wrapper over the unsigned core (standard for
+            // array-style AMs; |.| of -128 saturates to 255-range core).
+            let sign = (a < 0) != (b < 0);
+            let ua = a.unsigned_abs().min(255);
+            let ub = b.unsigned_abs().min(255);
+            let m = self.kind.mul_u(ua, ub) as i32;
+            if sign {
+                -m
+            } else {
+                m
+            }
+        } else {
+            debug_assert!((0..=255).contains(&a) && (0..=255).contains(&b));
+            self.kind.mul_u(a as u32, b as u32) as i32
+        }
+    }
+
+    /// Error vs. the exact product for the same operands.
+    pub fn error(&self, a: i32, b: i32) -> i32 {
+        self.mul(a, b) - a * b
+    }
+
+    /// Mean relative error over the full operand space (the weak baseline
+    /// predictor of paper Table 1). Zero-product points are skipped, as in
+    /// the usual MRE definition.
+    pub fn mre(&self) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0u64);
+        let range: Vec<i32> = if self.signed {
+            (-128..=127).collect()
+        } else {
+            (0..=255).collect()
+        };
+        for &a in &range {
+            for &b in &range {
+                let exact = a * b;
+                if exact == 0 {
+                    continue;
+                }
+                sum += (self.error(a, b) as f64 / exact as f64).abs();
+                n += 1;
+            }
+        }
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_instance_is_exact() {
+        let inst = Instance {
+            name: "mul8u_exact".into(),
+            kind: MulKind::Exact,
+            signed: false,
+            power: 1.0,
+        };
+        for a in (0..256).step_by(17) {
+            for b in (0..256).step_by(13) {
+                assert_eq!(inst.mul(a, b), a * b);
+            }
+        }
+    }
+
+    #[test]
+    fn signed_wrapper_sign_rules() {
+        let inst = Instance {
+            name: "mul8s_exact".into(),
+            kind: MulKind::Exact,
+            signed: true,
+            power: 1.0,
+        };
+        assert_eq!(inst.mul(-3, 5), -15);
+        assert_eq!(inst.mul(-3, -5), 15);
+        assert_eq!(inst.mul(3, -5), -15);
+        assert_eq!(inst.mul(0, -5), 0);
+        assert_eq!(inst.mul(127, 127), 127 * 127);
+    }
+
+    #[test]
+    fn mre_zero_for_exact() {
+        let inst = Instance {
+            name: "mul8u_exact".into(),
+            kind: MulKind::Exact,
+            signed: false,
+            power: 1.0,
+        };
+        assert_eq!(inst.mre(), 0.0);
+    }
+}

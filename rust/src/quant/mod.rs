@@ -1,0 +1,127 @@
+//! 8-bit quantization grids — the Rust mirror of
+//! `python/compile/kernels/quant.py` (kept in lock-step; the behavioral
+//! cross-check test fails if the two drift).
+//!
+//! * activations, unsigned grid: code = round(x / s) in [0, 255], s = absmax/255
+//! * activations, signed grid:   code = round(x / s) in [-128, 127], s = absmax/127
+//! * weights (always):           code = round(w / s) in [-127, 127], s = absmax/127
+
+pub const ACT_LEVELS: f32 = 255.0;
+pub const WEIGHT_LEVELS: f32 = 127.0;
+const EPS: f32 = 1e-8;
+
+/// Dynamic activation scale from data (unsigned grid).
+pub fn act_scale(abs_max: f32) -> f32 {
+    abs_max.max(EPS) / ACT_LEVELS
+}
+
+/// Dynamic activation scale for the signed grid.
+pub fn act_scale_signed(abs_max: f32) -> f32 {
+    abs_max.max(EPS) / WEIGHT_LEVELS
+}
+
+pub fn weight_scale(abs_max: f32) -> f32 {
+    abs_max.max(EPS) / WEIGHT_LEVELS
+}
+
+/// Activation *row code* for LUT indexing: [0, 255] on either grid
+/// (signed grids store code + 128).
+#[inline]
+pub fn act_code(x: f32, s: f32, signed: bool) -> u8 {
+    if signed {
+        ((x / s).round().clamp(-128.0, 127.0) as i32 + 128) as u8
+    } else {
+        (x / s).round().clamp(0.0, 255.0) as u8
+    }
+}
+
+/// Dequantized activation value its code represents.
+#[inline]
+pub fn act_value(code: u8, s: f32, signed: bool) -> f32 {
+    if signed {
+        (code as i32 - 128) as f32 * s
+    } else {
+        code as f32 * s
+    }
+}
+
+/// Weight code in [-127, 127].
+#[inline]
+pub fn weight_code(w: f32, s: f32) -> i8 {
+    (w / s).round().clamp(-WEIGHT_LEVELS, WEIGHT_LEVELS) as i8
+}
+
+/// Quantize a weight slice; returns (codes, scale).
+pub fn quantize_weights(w: &[f32]) -> (Vec<i8>, f32) {
+    let absmax = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let s = weight_scale(absmax);
+    (w.iter().map(|&x| weight_code(x, s)).collect(), s)
+}
+
+/// Quantize an activation slice with a given scale; returns row codes.
+pub fn quantize_acts(x: &[f32], s: f32, signed: bool) -> Vec<u8> {
+    x.iter().map(|&v| act_code(v, s, signed)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn act_code_roundtrip_error_bounded() {
+        let s = act_scale(4.0);
+        for i in 0..=1000 {
+            let x = i as f32 * 4.0 / 1000.0;
+            let c = act_code(x, s, false);
+            let back = act_value(c, s, false);
+            assert!((back - x).abs() <= 0.5 * s + 1e-6, "x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn signed_grid_symmetric() {
+        let s = act_scale_signed(2.0);
+        assert_eq!(act_code(0.0, s, true), 128);
+        let cp = act_code(1.5, s, true);
+        let cn = act_code(-1.5, s, true);
+        assert_eq!(cp as i32 - 128, -(cn as i32 - 128));
+    }
+
+    #[test]
+    fn weight_codes_clamped() {
+        let (codes, s) = quantize_weights(&[1.0, -1.0, 0.5, 0.0]);
+        assert_eq!(codes[0], 127);
+        assert_eq!(codes[1], -127);
+        assert_eq!(codes[3], 0);
+        assert!((s - 1.0 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_quantization_error_half_step() {
+        prop::check(300, |g| {
+            let absmax = g.f32_in(0.01..10.0);
+            let s = act_scale(absmax);
+            let x = g.f32_in(0.0..1.0) * absmax;
+            let back = act_value(act_code(x, s, false), s, false);
+            prop::assert_prop(
+                (back - x).abs() <= 0.5 * s + 1e-5,
+                format!("x={x} absmax={absmax} err={}", (back - x).abs()),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_weight_code_monotone() {
+        prop::check(200, |g| {
+            let s = weight_scale(g.f32_in(0.1..5.0));
+            let a = g.f32_in(-5.0..5.0);
+            let b = g.f32_in(-5.0..5.0);
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            prop::assert_prop(
+                weight_code(lo, s) <= weight_code(hi, s),
+                format!("monotonicity violated at {lo} {hi}"),
+            )
+        });
+    }
+}

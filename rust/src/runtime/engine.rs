@@ -1,0 +1,169 @@
+//! The PJRT execution engine.
+//!
+//! `Engine` owns one CPU PJRT client and a lazily-populated cache of
+//! compiled executables, keyed by (model, program). HLO *text* artifacts
+//! are parsed with `HloModuleProto::from_text_file` (the text parser
+//! reassigns instruction ids, which is what makes jax>=0.5 output loadable
+//! on xla_extension 0.5.1 — DESIGN.md).
+
+use super::manifest::Manifest;
+use super::value::Value;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative execute wall-clock (perf accounting).
+    pub exec_seconds: f64,
+    pub exec_count: u64,
+    pub compile_seconds: f64,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.into(),
+            executables: HashMap::new(),
+            exec_seconds: 0.0,
+            exec_count: 0,
+            compile_seconds: 0.0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load a model manifest from this engine's artifact directory.
+    pub fn manifest(&self, model: &str) -> Result<Manifest> {
+        Manifest::load(&self.artifacts_dir, model)
+    }
+
+    /// Compile (or fetch the cached) executable for (manifest, program).
+    fn executable(
+        &mut self,
+        manifest: &Manifest,
+        program: &str,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = format!("{}::{}", manifest.model, program);
+        if !self.executables.contains_key(&key) {
+            let info = manifest.program(program)?;
+            let path = self.artifacts_dir.join(&info.file);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
+            self.compile_seconds += t0.elapsed().as_secs_f64();
+            log::info!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(&self.executables[&key])
+    }
+
+    /// Pre-compile a program (e.g. to front-load compile cost before timing).
+    pub fn warmup(&mut self, manifest: &Manifest, program: &str) -> Result<()> {
+        self.executable(manifest, program).map(|_| ())
+    }
+
+    /// Execute `program` with host values; returns host values.
+    ///
+    /// Inputs are validated against the manifest signature — a mismatch is
+    /// a coordinator bug and fails fast with a readable message.
+    pub fn run(
+        &mut self,
+        manifest: &Manifest,
+        program: &str,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>> {
+        let info = manifest.program(program)?.clone();
+        anyhow::ensure!(
+            inputs.len() == info.inputs.len(),
+            "{}::{program}: expected {} inputs, got {}",
+            manifest.model,
+            info.inputs.len(),
+            inputs.len()
+        );
+        for (i, (v, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+            anyhow::ensure!(
+                v.dtype() == spec.dtype && v.shape() == spec.shape.as_slice(),
+                "{}::{program} input {i}: expected {} {:?}, got {} {:?}",
+                manifest.model,
+                spec.dtype,
+                spec.shape,
+                v.dtype(),
+                v.shape()
+            );
+        }
+        let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+        let exe = self.executable(manifest, program)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}::{program}: {e:?}", manifest.model))?;
+        let mut root = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("no output buffer"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching output: {e:?}"))?;
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.exec_count += 1;
+        // programs are lowered with return_tuple=True -> untuple
+        let parts = root
+            .decompose_tuple()
+            .map_err(|e| anyhow!("untupling output: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == info.outputs.len(),
+            "{}::{program}: manifest says {} outputs, got {}",
+            manifest.model,
+            info.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .zip(&info.outputs)
+            .map(|(lit, spec)| from_literal(&lit, spec.dtype.as_str(), &spec.shape))
+            .collect()
+    }
+}
+
+fn to_literal(v: &Value) -> Result<xla::Literal> {
+    let dims: Vec<i64> = v.shape().iter().map(|&d| d as i64).collect();
+    let lit = match v {
+        Value::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        Value::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        Value::U32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))
+}
+
+fn from_literal(lit: &xla::Literal, dtype: &str, shape: &[usize]) -> Result<Value> {
+    match dtype {
+        "float32" => Ok(Value::F32 {
+            shape: shape.to_vec(),
+            data: lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        }),
+        "int32" => Ok(Value::I32 {
+            shape: shape.to_vec(),
+            data: lit.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?,
+        }),
+        "uint32" => Ok(Value::U32 {
+            shape: shape.to_vec(),
+            data: lit.to_vec::<u32>().map_err(|e| anyhow!("{e:?}"))?,
+        }),
+        other => Err(anyhow!("unsupported output dtype {other}")),
+    }
+}

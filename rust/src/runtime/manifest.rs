@@ -1,0 +1,231 @@
+//! Artifact manifest: the Rust-facing description of an AOT'd model,
+//! written by `python/compile/aot.py`.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct LeafInfo {
+    pub path: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl LeafInfo {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One approximable layer (mirror of `python/compile/models.py` tape entry).
+#[derive(Clone, Debug)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String, // conv | dwconv | fc
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub in_hw: (usize, usize),
+    pub out_hw: (usize, usize),
+    pub fan_in: usize,
+    pub mults_per_image: usize,
+    pub act_signed: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramInfo {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub arch: String,
+    pub act_signed: bool,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub param_count: usize,
+    pub num_layers: usize,
+    pub leaves: Vec<LeafInfo>,
+    pub layers: Vec<LayerInfo>,
+    pub programs: std::collections::BTreeMap<String, ProgramInfo>,
+    pub init_params_file: String,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
+        let path = artifacts_dir.join(format!("{model}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts MODELS={model}`?)"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(artifacts_dir, &v)
+    }
+
+    pub fn from_json(artifacts_dir: &Path, v: &Json) -> Result<Manifest> {
+        let leaves = v
+            .req("leaves")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("leaves not array"))?
+            .iter()
+            .map(|l| {
+                Ok(LeafInfo {
+                    path: l.req("path")?.as_str().unwrap_or_default().to_string(),
+                    offset: l.req("offset")?.as_usize().unwrap_or(0),
+                    shape: l.req("shape")?.usize_list()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let layers = v
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("layers not array"))?
+            .iter()
+            .map(|l| {
+                let hw = |key: &str| -> Result<(usize, usize)> {
+                    let a = l.req(key)?.usize_list()?;
+                    Ok((a[0], a[1]))
+                };
+                Ok(LayerInfo {
+                    name: l.req("name")?.as_str().unwrap_or_default().to_string(),
+                    kind: l.req("kind")?.as_str().unwrap_or_default().to_string(),
+                    cin: l.req("cin")?.as_usize().unwrap_or(0),
+                    cout: l.req("cout")?.as_usize().unwrap_or(0),
+                    k: l.req("k")?.as_usize().unwrap_or(1),
+                    stride: l.req("stride")?.as_usize().unwrap_or(1),
+                    pad: l.req("pad")?.as_usize().unwrap_or(0),
+                    in_hw: hw("in_hw")?,
+                    out_hw: hw("out_hw")?,
+                    fan_in: l.req("fan_in")?.as_usize().unwrap_or(1),
+                    mults_per_image: l.req("mults_per_image")?.as_usize().unwrap_or(0),
+                    act_signed: l.req("act_signed")?.as_bool().unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut programs = std::collections::BTreeMap::new();
+        for (name, p) in v
+            .req("programs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("programs not object"))?
+        {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                p.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not array"))?
+                    .iter()
+                    .map(|s| {
+                        Ok(TensorSpec {
+                            dtype: s.req("dtype")?.as_str().unwrap_or_default().to_string(),
+                            shape: s.req("shape")?.usize_list()?,
+                        })
+                    })
+                    .collect()
+            };
+            programs.insert(
+                name.clone(),
+                ProgramInfo {
+                    file: p.req("file")?.as_str().unwrap_or_default().to_string(),
+                    inputs: specs("inputs")?,
+                    outputs: specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: artifacts_dir.to_path_buf(),
+            model: v.req("model")?.as_str().unwrap_or_default().to_string(),
+            arch: v.req("arch")?.as_str().unwrap_or_default().to_string(),
+            act_signed: v.req("act_signed")?.as_bool().unwrap_or(false),
+            batch: v.req("batch")?.as_usize().unwrap_or(0),
+            input_shape: v.req("input_shape")?.usize_list()?,
+            classes: v.req("classes")?.as_usize().unwrap_or(0),
+            param_count: v.req("param_count")?.as_usize().unwrap_or(0),
+            num_layers: v.req("num_layers")?.as_usize().unwrap_or(0),
+            leaves,
+            layers,
+            programs,
+            init_params_file: v.req("init_params")?.as_str().unwrap_or_default().to_string(),
+        })
+    }
+
+    /// Find a parameter leaf by its path (e.g. `conv0/w`).
+    pub fn leaf(&self, path: &str) -> Result<&LeafInfo> {
+        self.leaves
+            .iter()
+            .find(|l| l.path == path)
+            .ok_or_else(|| anyhow!("no parameter leaf {path:?} in {}", self.model))
+    }
+
+    /// Slice a leaf's values out of the flat parameter vector.
+    pub fn leaf_values<'a>(&self, flat: &'a [f32], path: &str) -> Result<&'a [f32]> {
+        let l = self.leaf(path)?;
+        Ok(&flat[l.offset..l.offset + l.size()])
+    }
+
+    /// Load the initial flat parameter vector exported at AOT time.
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.init_params_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(bytes.len() == self.param_count * 4, "init params size mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramInfo> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("program {name:?} not in manifest for {}", self.model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "tiny", "arch": "tinynet", "act_signed": false, "batch": 4,
+      "input_shape": [8, 8, 3], "classes": 10, "param_count": 20,
+      "num_layers": 1, "init_seed": 0, "init_params": "tiny.init.f32",
+      "leaves": [{"path": "conv0/w", "offset": 4, "shape": [2, 2, 1, 2]}],
+      "layers": [{"name": "conv0", "kind": "conv", "cin": 3, "cout": 8,
+                  "k": 3, "stride": 1, "pad": 1, "in_hw": [8, 8],
+                  "out_hw": [8, 8], "fan_in": 27, "mults_per_image": 13824,
+                  "act_signed": false}],
+      "programs": {"eval": {"file": "tiny_eval.hlo.txt",
+        "inputs": [{"dtype": "float32", "shape": [20]}],
+        "outputs": [{"dtype": "float32", "shape": [3]}]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &v).unwrap();
+        assert_eq!(m.param_count, 20);
+        assert_eq!(m.layers[0].fan_in, 27);
+        assert_eq!(m.program("eval").unwrap().inputs[0].shape, vec![20]);
+        assert!(m.program("missing").is_err());
+        let l = m.leaf("conv0/w").unwrap();
+        assert_eq!(l.size(), 8);
+        let flat: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        assert_eq!(m.leaf_values(&flat, "conv0/w").unwrap()[0], 4.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the CPU
+//! PJRT client. This is the only place the `xla` crate is touched.
+
+pub mod engine;
+pub mod manifest;
+pub mod value;
+
+pub use engine::Engine;
+pub use manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
+pub use value::Value;

@@ -1,0 +1,107 @@
+//! Host-side tensor values crossing the PJRT boundary.
+//!
+//! A tiny sum type instead of generics: programs have fixed, manifest-known
+//! signatures, and the coordinator builds inputs dynamically.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec_f32(data: Vec<f32>) -> Value {
+        Value::F32 { shape: vec![data.len()], data }
+    }
+
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Value::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Value::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn u32(shape: &[usize], data: Vec<u32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Value::U32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn seed(a: u32, b: u32) -> Value {
+        Value::U32 { shape: vec![2], data: vec![a, b] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } | Value::U32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("value is not f32")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("value is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("value is not i32")),
+        }
+    }
+
+    /// dtype string as it appears in the manifest.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32 { .. } => "float32",
+            Value::I32 { .. } => "int32",
+            Value::U32 { .. } => "uint32",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_dtypes() {
+        let v = Value::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(v.len(), 6);
+        assert_eq!(v.dtype(), "float32");
+        assert!(v.as_f32().is_ok());
+        assert!(v.as_i32().is_err());
+        let s = Value::scalar_f32(1.5);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        let seed = Value::seed(1, 2);
+        assert_eq!(seed.dtype(), "uint32");
+    }
+}

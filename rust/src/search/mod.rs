@@ -1,0 +1,376 @@
+//! Gradient-search driver (paper §3.2 / §4.2 training schedules).
+//!
+//! Owns the run-time training loops: QAT baseline training, the AGN
+//! gradient search (jointly optimizing weights and the per-layer
+//! perturbation factors sigma_l), behavioral retraining under matched
+//! multipliers, calibration and evaluation. All compute is the AOT'd HLO
+//! programs executed through [`crate::runtime::Engine`]; this module owns
+//! data feeding, schedules, seeds and metric collection.
+
+use crate::datasets::Dataset;
+use crate::runtime::{Engine, Manifest, Value};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// Mutable training state mirroring the flat program signature.
+#[derive(Clone, Debug)]
+pub struct TrainState {
+    pub flat: Vec<f32>,
+    pub mom: Vec<f32>,
+    pub sigmas: Vec<f32>,
+    pub sig_mom: Vec<f32>,
+}
+
+impl TrainState {
+    pub fn init(manifest: &Manifest, sigma_init: f32) -> Result<TrainState> {
+        let flat = manifest.load_init_params()?;
+        let n = flat.len();
+        let l = manifest.num_layers;
+        Ok(TrainState {
+            flat,
+            mom: vec![0.0; n],
+            sigmas: vec![sigma_init; l],
+            sig_mom: vec![0.0; l],
+        })
+    }
+
+    pub fn with_params(manifest: &Manifest, flat: Vec<f32>, sigma_init: f32) -> TrainState {
+        let n = flat.len();
+        TrainState {
+            flat,
+            mom: vec![0.0; n],
+            sigmas: vec![sigma_init; manifest.num_layers],
+            sig_mom: vec![0.0; manifest.num_layers],
+        }
+    }
+}
+
+/// Step-decay learning-rate schedule (paper: decay 0.9 every E epochs).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub decay: f32,
+    pub every: usize,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        if self.every == 0 {
+            return self.base;
+        }
+        self.base * self.decay.powi((step / self.every) as i32)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f64,
+    pub task_loss: f64,
+    pub noise_loss: f64,
+    pub correct: f64,
+    pub topk: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub steps: Vec<StepMetrics>,
+}
+
+impl History {
+    /// Running mean of the last `n` steps' accuracy.
+    pub fn tail_accuracy(&self, n: usize, batch: usize) -> f64 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return 0.0;
+        }
+        tail.iter().map(|m| m.correct).sum::<f64>() / (tail.len() * batch) as f64
+    }
+}
+
+fn batch_values(manifest: &Manifest, xs: Vec<f32>, ys: Vec<i32>) -> (Value, Value) {
+    let (h, w, c) = (
+        manifest.input_shape[0],
+        manifest.input_shape[1],
+        manifest.input_shape[2],
+    );
+    let b = manifest.batch;
+    (Value::f32(&[b, h, w, c], xs), Value::i32(&[b], ys))
+}
+
+/// Train the 8-bit QAT baseline (paper: QAT after float reference training;
+/// we train QAT from scratch — see DESIGN.md §Substitutions on schedules).
+pub fn train_qat(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    data: &Dataset,
+    state: &mut TrainState,
+    steps: usize,
+    lr: LrSchedule,
+    seed: u64,
+) -> Result<History> {
+    let mut hist = History::default();
+    for step in 0..steps {
+        let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(step as u64));
+        let (xv, yv) = batch_values(manifest, xs, ys);
+        let out = engine.run(
+            manifest,
+            "train_qat",
+            &[
+                Value::vec_f32(state.flat.clone()),
+                Value::vec_f32(state.mom.clone()),
+                xv,
+                yv,
+                Value::scalar_f32(lr.at(step)),
+            ],
+        )?;
+        state.flat = out[0].clone().into_f32()?;
+        state.mom = out[1].clone().into_f32()?;
+        let m = out[2].as_f32()?;
+        hist.steps.push(StepMetrics {
+            loss: m[0] as f64,
+            task_loss: m[0] as f64,
+            noise_loss: 0.0,
+            correct: m[1] as f64,
+            topk: m[2] as f64,
+        });
+    }
+    Ok(hist)
+}
+
+/// AGN gradient search (paper §3.2): one call = one lambda point.
+#[allow(clippy::too_many_arguments)]
+pub fn gradient_search(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    data: &Dataset,
+    state: &mut TrainState,
+    steps: usize,
+    lr: LrSchedule,
+    lambda: f32,
+    sigma_max: f32,
+    seed: u64,
+) -> Result<History> {
+    let mut hist = History::default();
+    let mut rng = Pcg32::seeded(seed ^ 0xa9d);
+    for step in 0..steps {
+        let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(step as u64));
+        let (xv, yv) = batch_values(manifest, xs, ys);
+        let out = engine.run(
+            manifest,
+            "train_agn",
+            &[
+                Value::vec_f32(state.flat.clone()),
+                Value::vec_f32(state.mom.clone()),
+                Value::vec_f32(state.sigmas.clone()),
+                Value::vec_f32(state.sig_mom.clone()),
+                xv,
+                yv,
+                Value::seed(rng.next_u32(), rng.next_u32()),
+                Value::scalar_f32(lr.at(step)),
+                Value::scalar_f32(lambda),
+                Value::scalar_f32(sigma_max),
+            ],
+        )?;
+        state.flat = out[0].clone().into_f32()?;
+        state.mom = out[1].clone().into_f32()?;
+        state.sigmas = out[2].clone().into_f32()?;
+        state.sig_mom = out[3].clone().into_f32()?;
+        let m = out[4].as_f32()?;
+        hist.steps.push(StepMetrics {
+            loss: m[0] as f64,
+            task_loss: m[1] as f64,
+            noise_loss: m[2] as f64,
+            correct: m[3] as f64,
+            topk: m[4] as f64,
+        });
+    }
+    Ok(hist)
+}
+
+/// Behavioral retraining with the matched multiplier LUTs (paper §4.2, STE).
+#[allow(clippy::too_many_arguments)]
+pub fn retrain_approx(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    data: &Dataset,
+    state: &mut TrainState,
+    luts: &[Vec<i32>],
+    act_scales: &[f32],
+    steps: usize,
+    lr: LrSchedule,
+    seed: u64,
+) -> Result<History> {
+    let l = manifest.num_layers;
+    let mut lut_flat = Vec::with_capacity(l * 65536);
+    for lut in luts {
+        lut_flat.extend_from_slice(lut);
+    }
+    let lut_v = Value::i32(&[l, 65536], lut_flat);
+    let asc = Value::vec_f32(act_scales.to_vec());
+    let mut hist = History::default();
+    for step in 0..steps {
+        let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(0x5e7 + step as u64));
+        let (xv, yv) = batch_values(manifest, xs, ys);
+        let out = engine.run(
+            manifest,
+            "train_approx",
+            &[
+                Value::vec_f32(state.flat.clone()),
+                Value::vec_f32(state.mom.clone()),
+                xv,
+                yv,
+                Value::scalar_f32(lr.at(step)),
+                lut_v.clone(),
+                asc.clone(),
+            ],
+        )?;
+        state.flat = out[0].clone().into_f32()?;
+        state.mom = out[1].clone().into_f32()?;
+        let m = out[2].as_f32()?;
+        hist.steps.push(StepMetrics {
+            loss: m[0] as f64,
+            task_loss: m[0] as f64,
+            noise_loss: 0.0,
+            correct: m[1] as f64,
+            topk: m[2] as f64,
+        });
+    }
+    Ok(hist)
+}
+
+/// Calibration: per-layer activation absmax (max over batches) and
+/// pre-activation batch std (mean over batches), from sample data.
+pub fn calibrate(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    data: &Dataset,
+    flat: &[f32],
+    batches: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let l = manifest.num_layers;
+    let mut absmax = vec![0f32; l];
+    let mut ystd = vec![0f32; l];
+    for b in 0..batches {
+        let (xs, ys) = data.eval_batch(manifest.batch, b * manifest.batch);
+        let (xv, yv) = batch_values(manifest, xs, ys);
+        let out = engine.run(
+            manifest,
+            "calibrate",
+            &[Value::vec_f32(flat.to_vec()), xv, yv],
+        )?;
+        let am = out[0].as_f32()?;
+        let ys_ = out[1].as_f32()?;
+        for i in 0..l {
+            absmax[i] = absmax[i].max(am[i]);
+            ystd[i] += ys_[i] / batches as f32;
+        }
+    }
+    Ok((absmax, ystd))
+}
+
+/// Evaluation modes over the validation split.
+pub enum EvalMode<'a> {
+    /// Exact QAT network.
+    Qat,
+    /// AGN-perturbed network at the given sigmas (paper Fig. 4 "AGN Model").
+    Agn { sigmas: &'a [f32], seed: u64 },
+    /// Behavioral simulation under per-layer LUTs via the AOT program.
+    Approx { luts: &'a [Vec<i32>], act_scales: &'a [f32] },
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalMetrics {
+    pub loss: f64,
+    pub top1: f64,
+    pub topk: f64,
+    pub n: usize,
+}
+
+pub fn evaluate(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    data: &Dataset,
+    flat: &[f32],
+    mode: EvalMode,
+    batches: usize,
+) -> Result<EvalMetrics> {
+    let mut rng = Pcg32::seeded(0xe7a1);
+    let mut metrics = EvalMetrics::default();
+    let lut_value = if let EvalMode::Approx { luts, .. } = &mode {
+        let l = manifest.num_layers;
+        let mut flat_l = Vec::with_capacity(l * 65536);
+        for lut in *luts {
+            flat_l.extend_from_slice(lut);
+        }
+        Some(Value::i32(&[l, 65536], flat_l))
+    } else {
+        None
+    };
+    for b in 0..batches {
+        let (xs, ys) = data.eval_batch(manifest.batch, b * manifest.batch);
+        let (xv, yv) = batch_values(manifest, xs, ys);
+        let out = match &mode {
+            EvalMode::Qat => {
+                engine.run(manifest, "eval", &[Value::vec_f32(flat.to_vec()), xv, yv])?
+            }
+            EvalMode::Agn { sigmas, seed } => engine.run(
+                manifest,
+                "eval_agn",
+                &[
+                    Value::vec_f32(flat.to_vec()),
+                    Value::vec_f32(sigmas.to_vec()),
+                    xv,
+                    yv,
+                    Value::seed(rng.next_u32() ^ *seed as u32, rng.next_u32()),
+                ],
+            )?,
+            EvalMode::Approx { act_scales, .. } => engine.run(
+                manifest,
+                "eval_approx",
+                &[
+                    Value::vec_f32(flat.to_vec()),
+                    xv,
+                    yv,
+                    lut_value.clone().unwrap(),
+                    Value::vec_f32(act_scales.to_vec()),
+                ],
+            )?,
+        };
+        let m = out[0].as_f32()?;
+        metrics.loss += m[0] as f64;
+        metrics.top1 += m[1] as f64;
+        metrics.topk += m[2] as f64;
+        metrics.n += manifest.batch;
+    }
+    metrics.loss /= batches.max(1) as f64;
+    metrics.top1 /= metrics.n.max(1) as f64;
+    metrics.topk /= metrics.n.max(1) as f64;
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays_stepwise() {
+        let s = LrSchedule { base: 0.1, decay: 0.9, every: 10 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(9), 0.1);
+        assert!((s.at(10) - 0.09).abs() < 1e-7);
+        assert!((s.at(25) - 0.081).abs() < 1e-7);
+        let c = LrSchedule { base: 0.1, decay: 0.9, every: 0 };
+        assert_eq!(c.at(1000), 0.1);
+    }
+
+    #[test]
+    fn history_tail_accuracy() {
+        let mut h = History::default();
+        for i in 0..10 {
+            h.steps.push(StepMetrics { correct: i as f64, ..Default::default() });
+        }
+        let acc = h.tail_accuracy(2, 16);
+        assert!((acc - (8.0 + 9.0) / 32.0).abs() < 1e-12);
+        assert_eq!(History::default().tail_accuracy(5, 16), 0.0);
+    }
+}

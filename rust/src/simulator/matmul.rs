@@ -1,0 +1,190 @@
+//! Integer LUT matmul — the native mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/approx_lut.py`), used as behavioral ground
+//! truth and for fast deployment evaluation.
+//!
+//! Semantics are identical by construction: activation row codes in
+//! [0, 255], weight column codes = weight code + 128, i32 accumulation of
+//! `lut[row * 256 + col]`.
+
+/// acc[M, N] = sum_k lut[x[m,k] * 256 + w[k,n]].
+///
+/// Loop order (m, k, n) keeps the LUT row for `x[m,k]` hot in L1 and walks
+/// `w` and `acc` sequentially — see EXPERIMENTS.md §Perf for the measured
+/// effect vs. the naive (m, n, k) order.
+pub fn approx_matmul(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    assert_eq!(x_codes.len(), m * k, "x codes shape");
+    assert_eq!(w_cols.len(), k * n, "w cols shape");
+    assert_eq!(lut.len(), 256 * 256, "lut size");
+    let mut acc = vec![0i32; m * n];
+    for mi in 0..m {
+        let xrow = &x_codes[mi * k..(mi + 1) * k];
+        let out = &mut acc[mi * n..(mi + 1) * n];
+        for (ki, &xc) in xrow.iter().enumerate() {
+            let lrow = &lut[(xc as usize) * 256..(xc as usize) * 256 + 256];
+            let wrow = &w_cols[ki * n..(ki + 1) * n];
+            for (o, &wc) in out.iter_mut().zip(wrow.iter()) {
+                *o = (*o).wrapping_add(lrow[wc as usize]);
+            }
+        }
+    }
+    acc
+}
+
+/// The naive (m, n, k) loop order — kept for the §Perf before/after bench
+/// (`bench_simulator`): it gathers the LUT row per inner-loop step and
+/// strides `w_cols` by n, so it is memory-bound on LUT row fetches.
+#[doc(hidden)]
+pub fn approx_matmul_naive(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut acc = vec![0i32; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut s = 0i32;
+            for ki in 0..k {
+                let xc = x_codes[mi * k + ki] as usize;
+                let wc = w_cols[ki * n + ni] as usize;
+                s = s.wrapping_add(lut[xc * 256 + wc]);
+            }
+            acc[mi * n + ni] = s;
+        }
+    }
+    acc
+}
+
+/// Exact integer matmul on the same operand encoding (reference / fast path
+/// when the layer is mapped to the accurate multiplier).
+pub fn exact_matmul(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    act_signed: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut acc = vec![0i32; m * n];
+    for mi in 0..m {
+        let xrow = &x_codes[mi * k..(mi + 1) * k];
+        let out = &mut acc[mi * n..(mi + 1) * n];
+        for (ki, &xc) in xrow.iter().enumerate() {
+            let xv = if act_signed { xc as i32 - 128 } else { xc as i32 };
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &w_cols[ki * n..(ki + 1) * n];
+            for (o, &wc) in out.iter_mut().zip(wrow.iter()) {
+                *o += xv * (wc as i32 - 128);
+            }
+        }
+    }
+    acc
+}
+
+/// Depthwise variant: x_codes [M, taps, C], w_cols [taps, C] -> acc [M, C].
+pub fn approx_dw(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    taps: usize,
+    c: usize,
+) -> Vec<i32> {
+    assert_eq!(x_codes.len(), m * taps * c);
+    assert_eq!(w_cols.len(), taps * c);
+    let mut acc = vec![0i32; m * c];
+    for mi in 0..m {
+        let out = &mut acc[mi * c..(mi + 1) * c];
+        for t in 0..taps {
+            let xr = &x_codes[(mi * taps + t) * c..(mi * taps + t + 1) * c];
+            let wr = &w_cols[t * c..(t + 1) * c];
+            for ci in 0..c {
+                out[ci] += lut[(xr[ci] as usize) * 256 + wr[ci] as usize];
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{build_layer_lut, unsigned_catalog};
+    use crate::util::prop;
+
+    fn exact_lut() -> Vec<i32> {
+        let cat = unsigned_catalog();
+        build_layer_lut(&cat.instances[cat.exact_index()], false)
+    }
+
+    #[test]
+    fn exact_lut_matmul_equals_integer_matmul() {
+        let lut = exact_lut();
+        let (m, k, n) = (5, 7, 3);
+        let x: Vec<u8> = (0..m * k).map(|i| ((i * 37) % 256) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|i| ((i * 91) % 256) as u8).collect();
+        let a = approx_matmul(&x, &w, &lut, m, k, n);
+        let b = exact_matmul(&x, &w, false, m, k, n);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_exact_lut_vs_integer_matmul() {
+        let lut = exact_lut();
+        prop::check(60, |g| {
+            let m = g.usize_in(1..12);
+            let k = g.usize_in(1..24);
+            let n = g.usize_in(1..12);
+            let x = g.vec_u8(m * k..m * k + 1);
+            let w = g.vec_u8(k * n..k * n + 1);
+            let a = approx_matmul(&x, &w, &lut, m, k, n);
+            let b = exact_matmul(&x, &w, false, m, k, n);
+            prop::assert_prop(a == b, format!("mismatch at m={m} k={k} n={n}"))
+        });
+    }
+
+    #[test]
+    fn approx_differs_from_exact_for_lossy_mult() {
+        let cat = unsigned_catalog();
+        let lut = build_layer_lut(cat.get("mul8u_trc6").unwrap(), false);
+        let (m, k, n) = (4, 16, 4);
+        let x: Vec<u8> = (0..m * k).map(|i| (i % 251 + 3) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|i| (i % 97 + 140) as u8).collect();
+        let a = approx_matmul(&x, &w, &lut, m, k, n);
+        let b = exact_matmul(&x, &w, false, m, k, n);
+        assert_ne!(a, b);
+        // truncation underestimates magnitude for positive weights
+        for (ai, bi) in a.iter().zip(&b) {
+            assert!(ai <= bi, "{ai} > {bi}");
+        }
+    }
+
+    #[test]
+    fn dw_matches_dense_on_diagonal_pattern() {
+        let lut = exact_lut();
+        let (m, taps, c) = (3, 9, 4);
+        let x: Vec<u8> = (0..m * taps * c).map(|i| ((i * 13) % 256) as u8).collect();
+        let w: Vec<u8> = (0..taps * c).map(|i| ((i * 7) % 256) as u8).collect();
+        let acc = approx_dw(&x, &w, &lut, m, taps, c);
+        // manual check of one element
+        let (mi, ci) = (1, 2);
+        let mut want = 0i32;
+        for t in 0..taps {
+            let xc = x[(mi * taps + t) * c + ci] as i32;
+            let wc = w[t * c + ci] as i32 - 128;
+            want += xc * wc;
+        }
+        assert_eq!(acc[mi * c + ci], want);
+    }
+}

@@ -1,0 +1,7 @@
+//! Native int8 behavioral simulation substrate (ProxSim/TFApprox role).
+
+pub mod matmul;
+pub mod net;
+
+pub use matmul::{approx_dw, approx_matmul, exact_matmul};
+pub use net::{accuracy, Activ, LayerCapture, LutSet, Op, SimLayer, SimNet};

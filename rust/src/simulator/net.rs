@@ -1,0 +1,538 @@
+//! Native int8 behavioral network simulator.
+//!
+//! Reconstructs the forward graph of an AOT'd model from its manifest (the
+//! layer names/shapes encode the topology for every architecture in the
+//! zoo) and executes it with quantized operands under an arbitrary
+//! multiplier LUT per layer. This is the ground-truth engine for Table 1
+//! and the fast deployment-evaluation path for Tables 2/3 — it mirrors
+//! `python/compile/models.py` exactly (same im2col ordering, same
+//! batch-stats BN, same quantization grids); the cross-check test in
+//! `rust/tests/` compares it against the AOT `eval_approx` program.
+
+use crate::quant;
+use crate::runtime::manifest::{LayerInfo, Manifest};
+use crate::simulator::matmul::{approx_dw, approx_matmul, exact_matmul};
+use crate::tensor::{self, TensorF};
+use anyhow::{anyhow, bail, Result};
+
+const BN_EPS: f32 = 1e-5;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Activ {
+    None,
+    Relu,
+    Relu6,
+}
+
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Approximable layer `idx` followed by optional BN and activation.
+    Layer { idx: usize, bn: bool, act: Activ },
+    MaxPool { k: usize, s: usize },
+    GlobalAvg,
+    Flatten,
+    /// Push the current activation onto the residual stack.
+    Save,
+    /// Transform the top of the residual stack through a (conv+BN) layer,
+    /// or leave it as identity when `layer` is None.
+    Shortcut { layer: Option<usize> },
+    /// Pop the residual stack, add, then apply the activation.
+    AddSaved { act: Activ },
+}
+
+/// Per-layer static data extracted from the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct SimLayer {
+    pub info: LayerInfo,
+    /// Weight column codes (code + 128), layout [K, N] (dense) or
+    /// [taps, C] (depthwise).
+    pub w_cols: Vec<u8>,
+    pub s_w: f32,
+    pub gamma: Option<Vec<f32>>,
+    pub beta: Option<Vec<f32>>,
+    pub bias: Option<Vec<f32>>,
+}
+
+/// Captured operands/accumulators of one layer during an exact forward —
+/// the inputs of the error-model ground truth.
+#[derive(Clone, Debug)]
+pub struct LayerCapture {
+    pub layer: usize,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Activation row codes [M, K] (dense layout; dwconv flattened).
+    pub x_codes: Vec<u8>,
+    /// Exact integer accumulator [M, N].
+    pub exact_acc: Vec<i32>,
+    pub s_x: f32,
+}
+
+/// Which LUT each layer uses in a forward pass.
+pub enum LutSet<'a> {
+    /// Exact multiplier everywhere (fast integer path).
+    Exact,
+    /// One full product LUT per approximable layer.
+    PerLayer(&'a [Vec<i32>]),
+}
+
+pub struct SimNet {
+    pub arch: String,
+    pub classes: usize,
+    pub input_hw: (usize, usize),
+    pub ops: Vec<Op>,
+    pub layers: Vec<SimLayer>,
+}
+
+impl SimNet {
+    pub fn new(manifest: &Manifest, flat: &[f32]) -> Result<SimNet> {
+        anyhow::ensure!(flat.len() == manifest.param_count, "param vector size");
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        for info in &manifest.layers {
+            let w = manifest.leaf_values(flat, &format!("{}/w", info.name))?;
+            let (codes, s_w) = quant::quantize_weights(w);
+            let w_cols: Vec<u8> = codes.iter().map(|&c| (c as i32 + 128) as u8).collect();
+            let get = |suffix: &str| -> Option<Vec<f32>> {
+                manifest
+                    .leaf_values(flat, &format!("{}/{suffix}", info.name))
+                    .ok()
+                    .map(|v| v.to_vec())
+            };
+            layers.push(SimLayer {
+                info: info.clone(),
+                w_cols,
+                s_w,
+                gamma: get("gamma"),
+                beta: get("beta"),
+                bias: get("b"),
+            });
+        }
+        let ops = build_ops(&manifest.arch, &layers)?;
+        Ok(SimNet {
+            arch: manifest.arch.clone(),
+            classes: manifest.classes,
+            input_hw: (manifest.input_shape[0], manifest.input_shape[1]),
+            ops,
+            layers,
+        })
+    }
+
+    /// Forward pass. `act_scales` are the frozen per-layer activation
+    /// scales from calibration (absmax; converted per grid here).
+    pub fn forward(
+        &self,
+        x: &TensorF,
+        act_absmax: &[f32],
+        luts: &LutSet,
+        mut capture: Option<&mut Vec<LayerCapture>>,
+    ) -> TensorF {
+        let mut y = x.clone();
+        let mut stack: Vec<TensorF> = Vec::new();
+        for op in &self.ops {
+            match *op {
+                Op::Layer { idx, bn, act } => {
+                    y = self.apply_layer(idx, &y, act_absmax[idx], luts, capture.as_deref_mut());
+                    if bn {
+                        y = self.batchnorm(idx, y);
+                    }
+                    y = apply_act(y, act);
+                }
+                Op::MaxPool { k, s } => y = tensor::max_pool(&y, k, s),
+                Op::GlobalAvg => y = tensor::global_avg_pool(&y),
+                Op::Flatten => {
+                    let b = y.shape[0];
+                    let rest: usize = y.shape[1..].iter().product();
+                    y = y.reshape(&[b, rest]);
+                }
+                Op::Save => stack.push(y.clone()),
+                Op::Shortcut { layer } => {
+                    let saved = stack.pop().expect("residual stack underflow");
+                    let sc = match layer {
+                        None => saved,
+                        Some(idx) => {
+                            let t = self.apply_layer(
+                                idx,
+                                &saved,
+                                act_absmax[idx],
+                                luts,
+                                capture.as_deref_mut(),
+                            );
+                            self.batchnorm(idx, t)
+                        }
+                    };
+                    stack.push(sc);
+                }
+                Op::AddSaved { act } => {
+                    let sc = stack.pop().expect("residual stack underflow");
+                    assert_eq!(sc.shape, y.shape, "residual shape mismatch");
+                    for (a, b) in y.data.iter_mut().zip(&sc.data) {
+                        *a += b;
+                    }
+                    y = apply_act(y, act);
+                }
+            }
+        }
+        y
+    }
+
+    /// Run one approximable layer: quantize input, integer matmul under the
+    /// layer's LUT, dequantize. Returns the pre-BN pre-activation output.
+    fn apply_layer(
+        &self,
+        idx: usize,
+        x: &TensorF,
+        absmax: f32,
+        luts: &LutSet,
+        capture: Option<&mut Vec<LayerCapture>>,
+    ) -> TensorF {
+        let layer = &self.layers[idx];
+        let info = &layer.info;
+        let signed = info.act_signed;
+        let s_x = if signed { quant::act_scale_signed(absmax) } else { quant::act_scale(absmax) };
+        let lut: Option<&[i32]> = match luts {
+            LutSet::Exact => None,
+            LutSet::PerLayer(ls) => Some(&ls[idx]),
+        };
+        match info.kind.as_str() {
+            "conv" | "fc" => {
+                let (x2d, m, kdim, out_hw) = if info.kind == "conv" {
+                    let p = tensor::im2col(x, info.k, info.k, info.stride, info.pad);
+                    let m = p.shape[0] * p.shape[1] * p.shape[2];
+                    let kdim = p.shape[3];
+                    let hw = (p.shape[1], p.shape[2]);
+                    (p.data, m, kdim, Some(hw))
+                } else {
+                    (x.data.clone(), x.shape[0], x.shape[1], None)
+                };
+                let n = info.cout;
+                debug_assert_eq!(layer.w_cols.len(), kdim * n);
+                let codes = quant::quantize_acts(&x2d, s_x, signed);
+                let acc = match lut {
+                    Some(l) => approx_matmul(&codes, &layer.w_cols, l, m, kdim, n),
+                    None => exact_matmul(&codes, &layer.w_cols, signed, m, kdim, n),
+                };
+                if let Some(cap) = capture {
+                    let exact = match lut {
+                        None => acc.clone(),
+                        Some(_) => exact_matmul(&codes, &layer.w_cols, signed, m, kdim, n),
+                    };
+                    cap.push(LayerCapture {
+                        layer: idx,
+                        m,
+                        k: kdim,
+                        n,
+                        x_codes: codes.clone(),
+                        exact_acc: exact,
+                        s_x,
+                    });
+                }
+                let scale = s_x * layer.s_w;
+                let mut data: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
+                if let Some(bias) = &layer.bias {
+                    for mi in 0..m {
+                        for ni in 0..n {
+                            data[mi * n + ni] += bias[ni];
+                        }
+                    }
+                }
+                match out_hw {
+                    Some((ho, wo)) => TensorF::from_vec(&[x.shape[0], ho, wo, n], data),
+                    None => TensorF::from_vec(&[m, n], data),
+                }
+            }
+            "dwconv" => {
+                let p = tensor::im2col(x, info.k, info.k, info.stride, info.pad);
+                let (b, ho, wo) = (p.shape[0], p.shape[1], p.shape[2]);
+                let c = info.cout;
+                let taps = info.k * info.k;
+                let m = b * ho * wo;
+                let codes = quant::quantize_acts(&p.data, s_x, signed);
+                // exact dwconv path shares approx_dw with the exact LUT
+                let acc = match lut {
+                    Some(l) => approx_dw(&codes, &layer.w_cols, l, m, taps, c),
+                    None => {
+                        let exact = crate::multipliers::build_layer_lut(
+                            &exact_instance(),
+                            signed,
+                        );
+                        approx_dw(&codes, &layer.w_cols, &exact, m, taps, c)
+                    }
+                };
+                if let Some(cap) = capture {
+                    let exact_lut =
+                        crate::multipliers::build_layer_lut(&exact_instance(), signed);
+                    let exact = match lut {
+                        None => acc.clone(),
+                        Some(_) => approx_dw(&codes, &layer.w_cols, &exact_lut, m, taps, c),
+                    };
+                    cap.push(LayerCapture {
+                        layer: idx,
+                        m: m * c,
+                        k: taps,
+                        n: 1,
+                        // reorder to [m*c, taps] rows so patches are per-pixel
+                        x_codes: dw_rows(&codes, m, taps, c),
+                        exact_acc: exact,
+                        s_x,
+                    });
+                }
+                let scale = s_x * layer.s_w;
+                let data: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
+                TensorF::from_vec(&[b, ho, wo, c], data)
+            }
+            other => panic!("unknown layer kind {other}"),
+        }
+    }
+
+    fn batchnorm(&self, idx: usize, x: TensorF) -> TensorF {
+        let layer = &self.layers[idx];
+        let (Some(gamma), Some(beta)) = (&layer.gamma, &layer.beta) else {
+            return x;
+        };
+        let c = *x.shape.last().unwrap();
+        let rows = x.data.len() / c;
+        let mut mean = vec![0f64; c];
+        for r in 0..rows {
+            for ci in 0..c {
+                mean[ci] += x.data[r * c + ci] as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= rows as f64;
+        }
+        let mut var = vec![0f64; c];
+        for r in 0..rows {
+            for ci in 0..c {
+                let d = x.data[r * c + ci] as f64 - mean[ci];
+                var[ci] += d * d;
+            }
+        }
+        for v in &mut var {
+            *v /= rows as f64;
+        }
+        let inv: Vec<f32> = (0..c)
+            .map(|ci| gamma[ci] / ((var[ci] as f32) + BN_EPS).sqrt())
+            .collect();
+        let mut out = x;
+        for r in 0..rows {
+            for ci in 0..c {
+                let v = &mut out.data[r * c + ci];
+                *v = (*v - mean[ci] as f32) * inv[ci] + beta[ci];
+            }
+        }
+        out
+    }
+}
+
+fn exact_instance() -> crate::multipliers::Instance {
+    crate::multipliers::Instance {
+        name: "exact".into(),
+        kind: crate::multipliers::MulKind::Exact,
+        signed: false,
+        power: 1.0,
+    }
+}
+
+/// Reorder depthwise codes [M, taps, C] -> rows [(m, c), taps].
+fn dw_rows(codes: &[u8], m: usize, taps: usize, c: usize) -> Vec<u8> {
+    let mut out = vec![0u8; m * c * taps];
+    for mi in 0..m {
+        for t in 0..taps {
+            for ci in 0..c {
+                out[(mi * c + ci) * taps + t] = codes[(mi * taps + t) * c + ci];
+            }
+        }
+    }
+    out
+}
+
+fn apply_act(mut x: TensorF, act: Activ) -> TensorF {
+    match act {
+        Activ::None => {}
+        Activ::Relu => {
+            for v in &mut x.data {
+                *v = v.max(0.0);
+            }
+        }
+        Activ::Relu6 => {
+            for v in &mut x.data {
+                *v = v.clamp(0.0, 6.0);
+            }
+        }
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
+// topology reconstruction
+
+fn build_ops(arch: &str, layers: &[SimLayer]) -> Result<Vec<Op>> {
+    match arch {
+        "resnet8" | "resnet14" | "resnet20" | "resnet32" => resnet_ops(layers),
+        "mobilenetv2" => mobilenet_ops(layers),
+        "tinynet" | "vgg16" | "alexnet" => sequential_ops(layers),
+        other => bail!("unknown arch {other}"),
+    }
+}
+
+/// Sequential conv stacks (tinynet / vgg16 / alexnet): pools are inferred
+/// from spatial-dimension changes between consecutive conv layers; the
+/// conv->fc transition is either a global-average-pool (fc.cin == last
+/// cout) or maxpool+flatten (fc.cin == cout*h*w after an inferred pool).
+fn sequential_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
+    let mut ops = Vec::new();
+    let convs: Vec<usize> = layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.info.kind == "conv")
+        .map(|(i, _)| i)
+        .collect();
+    let fcs: Vec<usize> = layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.info.kind == "fc")
+        .map(|(i, _)| i)
+        .collect();
+    anyhow::ensure!(!convs.is_empty() && !fcs.is_empty(), "sequential net needs conv+fc");
+    for (pos, &ci) in convs.iter().enumerate() {
+        ops.push(Op::Layer { idx: ci, bn: true, act: Activ::Relu });
+        let out_hw = layers[ci].info.out_hw;
+        if let Some(&next) = convs.get(pos + 1) {
+            let in_hw = layers[next].info.in_hw;
+            if in_hw.0 < out_hw.0 {
+                anyhow::ensure!(in_hw.0 == out_hw.0 / 2, "unsupported pool ratio");
+                ops.push(Op::MaxPool { k: 2, s: 2 });
+            }
+        }
+    }
+    // conv -> fc transition
+    let last = &layers[*convs.last().unwrap()].info;
+    let fc0 = &layers[fcs[0]].info;
+    let (h, w) = last.out_hw;
+    if fc0.cin == last.cout {
+        ops.push(Op::GlobalAvg);
+    } else if fc0.cin == last.cout * h * w {
+        ops.push(Op::Flatten);
+    } else if h % 2 == 0 && fc0.cin == last.cout * (h / 2) * (w / 2) {
+        ops.push(Op::MaxPool { k: 2, s: 2 });
+        ops.push(Op::Flatten);
+    } else {
+        bail!("cannot infer conv->fc transition: cin={} cout={} hw={h}x{w}", fc0.cin, last.cout);
+    }
+    for (pos, &fi) in fcs.iter().enumerate() {
+        let lastfc = pos + 1 == fcs.len();
+        ops.push(Op::Layer {
+            idx: fi,
+            bn: false,
+            act: if lastfc { Activ::None } else { Activ::Relu },
+        });
+    }
+    Ok(ops)
+}
+
+/// CIFAR ResNet: conv0 + blocks named s{stage}b{block}_{conv1,conv2,short}.
+fn resnet_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
+    let find = |name: &str| -> Option<usize> {
+        layers.iter().position(|l| l.info.name == name)
+    };
+    let mut ops = vec![Op::Layer {
+        idx: find("conv0").ok_or_else(|| anyhow!("resnet missing conv0"))?,
+        bn: true,
+        act: Activ::Relu,
+    }];
+    // discover block prefixes in layer order
+    let mut prefixes: Vec<String> = Vec::new();
+    for l in layers {
+        if let Some(base) = l.info.name.strip_suffix("_conv1") {
+            prefixes.push(base.to_string());
+        }
+    }
+    anyhow::ensure!(!prefixes.is_empty(), "resnet has no blocks");
+    for base in prefixes {
+        let c1 = find(&format!("{base}_conv1")).unwrap();
+        let c2 = find(&format!("{base}_conv2"))
+            .ok_or_else(|| anyhow!("{base} missing conv2"))?;
+        let sh = find(&format!("{base}_short"));
+        ops.push(Op::Save);
+        ops.push(Op::Layer { idx: c1, bn: true, act: Activ::Relu });
+        ops.push(Op::Layer { idx: c2, bn: true, act: Activ::None });
+        ops.push(Op::Shortcut { layer: sh });
+        ops.push(Op::AddSaved { act: Activ::Relu });
+    }
+    ops.push(Op::GlobalAvg);
+    ops.push(Op::Layer {
+        idx: find("fc").ok_or_else(|| anyhow!("resnet missing fc"))?,
+        bn: false,
+        act: Activ::None,
+    });
+    Ok(ops)
+}
+
+/// MobileNetV2: stem + b{i}_{exp,dw,prj} + head + fc.
+fn mobilenet_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
+    let find = |name: &str| layers.iter().position(|l| l.info.name == name);
+    let mut ops = vec![Op::Layer {
+        idx: find("stem").ok_or_else(|| anyhow!("mobilenet missing stem"))?,
+        bn: true,
+        act: Activ::Relu6,
+    }];
+    let mut bi = 0usize;
+    loop {
+        let dw = match find(&format!("b{bi}_dw")) {
+            Some(i) => i,
+            None => break,
+        };
+        let exp = find(&format!("b{bi}_exp"));
+        let prj = find(&format!("b{bi}_prj"))
+            .ok_or_else(|| anyhow!("block b{bi} missing prj"))?;
+        let block_cin = layers[exp.unwrap_or(dw)].info.cin;
+        let block_cout = layers[prj].info.cout;
+        let stride = layers[dw].info.stride;
+        let residual = stride == 1 && block_cin == block_cout;
+        if residual {
+            ops.push(Op::Save);
+        }
+        if let Some(e) = exp {
+            ops.push(Op::Layer { idx: e, bn: true, act: Activ::Relu6 });
+        }
+        ops.push(Op::Layer { idx: dw, bn: true, act: Activ::Relu6 });
+        ops.push(Op::Layer { idx: prj, bn: true, act: Activ::None });
+        if residual {
+            ops.push(Op::Shortcut { layer: None });
+            ops.push(Op::AddSaved { act: Activ::None });
+        }
+        bi += 1;
+    }
+    ops.push(Op::Layer {
+        idx: find("head").ok_or_else(|| anyhow!("mobilenet missing head"))?,
+        bn: true,
+        act: Activ::Relu6,
+    });
+    ops.push(Op::GlobalAvg);
+    ops.push(Op::Layer {
+        idx: find("fc").ok_or_else(|| anyhow!("mobilenet missing fc"))?,
+        bn: false,
+        act: Activ::None,
+    });
+    Ok(ops)
+}
+
+/// Top-1 / top-k accuracy over logits [B, C].
+pub fn accuracy(logits: &TensorF, labels: &[i32], k: usize) -> (usize, usize) {
+    let b = logits.shape[0];
+    let c = logits.shape[1];
+    let mut top1 = 0;
+    let mut topk = 0;
+    for bi in 0..b {
+        let row = &logits.data[bi * c..(bi + 1) * c];
+        let mut idx: Vec<usize> = (0..c).collect();
+        idx.sort_by(|&i, &j| row[j].partial_cmp(&row[i]).unwrap());
+        if idx[0] == labels[bi] as usize {
+            top1 += 1;
+        }
+        if idx[..k.min(c)].contains(&(labels[bi] as usize)) {
+            topk += 1;
+        }
+    }
+    (top1, topk)
+}

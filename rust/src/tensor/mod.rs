@@ -1,0 +1,227 @@
+//! Minimal NHWC tensor substrate for the native simulator and datasets.
+//!
+//! Deliberately small: dense row-major storage, shape bookkeeping and the
+//! ops the int8 behavioral simulator needs (im2col, pooling, reductions).
+//! The heavy lifting (matmul under a multiplier LUT) lives in
+//! `simulator::approx_matmul` where it can be specialized.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub shape: Vec<usize>,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![T::default(); shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs len {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.shape[i]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Row-major linear index of a 4-d coordinate.
+    #[inline]
+    pub fn idx4(&self, a: usize, b: usize, c: usize, d: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 4);
+        ((a * self.shape[1] + b) * self.shape[2] + c) * self.shape[3] + d
+    }
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorI = Tensor<i32>;
+
+impl TensorF {
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    pub fn std(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.data.iter().map(|&x| (x - m) * (x - m)).sum::<f32>() / self.data.len() as f32)
+            .sqrt()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// im2col on an NHWC tensor: output [B, H', W', kh*kw*C] with the feature
+/// ordering (ki, kj, c) — identical to `python/compile/layers.py::im2col`
+/// and therefore to the operand stream the AOT'd model sees.
+pub fn im2col<T: Copy + Default>(
+    x: &Tensor<T>,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor<T> {
+    assert_eq!(x.shape.len(), 4, "im2col expects NHWC");
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut out = Tensor::zeros(&[b, ho, wo, k]);
+    for bi in 0..b {
+        for oi in 0..ho {
+            for oj in 0..wo {
+                let base = ((bi * ho + oi) * wo + oj) * k;
+                for ki in 0..kh {
+                    let ii = oi * stride + ki;
+                    if ii < pad || ii - pad >= h {
+                        continue; // zero padding (already default)
+                    }
+                    for kj in 0..kw {
+                        let jj = oj * stride + kj;
+                        if jj < pad || jj - pad >= w {
+                            continue;
+                        }
+                        let src = x.idx4(bi, ii - pad, jj - pad, 0);
+                        let dst = base + (ki * kw + kj) * c;
+                        out.data[dst..dst + c].copy_from_slice(&x.data[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 2x2-style max pool (kernel k, stride s) on NHWC f32.
+pub fn max_pool(x: &TensorF, k: usize, s: usize) -> TensorF {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let ho = (h - k) / s + 1;
+    let wo = (w - k) / s + 1;
+    let mut out = Tensor::zeros(&[b, ho, wo, c]);
+    for bi in 0..b {
+        for oi in 0..ho {
+            for oj in 0..wo {
+                for ci in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for ki in 0..k {
+                        for kj in 0..k {
+                            m = m.max(x.data[x.idx4(bi, oi * s + ki, oj * s + kj, ci)]);
+                        }
+                    }
+                    let di = out.idx4(bi, oi, oj, ci);
+                    out.data[di] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool NHWC -> [B, C].
+pub fn global_avg_pool(x: &TensorF) -> TensorF {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = Tensor::zeros(&[b, c]);
+    let inv = 1.0 / (h * w) as f32;
+    for bi in 0..b {
+        for i in 0..h {
+            for j in 0..w {
+                for ci in 0..c {
+                    out.data[bi * c + ci] += x.data[x.idx4(bi, i, j, ci)];
+                }
+            }
+        }
+    }
+    for v in &mut out.data {
+        *v *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: im2col is the identity layout
+        let x = Tensor::from_vec(&[1, 2, 2, 3], (0..12).map(|v| v as f32).collect());
+        let p = im2col(&x, 1, 1, 1, 0);
+        assert_eq!(p.shape, vec![1, 2, 2, 3]);
+        assert_eq!(p.data, x.data);
+    }
+
+    #[test]
+    fn im2col_padding_zeroes() {
+        let x = Tensor::from_vec(&[1, 1, 1, 1], vec![5.0f32]);
+        let p = im2col(&x, 3, 3, 1, 1);
+        assert_eq!(p.shape, vec![1, 1, 1, 9]);
+        // only the center tap sees the value
+        let expect: Vec<f32> = (0..9).map(|i| if i == 4 { 5.0 } else { 0.0 }).collect();
+        assert_eq!(p.data, expect);
+    }
+
+    #[test]
+    fn im2col_matches_manual_conv() {
+        // conv as im2col+dot must equal a hand conv on a small case
+        let x = Tensor::from_vec(&[1, 3, 3, 1], (1..=9).map(|v| v as f32).collect());
+        let p = im2col(&x, 2, 2, 1, 0);
+        assert_eq!(p.shape, vec![1, 2, 2, 4]);
+        let w = [1.0f32, 0.5, -1.0, 2.0];
+        let dot = |patch: &[f32]| patch.iter().zip(&w).map(|(a, b)| a * b).sum::<f32>();
+        // top-left patch is [1,2,4,5]
+        assert_eq!(dot(&p.data[0..4]), 1.0 + 1.0 - 4.0 + 10.0);
+        // bottom-right patch is [5,6,8,9]
+        assert_eq!(dot(&p.data[12..16]), 5.0 + 3.0 - 8.0 + 18.0);
+    }
+
+    #[test]
+    fn im2col_stride() {
+        let x = Tensor::from_vec(&[1, 4, 4, 1], (0..16).map(|v| v as f32).collect());
+        let p = im2col(&x, 2, 2, 2, 0);
+        assert_eq!(p.shape, vec![1, 2, 2, 4]);
+        assert_eq!(&p.data[0..4], &[0.0, 1.0, 4.0, 5.0]);
+        assert_eq!(&p.data[4..8], &[2.0, 3.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn pools() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let mp = max_pool(&x, 2, 2);
+        assert_eq!(mp.data, vec![4.0]);
+        let gap = global_avg_pool(&x);
+        assert_eq!(gap.data, vec![2.5]);
+    }
+
+    #[test]
+    fn stats() {
+        let x = Tensor::from_vec(&[4], vec![1.0f32, -3.0, 2.0, 0.0]);
+        assert_eq!(x.abs_max(), 3.0);
+        assert!((x.mean() - 0.0).abs() < 1e-6);
+    }
+}

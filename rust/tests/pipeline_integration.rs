@@ -1,0 +1,120 @@
+//! Integration: the full paper pipeline on tinynet with tiny step counts —
+//! baseline -> calibrate -> gradient search -> matching -> retrain -> eval.
+//! Asserts structural invariants, not accuracies (step counts are minimal).
+
+use agn_approx::coordinator::{Pipeline, RunConfig};
+use agn_approx::matching::assignment_luts;
+use agn_approx::multipliers::unsigned_catalog;
+use agn_approx::search::EvalMode;
+use std::path::Path;
+
+fn tiny_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = 25;
+    cfg.search_steps = 20;
+    cfg.retrain_steps = 5;
+    cfg.eval_batches = 2;
+    cfg.calib_batches = 1;
+    cfg.k_samples = 64;
+    cfg.seed = 1234; // private cache namespace for this test
+    cfg
+}
+
+#[test]
+fn full_pipeline_composes() {
+    if !Path::new("artifacts/tinynet.manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut pipe = Pipeline::new(Path::new("artifacts"), "tinynet", tiny_cfg()).unwrap();
+    let base = pipe.baseline().unwrap();
+    assert_eq!(base.flat.len(), pipe.manifest.param_count);
+
+    let (absmax, ystd) = pipe.calibrate(&base.flat).unwrap();
+    assert!(absmax.iter().all(|&v| v > 0.0));
+    assert!(ystd.iter().all(|&v| v > 0.0));
+
+    let searched = pipe.search_at(&base, 0.3).unwrap();
+    assert_eq!(searched.sigmas.len(), pipe.manifest.num_layers);
+    assert!(searched.sigmas.iter().all(|s| s.is_finite()));
+
+    let catalog = unsigned_catalog();
+    let ops = pipe.operands(&searched.flat, &absmax).unwrap();
+    assert_eq!(ops.len(), pipe.manifest.num_layers);
+    for (o, l) in ops.iter().zip(&pipe.manifest.layers) {
+        assert_eq!(o.fan_in, l.fan_in);
+        assert!(!o.patches.is_empty());
+        assert!(o.patches.iter().all(|p| p.len() == l.fan_in));
+    }
+
+    let preds = pipe.predictions(&catalog, &ops);
+    assert_eq!(preds.len(), pipe.manifest.num_layers);
+    // exact multiplier must predict zero error everywhere
+    let exact = catalog.exact_index();
+    for row in &preds {
+        assert_eq!(row[exact], 0.0);
+        assert!(row.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    let outcome = pipe.match_at(&catalog, &preds, &searched.sigmas, &ystd);
+    assert_eq!(outcome.assignments.len(), pipe.manifest.num_layers);
+    assert!((0.0..=1.0).contains(&outcome.energy_reduction));
+
+    let luts = assignment_luts(&pipe.manifest, &catalog, &outcome.instance_indices());
+    let scales = pipe.act_scales(&absmax);
+    let mut retrained = searched.clone();
+    pipe.retrain(&mut retrained, &luts, &scales).unwrap();
+    assert!(retrained.flat.iter().all(|v| v.is_finite()));
+
+    let m = pipe
+        .evaluate(&retrained.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })
+        .unwrap();
+    assert!(m.top1 >= 0.0 && m.top1 <= 1.0);
+    assert!(m.topk >= m.top1);
+}
+
+#[test]
+fn matching_margin_zero_sigma_gives_exact_network() {
+    if !Path::new("artifacts/tinynet.manifest.json").exists() {
+        return;
+    }
+    let mut pipe = Pipeline::new(Path::new("artifacts"), "tinynet", tiny_cfg()).unwrap();
+    let base = pipe.baseline().unwrap();
+    let (absmax, ystd) = pipe.calibrate(&base.flat).unwrap();
+    let catalog = unsigned_catalog();
+    let ops = pipe.operands(&base.flat, &absmax).unwrap();
+    let preds = pipe.predictions(&catalog, &ops);
+    let zeros = vec![0.0f32; pipe.manifest.num_layers];
+    let outcome = pipe.match_at(&catalog, &preds, &zeros, &ystd);
+    assert!(
+        outcome.energy_reduction.abs() < 1e-12,
+        "zero tolerance must map to the exact multiplier everywhere"
+    );
+}
+
+#[test]
+fn evaluate_sim_agrees_with_pjrt_eval_on_exact_path() {
+    if !Path::new("artifacts/tinynet.manifest.json").exists() {
+        return;
+    }
+    let mut pipe = Pipeline::new(Path::new("artifacts"), "tinynet", tiny_cfg()).unwrap();
+    let base = pipe.baseline().unwrap();
+    let (absmax, _) = pipe.calibrate(&base.flat).unwrap();
+    let pjrt = pipe.evaluate(&base.flat, EvalMode::Qat).unwrap();
+    let sim = pipe
+        .evaluate_sim(
+            &base.flat,
+            &absmax,
+            &agn_approx::simulator::LutSet::Exact,
+            pjrt.n,
+        )
+        .unwrap();
+    // PJRT eval uses dynamic per-batch scales, the simulator frozen ones:
+    // small divergence allowed, gross divergence means a quantization bug
+    assert!(
+        (pjrt.top1 - sim.top1).abs() < 0.15,
+        "PJRT {} vs simulator {}",
+        pjrt.top1,
+        sim.top1
+    );
+}

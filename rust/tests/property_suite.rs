@@ -1,0 +1,210 @@
+//! Property-based invariant suite over the coordinator substrates
+//! (in-repo `prop` harness; proptest is not in the offline crate set).
+
+use agn_approx::coordinator::pareto::{self, Point};
+use agn_approx::errormodel::layer_error_map;
+use agn_approx::errormodel::model::{
+    estimate_layer, estimate_reference, pool_moments, LayerOperands,
+};
+use agn_approx::matching;
+use agn_approx::matching::tests_support::fake_manifest;
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
+use agn_approx::simulator::{approx_matmul, exact_matmul};
+use agn_approx::util::prop::{self, assert_prop};
+use agn_approx::util::stats;
+
+#[test]
+fn prop_lut_matmul_linearity_in_rows() {
+    // splitting the M dimension must be exact (the tiling the Pallas kernel
+    // relies on)
+    let cat = unsigned_catalog();
+    let lut = build_layer_lut(cat.get("mul8u_etm6").unwrap(), false);
+    prop::check(60, |g| {
+        let m = g.usize_in(2..10);
+        let k = g.usize_in(1..20);
+        let n = g.usize_in(1..8);
+        let x = g.vec_u8(m * k..m * k + 1);
+        let w = g.vec_u8(k * n..k * n + 1);
+        let full = approx_matmul(&x, &w, &lut, m, k, n);
+        let split = g.usize_in(1..m);
+        let top = approx_matmul(&x[..split * k], &w, &lut, split, k, n);
+        let bot = approx_matmul(&x[split * k..], &w, &lut, m - split, k, n);
+        let stitched: Vec<i32> = top.into_iter().chain(bot).collect();
+        assert_prop(full == stitched, format!("row split broke at m={m} split={split}"))
+    });
+}
+
+#[test]
+fn prop_lut_matmul_additivity_in_k() {
+    // splitting the K dimension and summing must be exact (accumulator
+    // revisiting in the kernel's k-grid)
+    let cat = unsigned_catalog();
+    let lut = build_layer_lut(cat.get("mul8u_trc5").unwrap(), false);
+    prop::check(60, |g| {
+        let m = g.usize_in(1..6);
+        let k = g.usize_in(2..16);
+        let n = g.usize_in(1..6);
+        let x = g.vec_u8(m * k..m * k + 1);
+        let w = g.vec_u8(k * n..k * n + 1);
+        let full = approx_matmul(&x, &w, &lut, m, k, n);
+        let split = g.usize_in(1..k);
+        // slice columns of x and rows of w
+        let mut xa = Vec::new();
+        let mut xb = Vec::new();
+        for mi in 0..m {
+            xa.extend_from_slice(&x[mi * k..mi * k + split]);
+            xb.extend_from_slice(&x[mi * k + split..(mi + 1) * k]);
+        }
+        let (wa, wb) = w.split_at(split * n);
+        let pa = approx_matmul(&xa, wa, &lut, m, split, n);
+        let pb = approx_matmul(&xb, wb, &lut, m, k - split, n);
+        let sum: Vec<i32> = pa.iter().zip(&pb).map(|(a, b)| a + b).collect();
+        assert_prop(full == sum, format!("k split broke at k={k} split={split}"))
+    });
+}
+
+#[test]
+fn prop_exact_matmul_matches_float_reference() {
+    prop::check(60, |g| {
+        let m = g.usize_in(1..6);
+        let k = g.usize_in(1..12);
+        let n = g.usize_in(1..6);
+        let x = g.vec_u8(m * k..m * k + 1);
+        let w = g.vec_u8(k * n..k * n + 1);
+        let acc = exact_matmul(&x, &w, false, m, k, n);
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut want = 0i64;
+                for ki in 0..k {
+                    want += x[mi * k + ki] as i64 * (w[ki * n + ni] as i64 - 128);
+                }
+                if acc[mi * n + ni] as i64 != want {
+                    return Err(format!("mismatch at ({mi},{ni})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_model_fast_path_equals_reference() {
+    let cat = unsigned_catalog();
+    let maps: Vec<Vec<i32>> = ["mul8u_trc4", "mul8u_drm4", "mul8u_etm6", "mul8u_log2"]
+        .iter()
+        .map(|n| layer_error_map(cat.get(n).unwrap(), false))
+        .collect();
+    prop::check(30, |g| {
+        let em = g.choose(&maps).clone();
+        let fan_in = g.usize_in(4..64);
+        let k = g.usize_in(1..8);
+        let ops = LayerOperands {
+            weight_cols: (0..64).map(|_| g.u32(256) as u8).collect(),
+            patches: (0..k)
+                .map(|_| (0..fan_in).map(|_| g.u32(256) as u8).collect())
+                .collect(),
+            fan_in,
+            s_x: g.f32_in(0.001..0.1),
+            s_w: g.f32_in(0.001..0.1),
+        };
+        let fast = estimate_layer(&em, &ops);
+        let slow = estimate_reference(&em, &ops);
+        let tol = 1e-6 * slow.sigma_e.abs().max(1.0);
+        assert_prop(
+            (fast.sigma_e - slow.sigma_e).abs() <= tol
+                && (fast.mu_e - slow.mu_e).abs() <= 1e-6 * slow.mu_e.abs().max(1.0),
+            format!("fast {} vs ref {}", fast.sigma_e, slow.sigma_e),
+        )
+    });
+}
+
+#[test]
+fn prop_pooled_moments_match_direct_concatenation_scalar_groups() {
+    // pooling single-element groups (var 0) must equal the population
+    // variance of the means
+    prop::check(100, |g| {
+        let xs = g.vec_f64(1..20, -10.0..10.0);
+        let locals: Vec<(f64, f64)> = xs.iter().map(|&x| (x, 0.0)).collect();
+        let (mu, var) = pool_moments(&locals);
+        let want_mu = stats::mean(&xs);
+        let want_var = stats::variance(&xs);
+        assert_prop(
+            (mu - want_mu).abs() < 1e-9 && (var - want_var).abs() < 1e-9,
+            format!("pool ({mu},{var}) vs direct ({want_mu},{want_var})"),
+        )
+    });
+}
+
+#[test]
+fn prop_energy_reduction_bounds_and_monotonicity() {
+    let cat = unsigned_catalog();
+    prop::check(100, |g| {
+        let l = g.usize_in(1..12);
+        let mults: Vec<usize> = (0..l).map(|_| g.usize_in(1..100_000)).collect();
+        let manifest = fake_manifest(&mults);
+        let genome: Vec<usize> = (0..l).map(|_| g.usize_in(0..cat.len())).collect();
+        let e = matching::energy_reduction(&manifest, &cat, &genome);
+        assert_prop((0.0..=1.0).contains(&e), format!("energy out of range {e}"))?;
+        // upgrading one layer to a cheaper instance cannot reduce savings
+        let li = g.usize_in(0..l);
+        let mut cheaper = genome.clone();
+        if cheaper[li] > 0 {
+            cheaper[li] -= 1; // catalog is power-sorted ascending
+            let e2 = matching::energy_reduction(&manifest, &cat, &cheaper);
+            assert_prop(e2 >= e - 1e-12, format!("monotonicity {e} -> {e2}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pareto_front_is_mutually_nondominated_and_complete() {
+    prop::check(100, |g| {
+        let n = g.usize_in(1..40);
+        let pts: Vec<Point> = (0..n)
+            .map(|i| Point {
+                energy_reduction: g.f64_in(0.0..1.0),
+                accuracy: g.f64_in(0.0..1.0),
+                knob: i as f64,
+            })
+            .collect();
+        let (front, dominated) = pareto::pareto_split(&pts);
+        assert_prop(front.len() + dominated.len() == n, "partition size")?;
+        for a in &front {
+            for b in &front {
+                if a.knob != b.knob && pareto::dominates(a, b) {
+                    return Err(format!("front member dominated: {a:?} > {b:?}"));
+                }
+            }
+        }
+        for d in &dominated {
+            if !pts.iter().any(|p| pareto::dominates(p, d)) {
+                return Err(format!("non-dominated point classified dominated: {d:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_layer_lut_error_map_consistency() {
+    // build_layer_lut - exact products == layer_error_map, for any instance
+    let cat = unsigned_catalog();
+    prop::check(20, |g| {
+        let inst = g.choose(&cat.instances);
+        let act_signed = g.bool();
+        let lut = build_layer_lut(inst, act_signed);
+        let err = layer_error_map(inst, act_signed);
+        for _ in 0..64 {
+            let row = g.usize_in(0..256);
+            let col = g.usize_in(0..256);
+            let x = if act_signed { row as i32 - 128 } else { row as i32 };
+            let w = col as i32 - 128;
+            let want = lut[row * 256 + col] - x * w;
+            if err[row * 256 + col] != want {
+                return Err(format!("{} at ({row},{col})", inst.name));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,151 @@
+//! Integration: the AOT bridge. Loads the tinynet HLO-text artifacts on the
+//! PJRT CPU client and checks program semantics end to end (these are the
+//! same artifacts `make artifacts` builds; Python is NOT involved here).
+
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::runtime::{Engine, Value};
+use agn_approx::search::{self, LrSchedule, TrainState};
+use std::path::Path;
+
+fn engine() -> Option<(Engine, agn_approx::runtime::Manifest)> {
+    let dir = Path::new("artifacts");
+    let engine = Engine::new(dir).ok()?;
+    let manifest = engine.manifest("tinynet").ok()?;
+    Some((engine, manifest))
+}
+
+fn data(manifest: &agn_approx::runtime::Manifest) -> Dataset {
+    let spec = DatasetSpec::synth_cifar(
+        (manifest.input_shape[0], manifest.input_shape[1]),
+        7,
+    );
+    Dataset::load(&spec, Split::Train)
+}
+
+#[test]
+fn eval_runs_and_metrics_are_sane() {
+    let Some((mut engine, manifest)) = engine() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let flat = manifest.load_init_params().unwrap();
+    let d = data(&manifest);
+    let (xs, ys) = d.eval_batch(manifest.batch, 0);
+    let out = engine
+        .run(
+            &manifest,
+            "eval",
+            &[
+                Value::vec_f32(flat),
+                Value::f32(
+                    &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+                    xs,
+                ),
+                Value::i32(&[manifest.batch], ys),
+            ],
+        )
+        .unwrap();
+    let m = out[0].as_f32().unwrap();
+    assert!(m[0].is_finite() && m[0] > 0.0, "loss {}", m[0]);
+    assert!(m[1] >= 0.0 && m[1] <= manifest.batch as f32, "correct {}", m[1]);
+    assert!(m[2] >= m[1], "top5 < top1");
+}
+
+#[test]
+fn input_validation_fails_fast() {
+    let Some((mut engine, manifest)) = engine() else {
+        return;
+    };
+    let err = engine
+        .run(&manifest, "eval", &[Value::scalar_f32(0.0)])
+        .unwrap_err();
+    assert!(format!("{err}").contains("expected"), "{err}");
+    assert!(engine.run(&manifest, "nonexistent", &[]).is_err());
+}
+
+#[test]
+fn qat_training_reduces_loss_via_pjrt() {
+    let Some((mut engine, manifest)) = engine() else {
+        return;
+    };
+    let d = data(&manifest);
+    let mut state = TrainState::init(&manifest, 0.1).unwrap();
+    let lr = LrSchedule { base: 0.05, decay: 0.9, every: 50 };
+    let hist = search::train_qat(&mut engine, &manifest, &d, &mut state, 40, lr, 3).unwrap();
+    let first = hist.steps[0].loss;
+    let last = hist.steps.last().unwrap().loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn gradient_search_learns_sigmas_and_responds_to_lambda() {
+    let Some((mut engine, manifest)) = engine() else {
+        return;
+    };
+    let d = data(&manifest);
+    let lr = LrSchedule { base: 0.02, decay: 0.9, every: 100 };
+
+    let run = |engine: &mut Engine, lambda: f32| {
+        let mut st = TrainState::init(&manifest, 0.05).unwrap();
+        search::gradient_search(engine, &manifest, &d, &mut st, 40, lr, lambda, 0.5, 3)
+            .unwrap();
+        st.sigmas.iter().map(|s| s.abs() as f64).sum::<f64>() / st.sigmas.len() as f64
+    };
+    let low = run(&mut engine, 0.0);
+    let high = run(&mut engine, 0.6);
+    assert!(
+        high > low,
+        "lambda must push sigmas up: lam0 -> {low:.4}, lam0.6 -> {high:.4}"
+    );
+}
+
+#[test]
+fn calibrate_returns_positive_stats() {
+    let Some((mut engine, manifest)) = engine() else {
+        return;
+    };
+    let d = data(&manifest);
+    let flat = manifest.load_init_params().unwrap();
+    let (absmax, ystd) =
+        search::calibrate(&mut engine, &manifest, &d, &flat, 2).unwrap();
+    assert_eq!(absmax.len(), manifest.num_layers);
+    assert!(absmax.iter().all(|&v| v > 0.0), "{absmax:?}");
+    assert!(ystd.iter().all(|&v| v > 0.0), "{ystd:?}");
+}
+
+#[test]
+fn agn_eval_degrades_with_huge_sigma() {
+    let Some((mut engine, manifest)) = engine() else {
+        return;
+    };
+    let d = data(&manifest);
+    // train a bit first so clean accuracy is meaningful
+    let mut st = TrainState::init(&manifest, 0.0).unwrap();
+    let lr = LrSchedule { base: 0.05, decay: 0.9, every: 100 };
+    search::train_qat(&mut engine, &manifest, &d, &mut st, 60, lr, 5).unwrap();
+    let clean = search::evaluate(
+        &mut engine,
+        &manifest,
+        &d,
+        &st.flat,
+        search::EvalMode::Qat,
+        2,
+    )
+    .unwrap();
+    let sig = vec![5.0f32; manifest.num_layers];
+    let noisy = search::evaluate(
+        &mut engine,
+        &manifest,
+        &d,
+        &st.flat,
+        search::EvalMode::Agn { sigmas: &sig, seed: 1 },
+        2,
+    )
+    .unwrap();
+    assert!(
+        noisy.top1 < clean.top1,
+        "sigma=5 noise must hurt: clean {:.3} noisy {:.3}",
+        clean.top1,
+        noisy.top1
+    );
+}
