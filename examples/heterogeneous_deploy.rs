@@ -5,6 +5,7 @@
 //!
 //! Run: cargo run --release --example heterogeneous_deploy
 
+use agn_approx::api::cached_baseline_path;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::matching::{assignment_luts, energy_reduction};
 use agn_approx::multipliers::unsigned_catalog;
@@ -17,9 +18,9 @@ use std::time::Instant;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load(Path::new("artifacts"), "resnet8")?;
-    // use the cached QAT baseline if an experiment has produced one,
-    // otherwise fall back to the init params (demo still runs)
-    let cached = Path::new("results/cache").join(format!("{}_qat300_seed42.f32", manifest.model));
+    // use the session-cached QAT baseline if an experiment has produced
+    // one, otherwise fall back to the init params (demo still runs)
+    let cached = cached_baseline_path(Path::new("artifacts"), &manifest.model, 300, 42);
     let flat = if cached.exists() {
         let bytes = std::fs::read(&cached)?;
         bytes

@@ -1,20 +1,18 @@
 //! pareto_sweep — a small lambda sweep on resnet8 producing the Figure-3
-//! style energy/accuracy tradeoff, printed as a text scatter.
+//! style energy/accuracy tradeoff, via the typed job API: one
+//! `JobSpec::ParetoFront` run returns the structured points with front
+//! membership already computed.
 //!
 //! Run: cargo run --release --example pareto_sweep [-- --lambdas 0.0,0.2,0.5]
 
-use agn_approx::coordinator::experiments::{default_lambdas, sweep_lambda};
-use agn_approx::coordinator::pareto::{pareto_split, Point};
-use agn_approx::coordinator::{Pipeline, RunConfig};
-use agn_approx::multipliers::unsigned_catalog;
-use agn_approx::search::EvalMode;
+use agn_approx::api::{ApproxSession, JobResult, JobSpec, RunConfig};
+use agn_approx::coordinator::experiments::default_lambdas;
 use agn_approx::util::cli::Args;
-use anyhow::Result;
-use std::path::PathBuf;
 
-fn main() -> Result<()> {
+fn main() -> Result<(), agn_approx::api::AgnError> {
+    agn_approx::util::logging::init();
     let args = Args::from_env();
-    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let artifacts = args.str_or("artifacts", "artifacts");
     let lambdas: Vec<f32> = args
         .get("lambdas")
         .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
@@ -24,35 +22,35 @@ fn main() -> Result<()> {
     cfg.search_steps = args.usize_or("search-steps", 80);
     cfg.retrain_steps = args.usize_or("retrain-steps", 20);
 
-    let catalog = unsigned_catalog();
-    let mut pipe = Pipeline::new(&artifacts, "resnet8", cfg)?;
-    let base = pipe.baseline()?;
-    let baseline = pipe.evaluate(&base.flat, EvalMode::Qat)?.top1;
-    println!("baseline top-1: {baseline:.3}\n");
+    let mut session = ApproxSession::builder(&artifacts).config(cfg).build()?;
+    let result = session.run(JobSpec::ParetoFront {
+        models: vec!["resnet8".into()],
+        lambdas,
+    })?;
 
-    let mut pts = Vec::new();
-    for &lam in &lambdas {
-        let p = sweep_lambda(&mut pipe, &catalog, lam, false)?;
+    let JobResult::ParetoFront(report) = &result else { unreachable!() };
+    let model = &report.models[0];
+    println!("baseline top-1: {:.3}\n", model.baseline_top1);
+    for p in &model.points {
         println!(
             "lambda {:<5.2} energy -{:>5.1} %  top-1 {:.3}",
-            lam,
+            p.lambda,
             p.energy_reduction * 100.0,
-            p.acc_retrained
+            p.top1
         );
-        pts.push(Point {
-            energy_reduction: p.energy_reduction,
-            accuracy: p.acc_retrained,
-            knob: lam as f64,
-        });
     }
-    let (front, dominated) = pareto_split(&pts);
-    println!("\npareto front ({} points, {} dominated):", front.len(), dominated.len());
+    let front: Vec<_> = model.points.iter().filter(|p| p.on_front).collect();
+    println!(
+        "\npareto front ({} points, {} dominated):",
+        front.len(),
+        model.points.len() - front.len()
+    );
     for p in &front {
         println!(
             "  lambda {:<5.2} energy -{:>5.1} %  top-1 {:.3}",
-            p.knob,
+            p.lambda,
             p.energy_reduction * 100.0,
-            p.accuracy
+            p.top1
         );
     }
     Ok(())

@@ -1,29 +1,23 @@
-//! Quickstart — the END-TO-END driver (DESIGN.md: E2E validation).
+//! Quickstart — the END-TO-END driver (DESIGN.md: E2E validation), written
+//! against the public session/job API.
 //!
-//! Exercises every layer of the stack on a real small workload:
-//!   1. load the AOT'd resnet8 artifacts (L2 JAX graphs + L1 Pallas kernels
-//!      inside them) on the PJRT CPU client,
-//!   2. train the 8-bit QAT baseline on SynthCIFAR and log the loss curve,
-//!   3. run the AGN gradient search (learned per-layer sigma_l),
-//!   4. match approximate multipliers from the unsigned catalog with the
-//!      probabilistic error model,
-//!   5. retrain behaviorally under the matched LUTs (STE),
-//!   6. report baseline vs approx accuracy and the energy reduction.
+//! One `ApproxSession` owns the PJRT engine, datasets and state cache; the
+//! three jobs below share its compiled executables and cached train states:
+//!   1. `JobSpec::Eval`           — QAT baseline (trains on first run),
+//!   2. `JobSpec::Search`         — AGN gradient search (learned sigma_l),
+//!   3. `JobSpec::LayerBreakdown` — matching + behavioral retraining, with
+//!      the per-layer multiplier assignment and the energy reduction.
 //!
 //! Run: cargo run --release --example quickstart [-- --qat-steps 200 ...]
 
-use agn_approx::coordinator::{experiments, Pipeline, RunConfig};
-use agn_approx::matching::assignment_luts;
-use agn_approx::multipliers::unsigned_catalog;
-use agn_approx::search::EvalMode;
+use agn_approx::api::{ApproxSession, JobResult, JobSpec, RunConfig};
 use agn_approx::util::cli::Args;
-use anyhow::Result;
-use std::path::PathBuf;
 use std::time::Instant;
 
-fn main() -> Result<()> {
+fn main() -> Result<(), agn_approx::api::AgnError> {
+    agn_approx::util::logging::init();
     let args = Args::from_env();
-    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let artifacts = args.str_or("artifacts", "artifacts");
     let model = args.str_or("models", "resnet8");
     let lambda = args.f32_or("lambda", 0.3);
     let mut cfg = RunConfig::default();
@@ -34,76 +28,70 @@ fn main() -> Result<()> {
 
     println!("== agn-approx quickstart: {model} on SynthCIFAR ==");
     let t0 = Instant::now();
-    let mut pipe = Pipeline::new(&artifacts, &model, cfg)?;
+    let mut session = ApproxSession::builder(&artifacts).config(cfg).build()?;
     println!(
-        "loaded {} (N={} params, L={} approximable layers), platform={}",
-        pipe.manifest.model,
-        pipe.manifest.param_count,
-        pipe.manifest.num_layers,
-        pipe.engine.platform()
+        "session up (platform={}, cache={})",
+        session.engine().platform(),
+        session.cache_dir().display()
     );
 
     // 1. QAT baseline
-    let base = pipe.baseline()?;
-    let base_acc = pipe.evaluate(&base.flat, EvalMode::Qat)?;
-    println!(
-        "[{:>6.1}s] QAT baseline: top-1 {:.3} (val n={})",
-        t0.elapsed().as_secs_f64(),
-        base_acc.top1,
-        base_acc.n
-    );
-
-    // 2. gradient search
-    let searched = pipe.search_at(&base, lambda)?;
-    println!(
-        "[{:>6.1}s] gradient search (lambda={lambda}): sigma_l = {:?}",
-        t0.elapsed().as_secs_f64(),
-        searched
-            .sigmas
-            .iter()
-            .map(|s| (s * 1000.0).round() / 1000.0)
-            .collect::<Vec<_>>()
-    );
-
-    // 3. matching
-    let catalog = unsigned_catalog();
-    let (absmax, ystd) = pipe.calibrate(&base.flat)?;
-    let ops = pipe.operands(&searched.flat, &absmax)?;
-    let preds = pipe.predictions(&catalog, &ops);
-    let outcome = pipe.match_at(&catalog, &preds, &searched.sigmas, &ystd);
-    println!(
-        "[{:>6.1}s] matched multipliers (energy reduction {:.1} %):",
-        t0.elapsed().as_secs_f64(),
-        outcome.energy_reduction * 100.0
-    );
-    for a in &outcome.assignments {
+    let eval = session.run(JobSpec::Eval { model: model.clone() })?;
+    let base_top1 = eval.as_eval().map(|e| e.top1).unwrap_or(0.0);
+    if let Some(e) = eval.as_eval() {
         println!(
-            "    {:<16} -> {:<14} (power {:.3})",
-            pipe.manifest.layers[a.layer].name, a.instance_name, a.power
+            "[{:>6.1}s] QAT baseline: top-1 {:.3} (val n={})",
+            t0.elapsed().as_secs_f64(),
+            e.top1,
+            e.n
         );
     }
 
-    // 4. behavioral retraining + final evaluation
-    let luts = assignment_luts(&pipe.manifest, &catalog, &outcome.instance_indices());
-    let scales = pipe.act_scales(&absmax);
-    let mut retrained = searched.clone();
-    pipe.retrain(&mut retrained, &luts, &scales)?;
-    let approx_acc = pipe.evaluate(
-        &retrained.flat,
-        EvalMode::Approx { luts: &luts, act_scales: &scales },
-    )?;
+    // 2. gradient search
+    let search = session.run(JobSpec::Search { model: model.clone(), lambda })?;
+    if let JobResult::Search(s) = &search {
+        println!(
+            "[{:>6.1}s] gradient search (lambda={lambda}): sigma_l = {:?}",
+            t0.elapsed().as_secs_f64(),
+            s.sigmas
+                .iter()
+                .map(|s| (s * 1000.0).round() / 1000.0)
+                .collect::<Vec<_>>()
+        );
+    }
+
+    // 3. matching + behavioral retraining + final evaluation
+    let breakdown =
+        session.run(JobSpec::LayerBreakdown { models: vec![model.clone()], lambda })?;
+    if let JobResult::LayerBreakdown(r) = &breakdown {
+        let m = &r.models[0];
+        println!(
+            "[{:>6.1}s] matched multipliers (energy reduction {:.1} %):",
+            t0.elapsed().as_secs_f64(),
+            m.energy_reduction * 100.0
+        );
+        for l in &m.layers {
+            println!("    {:<16} -> {:<14} (energy -{:.1} %)", l.name, l.instance, l.reduction * 100.0);
+        }
+        println!(
+            "[{:>6.1}s] approx (retrained): top-1 {:.3} | baseline {:.3} | loss {:.2} p.p. | energy -{:.1} %",
+            t0.elapsed().as_secs_f64(),
+            m.acc_retrained,
+            base_top1,
+            (base_top1 - m.acc_retrained) * 100.0,
+            m.energy_reduction * 100.0
+        );
+    }
+
+    // the session compiled each (model, program) executable exactly once
+    let s = session.stats();
     println!(
-        "[{:>6.1}s] approx (retrained): top-1 {:.3} | baseline {:.3} | loss {:.2} p.p. | energy -{:.1} %",
-        t0.elapsed().as_secs_f64(),
-        approx_acc.top1,
-        base_acc.top1,
-        (base_acc.top1 - approx_acc.top1) * 100.0,
-        outcome.energy_reduction * 100.0
+        "session: {} jobs, {} executions ({:.1}s), {} compiles ({:.1}s)",
+        s.jobs_run,
+        s.engine.exec_count,
+        s.engine.exec_seconds,
+        s.engine.compile_count,
+        s.engine.compile_seconds
     );
-    println!(
-        "engine: {} executions, {:.1}s exec, {:.1}s compile",
-        pipe.engine.exec_count, pipe.engine.exec_seconds, pipe.engine.compile_seconds
-    );
-    let _ = experiments::default_lambdas(); // anchor: sweep API is public
     Ok(())
 }

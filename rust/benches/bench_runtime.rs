@@ -2,6 +2,7 @@
 //! artifacts — the denominators of every training-loop timing in
 //! EXPERIMENTS.md (paper §4.2 reports gradient-search wall-clock).
 
+use agn_approx::api::{ApproxSession, JobSpec, RunConfig};
 use agn_approx::benchkit::Bench;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
@@ -120,5 +121,27 @@ fn main() {
             .unwrap()
     });
     b.throughput(manifest.batch as f64, "images");
+
+    // session/job API overhead on a warm engine: baseline loads from the
+    // state cache, evaluation is one PJRT batch
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = 0;
+    cfg.eval_batches = 1;
+    let mut session = ApproxSession::builder(artifacts).config(cfg).build().unwrap();
+    session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap(); // warm
+    b.bench("api/eval_job_warm_b32", || {
+        session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap()
+    });
+    b.throughput(manifest.batch as f64, "images");
+    let s = session.stats();
+    println!(
+        "session stats: {} jobs, {} execs ({:.2}s), {} compiles ({:.2}s), {} cached executables",
+        s.jobs_run,
+        s.engine.exec_count,
+        s.engine.exec_seconds,
+        s.engine.compile_count,
+        s.engine.compile_seconds,
+        s.engine.cached_executables
+    );
     b.finish();
 }

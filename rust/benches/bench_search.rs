@@ -2,6 +2,7 @@
 //! Pareto tooling, dataset batch synthesis (all pure coordinator work that
 //! must stay negligible next to PJRT execute time).
 
+use agn_approx::api::{JobResult, ParetoModelReport, ParetoPoint, ParetoReport, render, to_json};
 use agn_approx::baselines::{nsga2_search, AlwannConfig};
 use agn_approx::benchkit::Bench;
 use agn_approx::coordinator::pareto::{pareto_split, Point};
@@ -33,6 +34,25 @@ fn main() {
         })
         .collect();
     b.bench("pareto_split/200pts", || pareto_split(&pts));
+
+    // report views over a structured JobResult (the api rendering path)
+    let report = JobResult::ParetoFront(ParetoReport {
+        models: vec![ParetoModelReport {
+            model: "resnet8".into(),
+            baseline_top1: 0.9,
+            points: pts
+                .iter()
+                .map(|p| ParetoPoint {
+                    lambda: p.knob,
+                    energy_reduction: p.energy_reduction,
+                    top1: p.accuracy,
+                    on_front: false,
+                })
+                .collect(),
+        }],
+    });
+    b.bench("report/render_pareto_200pts", || render(&report).len());
+    b.bench("report/json_pareto_200pts", || to_json(&report).to_string_pretty().len());
 
     let spec = DatasetSpec::synth_cifar((16, 16), 42);
     b.bench("dataset_load/train4096_16x16", || {

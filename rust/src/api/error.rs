@@ -1,0 +1,122 @@
+//! The typed error surface of the public API.
+//!
+//! Internals keep using `anyhow` freely; every error that crosses the
+//! [`crate::api`] boundary is classified into an [`AgnError`] variant so
+//! callers can branch on the failure class (missing artifacts vs engine
+//! failure vs bad job spec) without string matching.
+
+use std::path::PathBuf;
+
+/// `Result` alias for the public API surface.
+pub type AgnResult<T> = Result<T, AgnError>;
+
+/// Failure classes of the session/job API.
+#[derive(Debug)]
+pub enum AgnError {
+    /// Model artifacts (manifest, HLO programs, init params) missing or
+    /// unreadable. Usually means `make artifacts MODELS=<model>` was not run.
+    Artifacts {
+        model: String,
+        source: anyhow::Error,
+    },
+    /// PJRT client construction, HLO compilation, or program execution
+    /// failed.
+    Engine {
+        context: String,
+        source: anyhow::Error,
+    },
+    /// A [`crate::api::JobSpec`] that cannot be run as specified (empty
+    /// model list, empty lambda sweep, ...). Always a caller bug.
+    InvalidSpec(String),
+    /// A job runner failed mid-flight. `job` is the spec's stable name
+    /// (`"table1"`, `"fig3"`, ...).
+    Job {
+        job: &'static str,
+        source: anyhow::Error,
+    },
+    /// Filesystem I/O on a session-owned path (cache, results).
+    Io {
+        path: PathBuf,
+        source: std::io::Error,
+    },
+}
+
+impl AgnError {
+    /// Construct an [`AgnError::InvalidSpec`].
+    pub fn invalid_spec(msg: impl Into<String>) -> AgnError {
+        AgnError::InvalidSpec(msg.into())
+    }
+
+    /// Wrap a runner failure, preserving an inner `AgnError` untouched so
+    /// classification survives the `anyhow` plumbing inside runners.
+    pub(crate) fn job(job: &'static str, source: anyhow::Error) -> AgnError {
+        match source.downcast::<AgnError>() {
+            Ok(inner) => inner,
+            Err(source) => AgnError::Job { job, source },
+        }
+    }
+}
+
+impl std::fmt::Display for AgnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AgnError::Artifacts { model, source } => {
+                write!(f, "artifacts for model `{model}` unavailable: {source}")
+            }
+            AgnError::Engine { context, source } => {
+                write!(f, "engine failure ({context}): {source}")
+            }
+            AgnError::InvalidSpec(msg) => write!(f, "invalid job spec: {msg}"),
+            AgnError::Job { job, source } => write!(f, "job `{job}` failed: {source}"),
+            AgnError::Io { path, source } => write!(f, "io error on {path:?}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for AgnError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            AgnError::Artifacts { source, .. }
+            | AgnError::Engine { source, .. }
+            | AgnError::Job { source, .. } => Some(&**source),
+            AgnError::Io { source, .. } => Some(source),
+            AgnError::InvalidSpec(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_classifies_failures() {
+        let e = AgnError::invalid_spec("lambdas must be non-empty");
+        assert_eq!(e.to_string(), "invalid job spec: lambdas must be non-empty");
+
+        let e = AgnError::Artifacts {
+            model: "resnet8".into(),
+            source: anyhow::anyhow!("no manifest"),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("resnet8") && msg.contains("no manifest"), "{msg}");
+
+        let e = AgnError::Job { job: "table1", source: anyhow::anyhow!("boom") };
+        assert!(e.to_string().contains("`table1`"));
+    }
+
+    #[test]
+    fn job_wrapper_preserves_inner_agn_error() {
+        let inner = AgnError::invalid_spec("empty model list");
+        let wrapped = AgnError::job("table2", anyhow::Error::new(inner));
+        assert!(matches!(wrapped, AgnError::InvalidSpec(_)), "{wrapped:?}");
+    }
+
+    #[test]
+    fn source_chain_is_exposed() {
+        use std::error::Error;
+        let e = AgnError::Engine { context: "compile".into(), source: anyhow::anyhow!("hlo") };
+        assert!(e.source().is_some());
+        assert!(AgnError::invalid_spec("x").source().is_none());
+    }
+}

@@ -1,0 +1,161 @@
+//! Typed job specifications and their structured results.
+
+use super::results::*;
+
+/// Everything the coordinator can run, as data. One variant per former
+/// `experiments.rs` entrypoint plus the pipeline-stage utilities; construct
+/// one and hand it to [`crate::api::ApproxSession::run`].
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    /// Table 1 — error-model quality on the ResNet8 layers.
+    Table1 { mc_trials: usize },
+    /// Table 2 — energy reduction at an accuracy budget across models,
+    /// optionally including the ALWANN/LVRM/uniform baselines.
+    EnergySweep {
+        models: Vec<String>,
+        lambdas: Vec<f32>,
+        budget_pp: f64,
+        baselines: bool,
+    },
+    /// Fig. 3 — lambda-sweep Pareto fronts.
+    ParetoFront { models: Vec<String>, lambdas: Vec<f32> },
+    /// Fig. 4 — AGN-space vs behavioral accuracy (adds the two control
+    /// evaluations per lambda).
+    AgnVsBehavioral { model: String, lambdas: Vec<f32> },
+    /// Fig. 5 — per-layer assignment breakdown at one lambda.
+    LayerBreakdown { models: Vec<String>, lambda: f32 },
+    /// Table 3 — homogeneous vs heterogeneous VGG16 (SynthTIN).
+    Homogeneity { lambda: f32 },
+    /// One gradient-search run; yields the learned per-layer sigmas.
+    Search { model: String, lambda: f32 },
+    /// Evaluate the QAT baseline (training it first if no cached state
+    /// exists — there is deliberately no separate `Train` job; the
+    /// baseline stage is idempotent and cache-backed).
+    Eval { model: String },
+    /// The multiplier catalogs.
+    Catalog,
+    /// Artifact inventory and platform facts.
+    Info,
+}
+
+impl JobSpec {
+    /// Stable job name; doubles as the JSON artifact slug for the paper
+    /// tables/figures. Keep in sync with [`JobResult::slug`] — the two
+    /// enums intentionally mirror each other variant-for-variant.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobSpec::Table1 { .. } => "table1",
+            JobSpec::EnergySweep { .. } => "table2",
+            JobSpec::ParetoFront { .. } => "fig3",
+            JobSpec::AgnVsBehavioral { .. } => "fig4",
+            JobSpec::LayerBreakdown { .. } => "fig5",
+            JobSpec::Homogeneity { .. } => "table3",
+            JobSpec::Search { .. } => "search",
+            JobSpec::Eval { .. } => "eval",
+            JobSpec::Catalog => "catalog",
+            JobSpec::Info => "info",
+        }
+    }
+}
+
+/// The structured outcome of one [`JobSpec`]; variants mirror the spec.
+#[derive(Clone, Debug)]
+pub enum JobResult {
+    Table1(Table1Report),
+    EnergySweep(EnergySweepReport),
+    ParetoFront(ParetoReport),
+    AgnVsBehavioral(AgnBehavioralReport),
+    LayerBreakdown(LayerBreakdownReport),
+    Homogeneity(HomogeneityReport),
+    Search(SearchReport),
+    Eval(EvalReport),
+    Catalog(CatalogReport),
+    Info(InfoReport),
+}
+
+impl JobResult {
+    /// Stable slug (used for `results/<slug>.json`). Keep in sync with
+    /// [`JobSpec::name`].
+    pub fn slug(&self) -> &'static str {
+        match self {
+            JobResult::Table1(_) => "table1",
+            JobResult::EnergySweep(_) => "table2",
+            JobResult::ParetoFront(_) => "fig3",
+            JobResult::AgnVsBehavioral(_) => "fig4",
+            JobResult::LayerBreakdown(_) => "fig5",
+            JobResult::Homogeneity(_) => "table3",
+            JobResult::Search(_) => "search",
+            JobResult::Eval(_) => "eval",
+            JobResult::Catalog(_) => "catalog",
+            JobResult::Info(_) => "info",
+        }
+    }
+
+    /// True for the six paper artifacts (tables/figures) that the CLI
+    /// persists under `results/` by default.
+    pub fn is_paper_artifact(&self) -> bool {
+        matches!(
+            self,
+            JobResult::Table1(_)
+                | JobResult::EnergySweep(_)
+                | JobResult::ParetoFront(_)
+                | JobResult::AgnVsBehavioral(_)
+                | JobResult::LayerBreakdown(_)
+                | JobResult::Homogeneity(_)
+        )
+    }
+
+    /// Convenience accessor for [`JobResult::Eval`].
+    pub fn as_eval(&self) -> Option<&EvalReport> {
+        match self {
+            JobResult::Eval(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    /// Convenience accessor for [`JobResult::Search`].
+    pub fn as_search(&self) -> Option<&SearchReport> {
+        match self {
+            JobResult::Search(r) => Some(r),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_stable_slugs() {
+        assert_eq!(JobSpec::Table1 { mc_trials: 1 }.name(), "table1");
+        assert_eq!(
+            JobSpec::EnergySweep {
+                models: vec![],
+                lambdas: vec![],
+                budget_pp: 1.0,
+                baselines: true
+            }
+            .name(),
+            "table2"
+        );
+        assert_eq!(JobSpec::Catalog.name(), "catalog");
+    }
+
+    #[test]
+    fn paper_artifacts_are_flagged() {
+        let eval = JobResult::Eval(EvalReport {
+            model: "m".into(),
+            top1: 0.0,
+            top5: 0.0,
+            loss: 0.0,
+            n: 0,
+        });
+        assert!(!eval.is_paper_artifact());
+        assert!(eval.as_eval().is_some());
+        assert!(eval.as_search().is_none());
+        let t3 = JobResult::Homogeneity(HomogeneityReport { lambda: 0.3, rows: vec![] });
+        assert!(t3.is_paper_artifact());
+        assert_eq!(t3.slug(), "table3");
+    }
+}

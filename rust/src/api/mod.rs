@@ -1,0 +1,95 @@
+//! The public session/job API — the single supported entrypoint of the
+//! crate.
+//!
+//! The paper's workflow (QAT baseline → gradient search of per-layer sigma
+//! → probabilistic matching → retrain → eval) is exposed as *callable jobs*
+//! with structured inputs and outputs instead of one-shot print-to-stdout
+//! scripts:
+//!
+//! - [`ApproxSession`] — builder-constructed facade owning one PJRT
+//!   [`crate::runtime::Engine`], the synthetic datasets and the on-disk
+//!   trained-state cache. Reused across jobs, so each (model, program)
+//!   executable compiles once per process instead of once per experiment.
+//! - [`JobSpec`] — a typed description of every experiment the coordinator
+//!   can run (paper tables/figures plus pipeline-stage utilities).
+//! - [`JobResult`] — structured results (per-layer sigmas, matched
+//!   multiplier assignments, energy reductions, accuracies, Pareto points,
+//!   timings) defined in [`results`].
+//! - [`AgnError`] — the typed error surface; `anyhow` stays internal.
+//!
+//! Text tables and JSON files are *views* over [`JobResult`], rendered by
+//! [`crate::coordinator::report::render`] and
+//! [`crate::coordinator::report::to_json`].
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use agn_approx::api::{ApproxSession, JobResult, JobSpec};
+//!
+//! # fn main() -> Result<(), agn_approx::api::AgnError> {
+//! let mut session = ApproxSession::builder("artifacts").build()?;
+//!
+//! // Evaluate the cached QAT baseline (trains it on first use).
+//! let result = session.run(JobSpec::Eval { model: "resnet8".into() })?;
+//! if let Some(eval) = result.as_eval() {
+//!     println!("{}: top-1 {:.3} top-5 {:.3}", eval.model, eval.top1, eval.top5);
+//! }
+//!
+//! // Jobs compose: the second run reuses the compiled executables,
+//! // datasets and cached train states of the first.
+//! let search = session.run(JobSpec::Search { model: "resnet8".into(), lambda: 0.3 })?;
+//! if let JobResult::Search(report) = &search {
+//!     for (name, sigma) in report.layer_names.iter().zip(&report.sigmas) {
+//!         println!("  {name:<16} sigma = {sigma:.4}");
+//!     }
+//! }
+//! println!("compiles: {}", session.stats().engine.compile_count);
+//! # Ok(()) }
+//! ```
+
+pub mod error;
+pub mod job;
+pub mod results;
+pub mod session;
+
+pub use error::{AgnError, AgnResult};
+pub use job::{JobResult, JobSpec};
+pub use results::*;
+pub use session::{ApproxSession, SessionBuilder, SessionStats};
+
+// Re-exported building blocks for composable/advanced use.
+pub use crate::coordinator::pipeline::{default_cache_dir, state_cache_path, Pipeline, RunConfig};
+pub use crate::coordinator::report::{render, save_json, to_json};
+
+use std::path::{Path, PathBuf};
+
+/// The multiplier catalogs as a structured report — pure data; needs no
+/// session, no artifacts and no PJRT client (unlike
+/// [`ApproxSession::run`] with [`JobSpec::Catalog`], which shares the
+/// session's engine).
+pub fn catalog() -> CatalogReport {
+    crate::coordinator::experiments::catalog_job()
+}
+
+/// Where [`ApproxSession`] caches the QAT baseline for `model` trained for
+/// `qat_steps` at `seed` — for PJRT-free deployment paths that want to pick
+/// up session-trained weights without constructing an engine.
+pub fn cached_baseline_path(artifacts: &Path, model: &str, qat_steps: usize, seed: u64) -> PathBuf {
+    state_cache_path(
+        &default_cache_dir(artifacts),
+        model,
+        &format!("qat{qat_steps}"),
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cached_baseline_path_matches_session_cache_layout() {
+        let p = cached_baseline_path(Path::new("artifacts"), "resnet8", 300, 42);
+        assert_eq!(p, PathBuf::from("artifacts/cache/resnet8_qat300_seed42.f32"));
+    }
+}

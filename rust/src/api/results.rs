@@ -1,0 +1,219 @@
+//! Structured result types carried by [`crate::api::JobResult`].
+//!
+//! These are plain data: per-layer sigmas, matched multiplier assignments,
+//! energy reductions, accuracies, Pareto points and timings. Text tables
+//! and JSON are *views* over them, rendered by [`crate::coordinator::report`]
+//! — no experiment logic prints anything itself.
+
+/// One lambda point of the full paper pipeline (search → match → retrain →
+/// eval). Shared by the energy sweep, Pareto front and Figure-4 jobs.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub lambda: f64,
+    pub energy_reduction: f64,
+    /// Accuracy after matching + behavioral retraining (gradient-search
+    /// weights) — the paper's headline number.
+    pub acc_retrained: f64,
+    /// Accuracy of the AGN-perturbed model at the learned sigmas (Fig. 4);
+    /// only populated when the job requested the Fig.-4 controls.
+    pub acc_agn: f64,
+    /// Accuracy after retraining from *baseline* weights (Fig. 4 control).
+    pub acc_baseline_weights: f64,
+    /// Matched multiplier instance name per layer.
+    pub assignments: Vec<String>,
+    pub per_layer_reduction: Vec<f64>,
+    /// Learned sigma_l per layer.
+    pub sigmas: Vec<f64>,
+}
+
+/// A full lambda sweep on one model, plus stage timings.
+#[derive(Clone, Debug)]
+pub struct ModelSweep {
+    pub model: String,
+    pub baseline_top1: f64,
+    pub points: Vec<SweepPoint>,
+    pub search_seconds: f64,
+    pub qat_seconds: f64,
+}
+
+/// Table 1 — predictive quality of the multiplier error-std models.
+#[derive(Clone, Debug)]
+pub struct Table1Report {
+    pub points: usize,
+    pub pearson_mre: f64,
+    pub pearson_mc: f64,
+    pub pearson_multi: f64,
+    pub medrel_mc: f64,
+    pub medrel_multi: f64,
+    pub iqr_mc: f64,
+    pub iqr_multi: f64,
+    /// Behavioral ground-truth sigma per (layer, multiplier) point.
+    pub truth: Vec<f64>,
+    pub pred_multi: Vec<f64>,
+    pub pred_mc: Vec<f64>,
+    pub pred_mre: Vec<f64>,
+    pub match_seconds: f64,
+}
+
+/// One method row of the Table-2 comparison (best config within budget).
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: String,
+    pub energy_reduction: f64,
+    pub top1: f64,
+}
+
+/// Energy sweep of one model: the lambda sweep plus the baseline methods.
+#[derive(Clone, Debug)]
+pub struct ModelEnergyReport {
+    pub sweep: ModelSweep,
+    pub methods: Vec<MethodResult>,
+}
+
+/// Table 2 — energy reduction at an accuracy budget across models.
+#[derive(Clone, Debug)]
+pub struct EnergySweepReport {
+    pub budget_pp: f64,
+    pub models: Vec<ModelEnergyReport>,
+}
+
+/// One evaluated operating point of a Pareto front.
+#[derive(Clone, Copy, Debug)]
+pub struct ParetoPoint {
+    pub lambda: f64,
+    pub energy_reduction: f64,
+    pub top1: f64,
+    pub on_front: bool,
+}
+
+/// Fig. 3 — the lambda-sweep Pareto front of one model.
+#[derive(Clone, Debug)]
+pub struct ParetoModelReport {
+    pub model: String,
+    pub baseline_top1: f64,
+    pub points: Vec<ParetoPoint>,
+}
+
+/// Fig. 3 — Pareto fronts across models.
+#[derive(Clone, Debug)]
+pub struct ParetoReport {
+    pub models: Vec<ParetoModelReport>,
+}
+
+/// Fig. 4 — AGN-space vs behavioral accuracy on one model. Points carry
+/// the `acc_agn` / `acc_baseline_weights` controls.
+#[derive(Clone, Debug)]
+pub struct AgnBehavioralReport {
+    pub model: String,
+    pub baseline_top1: f64,
+    pub points: Vec<SweepPoint>,
+}
+
+/// One layer row of the Fig.-5 breakdown.
+#[derive(Clone, Debug)]
+pub struct LayerRow {
+    pub name: String,
+    /// This layer's share of the network's multiplications.
+    pub mult_share: f64,
+    /// Matched multiplier instance name.
+    pub instance: String,
+    pub reduction: f64,
+    pub sigma: f64,
+}
+
+/// Fig. 5 — per-layer assignment breakdown of one model at one lambda.
+#[derive(Clone, Debug)]
+pub struct ModelLayerBreakdown {
+    pub model: String,
+    pub lambda: f64,
+    pub energy_reduction: f64,
+    pub acc_retrained: f64,
+    pub layers: Vec<LayerRow>,
+}
+
+/// Fig. 5 — breakdowns across models.
+#[derive(Clone, Debug)]
+pub struct LayerBreakdownReport {
+    pub models: Vec<ModelLayerBreakdown>,
+}
+
+/// One configuration row of the Table-3 comparison.
+#[derive(Clone, Debug)]
+pub struct HomogeneityRow {
+    pub config: String,
+    /// `None` for the exact baseline rows.
+    pub energy_reduction: Option<f64>,
+    /// Validation accuracy under `metric`.
+    pub accuracy: f64,
+    /// Which accuracy the row reports: `"top5"` for the SynthTIN rows,
+    /// `"top1"` for the signed-grid proxy row (its sweep only records
+    /// top-1).
+    pub metric: &'static str,
+}
+
+/// Table 3 — homogeneous vs heterogeneous VGG16 on SynthTIN.
+#[derive(Clone, Debug)]
+pub struct HomogeneityReport {
+    pub lambda: f64,
+    pub rows: Vec<HomogeneityRow>,
+}
+
+/// One gradient-search run: the learned per-layer sigmas.
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    pub model: String,
+    pub lambda: f64,
+    pub layer_names: Vec<String>,
+    pub sigmas: Vec<f64>,
+}
+
+/// QAT-baseline evaluation of one model.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub model: String,
+    pub top1: f64,
+    pub top5: f64,
+    pub loss: f64,
+    /// Images evaluated.
+    pub n: usize,
+}
+
+/// One multiplier instance summary.
+#[derive(Clone, Debug)]
+pub struct InstanceSummary {
+    pub name: String,
+    pub power: f64,
+    pub mre: f64,
+}
+
+/// One catalog (unsigned / signed) summary.
+#[derive(Clone, Debug)]
+pub struct CatalogSummary {
+    pub name: String,
+    pub instances: Vec<InstanceSummary>,
+}
+
+/// The multiplier catalogs.
+#[derive(Clone, Debug)]
+pub struct CatalogReport {
+    pub catalogs: Vec<CatalogSummary>,
+}
+
+/// One AOT'd model found in the artifact directory.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub model: String,
+    pub arch: String,
+    pub param_count: usize,
+    pub num_layers: usize,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub programs: usize,
+}
+
+/// Artifact inventory + platform facts.
+#[derive(Clone, Debug)]
+pub struct InfoReport {
+    pub platform: String,
+    pub models: Vec<ModelInfo>,
+}

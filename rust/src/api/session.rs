@@ -1,0 +1,239 @@
+//! The `ApproxSession` facade: one PJRT engine + per-model pipelines +
+//! the on-disk state cache, reused across jobs.
+
+use super::error::{AgnError, AgnResult};
+use super::job::{JobResult, JobSpec};
+use crate::coordinator::experiments;
+use crate::coordinator::pipeline::{default_cache_dir, Pipeline, RunConfig};
+use crate::datasets::DatasetCache;
+use crate::runtime::{Engine, EngineStats};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Aggregate accounting of a session, snapshot via [`ApproxSession::stats`].
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// Cumulative PJRT execute/compile counters of the shared engine.
+    pub engine: EngineStats,
+    /// Jobs completed through [`ApproxSession::run`].
+    pub jobs_run: usize,
+    /// Models with a live pipeline (manifest + datasets) in this session.
+    pub models_loaded: usize,
+    /// Where cached train states live.
+    pub cache_dir: PathBuf,
+}
+
+/// Builder for [`ApproxSession`]; the artifact directory is the only
+/// required input.
+#[derive(Clone, Debug)]
+pub struct SessionBuilder {
+    artifacts: PathBuf,
+    cache_dir: Option<PathBuf>,
+    cfg: RunConfig,
+}
+
+impl SessionBuilder {
+    /// Replace the whole run configuration (step counts, seeds, schedules).
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Scale the step counts / schedules up to the paper-sized values
+    /// ([`RunConfig::paper`]). Non-schedule settings already chosen on this
+    /// builder (seed, sigma_init, sigma_max) are preserved.
+    pub fn paper_scale(mut self) -> Self {
+        self.cfg = RunConfig {
+            seed: self.cfg.seed,
+            sigma_init: self.cfg.sigma_init,
+            sigma_max: self.cfg.sigma_max,
+            ..RunConfig::paper()
+        };
+        self
+    }
+
+    /// Override the trained-state cache directory (default:
+    /// `<artifacts>/cache`).
+    pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Construct the session: builds the PJRT CPU client and creates the
+    /// cache directory. Model artifacts are loaded lazily per job.
+    pub fn build(self) -> AgnResult<ApproxSession> {
+        let engine = Engine::new(&self.artifacts).map_err(|source| AgnError::Engine {
+            context: "creating PJRT client".into(),
+            source,
+        })?;
+        let cache_dir = self
+            .cache_dir
+            .unwrap_or_else(|| default_cache_dir(&self.artifacts));
+        std::fs::create_dir_all(&cache_dir).map_err(|source| AgnError::Io {
+            path: cache_dir.clone(),
+            source,
+        })?;
+        Ok(ApproxSession {
+            engine,
+            artifacts: self.artifacts,
+            cache_dir,
+            cfg: self.cfg,
+            pipelines: HashMap::new(),
+            datasets: DatasetCache::default(),
+            jobs_run: 0,
+        })
+    }
+}
+
+/// The single public entrypoint of the crate: owns one [`Engine`] (so PJRT
+/// executables compile once per process, not once per experiment), the
+/// synthetic datasets and the on-disk cache, and runs typed [`JobSpec`]s
+/// into structured [`JobResult`]s.
+///
+/// ```no_run
+/// use agn_approx::api::{ApproxSession, JobSpec};
+/// # fn main() -> Result<(), agn_approx::api::AgnError> {
+/// let mut session = ApproxSession::builder("artifacts").build()?;
+/// let result = session.run(JobSpec::Eval { model: "resnet8".into() })?;
+/// if let Some(eval) = result.as_eval() {
+///     println!("{}: top-1 {:.3}", eval.model, eval.top1);
+/// }
+/// # Ok(()) }
+/// ```
+pub struct ApproxSession {
+    engine: Engine,
+    artifacts: PathBuf,
+    cache_dir: PathBuf,
+    cfg: RunConfig,
+    pipelines: HashMap<String, Pipeline>,
+    /// Loaded synthetic datasets, shared across pipelines with the same
+    /// spec (the ResNet family shares one SynthCIFAR copy).
+    datasets: DatasetCache,
+    jobs_run: usize,
+}
+
+impl ApproxSession {
+    /// Start building a session over an artifact directory.
+    pub fn builder(artifacts: impl Into<PathBuf>) -> SessionBuilder {
+        SessionBuilder {
+            artifacts: artifacts.into(),
+            cache_dir: None,
+            cfg: RunConfig::default(),
+        }
+    }
+
+    /// Run one job to completion and return its structured result.
+    pub fn run(&mut self, spec: JobSpec) -> AgnResult<JobResult> {
+        self.validate(&spec)?;
+        let job = spec.name();
+        let out = match spec {
+            JobSpec::Table1 { mc_trials } => {
+                experiments::table1(self, mc_trials).map(JobResult::Table1)
+            }
+            JobSpec::EnergySweep { models, lambdas, budget_pp, baselines } => {
+                experiments::energy_sweep(self, &models, &lambdas, budget_pp, baselines)
+                    .map(JobResult::EnergySweep)
+            }
+            JobSpec::ParetoFront { models, lambdas } => {
+                experiments::pareto_front(self, &models, &lambdas).map(JobResult::ParetoFront)
+            }
+            JobSpec::AgnVsBehavioral { model, lambdas } => {
+                experiments::agn_vs_behavioral(self, &model, &lambdas)
+                    .map(JobResult::AgnVsBehavioral)
+            }
+            JobSpec::LayerBreakdown { models, lambda } => {
+                experiments::layer_breakdown(self, &models, lambda).map(JobResult::LayerBreakdown)
+            }
+            JobSpec::Homogeneity { lambda } => {
+                experiments::homogeneity(self, lambda).map(JobResult::Homogeneity)
+            }
+            JobSpec::Search { model, lambda } => {
+                experiments::search_job(self, &model, lambda).map(JobResult::Search)
+            }
+            JobSpec::Eval { model } => {
+                experiments::eval_job(self, &model).map(JobResult::Eval)
+            }
+            JobSpec::Catalog => Ok(JobResult::Catalog(experiments::catalog_job())),
+            JobSpec::Info => experiments::info_job(self).map(JobResult::Info),
+        };
+        let result = out.map_err(|e| AgnError::job(job, e))?;
+        self.jobs_run += 1;
+        Ok(result)
+    }
+
+    fn validate(&self, spec: &JobSpec) -> AgnResult<()> {
+        let non_empty = |what: &str, n: usize| -> AgnResult<()> {
+            if n == 0 {
+                Err(AgnError::invalid_spec(format!("{what} must be non-empty")))
+            } else {
+                Ok(())
+            }
+        };
+        match spec {
+            JobSpec::Table1 { mc_trials } => non_empty("mc_trials", *mc_trials),
+            JobSpec::EnergySweep { models, lambdas, .. }
+            | JobSpec::ParetoFront { models, lambdas } => {
+                non_empty("model list", models.len())?;
+                non_empty("lambda sweep", lambdas.len())
+            }
+            JobSpec::AgnVsBehavioral { model, lambdas } => {
+                non_empty("model", model.len())?;
+                non_empty("lambda sweep", lambdas.len())
+            }
+            JobSpec::LayerBreakdown { models, .. } => non_empty("model list", models.len()),
+            JobSpec::Search { model, .. } | JobSpec::Eval { model } => {
+                non_empty("model", model.len())
+            }
+            JobSpec::Homogeneity { .. } | JobSpec::Catalog | JobSpec::Info => Ok(()),
+        }
+    }
+
+    /// Composable low-level access: the per-model [`Pipeline`] (created and
+    /// cached on first use) together with the shared engine. Advanced
+    /// callers drive the paper stages directly; [`ApproxSession::run`] is
+    /// the high-level path built on exactly this.
+    pub fn pipeline(&mut self, model: &str) -> AgnResult<(&mut Pipeline, &mut Engine)> {
+        if !self.pipelines.contains_key(model) {
+            let pipe = Pipeline::with_cache_dir(
+                &self.engine,
+                model,
+                self.cfg.clone(),
+                &self.cache_dir,
+                &mut self.datasets,
+            )
+            .map_err(|source| AgnError::Artifacts { model: model.to_string(), source })?;
+            self.pipelines.insert(model.to_string(), pipe);
+        }
+        Ok((self.pipelines.get_mut(model).unwrap(), &mut self.engine))
+    }
+
+    /// Read-only engine access (platform name, manifest loading, stats).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// The artifact directory this session reads.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts
+    }
+
+    /// The trained-state cache directory.
+    pub fn cache_dir(&self) -> &Path {
+        &self.cache_dir
+    }
+
+    /// The run configuration shared by all jobs in this session.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Aggregate session accounting (engine counters, jobs run, models).
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            engine: self.engine.stats(),
+            jobs_run: self.jobs_run,
+            models_loaded: self.pipelines.len(),
+            cache_dir: self.cache_dir.clone(),
+        }
+    }
+}

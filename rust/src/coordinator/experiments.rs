@@ -1,24 +1,25 @@
-//! The experiment registry: one function per paper table/figure
-//! (DESIGN.md §Experiment index). Each function regenerates its artifact
-//! as a text table on stdout + a JSON blob under results/.
+//! The job runners behind [`crate::api::ApproxSession::run`]: one function
+//! per paper table/figure (DESIGN.md §Experiment index) plus the
+//! pipeline-stage utilities. Runners return structured reports
+//! ([`crate::api::results`]) and never print — text tables and JSON are
+//! rendered from the reports by [`crate::coordinator::report`].
 
+use crate::api::results::*;
+use crate::api::ApproxSession;
 use crate::baselines::{self, AlwannConfig};
 use crate::coordinator::pareto::{self, Point};
-use crate::coordinator::pipeline::{Pipeline, RunConfig};
-use crate::coordinator::report::{pct, save_json, Table};
-use crate::errormodel::{layer_error_map, mc};
+use crate::coordinator::pipeline::Pipeline;
 use crate::errormodel::model::estimate_with_aggregates;
 use crate::errormodel::model::row_aggregates;
+use crate::errormodel::{layer_error_map, mc};
 use crate::matching::{self, assignment_luts};
 use crate::multipliers::{build_layer_lut, signed_catalog, unsigned_catalog, Catalog};
-use crate::runtime::LayerInfo;
+use crate::runtime::{Engine, LayerInfo};
 use crate::search::EvalMode;
 use crate::simulator::{approx_matmul, LayerCapture, LutSet, SimNet};
 use crate::tensor::TensorF;
-use crate::util::json::Json;
 use crate::util::stats;
 use anyhow::Result;
-use std::path::Path;
 use std::time::Instant;
 
 /// The 13-instance unsigned subset used by Table 1 (the paper evaluates the
@@ -84,12 +85,12 @@ fn capture_forward(pipe: &Pipeline, flat: &[f32], absmax: &[f32]) -> Result<Vec<
 // ===========================================================================
 // Table 1 — error-model quality
 
-pub fn table1(artifacts: &Path, cfg: RunConfig, mc_trials: usize) -> Result<()> {
-    let mut pipe = Pipeline::new(artifacts, "resnet8", cfg)?;
-    let base = pipe.baseline()?;
-    let (absmax, _ystd) = pipe.calibrate(&base.flat)?;
+pub fn table1(session: &mut ApproxSession, mc_trials: usize) -> Result<Table1Report> {
+    let (pipe, engine) = session.pipeline("resnet8")?;
+    let base = pipe.baseline(engine)?;
+    let (absmax, _ystd) = pipe.calibrate(engine, &base.flat)?;
     let ops = pipe.operands(&base.flat, &absmax)?;
-    let caps = capture_forward(&pipe, &base.flat, &absmax)?;
+    let caps = capture_forward(pipe, &base.flat, &absmax)?;
     let net = SimNet::new(&pipe.manifest, &base.flat)?;
     let catalog = unsigned_catalog();
     let subset = table1_subset(&catalog);
@@ -121,7 +122,7 @@ pub fn table1(artifacts: &Path, cfg: RunConfig, mc_trials: usize) -> Result<()> 
             pred_mre.push(mre);
         }
     }
-    let match_secs = t_match.elapsed().as_secs_f64();
+    let match_seconds = t_match.elapsed().as_secs_f64();
 
     let rel = |pred: &[f64]| -> Vec<f64> {
         pred.iter()
@@ -131,86 +132,38 @@ pub fn table1(artifacts: &Path, cfg: RunConfig, mc_trials: usize) -> Result<()> 
     };
     let rm = rel(&pred_multi);
     let rc = rel(&pred_mc);
-    let mut t = Table::new(
-        "Table 1 — predictive quality of multiplier error-std models (ResNet8 layers)",
-        &["Error Model", "Pearson r", "Median rel. err", "IQR"],
-    );
-    t.row(vec![
-        "Multiplier MRE [9]".into(),
-        format!("{:.3}", stats::pearson(&pred_mre, &truth)),
-        "n.a.".into(),
-        "n.a.".into(),
-    ]);
-    t.row(vec![
-        "Single-Distribution MC [21]".into(),
-        format!("{:.3}", stats::pearson(&pred_mc, &truth)),
-        pct(stats::median(&rc)),
-        pct(stats::iqr(&rc)),
-    ]);
-    t.row(vec![
-        "Probabilistic Multi-Dist. (ours)".into(),
-        format!("{:.3}", stats::pearson(&pred_multi, &truth)),
-        pct(stats::median(&rm)),
-        pct(stats::iqr(&rm)),
-    ]);
-    println!("{}", t.render());
-    println!(
-        "points: {} (layers x multipliers); truth spans {:.2e}..{:.2e}; model pass took {:.2}s",
-        truth.len(),
-        truth.iter().cloned().fold(f64::MAX, f64::min),
-        truth.iter().cloned().fold(0.0, f64::max),
-        match_secs
-    );
-
-    save_json(
-        "table1",
-        &Json::obj(vec![
-            ("points", Json::num(truth.len() as f64)),
-            ("pearson_mre", Json::num(stats::pearson(&pred_mre, &truth))),
-            ("pearson_mc", Json::num(stats::pearson(&pred_mc, &truth))),
-            ("pearson_multi", Json::num(stats::pearson(&pred_multi, &truth))),
-            ("medrel_mc", Json::num(stats::median(&rc))),
-            ("medrel_multi", Json::num(stats::median(&rm))),
-            ("iqr_mc", Json::num(stats::iqr(&rc))),
-            ("iqr_multi", Json::num(stats::iqr(&rm))),
-            ("truth", Json::arr_f64(&truth)),
-            ("pred_multi", Json::arr_f64(&pred_multi)),
-            ("pred_mc", Json::arr_f64(&pred_mc)),
-            ("match_seconds", Json::num(match_secs)),
-        ]),
-    )?;
-    Ok(())
+    Ok(Table1Report {
+        points: truth.len(),
+        pearson_mre: stats::pearson(&pred_mre, &truth),
+        pearson_mc: stats::pearson(&pred_mc, &truth),
+        pearson_multi: stats::pearson(&pred_multi, &truth),
+        medrel_mc: stats::median(&rc),
+        medrel_multi: stats::median(&rm),
+        iqr_mc: stats::iqr(&rc),
+        iqr_multi: stats::iqr(&rm),
+        truth,
+        pred_multi,
+        pred_mc,
+        pred_mre,
+        match_seconds,
+    })
 }
 
 // ===========================================================================
 // Lambda sweep (shared by Table 2, Fig. 3, Fig. 4)
 
-#[derive(Clone, Debug)]
-pub struct SweepPoint {
-    pub lambda: f64,
-    pub energy_reduction: f64,
-    /// accuracy after matching + behavioral retraining (gradient-search weights)
-    pub acc_retrained: f64,
-    /// accuracy of the AGN-perturbed model at the learned sigmas (Fig. 4)
-    pub acc_agn: f64,
-    /// accuracy after retraining from *baseline* weights (Fig. 4 control)
-    pub acc_baseline_weights: f64,
-    pub assignments: Vec<String>,
-    pub per_layer_reduction: Vec<f64>,
-    pub sigmas: Vec<f64>,
-}
-
 /// Full paper pipeline at one lambda. `fig4_controls` adds the two extra
 /// evaluations Figure 4 needs (they cost another retrain).
 pub fn sweep_lambda(
     pipe: &mut Pipeline,
+    engine: &mut Engine,
     catalog: &Catalog,
     lambda: f32,
     fig4_controls: bool,
 ) -> Result<SweepPoint> {
-    let base = pipe.baseline()?;
-    let (absmax, ystd) = pipe.calibrate(&base.flat)?;
-    let searched = pipe.search_at(&base, lambda)?;
+    let base = pipe.baseline(engine)?;
+    let (absmax, ystd) = pipe.calibrate(engine, &base.flat)?;
+    let searched = pipe.search_at(engine, &base, lambda)?;
     let ops = pipe.operands(&searched.flat, &absmax)?;
     let preds = pipe.predictions(catalog, &ops);
     let outcome = pipe.match_at(catalog, &preds, &searched.sigmas, &ystd);
@@ -219,9 +172,10 @@ pub fn sweep_lambda(
 
     // retrain from gradient-search weights (the paper's flow)
     let mut retrained = searched.clone();
-    pipe.retrain(&mut retrained, &luts, &act_scales)?;
+    pipe.retrain(engine, &mut retrained, &luts, &act_scales)?;
     let acc_retrained = pipe
         .evaluate(
+            engine,
             &retrained.flat,
             EvalMode::Approx { luts: &luts, act_scales: &act_scales },
         )?
@@ -229,6 +183,7 @@ pub fn sweep_lambda(
 
     let acc_agn = if fig4_controls {
         pipe.evaluate(
+            engine,
             &searched.flat,
             EvalMode::Agn { sigmas: &searched.sigmas, seed: 11 },
         )?
@@ -238,8 +193,9 @@ pub fn sweep_lambda(
     };
     let acc_baseline_weights = if fig4_controls {
         let mut from_base = base.clone();
-        pipe.retrain(&mut from_base, &luts, &act_scales)?;
+        pipe.retrain(engine, &mut from_base, &luts, &act_scales)?;
         pipe.evaluate(
+            engine,
             &from_base.flat,
             EvalMode::Approx { luts: &luts, act_scales: &act_scales },
         )?
@@ -274,31 +230,22 @@ pub fn default_lambdas() -> Vec<f32> {
 // ===========================================================================
 // Table 2 + Figure 3 — ResNet family on SynthCIFAR
 
-pub struct ModelSweep {
-    pub model: String,
-    pub baseline_top1: f64,
-    pub points: Vec<SweepPoint>,
-    pub search_seconds: f64,
-    pub qat_seconds: f64,
-}
-
 pub fn run_model_sweep(
-    artifacts: &Path,
+    session: &mut ApproxSession,
     model: &str,
-    cfg: RunConfig,
     lambdas: &[f32],
     fig4_controls: bool,
 ) -> Result<ModelSweep> {
     let catalog = unsigned_catalog();
-    let mut pipe = Pipeline::new(artifacts, model, cfg)?;
+    let (pipe, engine) = session.pipeline(model)?;
     let t0 = Instant::now();
-    let base = pipe.baseline()?;
+    let base = pipe.baseline(engine)?;
     let qat_seconds = t0.elapsed().as_secs_f64();
-    let baseline_top1 = pipe.evaluate(&base.flat, EvalMode::Qat)?.top1;
+    let baseline_top1 = pipe.evaluate(engine, &base.flat, EvalMode::Qat)?.top1;
     let t1 = Instant::now();
     let mut points = Vec::new();
     for &lam in lambdas {
-        let p = sweep_lambda(&mut pipe, &catalog, lam, fig4_controls)?;
+        let p = sweep_lambda(pipe, engine, &catalog, lam, fig4_controls)?;
         log::info!(
             "{model} lambda={lam:.2}: energy -{:.1}% acc {:.3} (base {:.3})",
             p.energy_reduction * 100.0,
@@ -327,127 +274,47 @@ fn sweep_points(s: &ModelSweep) -> Vec<Point> {
         .collect()
 }
 
-pub fn table2(
-    artifacts: &Path,
+/// Table 2 — energy reduction at an accuracy budget, per model, with the
+/// ALWANN/LVRM/uniform baselines when requested.
+pub fn energy_sweep(
+    session: &mut ApproxSession,
     models: &[String],
-    cfg: RunConfig,
     lambdas: &[f32],
     budget_pp: f64,
     with_baselines: bool,
-) -> Result<()> {
-    let mut table = Table::new(
-        "Table 2 — energy reduction at accuracy budget (SynthCIFAR)",
-        &["Model", "Method", "Energy Reduction", "Top-1 Loss [p.p.]"],
-    );
-    let mut blob = Vec::new();
+) -> Result<EnergySweepReport> {
+    let mut out = Vec::new();
     for model in models {
-        let sweep = run_model_sweep(artifacts, model, cfg.clone(), lambdas, false)?;
-        let pts = sweep_points(&sweep);
-        let mut rows: Vec<(String, f64, f64)> = Vec::new();
-
+        let sweep = run_model_sweep(session, model, lambdas, false)?;
+        let mut methods = Vec::new();
         if with_baselines {
-            let (alwann, lvrm, uniform) =
-                run_baselines(artifacts, model, cfg.clone(), sweep.baseline_top1, budget_pp)?;
-            if let Some((e, a)) = alwann {
-                rows.push(("ALWANN-style (ours impl.)".into(), e, a));
-            }
-            if let Some((e, a)) = lvrm {
-                rows.push(("LVRM-style (ours impl.)".into(), e, a));
-            }
-            if let Some((e, a)) = uniform {
-                rows.push(("Uniform Retraining".into(), e, a));
-            }
+            let (pipe, engine) = session.pipeline(model)?;
+            methods.extend(run_baselines(pipe, engine, sweep.baseline_top1, budget_pp)?);
         }
-        let best = pareto::best_within_loss(&pts, sweep.baseline_top1, budget_pp);
-        if let Some(b) = best {
-            rows.push(("Gradient Search (ours)".into(), b.energy_reduction, b.accuracy));
+        let pts = sweep_points(&sweep);
+        if let Some(b) = pareto::best_within_loss(&pts, sweep.baseline_top1, budget_pp) {
+            methods.push(MethodResult {
+                method: "Gradient Search (ours)".into(),
+                energy_reduction: b.energy_reduction,
+                top1: b.accuracy,
+            });
         }
-        for (method, e, a) in &rows {
-            table.row(vec![
-                model.clone(),
-                method.clone(),
-                pct(*e),
-                format!("{:.1}", (sweep.baseline_top1 - a) * 100.0),
-            ]);
-        }
-        blob.push((model.clone(), sweep, rows));
+        out.push(ModelEnergyReport { sweep, methods });
     }
-    println!("{}", table.render());
-
-    let json = Json::Arr(
-        blob.iter()
-            .map(|(model, sweep, rows)| {
-                Json::obj(vec![
-                    ("model", Json::str(model.clone())),
-                    ("baseline_top1", Json::num(sweep.baseline_top1)),
-                    ("qat_seconds", Json::num(sweep.qat_seconds)),
-                    ("search_seconds", Json::num(sweep.search_seconds)),
-                    (
-                        "points",
-                        Json::Arr(
-                            sweep
-                                .points
-                                .iter()
-                                .map(|p| {
-                                    Json::obj(vec![
-                                        ("lambda", Json::num(p.lambda)),
-                                        ("energy_reduction", Json::num(p.energy_reduction)),
-                                        ("acc", Json::num(p.acc_retrained)),
-                                        ("sigmas", Json::arr_f64(&p.sigmas)),
-                                        (
-                                            "assignments",
-                                            Json::Arr(
-                                                p.assignments
-                                                    .iter()
-                                                    .map(|a| Json::str(a.clone()))
-                                                    .collect(),
-                                            ),
-                                        ),
-                                    ])
-                                })
-                                .collect(),
-                        ),
-                    ),
-                    (
-                        "methods",
-                        Json::Arr(
-                            rows.iter()
-                                .map(|(m, e, a)| {
-                                    Json::obj(vec![
-                                        ("method", Json::str(m.clone())),
-                                        ("energy_reduction", Json::num(*e)),
-                                        ("top1", Json::num(*a)),
-                                    ])
-                                })
-                                .collect(),
-                        ),
-                    ),
-                ])
-            })
-            .collect(),
-    );
-    save_json("table2", &json)?;
-    Ok(())
+    Ok(EnergySweepReport { budget_pp, models: out })
 }
 
-/// ALWANN / LVRM / Uniform baselines for one model. Returns
-/// (energy, accuracy) of the best configuration within the budget for each.
-#[allow(clippy::type_complexity)]
+/// ALWANN / LVRM / Uniform baselines for one model: the best configuration
+/// within the budget for each method that finds one.
 fn run_baselines(
-    artifacts: &Path,
-    model: &str,
-    cfg: RunConfig,
+    pipe: &mut Pipeline,
+    engine: &mut Engine,
     baseline_top1: f64,
     budget_pp: f64,
-) -> Result<(
-    Option<(f64, f64)>,
-    Option<(f64, f64)>,
-    Option<(f64, f64)>,
-)> {
+) -> Result<Vec<MethodResult>> {
     let catalog = unsigned_catalog();
-    let mut pipe = Pipeline::new(artifacts, model, cfg)?;
-    let base = pipe.baseline()?;
-    let (absmax, ystd) = pipe.calibrate(&base.flat)?;
+    let base = pipe.baseline(engine)?;
+    let (absmax, ystd) = pipe.calibrate(engine, &base.flat)?;
     let scales = pipe.act_scales(&absmax);
     let ops = pipe.operands(&base.flat, &absmax)?;
     let preds = pipe.predictions(&catalog, &ops);
@@ -467,7 +334,11 @@ fn run_baselines(
             .unwrap_or(0.0);
         (energy, 1.0 - acc)
     });
-    log::info!("{model}: ALWANN front {} candidates after {evals} evals", front.len());
+    log::info!(
+        "{}: ALWANN front {} candidates after {evals} evals",
+        manifest.model,
+        front.len()
+    );
     // re-evaluate the front on the full val split, pick best within budget
     let mut alwann_best: Option<(f64, f64)> = None;
     for cand in &front {
@@ -505,9 +376,9 @@ fn run_baselines(
         let genome = vec![c.instance; manifest.layers.len()];
         let luts = assignment_luts(&manifest, &catalog, &genome);
         let mut st = base.clone();
-        pipe.retrain(&mut st, &luts, &scales)?;
+        pipe.retrain(engine, &mut st, &luts, &scales)?;
         let acc = pipe
-            .evaluate(&st.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })?
+            .evaluate(engine, &st.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })?
             .top1;
         if (baseline_top1 - acc) * 100.0 <= budget_pp
             && uniform_best.map(|(be, _)| c.energy_reduction > be).unwrap_or(true)
@@ -515,281 +386,303 @@ fn run_baselines(
             uniform_best = Some((c.energy_reduction, acc));
         }
     }
-    Ok((alwann_best, lvrm_best, uniform_best))
+
+    let mut rows = Vec::new();
+    if let Some((e, a)) = alwann_best {
+        rows.push(MethodResult {
+            method: "ALWANN-style (ours impl.)".into(),
+            energy_reduction: e,
+            top1: a,
+        });
+    }
+    if let Some((e, a)) = lvrm_best {
+        rows.push(MethodResult {
+            method: "LVRM-style (ours impl.)".into(),
+            energy_reduction: e,
+            top1: a,
+        });
+    }
+    if let Some((e, a)) = uniform_best {
+        rows.push(MethodResult {
+            method: "Uniform Retraining".into(),
+            energy_reduction: e,
+            top1: a,
+        });
+    }
+    Ok(rows)
 }
 
-pub fn fig3(artifacts: &Path, models: &[String], cfg: RunConfig, lambdas: &[f32]) -> Result<()> {
-    let mut json_models = Vec::new();
+/// Fig. 3 — lambda-sweep Pareto fronts.
+pub fn pareto_front(
+    session: &mut ApproxSession,
+    models: &[String],
+    lambdas: &[f32],
+) -> Result<ParetoReport> {
+    let mut out = Vec::new();
     for model in models {
-        let sweep = run_model_sweep(artifacts, model, cfg.clone(), lambdas, false)?;
+        let sweep = run_model_sweep(session, model, lambdas, false)?;
         let pts = sweep_points(&sweep);
-        let (front, dominated) = pareto::pareto_split(&pts);
-        let mut t = Table::new(
-            &format!("Figure 3 — Pareto front, {model} (baseline top-1 {:.3})", sweep.baseline_top1),
-            &["lambda", "energy reduction", "top-1", "front?"],
-        );
-        for p in pts.iter() {
-            let on_front = front.iter().any(|q| q == p);
-            t.row(vec![
-                format!("{:.2}", p.knob),
-                pct(p.energy_reduction),
-                format!("{:.3}", p.accuracy),
-                if on_front { "*".into() } else { "".into() },
-            ]);
-        }
-        println!("{}", t.render());
-        let _ = dominated;
-        json_models.push(Json::obj(vec![
-            ("model", Json::str(model.clone())),
-            ("baseline_top1", Json::num(sweep.baseline_top1)),
-            (
-                "points",
-                Json::Arr(
-                    pts.iter()
-                        .map(|p| {
-                            Json::obj(vec![
-                                ("lambda", Json::num(p.knob)),
-                                ("energy_reduction", Json::num(p.energy_reduction)),
-                                ("top1", Json::num(p.accuracy)),
-                                (
-                                    "on_front",
-                                    Json::Bool(front.iter().any(|q| q == p)),
-                                ),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]));
+        let (front, _dominated) = pareto::pareto_split(&pts);
+        let points = pts
+            .iter()
+            .map(|p| ParetoPoint {
+                lambda: p.knob,
+                energy_reduction: p.energy_reduction,
+                top1: p.accuracy,
+                on_front: front.iter().any(|q| q == p),
+            })
+            .collect();
+        out.push(ParetoModelReport {
+            model: model.clone(),
+            baseline_top1: sweep.baseline_top1,
+            points,
+        });
     }
-    save_json("fig3", &Json::Arr(json_models))?;
-    Ok(())
+    Ok(ParetoReport { models: out })
 }
 
 // ===========================================================================
 // Figure 4 — AGN-space vs retrained accuracy (ResNet20 in the paper)
 
-pub fn fig4(artifacts: &Path, model: &str, cfg: RunConfig, lambdas: &[f32]) -> Result<()> {
+pub fn agn_vs_behavioral(
+    session: &mut ApproxSession,
+    model: &str,
+    lambdas: &[f32],
+) -> Result<AgnBehavioralReport> {
     let catalog = unsigned_catalog();
-    let mut pipe = Pipeline::new(artifacts, model, cfg)?;
-    let base = pipe.baseline()?;
-    let baseline_top1 = pipe.evaluate(&base.flat, EvalMode::Qat)?.top1;
-    let mut t = Table::new(
-        &format!("Figure 4 — AGN vs behavioral accuracy, {model} (baseline {baseline_top1:.3})"),
-        &["lambda", "energy red.", "AGN model", "Approx (GS weights)", "Approx (baseline weights)"],
-    );
-    let mut pts = Vec::new();
+    let (pipe, engine) = session.pipeline(model)?;
+    let base = pipe.baseline(engine)?;
+    let baseline_top1 = pipe.evaluate(engine, &base.flat, EvalMode::Qat)?.top1;
+    let mut points = Vec::new();
     for &lam in lambdas {
-        let p = sweep_lambda(&mut pipe, &catalog, lam, true)?;
-        t.row(vec![
-            format!("{:.2}", p.lambda),
-            pct(p.energy_reduction),
-            format!("{:.3}", p.acc_agn),
-            format!("{:.3}", p.acc_retrained),
-            format!("{:.3}", p.acc_baseline_weights),
-        ]);
-        pts.push(p);
+        points.push(sweep_lambda(pipe, engine, &catalog, lam, true)?);
     }
-    println!("{}", t.render());
-    save_json(
-        "fig4",
-        &Json::obj(vec![
-            ("model", Json::str(model)),
-            ("baseline_top1", Json::num(baseline_top1)),
-            (
-                "points",
-                Json::Arr(
-                    pts.iter()
-                        .map(|p| {
-                            Json::obj(vec![
-                                ("lambda", Json::num(p.lambda)),
-                                ("energy_reduction", Json::num(p.energy_reduction)),
-                                ("acc_agn", Json::num(p.acc_agn)),
-                                ("acc_retrained", Json::num(p.acc_retrained)),
-                                ("acc_baseline_weights", Json::num(p.acc_baseline_weights)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]),
-    )?;
-    Ok(())
+    Ok(AgnBehavioralReport { model: model.to_string(), baseline_top1, points })
 }
 
 // ===========================================================================
 // Figure 5 — per-layer energy reduction vs relative multiplications
 
-pub fn fig5(artifacts: &Path, models: &[String], cfg: RunConfig, lambda: f32) -> Result<()> {
-    let mut json_models = Vec::new();
+pub fn layer_breakdown(
+    session: &mut ApproxSession,
+    models: &[String],
+    lambda: f32,
+) -> Result<LayerBreakdownReport> {
+    let catalog = unsigned_catalog();
+    let mut out = Vec::new();
     for model in models {
-        let catalog = unsigned_catalog();
-        let mut pipe = Pipeline::new(artifacts, model, cfg.clone())?;
-        let p = sweep_lambda(&mut pipe, &catalog, lambda, false)?;
+        let (pipe, engine) = session.pipeline(model)?;
+        let p = sweep_lambda(pipe, engine, &catalog, lambda, false)?;
         let total: f64 = pipe
             .manifest
             .layers
             .iter()
             .map(|l| l.mults_per_image as f64)
             .sum();
-        let mut t = Table::new(
-            &format!("Figure 5 — per-layer assignment, {model} (lambda={lambda})"),
-            &["layer", "mults share", "multiplier", "energy red.", "sigma_l"],
-        );
-        let mut layers_json = Vec::new();
-        for (li, info) in pipe.manifest.layers.iter().enumerate() {
-            let share = info.mults_per_image as f64 / total;
-            t.row(vec![
-                info.name.clone(),
-                pct(share),
-                p.assignments[li].clone(),
-                pct(p.per_layer_reduction[li]),
-                format!("{:.4}", p.sigmas[li]),
-            ]);
-            layers_json.push(Json::obj(vec![
-                ("name", Json::str(info.name.clone())),
-                ("mult_share", Json::num(share)),
-                ("instance", Json::str(p.assignments[li].clone())),
-                ("reduction", Json::num(p.per_layer_reduction[li])),
-                ("sigma", Json::num(p.sigmas[li])),
-            ]));
-        }
-        println!("{}", t.render());
-        println!(
-            "{model}: total energy reduction {:.1} %",
-            p.energy_reduction * 100.0
-        );
-        json_models.push(Json::obj(vec![
-            ("model", Json::str(model.clone())),
-            ("lambda", Json::num(lambda as f64)),
-            ("energy_reduction", Json::num(p.energy_reduction)),
-            ("layers", Json::Arr(layers_json)),
-        ]));
+        let layers = pipe
+            .manifest
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, info)| LayerRow {
+                name: info.name.clone(),
+                mult_share: info.mults_per_image as f64 / total,
+                instance: p.assignments[li].clone(),
+                reduction: p.per_layer_reduction[li],
+                sigma: p.sigmas[li],
+            })
+            .collect();
+        out.push(ModelLayerBreakdown {
+            model: model.clone(),
+            lambda: lambda as f64,
+            energy_reduction: p.energy_reduction,
+            acc_retrained: p.acc_retrained,
+            layers,
+        });
     }
-    save_json("fig5", &Json::Arr(json_models))?;
-    Ok(())
+    Ok(LayerBreakdownReport { models: out })
 }
 
 // ===========================================================================
 // Table 3 — homogeneous vs heterogeneous VGG16 (SynthTIN, top-5)
 
-pub fn table3(artifacts: &Path, cfg: RunConfig, lambda: f32) -> Result<()> {
-    let mut rows: Vec<(String, Option<f64>, f64)> = Vec::new();
+pub fn homogeneity(session: &mut ApproxSession, lambda: f32) -> Result<HomogeneityReport> {
+    let mut rows: Vec<HomogeneityRow> = Vec::new();
 
     // unsigned heterogeneous + uniform + baseline on the unsigned model
-    let catalog_u = unsigned_catalog();
-    let mut pipe = Pipeline::new(artifacts, "vgg16", cfg.clone())?;
-    let base = pipe.baseline()?;
-    let baseline_top5 = pipe.evaluate(&base.flat, EvalMode::Qat)?.topk;
-    rows.push(("Baseline (8-bit QAT)".into(), None, baseline_top5));
-
-    let p = sweep_lambda(&mut pipe, &catalog_u, lambda, true)?;
-    let (absmax, _) = pipe.calibrate(&base.flat)?;
-    let scales = pipe.act_scales(&absmax);
-    rows.push((format!("AGN Model, lambda={lambda}"), None, {
-        // AGN accuracy reported as top-5: reuse eval_agn via EvalMode
-        let searched = pipe.search_at(&base, lambda)?;
-        pipe.evaluate(
-            &searched.flat,
-            EvalMode::Agn { sigmas: &searched.sigmas, seed: 3 },
-        )?
-        .topk
-    }));
-
-    // two uniform candidates around the heterogeneous energy level
-    let cands = baselines::uniform_candidates(&pipe.manifest, &catalog_u);
-    let target = p.energy_reduction;
-    let mut best: Vec<usize> = (0..cands.len()).collect();
-    best.sort_by(|&a, &b| {
-        (cands[a].energy_reduction - target)
-            .abs()
-            .partial_cmp(&(cands[b].energy_reduction - target).abs())
-            .unwrap()
-    });
-    for &ci in best.iter().take(2) {
-        let c = &cands[ci];
-        let genome = vec![c.instance; pipe.manifest.layers.len()];
-        let luts = assignment_luts(&pipe.manifest, &catalog_u, &genome);
-        let mut st = base.clone();
-        pipe.retrain(&mut st, &luts, &scales)?;
-        let top5 = pipe
-            .evaluate(&st.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })?
-            .topk;
-        rows.push((
-            format!("Uniform Retraining, {}", c.instance_name),
-            Some(c.energy_reduction),
-            top5,
-        ));
-    }
-    // heterogeneous unsigned: top-5 of the retrained point
     {
-        let searched = pipe.search_at(&base, lambda)?;
-        let (_, ystd) = pipe.calibrate(&base.flat)?;
-        let ops = pipe.operands(&searched.flat, &absmax)?;
-        let preds = pipe.predictions(&catalog_u, &ops);
-        let outcome = pipe.match_at(&catalog_u, &preds, &searched.sigmas, &ystd);
-        let luts = assignment_luts(&pipe.manifest, &catalog_u, &outcome.instance_indices());
-        let mut st = searched.clone();
-        pipe.retrain(&mut st, &luts, &scales)?;
-        let top5 = pipe
-            .evaluate(&st.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })?
+        let catalog_u = unsigned_catalog();
+        let (pipe, engine) = session.pipeline("vgg16")?;
+        let base = pipe.baseline(engine)?;
+        let baseline_top5 = pipe.evaluate(engine, &base.flat, EvalMode::Qat)?.topk;
+        rows.push(HomogeneityRow {
+            config: "Baseline (8-bit QAT)".into(),
+            energy_reduction: None,
+            accuracy: baseline_top5,
+            metric: "top5",
+        });
+
+        let p = sweep_lambda(pipe, engine, &catalog_u, lambda, false)?;
+        let (absmax, _) = pipe.calibrate(engine, &base.flat)?;
+        let scales = pipe.act_scales(&absmax);
+
+        // AGN accuracy reported as top-5 at the learned sigmas
+        let searched = pipe.search_at(engine, &base, lambda)?;
+        let agn_top5 = pipe
+            .evaluate(
+                engine,
+                &searched.flat,
+                EvalMode::Agn { sigmas: &searched.sigmas, seed: 3 },
+            )?
             .topk;
-        rows.push((
-            "Heterogeneous, unsigned (ours)".into(),
-            Some(outcome.energy_reduction),
-            top5,
-        ));
+        rows.push(HomogeneityRow {
+            config: format!("AGN Model, lambda={lambda}"),
+            energy_reduction: None,
+            accuracy: agn_top5,
+            metric: "top5",
+        });
+
+        // two uniform candidates around the heterogeneous energy level
+        let cands = baselines::uniform_candidates(&pipe.manifest, &catalog_u);
+        let target = p.energy_reduction;
+        let mut best: Vec<usize> = (0..cands.len()).collect();
+        best.sort_by(|&a, &b| {
+            (cands[a].energy_reduction - target)
+                .abs()
+                .partial_cmp(&(cands[b].energy_reduction - target).abs())
+                .unwrap()
+        });
+        for &ci in best.iter().take(2) {
+            let c = &cands[ci];
+            let genome = vec![c.instance; pipe.manifest.layers.len()];
+            let luts = assignment_luts(&pipe.manifest, &catalog_u, &genome);
+            let mut st = base.clone();
+            pipe.retrain(engine, &mut st, &luts, &scales)?;
+            let top5 = pipe
+                .evaluate(engine, &st.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })?
+                .topk;
+            rows.push(HomogeneityRow {
+                config: format!("Uniform Retraining, {}", c.instance_name),
+                energy_reduction: Some(c.energy_reduction),
+                accuracy: top5,
+                metric: "top5",
+            });
+        }
+
+        // heterogeneous unsigned: top-5 of the retrained point
+        {
+            let searched = pipe.search_at(engine, &base, lambda)?;
+            let (_, ystd) = pipe.calibrate(engine, &base.flat)?;
+            let ops = pipe.operands(&searched.flat, &absmax)?;
+            let preds = pipe.predictions(&catalog_u, &ops);
+            let outcome = pipe.match_at(&catalog_u, &preds, &searched.sigmas, &ystd);
+            let luts = assignment_luts(&pipe.manifest, &catalog_u, &outcome.instance_indices());
+            let mut st = searched.clone();
+            pipe.retrain(engine, &mut st, &luts, &scales)?;
+            let top5 = pipe
+                .evaluate(engine, &st.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })?
+                .topk;
+            rows.push(HomogeneityRow {
+                config: "Heterogeneous, unsigned (ours)".into(),
+                energy_reduction: Some(outcome.energy_reduction),
+                accuracy: top5,
+                metric: "top5",
+            });
+        }
     }
 
     // signed heterogeneous on the signed-grid model variant
-    let signed_model = "vgg16_signed";
-    match Pipeline::new(artifacts, signed_model, cfg.clone()) {
-        Ok(mut pipe_s) => {
+    match session.pipeline("vgg16_signed") {
+        Ok((pipe_s, engine_s)) => {
             let catalog_s = signed_catalog();
-            let p_s = sweep_lambda(&mut pipe_s, &catalog_s, lambda, false)?;
-            let base_s = pipe_s.baseline()?;
-            let _ = base_s;
-            // top-5 via the retrained accuracy stored in acc_retrained is
-            // top-1; evaluate again for top-5
-            rows.push((
-                "Heterogeneous, signed (ours)".into(),
-                Some(p_s.energy_reduction),
-                p_s.acc_retrained, // top-1 proxy; JSON carries both
-            ));
+            let p_s = sweep_lambda(pipe_s, engine_s, &catalog_s, lambda, false)?;
+            // the signed sweep only records top-1; the row says so via
+            // `metric` instead of masquerading as a top-5 number
+            rows.push(HomogeneityRow {
+                config: "Heterogeneous, signed (ours)".into(),
+                energy_reduction: Some(p_s.energy_reduction),
+                accuracy: p_s.acc_retrained,
+                metric: "top1",
+            });
         }
         Err(e) => {
             log::warn!("signed VGG16 artifacts unavailable ({e}); skipping signed row");
         }
     }
 
-    let mut t = Table::new(
-        "Table 3 — homogeneous vs heterogeneous, VGG16 on SynthTIN",
-        &["Configuration", "Energy Reduction", "Top-5 Val. Accuracy"],
-    );
-    for (name, e, a) in &rows {
-        t.row(vec![
-            name.clone(),
-            e.map(pct).unwrap_or_else(|| "n.a.".into()),
-            format!("{:.3}", a),
-        ]);
-    }
-    println!("{}", t.render());
-    save_json(
-        "table3",
-        &Json::Arr(
-            rows.iter()
-                .map(|(n, e, a)| {
-                    Json::obj(vec![
-                        ("config", Json::str(n.clone())),
-                        (
-                            "energy_reduction",
-                            e.map(Json::num).unwrap_or(Json::Null),
-                        ),
-                        ("top5", Json::num(*a)),
-                    ])
-                })
+    Ok(HomogeneityReport { lambda: lambda as f64, rows })
+}
+
+// ===========================================================================
+// Pipeline-stage utility jobs
+
+/// One gradient-search run; yields the learned per-layer sigmas.
+pub fn search_job(session: &mut ApproxSession, model: &str, lambda: f32) -> Result<SearchReport> {
+    let (pipe, engine) = session.pipeline(model)?;
+    let base = pipe.baseline(engine)?;
+    let searched = pipe.search_at(engine, &base, lambda)?;
+    Ok(SearchReport {
+        model: model.to_string(),
+        lambda: lambda as f64,
+        layer_names: pipe.manifest.layers.iter().map(|l| l.name.clone()).collect(),
+        sigmas: searched.sigmas.iter().map(|&s| s as f64).collect(),
+    })
+}
+
+/// Train (or load) the QAT baseline and evaluate it on the val split.
+pub fn eval_job(session: &mut ApproxSession, model: &str) -> Result<EvalReport> {
+    let (pipe, engine) = session.pipeline(model)?;
+    let base = pipe.baseline(engine)?;
+    let m = pipe.evaluate(engine, &base.flat, EvalMode::Qat)?;
+    Ok(EvalReport {
+        model: model.to_string(),
+        top1: m.top1,
+        top5: m.topk,
+        loss: m.loss,
+        n: m.n,
+    })
+}
+
+/// The multiplier catalogs (pure data; needs no artifacts).
+pub fn catalog_job() -> CatalogReport {
+    let catalogs = [unsigned_catalog(), signed_catalog()]
+        .iter()
+        .map(|cat| CatalogSummary {
+            name: cat.name.clone(),
+            instances: cat
+                .instances
+                .iter()
+                .map(|i| InstanceSummary { name: i.name.clone(), power: i.power, mre: i.mre() })
                 .collect(),
-        ),
-    )?;
-    Ok(())
+        })
+        .collect();
+    CatalogReport { catalogs }
+}
+
+/// Artifact inventory + platform facts.
+pub fn info_job(session: &ApproxSession) -> Result<InfoReport> {
+    let platform = session.engine().platform();
+    let mut models = Vec::new();
+    for entry in std::fs::read_dir(session.artifacts_dir())? {
+        let p = entry?.path();
+        if p.to_string_lossy().ends_with(".manifest.json") {
+            let model = p
+                .file_name()
+                .unwrap()
+                .to_string_lossy()
+                .replace(".manifest.json", "");
+            let m = session.engine().manifest(&model)?;
+            models.push(ModelInfo {
+                model: m.model.clone(),
+                arch: m.arch.clone(),
+                param_count: m.param_count,
+                num_layers: m.num_layers,
+                batch: m.batch,
+                input_shape: m.input_shape.clone(),
+                programs: m.programs.len(),
+            });
+        }
+    }
+    models.sort_by(|a, b| a.model.cmp(&b.model));
+    Ok(InfoReport { platform, models })
 }

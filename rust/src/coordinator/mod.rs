@@ -1,9 +1,10 @@
-//! Layer-3 coordination: experiment registry, shared pipeline, Pareto
-//! tooling, and report rendering.
+//! Layer-3 coordination: the job runners behind [`crate::api`], the shared
+//! per-model pipeline, Pareto tooling, and report rendering (text/JSON
+//! views over [`crate::api::JobResult`]).
 
 pub mod experiments;
 pub mod pareto;
 pub mod pipeline;
 pub mod report;
 
-pub use pipeline::{Pipeline, RunConfig};
+pub use pipeline::{default_cache_dir, state_cache_path, Pipeline, RunConfig};

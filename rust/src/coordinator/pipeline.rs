@@ -1,8 +1,13 @@
 //! Shared experiment pipeline: QAT baseline -> calibration -> gradient
 //! search -> matching -> retraining -> evaluation, with on-disk caching of
 //! trained states so experiments compose without retraining from scratch.
+//!
+//! A `Pipeline` is per-model state (manifest, datasets, cache paths); the
+//! PJRT [`Engine`] is *not* owned here — it is passed into each stage so
+//! one engine (and its compiled-executable cache) can be shared across
+//! pipelines and jobs. [`crate::api::ApproxSession`] owns that pairing.
 
-use crate::datasets::{Dataset, DatasetSpec, Split};
+use crate::datasets::{Dataset, DatasetCache, DatasetSpec, Split};
 use crate::errormodel::model::LayerOperands;
 use crate::matching::{self, MatchOutcome};
 use crate::multipliers::Catalog;
@@ -16,7 +21,7 @@ use std::path::{Path, PathBuf};
 
 /// Step counts / schedules for one experiment run. Defaults are sized for
 /// the single-core CPU testbed (DESIGN.md §Substitutions); `--paper` on the
-/// CLI scales them up.
+/// CLI (= [`RunConfig::paper`]) scales them up to paper-sized schedules.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub qat_steps: usize,
@@ -52,19 +57,66 @@ impl Default for RunConfig {
     }
 }
 
+impl RunConfig {
+    /// Paper-sized schedules (the `--paper` CLI flag): roughly the step
+    /// budgets of §4.2 scaled to the synthetic datasets, ~50x the testbed
+    /// defaults. Expect hours, not minutes, on the CPU testbed.
+    pub fn paper() -> Self {
+        RunConfig {
+            qat_steps: 15_000,
+            search_steps: 6_000,
+            retrain_steps: 1_500,
+            eval_batches: 64,
+            calib_batches: 16,
+            k_samples: 2048,
+            lr_qat: LrSchedule { base: 0.05, decay: 0.9, every: 3000 },
+            lr_search: LrSchedule { base: 0.01, decay: 0.9, every: 2000 },
+            lr_retrain: LrSchedule { base: 0.001, decay: 0.9, every: 500 },
+            ..RunConfig::default()
+        }
+    }
+}
+
+/// Default cache location for trained states: a `cache/` directory *inside*
+/// the artifact directory, so sessions pointed at different artifact dirs
+/// never collide on cached train states.
+pub fn default_cache_dir(artifacts: &Path) -> PathBuf {
+    artifacts.join("cache")
+}
+
+/// Canonical on-disk name of one cached f32 state vector.
+pub fn state_cache_path(cache_dir: &Path, model: &str, tag: &str, seed: u64) -> PathBuf {
+    cache_dir.join(format!("{model}_{tag}_seed{seed}.f32"))
+}
+
 pub struct Pipeline {
-    pub engine: Engine,
     pub manifest: Manifest,
-    pub train: Dataset,
-    pub val: Dataset,
+    /// Shared across pipelines whose models use the same dataset spec
+    /// (see [`DatasetCache`]).
+    pub train: std::sync::Arc<Dataset>,
+    pub val: std::sync::Arc<Dataset>,
     pub cfg: RunConfig,
     pub cache_dir: PathBuf,
     pub timings: Timings,
 }
 
 impl Pipeline {
-    pub fn new(artifacts: &Path, model: &str, cfg: RunConfig) -> Result<Pipeline> {
-        let engine = Engine::new(artifacts)?;
+    /// Per-model pipeline sharing `engine`'s artifact directory; the cache
+    /// dir is derived from it (see [`default_cache_dir`]).
+    pub fn new(engine: &Engine, model: &str, cfg: RunConfig) -> Result<Pipeline> {
+        let cache_dir = default_cache_dir(engine.artifacts_dir());
+        Self::with_cache_dir(engine, model, cfg, &cache_dir, &mut DatasetCache::default())
+    }
+
+    /// Like [`Pipeline::new`] with an explicit cache directory and a shared
+    /// dataset cache (so several pipelines reuse one loaded dataset).
+    pub fn with_cache_dir(
+        engine: &Engine,
+        model: &str,
+        cfg: RunConfig,
+        cache_dir: &Path,
+        datasets: &mut DatasetCache,
+    ) -> Result<Pipeline> {
         let manifest = engine.manifest(model)?;
         let hw = (manifest.input_shape[0], manifest.input_shape[1]);
         let spec = if manifest.classes >= 20 {
@@ -72,17 +124,16 @@ impl Pipeline {
         } else {
             DatasetSpec::synth_cifar(hw, cfg.seed)
         };
-        let train = Dataset::load(&spec, Split::Train);
-        let val = Dataset::load(&spec, Split::Val);
-        let cache_dir = PathBuf::from("results/cache");
-        std::fs::create_dir_all(&cache_dir).context("creating results/cache")?;
+        let train = datasets.load(&spec, Split::Train);
+        let val = datasets.load(&spec, Split::Val);
+        std::fs::create_dir_all(cache_dir)
+            .with_context(|| format!("creating cache dir {cache_dir:?}"))?;
         Ok(Pipeline {
-            engine,
             manifest,
             train,
             val,
             cfg,
-            cache_dir,
+            cache_dir: cache_dir.to_path_buf(),
             timings: Timings::default(),
         })
     }
@@ -90,10 +141,7 @@ impl Pipeline {
     // -- state caching -------------------------------------------------------
 
     fn cache_path(&self, tag: &str) -> PathBuf {
-        self.cache_dir.join(format!(
-            "{}_{tag}_seed{}.f32",
-            self.manifest.model, self.cfg.seed
-        ))
+        state_cache_path(&self.cache_dir, &self.manifest.model, tag, self.cfg.seed)
     }
 
     fn save_vec(&self, path: &Path, v: &[f32]) -> Result<()> {
@@ -117,7 +165,7 @@ impl Pipeline {
     // -- stages --------------------------------------------------------------
 
     /// QAT baseline parameters (cached across experiments).
-    pub fn baseline(&mut self) -> Result<TrainState> {
+    pub fn baseline(&mut self, engine: &mut Engine) -> Result<TrainState> {
         let tag = format!("qat{}", self.cfg.qat_steps);
         let path = self.cache_path(&tag);
         if let Some(flat) = self.load_vec(&path, self.manifest.param_count) {
@@ -126,10 +174,8 @@ impl Pipeline {
         }
         let mut state = TrainState::init(&self.manifest, self.cfg.sigma_init)?;
         let (manifest, train, cfg) = (self.manifest.clone(), &self.train, self.cfg.clone());
-        let hist = {
-            let engine = &mut self.engine;
-            search::train_qat(engine, &manifest, train, &mut state, cfg.qat_steps, cfg.lr_qat, cfg.seed)?
-        };
+        let hist =
+            search::train_qat(engine, &manifest, train, &mut state, cfg.qat_steps, cfg.lr_qat, cfg.seed)?;
         self.timings.add("qat_train", 0.0); // wall time tracked by engine
         log::info!(
             "{}: QAT baseline trained, tail acc {:.3}",
@@ -141,9 +187,9 @@ impl Pipeline {
     }
 
     /// Calibration (frozen activation absmax + pre-activation std).
-    pub fn calibrate(&mut self, flat: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn calibrate(&mut self, engine: &mut Engine, flat: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
         let manifest = self.manifest.clone();
-        search::calibrate(&mut self.engine, &manifest, &self.train, flat, self.cfg.calib_batches)
+        search::calibrate(engine, &manifest, &self.train, flat, self.cfg.calib_batches)
     }
 
     /// Convert calibrated per-layer absmax to the activation *scales* the
@@ -166,7 +212,12 @@ impl Pipeline {
 
     /// One gradient-search run at a given lambda, starting from `base`.
     /// Cached per (lambda, steps).
-    pub fn search_at(&mut self, base: &TrainState, lambda: f32) -> Result<TrainState> {
+    pub fn search_at(
+        &mut self,
+        engine: &mut Engine,
+        base: &TrainState,
+        lambda: f32,
+    ) -> Result<TrainState> {
         let tag = format!(
             "agn{}_lam{:.3}",
             self.cfg.search_steps,
@@ -188,7 +239,7 @@ impl Pipeline {
         let manifest = self.manifest.clone();
         let cfg = self.cfg.clone();
         search::gradient_search(
-            &mut self.engine,
+            engine,
             &manifest,
             &self.train,
             &mut state,
@@ -206,6 +257,7 @@ impl Pipeline {
     /// Behavioral retraining under an assignment's LUTs.
     pub fn retrain(
         &mut self,
+        engine: &mut Engine,
         state: &mut TrainState,
         luts: &[Vec<i32>],
         act_scales: &[f32],
@@ -213,7 +265,7 @@ impl Pipeline {
         let manifest = self.manifest.clone();
         let cfg = self.cfg.clone();
         search::retrain_approx(
-            &mut self.engine,
+            engine,
             &manifest,
             &self.train,
             state,
@@ -227,9 +279,9 @@ impl Pipeline {
     }
 
     /// PJRT evaluation on the validation split.
-    pub fn evaluate(&mut self, flat: &[f32], mode: EvalMode) -> Result<EvalMetrics> {
+    pub fn evaluate(&mut self, engine: &mut Engine, flat: &[f32], mode: EvalMode) -> Result<EvalMetrics> {
         let manifest = self.manifest.clone();
-        search::evaluate(&mut self.engine, &manifest, &self.val, flat, mode, self.cfg.eval_batches)
+        search::evaluate(engine, &manifest, &self.val, flat, mode, self.cfg.eval_batches)
     }
 
     /// Native-simulator evaluation (fast path for sweeps; full val split).
@@ -295,5 +347,41 @@ impl Pipeline {
         y_std: &[f32],
     ) -> MatchOutcome {
         matching::match_multipliers(&self.manifest, catalog, predictions, sigmas, y_std, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_dir_derives_from_artifacts_dir() {
+        assert_eq!(
+            default_cache_dir(Path::new("artifacts")),
+            PathBuf::from("artifacts/cache")
+        );
+        assert_eq!(
+            default_cache_dir(Path::new("/tmp/run_a")),
+            PathBuf::from("/tmp/run_a/cache")
+        );
+        // distinct artifact dirs -> distinct cached-state paths
+        let a = state_cache_path(&default_cache_dir(Path::new("a")), "resnet8", "qat300", 42);
+        let b = state_cache_path(&default_cache_dir(Path::new("b")), "resnet8", "qat300", 42);
+        assert_ne!(a, b);
+        assert!(a.to_string_lossy().ends_with("resnet8_qat300_seed42.f32"));
+    }
+
+    #[test]
+    fn paper_config_scales_up_testbed_defaults() {
+        let base = RunConfig::default();
+        let paper = RunConfig::paper();
+        assert!(paper.qat_steps >= 10 * base.qat_steps);
+        assert!(paper.search_steps >= 10 * base.search_steps);
+        assert!(paper.retrain_steps >= 10 * base.retrain_steps);
+        assert!(paper.eval_batches > base.eval_batches);
+        // invariants the rest of the stack relies on are untouched
+        assert_eq!(paper.seed, base.seed);
+        assert_eq!(paper.sigma_init, base.sigma_init);
+        assert_eq!(paper.sigma_max, base.sigma_max);
     }
 }

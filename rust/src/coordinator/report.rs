@@ -1,7 +1,12 @@
-//! Text-table + JSON result rendering for the experiment registry.
+//! Rendering: text tables and JSON as *views* over the structured
+//! [`JobResult`] types. No experiment logic lives here — runners produce
+//! reports, this module turns them into terminal text
+//! ([`render`]) and JSON artifacts ([`to_json`], [`save_json`]).
 
+use crate::api::job::JobResult;
+use crate::api::results::*;
 use crate::util::json::Json;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// Fixed-width text table (the terminal rendering of the paper's tables).
 pub struct Table {
@@ -57,21 +62,496 @@ impl Table {
     }
 }
 
-/// Write a JSON result blob under results/ (one file per experiment).
-pub fn save_json(name: &str, value: &Json) -> anyhow::Result<std::path::PathBuf> {
-    let dir = Path::new("results");
-    std::fs::create_dir_all(dir)?;
-    let path = dir.join(format!("{name}.json"));
-    std::fs::write(&path, value.to_string_pretty())?;
-    Ok(path)
-}
-
 pub fn pct(x: f64) -> String {
     format!("{:.1} %", x * 100.0)
 }
 
 pub fn pp(x: f64) -> String {
     format!("{:.1}", x * 100.0)
+}
+
+// ===========================================================================
+// Text rendering
+
+/// Render any job result as terminal text (ends with a newline).
+pub fn render(result: &JobResult) -> String {
+    match result {
+        JobResult::Table1(r) => render_table1(r),
+        JobResult::EnergySweep(r) => render_energy_sweep(r),
+        JobResult::ParetoFront(r) => render_pareto(r),
+        JobResult::AgnVsBehavioral(r) => render_agn_behavioral(r),
+        JobResult::LayerBreakdown(r) => render_layer_breakdown(r),
+        JobResult::Homogeneity(r) => render_homogeneity(r),
+        JobResult::Search(r) => render_search(r),
+        JobResult::Eval(r) => render_eval(r),
+        JobResult::Catalog(r) => render_catalog(r),
+        JobResult::Info(r) => render_info(r),
+    }
+}
+
+fn render_table1(r: &Table1Report) -> String {
+    let mut t = Table::new(
+        "Table 1 — predictive quality of multiplier error-std models (ResNet8 layers)",
+        &["Error Model", "Pearson r", "Median rel. err", "IQR"],
+    );
+    t.row(vec![
+        "Multiplier MRE [9]".into(),
+        format!("{:.3}", r.pearson_mre),
+        "n.a.".into(),
+        "n.a.".into(),
+    ]);
+    t.row(vec![
+        "Single-Distribution MC [21]".into(),
+        format!("{:.3}", r.pearson_mc),
+        pct(r.medrel_mc),
+        pct(r.iqr_mc),
+    ]);
+    t.row(vec![
+        "Probabilistic Multi-Dist. (ours)".into(),
+        format!("{:.3}", r.pearson_multi),
+        pct(r.medrel_multi),
+        pct(r.iqr_multi),
+    ]);
+    let lo = r.truth.iter().cloned().fold(f64::MAX, f64::min);
+    let hi = r.truth.iter().cloned().fold(0.0, f64::max);
+    format!(
+        "{}points: {} (layers x multipliers); truth spans {:.2e}..{:.2e}; model pass took {:.2}s\n",
+        t.render(),
+        r.points,
+        lo,
+        hi,
+        r.match_seconds
+    )
+}
+
+fn render_energy_sweep(r: &EnergySweepReport) -> String {
+    let mut t = Table::new(
+        &format!(
+            "Table 2 — energy reduction at accuracy budget <= {} p.p. (SynthCIFAR)",
+            r.budget_pp
+        ),
+        &["Model", "Method", "Energy Reduction", "Top-1 Loss [p.p.]"],
+    );
+    for m in &r.models {
+        for row in &m.methods {
+            t.row(vec![
+                m.sweep.model.clone(),
+                row.method.clone(),
+                pct(row.energy_reduction),
+                format!("{:.1}", (m.sweep.baseline_top1 - row.top1) * 100.0),
+            ]);
+        }
+    }
+    t.render()
+}
+
+fn render_pareto(r: &ParetoReport) -> String {
+    let mut out = String::new();
+    for m in &r.models {
+        let mut t = Table::new(
+            &format!(
+                "Figure 3 — Pareto front, {} (baseline top-1 {:.3})",
+                m.model, m.baseline_top1
+            ),
+            &["lambda", "energy reduction", "top-1", "front?"],
+        );
+        for p in &m.points {
+            t.row(vec![
+                format!("{:.2}", p.lambda),
+                pct(p.energy_reduction),
+                format!("{:.3}", p.top1),
+                if p.on_front { "*".into() } else { "".into() },
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+fn render_agn_behavioral(r: &AgnBehavioralReport) -> String {
+    let mut t = Table::new(
+        &format!(
+            "Figure 4 — AGN vs behavioral accuracy, {} (baseline {:.3})",
+            r.model, r.baseline_top1
+        ),
+        &["lambda", "energy red.", "AGN model", "Approx (GS weights)", "Approx (baseline weights)"],
+    );
+    for p in &r.points {
+        t.row(vec![
+            format!("{:.2}", p.lambda),
+            pct(p.energy_reduction),
+            format!("{:.3}", p.acc_agn),
+            format!("{:.3}", p.acc_retrained),
+            format!("{:.3}", p.acc_baseline_weights),
+        ]);
+    }
+    t.render()
+}
+
+fn render_layer_breakdown(r: &LayerBreakdownReport) -> String {
+    let mut out = String::new();
+    for m in &r.models {
+        let mut t = Table::new(
+            &format!("Figure 5 — per-layer assignment, {} (lambda={})", m.model, m.lambda),
+            &["layer", "mults share", "multiplier", "energy red.", "sigma_l"],
+        );
+        for l in &m.layers {
+            t.row(vec![
+                l.name.clone(),
+                pct(l.mult_share),
+                l.instance.clone(),
+                pct(l.reduction),
+                format!("{:.4}", l.sigma),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "{}: total energy reduction {:.1} % (retrained top-1 {:.3})\n",
+            m.model,
+            m.energy_reduction * 100.0,
+            m.acc_retrained
+        ));
+    }
+    out
+}
+
+fn render_homogeneity(r: &HomogeneityReport) -> String {
+    let mut t = Table::new(
+        &format!(
+            "Table 3 — homogeneous vs heterogeneous, VGG16 on SynthTIN (lambda={})",
+            r.lambda
+        ),
+        &["Configuration", "Energy Reduction", "Val. Accuracy"],
+    );
+    for row in &r.rows {
+        t.row(vec![
+            row.config.clone(),
+            row.energy_reduction.map(pct).unwrap_or_else(|| "n.a.".into()),
+            format!("{:.3} ({})", row.accuracy, row.metric),
+        ]);
+    }
+    t.render()
+}
+
+fn render_search(r: &SearchReport) -> String {
+    let mut out = format!("{} lambda={}: learned sigma_l per layer:\n", r.model, r.lambda);
+    for (name, s) in r.layer_names.iter().zip(&r.sigmas) {
+        out.push_str(&format!("  {name:<16} sigma = {s:.4}\n"));
+    }
+    out
+}
+
+fn render_eval(r: &EvalReport) -> String {
+    format!(
+        "{}: QAT baseline top-1 {:.3} top-5 {:.3} (loss {:.3}, n={})\n",
+        r.model, r.top1, r.top5, r.loss, r.n
+    )
+}
+
+fn render_catalog(r: &CatalogReport) -> String {
+    let mut out = String::new();
+    for cat in &r.catalogs {
+        out.push_str(&format!("catalog {} ({} instances):\n", cat.name, cat.instances.len()));
+        for i in &cat.instances {
+            out.push_str(&format!(
+                "  {:<16} power {:.3}  mre {:.4}\n",
+                i.name, i.power, i.mre
+            ));
+        }
+    }
+    out
+}
+
+fn render_info(r: &InfoReport) -> String {
+    let mut out = format!("platform: {}\n", r.platform);
+    for m in &r.models {
+        out.push_str(&format!(
+            "  {:<16} arch={:<12} N={:<8} L={:<3} batch={} input={:?} programs={}\n",
+            m.model, m.arch, m.param_count, m.num_layers, m.batch, m.input_shape, m.programs
+        ));
+    }
+    out
+}
+
+// ===========================================================================
+// JSON rendering
+
+/// Render any job result as the JSON blob persisted under `results/`.
+pub fn to_json(result: &JobResult) -> Json {
+    match result {
+        JobResult::Table1(r) => table1_json(r),
+        JobResult::EnergySweep(r) => energy_sweep_json(r),
+        JobResult::ParetoFront(r) => pareto_json(r),
+        JobResult::AgnVsBehavioral(r) => agn_behavioral_json(r),
+        JobResult::LayerBreakdown(r) => layer_breakdown_json(r),
+        JobResult::Homogeneity(r) => homogeneity_json(r),
+        JobResult::Search(r) => search_json(r),
+        JobResult::Eval(r) => eval_json(r),
+        JobResult::Catalog(r) => catalog_json(r),
+        JobResult::Info(r) => info_json(r),
+    }
+}
+
+/// Persist `result` as `<dir>/<slug>.json`; returns the written path.
+pub fn save_json(dir: &Path, result: &JobResult) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{}.json", result.slug()));
+    std::fs::write(&path, to_json(result).to_string_pretty())?;
+    Ok(path)
+}
+
+fn table1_json(r: &Table1Report) -> Json {
+    Json::obj(vec![
+        ("points", Json::num(r.points as f64)),
+        ("pearson_mre", Json::num(r.pearson_mre)),
+        ("pearson_mc", Json::num(r.pearson_mc)),
+        ("pearson_multi", Json::num(r.pearson_multi)),
+        ("medrel_mc", Json::num(r.medrel_mc)),
+        ("medrel_multi", Json::num(r.medrel_multi)),
+        ("iqr_mc", Json::num(r.iqr_mc)),
+        ("iqr_multi", Json::num(r.iqr_multi)),
+        ("truth", Json::arr_f64(&r.truth)),
+        ("pred_multi", Json::arr_f64(&r.pred_multi)),
+        ("pred_mc", Json::arr_f64(&r.pred_mc)),
+        ("pred_mre", Json::arr_f64(&r.pred_mre)),
+        ("match_seconds", Json::num(r.match_seconds)),
+    ])
+}
+
+fn sweep_point_json(p: &SweepPoint) -> Json {
+    Json::obj(vec![
+        ("lambda", Json::num(p.lambda)),
+        ("energy_reduction", Json::num(p.energy_reduction)),
+        ("acc", Json::num(p.acc_retrained)),
+        ("sigmas", Json::arr_f64(&p.sigmas)),
+        (
+            "assignments",
+            Json::Arr(p.assignments.iter().map(|a| Json::str(a.clone())).collect()),
+        ),
+    ])
+}
+
+fn energy_sweep_json(r: &EnergySweepReport) -> Json {
+    let models = Json::Arr(
+        r.models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::str(m.sweep.model.clone())),
+                    ("baseline_top1", Json::num(m.sweep.baseline_top1)),
+                    ("qat_seconds", Json::num(m.sweep.qat_seconds)),
+                    ("search_seconds", Json::num(m.sweep.search_seconds)),
+                    (
+                        "points",
+                        Json::Arr(m.sweep.points.iter().map(sweep_point_json).collect()),
+                    ),
+                    (
+                        "methods",
+                        Json::Arr(
+                            m.methods
+                                .iter()
+                                .map(|row| {
+                                    Json::obj(vec![
+                                        ("method", Json::str(row.method.clone())),
+                                        ("energy_reduction", Json::num(row.energy_reduction)),
+                                        ("top1", Json::num(row.top1)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    Json::obj(vec![("budget_pp", Json::num(r.budget_pp)), ("models", models)])
+}
+
+fn pareto_json(r: &ParetoReport) -> Json {
+    Json::Arr(
+        r.models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::str(m.model.clone())),
+                    ("baseline_top1", Json::num(m.baseline_top1)),
+                    (
+                        "points",
+                        Json::Arr(
+                            m.points
+                                .iter()
+                                .map(|p| {
+                                    Json::obj(vec![
+                                        ("lambda", Json::num(p.lambda)),
+                                        ("energy_reduction", Json::num(p.energy_reduction)),
+                                        ("top1", Json::num(p.top1)),
+                                        ("on_front", Json::Bool(p.on_front)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn agn_behavioral_json(r: &AgnBehavioralReport) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(r.model.clone())),
+        ("baseline_top1", Json::num(r.baseline_top1)),
+        (
+            "points",
+            Json::Arr(
+                r.points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("lambda", Json::num(p.lambda)),
+                            ("energy_reduction", Json::num(p.energy_reduction)),
+                            ("acc_agn", Json::num(p.acc_agn)),
+                            ("acc_retrained", Json::num(p.acc_retrained)),
+                            ("acc_baseline_weights", Json::num(p.acc_baseline_weights)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn layer_breakdown_json(r: &LayerBreakdownReport) -> Json {
+    Json::Arr(
+        r.models
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("model", Json::str(m.model.clone())),
+                    ("lambda", Json::num(m.lambda)),
+                    ("energy_reduction", Json::num(m.energy_reduction)),
+                    ("acc_retrained", Json::num(m.acc_retrained)),
+                    (
+                        "layers",
+                        Json::Arr(
+                            m.layers
+                                .iter()
+                                .map(|l| {
+                                    Json::obj(vec![
+                                        ("name", Json::str(l.name.clone())),
+                                        ("mult_share", Json::num(l.mult_share)),
+                                        ("instance", Json::str(l.instance.clone())),
+                                        ("reduction", Json::num(l.reduction)),
+                                        ("sigma", Json::num(l.sigma)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn homogeneity_json(r: &HomogeneityReport) -> Json {
+    Json::obj(vec![
+        ("lambda", Json::num(r.lambda)),
+        (
+            "rows",
+            Json::Arr(
+                r.rows
+                    .iter()
+                    .map(|row| {
+                        Json::obj(vec![
+                            ("config", Json::str(row.config.clone())),
+                            (
+                                "energy_reduction",
+                                row.energy_reduction.map(Json::num).unwrap_or(Json::Null),
+                            ),
+                            ("accuracy", Json::num(row.accuracy)),
+                            ("metric", Json::str(row.metric)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn search_json(r: &SearchReport) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(r.model.clone())),
+        ("lambda", Json::num(r.lambda)),
+        (
+            "layers",
+            Json::Arr(r.layer_names.iter().map(|n| Json::str(n.clone())).collect()),
+        ),
+        ("sigmas", Json::arr_f64(&r.sigmas)),
+    ])
+}
+
+fn eval_json(r: &EvalReport) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(r.model.clone())),
+        ("top1", Json::num(r.top1)),
+        ("top5", Json::num(r.top5)),
+        ("loss", Json::num(r.loss)),
+        ("n", Json::num(r.n as f64)),
+    ])
+}
+
+fn catalog_json(r: &CatalogReport) -> Json {
+    Json::Arr(
+        r.catalogs
+            .iter()
+            .map(|cat| {
+                Json::obj(vec![
+                    ("name", Json::str(cat.name.clone())),
+                    (
+                        "instances",
+                        Json::Arr(
+                            cat.instances
+                                .iter()
+                                .map(|i| {
+                                    Json::obj(vec![
+                                        ("name", Json::str(i.name.clone())),
+                                        ("power", Json::num(i.power)),
+                                        ("mre", Json::num(i.mre)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn info_json(r: &InfoReport) -> Json {
+    Json::obj(vec![
+        ("platform", Json::str(r.platform.clone())),
+        (
+            "models",
+            Json::Arr(
+                r.models
+                    .iter()
+                    .map(|m| {
+                        Json::obj(vec![
+                            ("model", Json::str(m.model.clone())),
+                            ("arch", Json::str(m.arch.clone())),
+                            ("param_count", Json::num(m.param_count as f64)),
+                            ("num_layers", Json::num(m.num_layers as f64)),
+                            ("batch", Json::num(m.batch as f64)),
+                            ("input_shape", Json::arr_usize(&m.input_shape)),
+                            ("programs", Json::num(m.programs as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 #[cfg(test)]
@@ -98,5 +578,52 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn render_is_a_pure_view_over_results() {
+        let result = JobResult::Eval(EvalReport {
+            model: "resnet8".into(),
+            top1: 0.91,
+            top5: 0.99,
+            loss: 0.4,
+            n: 256,
+        });
+        let text = render(&result);
+        assert!(text.contains("resnet8") && text.contains("0.910"), "{text}");
+        let json = to_json(&result).to_string_pretty();
+        assert!(json.contains("\"top1\""), "{json}");
+    }
+
+    #[test]
+    fn pareto_render_marks_front_points() {
+        let result = JobResult::ParetoFront(ParetoReport {
+            models: vec![ParetoModelReport {
+                model: "resnet8".into(),
+                baseline_top1: 0.9,
+                points: vec![
+                    ParetoPoint { lambda: 0.0, energy_reduction: 0.0, top1: 0.9, on_front: true },
+                    ParetoPoint { lambda: 0.3, energy_reduction: 0.4, top1: 0.85, on_front: false },
+                ],
+            }],
+        });
+        let text = render(&result);
+        assert!(text.contains("Figure 3"));
+        assert!(text.contains('*'));
+    }
+
+    #[test]
+    fn homogeneity_json_uses_null_for_baseline_energy() {
+        let result = JobResult::Homogeneity(HomogeneityReport {
+            lambda: 0.3,
+            rows: vec![HomogeneityRow {
+                config: "Baseline (8-bit QAT)".into(),
+                energy_reduction: None,
+                accuracy: 0.97,
+                metric: "top5",
+            }],
+        });
+        let json = to_json(&result).to_string_pretty();
+        assert!(json.contains("null"), "{json}");
     }
 }

@@ -20,7 +20,7 @@
 use crate::tensor::TensorF;
 use crate::util::rng::Pcg32;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Split {
     Train,
     Val,
@@ -151,6 +151,33 @@ pub fn render(spec: &DatasetSpec, split: Split, index: usize) -> (Vec<f32>, u32)
         }
     }
     (img, class)
+}
+
+/// Cache of loaded synthetic splits, keyed by (spec name, hw, seed,
+/// split). Models sharing an input spec share one loaded copy — a session
+/// sweeping the ResNet family holds one SynthCIFAR in memory, not four.
+#[derive(Default)]
+pub struct DatasetCache {
+    map: std::collections::HashMap<(String, (usize, usize), u64, Split), std::sync::Arc<Dataset>>,
+}
+
+impl DatasetCache {
+    /// Load (or reuse) the split described by `spec`.
+    pub fn load(&mut self, spec: &DatasetSpec, split: Split) -> std::sync::Arc<Dataset> {
+        self.map
+            .entry((spec.name.clone(), spec.hw, spec.seed, split))
+            .or_insert_with(|| std::sync::Arc::new(Dataset::load(spec, split)))
+            .clone()
+    }
+
+    /// Distinct loaded splits.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
 }
 
 /// A materialized split, plus batch iteration with augmentation.

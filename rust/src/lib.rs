@@ -6,13 +6,38 @@
 //!
 //! The crate is the Layer-3 coordinator: it owns datasets, the gradient
 //! search driver, the probabilistic multiplier error model, the multiplier
-//! catalog, matching/energy accounting, the baselines and the experiment
-//! registry. Compute graphs (Layer 2, JAX) and kernels (Layer 1, Pallas)
-//! are AOT-compiled to HLO text by `python/compile/` and executed through
+//! catalog, matching/energy accounting, the baselines and the job runners.
+//! Compute graphs (Layer 2, JAX) and kernels (Layer 1, Pallas) are
+//! AOT-compiled to HLO text by `python/compile/` and executed through
 //! [`runtime`] on the PJRT CPU client — Python never runs at run time.
+//!
+//! ## The session/job API
+//!
+//! [`api`] is the single public entrypoint. An [`api::ApproxSession`] owns
+//! one PJRT engine (compiled executables are cached per process, not per
+//! experiment), the synthetic datasets and the on-disk trained-state cache;
+//! typed [`api::JobSpec`]s run into structured [`api::JobResult`]s, and
+//! text/JSON renderings are views over those results:
+//!
+//! ```no_run
+//! use agn_approx::api::{ApproxSession, JobSpec};
+//!
+//! # fn main() -> Result<(), agn_approx::api::AgnError> {
+//! let mut session = ApproxSession::builder("artifacts").build()?;
+//! let result = session.run(JobSpec::Eval { model: "resnet8".into() })?;
+//! println!("{}", agn_approx::api::render(&result));
+//! # Ok(()) }
+//! ```
+//!
+//! Errors crossing the API boundary are typed ([`api::AgnError`]); `anyhow`
+//! is an implementation detail of the internals. Advanced callers can drop
+//! one level down via [`api::ApproxSession::pipeline`] and compose the
+//! paper stages (baseline → calibrate → search → match → retrain → eval)
+//! directly against the same shared engine and cache.
 //!
 //! See DESIGN.md for the system inventory and the experiment index.
 
+pub mod api;
 pub mod baselines;
 pub mod benchkit;
 pub mod coordinator;
@@ -26,3 +51,5 @@ pub mod search;
 pub mod simulator;
 pub mod tensor;
 pub mod util;
+
+pub use api::{AgnError, AgnResult, ApproxSession, JobResult, JobSpec};

@@ -1,27 +1,30 @@
-//! agn-approx CLI — the Layer-3 entrypoint.
+//! agn-approx CLI — a thin shell over the session/job API.
 //!
-//! Subcommands (one per paper artifact + utilities):
-//!   table1 | table2 | table3 | fig3 | fig4 | fig5   — regenerate results
-//!   train | search | eval                            — pipeline stages
-//!   info                                             — artifact inventory
+//! Every command builds one [`ApproxSession`], constructs the matching
+//! typed [`JobSpec`], and renders/persists the structured [`JobResult`]:
 //!
-//! Common flags: --artifacts DIR --qat-steps N --search-steps N
-//!               --retrain-steps N --lambdas 0.0,0.1,... --seed N --models a,b
-//! Run `agn-approx help` for details.
+//!   session = ApproxSession::builder(artifacts).config(cfg).build()?
+//!   result  = session.run(JobSpec::Eval { model })?
+//!   print!("{}", render(&result))
+//!
+//! Run `agn-approx help` for the command list.
 
-use agn_approx::coordinator::experiments as exp;
-use agn_approx::coordinator::{Pipeline, RunConfig};
-use agn_approx::multipliers::{signed_catalog, unsigned_catalog};
-use agn_approx::runtime::Engine;
-use agn_approx::search::EvalMode;
+use agn_approx::api::{AgnError, ApproxSession, JobResult, JobSpec, RunConfig, render, save_json};
+use agn_approx::coordinator::experiments;
 use agn_approx::util::cli::Args;
-use anyhow::Result;
 use std::path::PathBuf;
 
 const HELP: &str = "\
 agn-approx — heterogeneous approximation of neural networks (ICCAD'22 repro)
 
 USAGE: agn-approx <command> [flags]
+
+Commands map 1:1 onto the library's typed job API: the CLI builds one
+ApproxSession (shared PJRT engine + dataset + state cache), runs a JobSpec,
+and prints the structured JobResult. In Rust, the same flow is:
+
+    let mut session = ApproxSession::builder(\"artifacts\").build()?;
+    let result = session.run(JobSpec::Eval { model: \"resnet8\".into() })?;
 
 COMMANDS
   table1            error-model quality (Pearson / median rel. error)
@@ -39,21 +42,57 @@ COMMANDS
 
 COMMON FLAGS
   --artifacts DIR      artifact directory        [artifacts]
+  --results DIR        JSON result directory     [results]
   --models a,b         model list                [command-specific]
-  --qat-steps N        QAT baseline steps        [300]
-  --search-steps N     gradient-search steps     [120]
-  --retrain-steps N    behavioral retrain steps  [30]
+  --paper              paper-sized schedules (hours on the CPU testbed)
+  --qat-steps N        QAT baseline steps        [300 | 15000 with --paper]
+  --search-steps N     gradient-search steps     [120 | 6000 with --paper]
+  --retrain-steps N    behavioral retrain steps  [30 | 1500 with --paper]
   --eval-batches N     eval batches (PJRT path)  [8]
+  --calib-batches N    calibration batches       [4]
+  --k-samples N        error-model sample patches[512]
   --lambdas l1,l2,...  lambda sweep              [0,0.05,0.1,0.2,0.3,0.45,0.6]
   --lambda X           single lambda             [0.3]
   --budget-pp X        accuracy-loss budget      [1.0]
   --seed N             global seed               [42]
+  --sigma-init X       initial sigma_l           [0.1]
+  --sigma-max X        sigma_l clamp             [0.5]
   --no-baselines       table2: skip ALWANN/LVRM/uniform
   --mc-trials N        table1 MC trials          [2000]
+
+Unrecognized --flags warn instead of silently running defaults.
 ";
 
+/// Boolean flags: never consume the following token, so they can precede
+/// the command (`agn-approx --paper table2`).
+const SWITCHES: &[&str] = &["paper", "no-baselines"];
+
+/// Every flag the CLI understands (typo guard; see `Args::warn_unknown`).
+const KNOWN_FLAGS: &[&str] = &[
+    "artifacts",
+    "results",
+    "models",
+    "paper",
+    "qat-steps",
+    "search-steps",
+    "retrain-steps",
+    "eval-batches",
+    "calib-batches",
+    "k-samples",
+    "lambdas",
+    "lambda",
+    "budget-pp",
+    "seed",
+    "sigma-init",
+    "sigma-max",
+    "no-baselines",
+    "mc-trials",
+];
+
 fn run_config(args: &Args) -> RunConfig {
-    let mut cfg = RunConfig::default();
+    // --paper swaps in the paper-sized schedules; explicit step flags
+    // still override on top of either base.
+    let mut cfg = if args.has("paper") { RunConfig::paper() } else { RunConfig::default() };
     cfg.qat_steps = args.usize_or("qat-steps", cfg.qat_steps);
     cfg.search_steps = args.usize_or("search-steps", cfg.search_steps);
     cfg.retrain_steps = args.usize_or("retrain-steps", cfg.retrain_steps);
@@ -69,91 +108,100 @@ fn run_config(args: &Args) -> RunConfig {
 fn lambdas(args: &Args) -> Vec<f32> {
     args.get("lambdas")
         .map(|s| s.split(',').filter_map(|v| v.parse().ok()).collect())
-        .unwrap_or_else(exp::default_lambdas)
+        .unwrap_or_else(experiments::default_lambdas)
 }
 
-fn main() -> Result<()> {
-    agn_approx::util::logging::init();
-    let args = Args::from_env();
-    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
-    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
-    let cfg = run_config(&args);
+/// Map a CLI command + flags onto the typed job, or `None` for `help` /
+/// unknown commands.
+fn job_spec(cmd: &str, args: &Args) -> Option<JobSpec> {
     let budget = args.f64_or("budget-pp", 1.0);
-
     match cmd {
-        "table1" => exp::table1(&artifacts, cfg, args.usize_or("mc-trials", 2000))?,
-        "table2" => {
-            let models = args.list_or("models", "resnet8,resnet14,resnet20,resnet32");
-            exp::table2(&artifacts, &models, cfg, &lambdas(&args), budget, !args.has("no-baselines"))?;
-        }
-        "table3" => exp::table3(&artifacts, cfg, args.f32_or("lambda", 0.3))?,
-        "fig3" => {
-            let models = args.list_or("models", "resnet8,resnet14,resnet20,resnet32");
-            exp::fig3(&artifacts, &models, cfg, &lambdas(&args))?;
-        }
-        "fig4" => {
-            let model = args.str_or("models", "resnet20");
-            exp::fig4(&artifacts, &model, cfg, &lambdas(&args))?;
-        }
-        "fig5" => {
-            let models = args.list_or("models", "vgg16");
-            exp::fig5(&artifacts, &models, cfg, args.f32_or("lambda", 0.3))?;
-        }
-        "train" | "eval" => {
-            let model = args.str_or("models", "resnet8");
-            let mut pipe = Pipeline::new(&artifacts, &model, cfg)?;
-            let base = pipe.baseline()?;
-            let m = pipe.evaluate(&base.flat, EvalMode::Qat)?;
-            println!(
-                "{model}: QAT baseline top-1 {:.3} top-5 {:.3} (loss {:.3}, n={})",
-                m.top1, m.topk, m.loss, m.n
-            );
-            println!(
-                "engine: {} executions, {:.2}s exec, {:.2}s compile",
-                pipe.engine.exec_count, pipe.engine.exec_seconds, pipe.engine.compile_seconds
-            );
-        }
-        "search" => {
-            let model = args.str_or("models", "resnet8");
-            let lam = args.f32_or("lambda", 0.3);
-            let mut pipe = Pipeline::new(&artifacts, &model, cfg)?;
-            let base = pipe.baseline()?;
-            let searched = pipe.search_at(&base, lam)?;
-            println!("{model} lambda={lam}: learned sigma_l per layer:");
-            for (info, s) in pipe.manifest.layers.iter().zip(&searched.sigmas) {
-                println!("  {:<16} sigma = {s:.4}", info.name);
-            }
-        }
-        "catalog" => {
-            for cat in [unsigned_catalog(), signed_catalog()] {
-                println!("catalog {} ({} instances):", cat.name, cat.len());
-                for i in &cat.instances {
-                    println!("  {:<16} power {:.3}  mre {:.4}", i.name, i.power, i.mre());
-                }
-            }
-        }
-        "info" => {
-            let engine = Engine::new(&artifacts)?;
-            println!("platform: {}", engine.platform());
-            for entry in std::fs::read_dir(&artifacts)? {
-                let p = entry?.path();
-                if p.to_string_lossy().ends_with(".manifest.json") {
-                    let model = p.file_name().unwrap().to_string_lossy().replace(".manifest.json", "");
-                    let m = engine.manifest(&model)?;
-                    println!(
-                        "  {:<16} arch={:<12} N={:<8} L={:<3} batch={} input={:?} programs={}",
-                        m.model,
-                        m.arch,
-                        m.param_count,
-                        m.num_layers,
-                        m.batch,
-                        m.input_shape,
-                        m.programs.len()
-                    );
-                }
-            }
-        }
-        _ => print!("{HELP}"),
+        "table1" => Some(JobSpec::Table1 { mc_trials: args.usize_or("mc-trials", 2000) }),
+        "table2" => Some(JobSpec::EnergySweep {
+            models: args.list_or("models", "resnet8,resnet14,resnet20,resnet32"),
+            lambdas: lambdas(args),
+            budget_pp: budget,
+            baselines: !args.has("no-baselines"),
+        }),
+        "table3" => Some(JobSpec::Homogeneity { lambda: args.f32_or("lambda", 0.3) }),
+        "fig3" => Some(JobSpec::ParetoFront {
+            models: args.list_or("models", "resnet8,resnet14,resnet20,resnet32"),
+            lambdas: lambdas(args),
+        }),
+        "fig4" => Some(JobSpec::AgnVsBehavioral {
+            model: args.str_or("models", "resnet20"),
+            lambdas: lambdas(args),
+        }),
+        "fig5" => Some(JobSpec::LayerBreakdown {
+            models: args.list_or("models", "vgg16"),
+            lambda: args.f32_or("lambda", 0.3),
+        }),
+        // `train` is the same cache-backed job as `eval`: the baseline
+        // stage trains when no cached state exists, then evaluates
+        "train" | "eval" => Some(JobSpec::Eval { model: args.str_or("models", "resnet8") }),
+        "search" => Some(JobSpec::Search {
+            model: args.str_or("models", "resnet8"),
+            lambda: args.f32_or("lambda", 0.3),
+        }),
+        "catalog" => Some(JobSpec::Catalog),
+        "info" => Some(JobSpec::Info),
+        _ => None,
+    }
+}
+
+fn real_main() -> Result<(), AgnError> {
+    let args = Args::from_env_with_switches(SWITCHES);
+    args.warn_unknown(KNOWN_FLAGS);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let Some(spec) = job_spec(cmd, &args) else {
+        print!("{HELP}");
+        return Ok(());
+    };
+    if matches!(spec, JobSpec::Catalog) {
+        // pure data: no engine, no artifacts, no cache-dir side effects
+        print!("{}", render(&JobResult::Catalog(agn_approx::api::catalog())));
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let results_dir = PathBuf::from(args.str_or("results", "results"));
+
+    let mut session = ApproxSession::builder(&artifacts).config(run_config(&args)).build()?;
+    let print_stats = matches!(spec, JobSpec::Eval { .. });
+    let result = session.run(spec)?;
+    print!("{}", render(&result));
+
+    if result.is_paper_artifact() {
+        let path = save_json(&results_dir, &result).map_err(|source| AgnError::Io {
+            path: results_dir.clone(),
+            source,
+        })?;
+        log::info!("wrote {}", path.display());
+    }
+    if print_stats {
+        let s = session.stats();
+        println!(
+            "engine: {} executions, {:.2}s exec, {} compiles, {:.2}s compile",
+            s.engine.exec_count, s.engine.exec_seconds, s.engine.compile_count,
+            s.engine.compile_seconds
+        );
     }
     Ok(())
+}
+
+fn main() -> std::process::ExitCode {
+    agn_approx::util::logging::init();
+    match real_main() {
+        Ok(()) => std::process::ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            // AgnError's Display carries only the outermost message; walk
+            // the chain so "missing file" vs "corrupt JSON" stays visible
+            let mut source = std::error::Error::source(&e);
+            while let Some(cause) = source {
+                eprintln!("  caused by: {cause}");
+                source = std::error::Error::source(cause);
+            }
+            std::process::ExitCode::FAILURE
+        }
+    }
 }

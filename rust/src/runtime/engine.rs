@@ -10,17 +10,32 @@ use super::manifest::Manifest;
 use super::value::Value;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
+
+/// Execution/compilation accounting, snapshot via [`Engine::stats`].
+///
+/// `compile_count` increments once per freshly-compiled (model, program)
+/// executable; a warm cache hit leaves it untouched, so
+/// `compile_count == cached_executables` holds exactly when every
+/// executable was compiled once.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    pub exec_count: u64,
+    pub exec_seconds: f64,
+    pub compile_count: u64,
+    pub compile_seconds: f64,
+    pub cached_executables: usize,
+}
 
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Cumulative execute wall-clock (perf accounting).
-    pub exec_seconds: f64,
-    pub exec_count: u64,
-    pub compile_seconds: f64,
+    exec_seconds: f64,
+    exec_count: u64,
+    compile_seconds: f64,
+    compile_count: u64,
 }
 
 impl Engine {
@@ -33,11 +48,28 @@ impl Engine {
             exec_seconds: 0.0,
             exec_count: 0,
             compile_seconds: 0.0,
+            compile_count: 0,
         })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// The artifact directory this engine loads manifests/HLO from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    /// Snapshot of the cumulative execute/compile accounting.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            exec_count: self.exec_count,
+            exec_seconds: self.exec_seconds,
+            compile_count: self.compile_count,
+            compile_seconds: self.compile_seconds,
+            cached_executables: self.executables.len(),
+        }
     }
 
     /// Load a model manifest from this engine's artifact directory.
@@ -66,6 +98,7 @@ impl Engine {
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {key}: {e:?}"))?;
             self.compile_seconds += t0.elapsed().as_secs_f64();
+            self.compile_count += 1;
             log::info!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64());
             self.executables.insert(key.clone(), exe);
         }

@@ -5,6 +5,6 @@ pub mod engine;
 pub mod manifest;
 pub mod value;
 
-pub use engine::Engine;
+pub use engine::{Engine, EngineStats};
 pub use manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
 pub use value::Value;

@@ -15,16 +15,27 @@ pub const FLAG_SET: &str = "true";
 impl Args {
     /// Parse a raw argv (without the program name).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        Self::parse_with_switches(argv, &[])
+    }
+
+    /// Like [`Args::parse`], but flags named in `switches` are boolean:
+    /// they never consume the following token, so `--paper table2` keeps
+    /// `table2` as a positional command instead of the value of `--paper`.
+    pub fn parse_with_switches<I: IntoIterator<Item = String>>(
+        argv: I,
+        switches: &[&str],
+    ) -> Args {
         let mut args = Args::default();
         let mut iter = argv.into_iter().peekable();
         while let Some(a) = iter.next() {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
-                } else if iter
-                    .peek()
-                    .map(|n| !n.starts_with("--"))
-                    .unwrap_or(false)
+                } else if !switches.contains(&rest)
+                    && iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false)
                 {
                     let v = iter.next().unwrap();
                     args.flags.insert(rest.to_string(), v);
@@ -40,6 +51,11 @@ impl Args {
 
     pub fn from_env() -> Args {
         Self::parse(std::env::args().skip(1))
+    }
+
+    /// [`Args::parse_with_switches`] over the process arguments.
+    pub fn from_env_with_switches(switches: &[&str]) -> Args {
+        Self::parse_with_switches(std::env::args().skip(1), switches)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -78,6 +94,56 @@ impl Args {
             .map(|s| s.to_string())
             .collect()
     }
+
+    /// Flags present on the command line but not in `known` (sorted by
+    /// flag name — the map is a BTreeMap). A typo like `--lamda` shows up
+    /// here.
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.flags
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+
+    /// Warn (stderr) about every flag not in `known`, with a nearest-match
+    /// suggestion, so typos don't silently fall back to defaults.
+    pub fn warn_unknown(&self, known: &[&str]) {
+        for flag in self.unknown_flags(known) {
+            match nearest(&flag, known) {
+                Some(suggestion) => eprintln!(
+                    "warning: unrecognized flag --{flag} (did you mean --{suggestion}?)"
+                ),
+                None => eprintln!("warning: unrecognized flag --{flag}"),
+            }
+        }
+    }
+}
+
+/// Closest known flag within edit distance 2, if any.
+fn nearest<'a>(flag: &str, known: &[&'a str]) -> Option<&'a str> {
+    known
+        .iter()
+        .map(|k| (edit_distance(flag, k), *k))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, k)| k)
+}
+
+/// Levenshtein distance (small strings; O(len_a * len_b)).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -109,8 +175,22 @@ mod tests {
     fn flag_before_positional() {
         let a = parse("--fast run");
         // `run` is consumed as the value of --fast (documented behaviour);
-        // flags that precede positionals must use --flag=.
+        // flags that precede positionals must use --flag= or be declared
+        // as switches (see `switches_never_consume_positionals`).
         assert_eq!(a.str_or("fast", ""), "run");
+    }
+
+    #[test]
+    fn switches_never_consume_positionals() {
+        let argv: Vec<String> = "--paper table2 --seed 7"
+            .split_whitespace()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse_with_switches(argv, &["paper"]);
+        assert_eq!(a.positional, vec!["table2"]);
+        assert!(a.has("paper"));
+        assert_eq!(a.str_or("paper", ""), FLAG_SET);
+        assert_eq!(a.u64_or("seed", 0), 7);
     }
 
     #[test]
@@ -118,5 +198,29 @@ mod tests {
         let a = parse("");
         assert_eq!(a.usize_or("k", 7), 7);
         assert_eq!(a.f64_or("x", 1.5), 1.5);
+    }
+
+    #[test]
+    fn unknown_flags_catch_typos() {
+        let a = parse("table2 --lamda 0.3 --models resnet8");
+        let unknown = a.unknown_flags(&["lambda", "models", "seed"]);
+        assert_eq!(unknown, vec!["lamda".to_string()]);
+        assert!(a.unknown_flags(&["lamda", "models"]).is_empty());
+    }
+
+    #[test]
+    fn nearest_suggests_close_matches_only() {
+        assert_eq!(nearest("lamda", &["lambda", "models"]), Some("lambda"));
+        assert_eq!(nearest("qat-step", &["qat-steps", "seed"]), Some("qat-steps"));
+        assert_eq!(nearest("zzzzzz", &["lambda", "models"]), None);
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", "abd"), 1);
+        assert_eq!(edit_distance("lamda", "lambda"), 1);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

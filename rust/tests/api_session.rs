@@ -1,0 +1,167 @@
+//! The session/job API surface: JobSpec -> JobResult round-trips on the
+//! small resnet8 path, AgnError display/classification, spec validation,
+//! and the compile-once regression for a reused session.
+//!
+//! PJRT-dependent tests skip when artifacts/ is not built (same convention
+//! as the other integration suites).
+
+use agn_approx::api::{AgnError, ApproxSession, JobResult, JobSpec, RunConfig};
+use std::path::Path;
+
+fn have(model: &str) -> bool {
+    Path::new(&format!("artifacts/{model}.manifest.json")).exists()
+}
+
+fn tiny_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = 20;
+    cfg.search_steps = 10;
+    cfg.retrain_steps = 3;
+    cfg.eval_batches = 2;
+    cfg.calib_batches = 1;
+    cfg.k_samples = 64;
+    cfg.seed = 4321; // private cache namespace for this suite
+    cfg
+}
+
+// -- error surface (no artifacts needed) ------------------------------------
+
+#[test]
+fn agn_error_display_messages() {
+    assert_eq!(
+        AgnError::invalid_spec("model list must be non-empty").to_string(),
+        "invalid job spec: model list must be non-empty"
+    );
+
+    let e = AgnError::Artifacts {
+        model: "resnet99".into(),
+        source: anyhow::anyhow!("missing manifest"),
+    };
+    let msg = e.to_string();
+    assert!(msg.contains("resnet99"), "{msg}");
+    assert!(msg.contains("missing manifest"), "{msg}");
+
+    let e = AgnError::Io {
+        path: "results/cache".into(),
+        source: std::io::Error::new(std::io::ErrorKind::PermissionDenied, "denied"),
+    };
+    assert!(e.to_string().contains("results/cache"));
+
+    // the error chain is walkable via std::error::Error
+    use std::error::Error;
+    let e = AgnError::Job { job: "fig3", source: anyhow::anyhow!("inner cause") };
+    assert!(e.to_string().contains("`fig3`"));
+    assert!(e.source().is_some());
+}
+
+// -- spec validation (needs a session, not artifacts) ------------------------
+
+#[test]
+fn invalid_specs_are_rejected_before_any_work() {
+    // PJRT client may be unavailable in minimal environments
+    let Ok(mut session) = ApproxSession::builder("artifacts").config(tiny_cfg()).build() else {
+        eprintln!("skipping: no PJRT client");
+        return;
+    };
+    let err = session
+        .run(JobSpec::EnergySweep {
+            models: vec![],
+            lambdas: vec![0.1],
+            budget_pp: 1.0,
+            baselines: false,
+        })
+        .unwrap_err();
+    assert!(matches!(err, AgnError::InvalidSpec(_)), "{err:?}");
+
+    let err = session
+        .run(JobSpec::ParetoFront { models: vec!["resnet8".into()], lambdas: vec![] })
+        .unwrap_err();
+    assert!(matches!(err, AgnError::InvalidSpec(_)), "{err:?}");
+
+    // a missing model is an Artifacts error, not a panic
+    let err = session.run(JobSpec::Eval { model: "no_such_model".into() }).unwrap_err();
+    assert!(matches!(err, AgnError::Artifacts { .. }), "{err:?}");
+    // nothing above should count as a completed job
+    assert_eq!(session.stats().jobs_run, 0);
+}
+
+// -- JobSpec -> JobResult round-trips on the small resnet8 path --------------
+
+#[test]
+fn catalog_and_info_jobs_return_structured_data() {
+    let Ok(mut session) = ApproxSession::builder("artifacts").config(tiny_cfg()).build() else {
+        return;
+    };
+    let result = session.run(JobSpec::Catalog).unwrap();
+    let JobResult::Catalog(cat) = &result else { panic!("wrong variant") };
+    assert_eq!(cat.catalogs.len(), 2);
+    assert_eq!(cat.catalogs[0].instances.len(), 36, "unsigned catalog size");
+    assert!(cat.catalogs[0].instances.iter().any(|i| i.mre == 0.0), "exact instance present");
+    // rendering is a pure view and mentions both catalogs
+    let text = agn_approx::api::render(&result);
+    for c in &cat.catalogs {
+        assert!(text.contains(&c.name));
+    }
+
+    if Path::new("artifacts").is_dir() {
+        let JobResult::Info(info) = session.run(JobSpec::Info).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert!(!info.platform.is_empty());
+    }
+}
+
+#[test]
+fn eval_and_search_round_trip_on_resnet8() {
+    if !have("resnet8") {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut session = ApproxSession::builder("artifacts").config(tiny_cfg()).build().unwrap();
+
+    let result = session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap();
+    let eval = result.as_eval().expect("Eval spec must yield Eval result");
+    assert_eq!(eval.model, "resnet8");
+    assert!(eval.n > 0);
+    assert!((0.0..=1.0).contains(&eval.top1));
+    assert!(eval.top5 >= eval.top1);
+
+    let result = session.run(JobSpec::Search { model: "resnet8".into(), lambda: 0.3 }).unwrap();
+    let search = result.as_search().expect("Search spec must yield Search result");
+    assert_eq!(search.model, "resnet8");
+    assert_eq!(search.layer_names.len(), search.sigmas.len());
+    assert!(!search.sigmas.is_empty());
+    assert!(search.sigmas.iter().all(|s| s.is_finite()));
+
+    let stats = session.stats();
+    assert_eq!(stats.jobs_run, 2);
+    assert_eq!(stats.models_loaded, 1, "one pipeline serves both jobs");
+    // the structured results render without touching the session
+    assert!(agn_approx::api::render(&JobResult::Search(search.clone())).contains("resnet8"));
+}
+
+// -- compile-once regression -------------------------------------------------
+
+#[test]
+fn reused_session_compiles_each_program_exactly_once() {
+    if !have("resnet8") {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let mut session = ApproxSession::builder("artifacts").config(tiny_cfg()).build().unwrap();
+
+    session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap();
+    let first = session.stats().engine;
+    assert!(first.compile_count >= 1, "eval must compile at least one program");
+    // each cached executable was compiled exactly once
+    assert_eq!(first.compile_count as usize, first.cached_executables);
+
+    session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap();
+    let second = session.stats().engine;
+    assert_eq!(
+        second.compile_count, first.compile_count,
+        "re-running Eval on a reused session must not recompile"
+    );
+    assert_eq!(second.cached_executables, first.cached_executables);
+    assert!(second.exec_count > first.exec_count, "the second job did execute");
+}

@@ -1,8 +1,10 @@
 //! Integration: the full paper pipeline on tinynet with tiny step counts —
-//! baseline -> calibrate -> gradient search -> matching -> retrain -> eval.
+//! baseline -> calibrate -> gradient search -> matching -> retrain -> eval,
+//! driven through the composable session API (`ApproxSession::pipeline`
+//! hands out the per-model pipeline plus the shared engine).
 //! Asserts structural invariants, not accuracies (step counts are minimal).
 
-use agn_approx::coordinator::{Pipeline, RunConfig};
+use agn_approx::api::{ApproxSession, RunConfig};
 use agn_approx::matching::assignment_luts;
 use agn_approx::multipliers::unsigned_catalog;
 use agn_approx::search::EvalMode;
@@ -20,21 +22,26 @@ fn tiny_cfg() -> RunConfig {
     cfg
 }
 
+fn tiny_session() -> ApproxSession {
+    ApproxSession::builder("artifacts").config(tiny_cfg()).build().unwrap()
+}
+
 #[test]
 fn full_pipeline_composes() {
     if !Path::new("artifacts/tinynet.manifest.json").exists() {
         eprintln!("skipping: artifacts/ not built");
         return;
     }
-    let mut pipe = Pipeline::new(Path::new("artifacts"), "tinynet", tiny_cfg()).unwrap();
-    let base = pipe.baseline().unwrap();
+    let mut session = tiny_session();
+    let (pipe, engine) = session.pipeline("tinynet").unwrap();
+    let base = pipe.baseline(engine).unwrap();
     assert_eq!(base.flat.len(), pipe.manifest.param_count);
 
-    let (absmax, ystd) = pipe.calibrate(&base.flat).unwrap();
+    let (absmax, ystd) = pipe.calibrate(engine, &base.flat).unwrap();
     assert!(absmax.iter().all(|&v| v > 0.0));
     assert!(ystd.iter().all(|&v| v > 0.0));
 
-    let searched = pipe.search_at(&base, 0.3).unwrap();
+    let searched = pipe.search_at(engine, &base, 0.3).unwrap();
     assert_eq!(searched.sigmas.len(), pipe.manifest.num_layers);
     assert!(searched.sigmas.iter().all(|s| s.is_finite()));
 
@@ -63,11 +70,11 @@ fn full_pipeline_composes() {
     let luts = assignment_luts(&pipe.manifest, &catalog, &outcome.instance_indices());
     let scales = pipe.act_scales(&absmax);
     let mut retrained = searched.clone();
-    pipe.retrain(&mut retrained, &luts, &scales).unwrap();
+    pipe.retrain(engine, &mut retrained, &luts, &scales).unwrap();
     assert!(retrained.flat.iter().all(|v| v.is_finite()));
 
     let m = pipe
-        .evaluate(&retrained.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })
+        .evaluate(engine, &retrained.flat, EvalMode::Approx { luts: &luts, act_scales: &scales })
         .unwrap();
     assert!(m.top1 >= 0.0 && m.top1 <= 1.0);
     assert!(m.topk >= m.top1);
@@ -78,9 +85,10 @@ fn matching_margin_zero_sigma_gives_exact_network() {
     if !Path::new("artifacts/tinynet.manifest.json").exists() {
         return;
     }
-    let mut pipe = Pipeline::new(Path::new("artifacts"), "tinynet", tiny_cfg()).unwrap();
-    let base = pipe.baseline().unwrap();
-    let (absmax, ystd) = pipe.calibrate(&base.flat).unwrap();
+    let mut session = tiny_session();
+    let (pipe, engine) = session.pipeline("tinynet").unwrap();
+    let base = pipe.baseline(engine).unwrap();
+    let (absmax, ystd) = pipe.calibrate(engine, &base.flat).unwrap();
     let catalog = unsigned_catalog();
     let ops = pipe.operands(&base.flat, &absmax).unwrap();
     let preds = pipe.predictions(&catalog, &ops);
@@ -97,10 +105,11 @@ fn evaluate_sim_agrees_with_pjrt_eval_on_exact_path() {
     if !Path::new("artifacts/tinynet.manifest.json").exists() {
         return;
     }
-    let mut pipe = Pipeline::new(Path::new("artifacts"), "tinynet", tiny_cfg()).unwrap();
-    let base = pipe.baseline().unwrap();
-    let (absmax, _) = pipe.calibrate(&base.flat).unwrap();
-    let pjrt = pipe.evaluate(&base.flat, EvalMode::Qat).unwrap();
+    let mut session = tiny_session();
+    let (pipe, engine) = session.pipeline("tinynet").unwrap();
+    let base = pipe.baseline(engine).unwrap();
+    let (absmax, _) = pipe.calibrate(engine, &base.flat).unwrap();
+    let pjrt = pipe.evaluate(engine, &base.flat, EvalMode::Qat).unwrap();
     let sim = pipe
         .evaluate_sim(
             &base.flat,
