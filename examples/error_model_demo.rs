@@ -1,8 +1,9 @@
 //! error_model_demo — the probabilistic multi-distribution error model
 //! (paper §3.3) against behavioral ground truth, on one layer.
 //!
-//! No AOT artifacts needed beyond the resnet8 manifest/init: everything
-//! here is the native substrate (multiplier library + simulator + model).
+//! No AOT artifacts needed at all (the native backend synthesizes the
+//! resnet8 manifest): everything here is the native substrate
+//! (multiplier library + simulator + error model).
 //!
 //! Run: cargo run --release --example error_model_demo
 
@@ -11,15 +12,15 @@ use agn_approx::errormodel::model::{estimate_single_dist, estimate_with_aggregat
 use agn_approx::errormodel::{layer_error_map, mc};
 use agn_approx::matching::collect_operands;
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
-use agn_approx::runtime::Manifest;
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
 use agn_approx::simulator::{approx_matmul, LutSet, SimNet};
 use agn_approx::tensor::TensorF;
 use agn_approx::util::stats;
 use anyhow::Result;
-use std::path::Path;
 
 fn main() -> Result<()> {
-    let manifest = Manifest::load(Path::new("artifacts"), "resnet8")?;
+    let backend = create_backend(BackendKind::Native, "artifacts")?;
+    let manifest = backend.manifest("resnet8")?;
     let flat = manifest.load_init_params()?; // untrained weights are fine for a demo
     let net = SimNet::new(&manifest, &flat)?;
     let spec = DatasetSpec::synth_cifar(net.input_hw, 42);

@@ -1,7 +1,8 @@
 //! heterogeneous_deploy — deployment-side usage of the public API: take a
 //! trained model + a heterogeneous multiplier assignment and evaluate it
-//! with the *native* behavioral simulator (no Python, no PJRT — the pure
-//! Rust deployment path a downstream user would embed).
+//! with the *native* behavioral simulator (no Python, no XLA, no
+//! artifacts — the pure Rust deployment path a downstream user would
+//! embed).
 //!
 //! Run: cargo run --release --example heterogeneous_deploy
 
@@ -9,7 +10,7 @@ use agn_approx::api::cached_baseline_path;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::matching::{assignment_luts, energy_reduction};
 use agn_approx::multipliers::unsigned_catalog;
-use agn_approx::runtime::Manifest;
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
 use agn_approx::simulator::{accuracy, LutSet, SimNet};
 use agn_approx::tensor::TensorF;
 use anyhow::Result;
@@ -17,7 +18,10 @@ use std::path::Path;
 use std::time::Instant;
 
 fn main() -> Result<()> {
-    let manifest = Manifest::load(Path::new("artifacts"), "resnet8")?;
+    // native backend manifest: on-disk artifacts if present, synthetic
+    // in-memory zoo model otherwise — the demo always runs
+    let backend = create_backend(BackendKind::Native, "artifacts")?;
+    let manifest = backend.manifest("resnet8")?;
     // use the session-cached QAT baseline if an experiment has produced
     // one, otherwise fall back to the init params (demo still runs)
     let cached = cached_baseline_path(Path::new("artifacts"), &manifest.model, 300, 42);

@@ -1,8 +1,9 @@
 //! Quickstart — the END-TO-END driver (DESIGN.md: E2E validation), written
 //! against the public session/job API.
 //!
-//! One `ApproxSession` owns the PJRT engine, datasets and state cache; the
-//! three jobs below share its compiled executables and cached train states:
+//! One `ApproxSession` owns the execution backend (native by default — no
+//! Python, no XLA, no artifacts), datasets and state cache; the three jobs
+//! below share its compiled program plans and cached train states:
 //!   1. `JobSpec::Eval`           — QAT baseline (trains on first run),
 //!   2. `JobSpec::Search`         — AGN gradient search (learned sigma_l),
 //!   3. `JobSpec::LayerBreakdown` — matching + behavioral retraining, with
@@ -11,6 +12,7 @@
 //! Run: cargo run --release --example quickstart [-- --qat-steps 200 ...]
 
 use agn_approx::api::{ApproxSession, JobResult, JobSpec, RunConfig};
+use agn_approx::runtime::ExecBackend as _;
 use agn_approx::util::cli::Args;
 use std::time::Instant;
 

@@ -1,26 +1,21 @@
-//! PJRT runtime benchmarks: per-program execute latency for the AOT
-//! artifacts — the denominators of every training-loop timing in
-//! EXPERIMENTS.md (paper §4.2 reports gradient-search wall-clock).
+//! Backend runtime benchmarks: per-program execute latency — the
+//! denominators of every training-loop timing in EXPERIMENTS.md (paper
+//! §4.2 reports gradient-search wall-clock).
+//!
+//! Runs on the native backend (synthetic resnet8 manifest; always
+//! available). With `--features pjrt` and built artifacts, a PJRT section
+//! benches the same programs on the XLA path — only that section skips
+//! when the PJRT client or artifacts are unavailable.
 
 use agn_approx::api::{ApproxSession, JobSpec, RunConfig};
 use agn_approx::benchkit::Bench;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
-use agn_approx::runtime::{Engine, Value};
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend, Value};
 use agn_approx::util::rng::Pcg32;
-use std::path::Path;
 
-fn main() {
-    let artifacts = Path::new("artifacts");
-    let Ok(mut engine) = Engine::new(artifacts) else {
-        println!("(no PJRT client — skipping)");
-        return;
-    };
-    let Ok(manifest) = engine.manifest("resnet8") else {
-        println!("(artifacts/ missing resnet8 — run `make artifacts` first)");
-        return;
-    };
-    let mut b = Bench::new("runtime");
+fn bench_backend(b: &mut Bench, engine: &mut dyn ExecBackend, tag: &str) {
+    let manifest = engine.manifest("resnet8").expect("resnet8 manifest");
     let flat = manifest.load_init_params().expect("init");
     let spec = DatasetSpec::synth_cifar(
         (manifest.input_shape[0], manifest.input_shape[1]),
@@ -37,14 +32,7 @@ fn main() {
     let zeros = vec![0f32; flat.len()];
     let sig = vec![0.1f32; l];
 
-    b.bench("compile/eval_cold", || {
-        // fresh engine -> cold compile
-        let mut e2 = Engine::new(artifacts).unwrap();
-        let m2 = e2.manifest("resnet8").unwrap();
-        e2.warmup(&m2, "eval").unwrap();
-    });
-
-    b.bench("execute/eval_b32", || {
+    b.bench(&format!("{tag}/execute/eval"), || {
         engine
             .run(
                 &manifest,
@@ -55,7 +43,7 @@ fn main() {
     });
     b.throughput(manifest.batch as f64, "images");
 
-    b.bench("execute/train_qat_b32", || {
+    b.bench(&format!("{tag}/execute/train_qat"), || {
         engine
             .run(
                 &manifest,
@@ -73,7 +61,7 @@ fn main() {
     b.throughput(manifest.batch as f64, "images");
 
     let mut rng = Pcg32::seeded(3);
-    b.bench("execute/train_agn_b32", || {
+    b.bench(&format!("{tag}/execute/train_agn"), || {
         engine
             .run(
                 &manifest,
@@ -102,8 +90,8 @@ fn main() {
         luts_flat.extend_from_slice(&lut);
     }
     let lut_v = Value::i32(&[l, 65536], luts_flat);
-    let asc = Value::vec_f32(vec![6.0; l]);
-    b.bench("execute/train_approx_b32 (Pallas LUT kernel)", || {
+    let asc = Value::vec_f32(vec![0.02; l]);
+    b.bench(&format!("{tag}/execute/train_approx (LUT path)"), || {
         engine
             .run(
                 &manifest,
@@ -121,21 +109,33 @@ fn main() {
             .unwrap()
     });
     b.throughput(manifest.batch as f64, "images");
+}
 
-    // session/job API overhead on a warm engine: baseline loads from the
-    // state cache, evaluation is one PJRT batch
+fn main() {
+    let mut b = Bench::new("runtime");
+
+    // native backend: always available, no artifacts required
+    let mut native = create_backend(BackendKind::Native, "artifacts").unwrap();
+    b.bench("native/plan_cold", || {
+        let mut e2 = create_backend(BackendKind::Native, "artifacts").unwrap();
+        let m2 = e2.manifest("resnet8").unwrap();
+        e2.warmup(&m2, "eval").unwrap();
+    });
+    bench_backend(&mut b, &mut *native, "native");
+
+    // session/job API overhead on a warm backend: baseline loads from the
+    // state cache, evaluation is one batch
     let mut cfg = RunConfig::default();
-    cfg.qat_steps = 0;
+    cfg.qat_steps = 30;
     cfg.eval_batches = 1;
-    let mut session = ApproxSession::builder(artifacts).config(cfg).build().unwrap();
+    let mut session = ApproxSession::builder("artifacts").config(cfg).build().unwrap();
     session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap(); // warm
-    b.bench("api/eval_job_warm_b32", || {
+    b.bench("api/eval_job_warm", || {
         session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap()
     });
-    b.throughput(manifest.batch as f64, "images");
     let s = session.stats();
     println!(
-        "session stats: {} jobs, {} execs ({:.2}s), {} compiles ({:.2}s), {} cached executables",
+        "session stats: {} jobs, {} execs ({:.2}s), {} compiles ({:.2}s), {} cached plans",
         s.jobs_run,
         s.engine.exec_count,
         s.engine.exec_seconds,
@@ -143,5 +143,28 @@ fn main() {
         s.engine.compile_seconds,
         s.engine.cached_executables
     );
+
+    // PJRT section: benches the identical programs on the XLA path. This —
+    // and only this — skips when the client or artifacts are unavailable;
+    // the native numbers above have already been produced either way.
+    #[cfg(feature = "pjrt")]
+    {
+        match create_backend(BackendKind::Pjrt, "artifacts") {
+            Ok(mut pjrt) => {
+                if pjrt.manifest("resnet8").is_ok() {
+                    b.bench("pjrt/compile_cold/eval", || {
+                        let mut e2 = create_backend(BackendKind::Pjrt, "artifacts").unwrap();
+                        let m2 = e2.manifest("resnet8").unwrap();
+                        e2.warmup(&m2, "eval").unwrap();
+                    });
+                    bench_backend(&mut b, &mut *pjrt, "pjrt");
+                } else {
+                    println!("(pjrt: artifacts/ missing resnet8 — PJRT section skipped)");
+                }
+            }
+            Err(e) => println!("(pjrt backend unavailable: {e} — PJRT section skipped)"),
+        }
+    }
+
     b.finish();
 }

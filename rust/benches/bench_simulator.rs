@@ -6,12 +6,11 @@
 use agn_approx::benchkit::Bench;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
-use agn_approx::runtime::Manifest;
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
 use agn_approx::simulator::matmul::approx_matmul_naive;
 use agn_approx::simulator::{approx_matmul, exact_matmul, LutSet, SimNet};
 use agn_approx::tensor::TensorF;
 use agn_approx::util::rng::Pcg32;
-use std::path::Path;
 
 fn main() {
     let mut b = Bench::new("simulator");
@@ -38,8 +37,10 @@ fn main() {
         b.throughput((m * k * n) as f64 / 1e6, "M-MACs");
     }
 
-    // full-network forward (needs artifacts/)
-    if let Ok(manifest) = Manifest::load(Path::new("artifacts"), "resnet8") {
+    // full-network forward (synthetic manifest; no artifacts needed)
+    {
+        let backend = create_backend(BackendKind::Native, "artifacts").unwrap();
+        let manifest = backend.manifest("resnet8").expect("resnet8 manifest");
         let flat = manifest.load_init_params().expect("init params");
         let net = SimNet::new(&manifest, &flat).expect("simnet");
         let spec = DatasetSpec::synth_cifar(net.input_hw, 42);
@@ -61,16 +62,14 @@ fn main() {
             .map(|l| l.mults_per_image as f64)
             .sum::<f64>()
             * manifest.batch as f64;
-        b.bench("resnet8_forward_exact/batch32", || {
+        b.bench("resnet8_forward_exact/batch", || {
             net.forward(&x, &absmax, &LutSet::Exact, None)
         });
         b.throughput(macs / 1e6, "M-MACs");
-        b.bench("resnet8_forward_lut/batch32", || {
+        b.bench("resnet8_forward_lut/batch", || {
             net.forward(&x, &absmax, &LutSet::PerLayer(&luts), None)
         });
         b.throughput(macs / 1e6, "M-MACs");
-    } else {
-        println!("(artifacts/ missing — skipping full-network benches)");
     }
     b.finish();
 }

@@ -11,17 +11,15 @@ use agn_approx::errormodel::layer_error_map;
 use agn_approx::errormodel::model::{estimate_with_aggregates, row_aggregates};
 use agn_approx::matching::{self, collect_operands};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
-use agn_approx::runtime::Manifest;
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
 use agn_approx::simulator::{approx_matmul, LutSet, SimNet};
 use agn_approx::tensor::TensorF;
 use agn_approx::util::stats;
-use std::path::Path;
 
 fn main() {
-    let Ok(manifest) = Manifest::load(Path::new("artifacts"), "resnet8") else {
-        println!("(artifacts/ missing — run `make artifacts` first)");
-        return;
-    };
+    // synthetic resnet8 manifest: runs with or without artifacts/
+    let backend = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let manifest = backend.manifest("resnet8").expect("resnet8 manifest");
     let mut b = Bench::new("tables");
     let flat = manifest.load_init_params().expect("init");
     let net = SimNet::new(&manifest, &flat).expect("simnet");

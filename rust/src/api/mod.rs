@@ -6,10 +6,12 @@
 //! with structured inputs and outputs instead of one-shot print-to-stdout
 //! scripts:
 //!
-//! - [`ApproxSession`] — builder-constructed facade owning one PJRT
-//!   [`crate::runtime::Engine`], the synthetic datasets and the on-disk
+//! - [`ApproxSession`] — builder-constructed facade owning one execution
+//!   backend ([`crate::runtime::ExecBackend`]; native by default, PJRT
+//!   behind the `pjrt` feature), the synthetic datasets and the on-disk
 //!   trained-state cache. Reused across jobs, so each (model, program)
-//!   executable compiles once per process instead of once per experiment.
+//!   plan/executable compiles once per process instead of once per
+//!   experiment.
 //! - [`JobSpec`] — a typed description of every experiment the coordinator
 //!   can run (paper tables/figures plus pipeline-stage utilities).
 //! - [`JobResult`] — structured results (per-layer sigmas, matched
@@ -64,16 +66,15 @@ pub use crate::coordinator::report::{render, save_json, to_json};
 use std::path::{Path, PathBuf};
 
 /// The multiplier catalogs as a structured report — pure data; needs no
-/// session, no artifacts and no PJRT client (unlike
-/// [`ApproxSession::run`] with [`JobSpec::Catalog`], which shares the
-/// session's engine).
+/// session, no artifacts and no backend (unlike [`ApproxSession::run`]
+/// with [`JobSpec::Catalog`], which shares the session's backend).
 pub fn catalog() -> CatalogReport {
     crate::coordinator::experiments::catalog_job()
 }
 
 /// Where [`ApproxSession`] caches the QAT baseline for `model` trained for
-/// `qat_steps` at `seed` — for PJRT-free deployment paths that want to pick
-/// up session-trained weights without constructing an engine.
+/// `qat_steps` at `seed` — for deployment paths that want to pick up
+/// session-trained weights without constructing a backend.
 pub fn cached_baseline_path(artifacts: &Path, model: &str, qat_steps: usize, seed: u64) -> PathBuf {
     state_cache_path(
         &default_cache_dir(artifacts),

@@ -1,19 +1,19 @@
-//! The `ApproxSession` facade: one PJRT engine + per-model pipelines +
-//! the on-disk state cache, reused across jobs.
+//! The `ApproxSession` facade: one execution backend + per-model pipelines
+//! + the on-disk state cache, reused across jobs.
 
 use super::error::{AgnError, AgnResult};
 use super::job::{JobResult, JobSpec};
 use crate::coordinator::experiments;
 use crate::coordinator::pipeline::{default_cache_dir, Pipeline, RunConfig};
 use crate::datasets::DatasetCache;
-use crate::runtime::{Engine, EngineStats};
+use crate::runtime::{create_backend, BackendKind, EngineStats, ExecBackend};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 /// Aggregate accounting of a session, snapshot via [`ApproxSession::stats`].
 #[derive(Clone, Debug)]
 pub struct SessionStats {
-    /// Cumulative PJRT execute/compile counters of the shared engine.
+    /// Cumulative execute/compile counters of the shared backend.
     pub engine: EngineStats,
     /// Jobs completed through [`ApproxSession::run`].
     pub jobs_run: usize,
@@ -30,9 +30,17 @@ pub struct SessionBuilder {
     artifacts: PathBuf,
     cache_dir: Option<PathBuf>,
     cfg: RunConfig,
+    backend: BackendKind,
 }
 
 impl SessionBuilder {
+    /// Select the execution backend (default: [`BackendKind::Native`], the
+    /// pure-Rust path that needs no artifacts and no XLA library).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend = kind;
+        self
+    }
+
     /// Replace the whole run configuration (step counts, seeds, schedules).
     pub fn config(mut self, cfg: RunConfig) -> Self {
         self.cfg = cfg;
@@ -59,13 +67,14 @@ impl SessionBuilder {
         self
     }
 
-    /// Construct the session: builds the PJRT CPU client and creates the
-    /// cache directory. Model artifacts are loaded lazily per job.
+    /// Construct the session: builds the execution backend and creates the
+    /// cache directory. Model artifacts/manifests are loaded lazily per job.
     pub fn build(self) -> AgnResult<ApproxSession> {
-        let engine = Engine::new(&self.artifacts).map_err(|source| AgnError::Engine {
-            context: "creating PJRT client".into(),
-            source,
-        })?;
+        let engine =
+            create_backend(self.backend, &self.artifacts).map_err(|source| AgnError::Engine {
+                context: format!("constructing {} backend", self.backend),
+                source,
+            })?;
         let cache_dir = self
             .cache_dir
             .unwrap_or_else(|| default_cache_dir(&self.artifacts));
@@ -85,10 +94,10 @@ impl SessionBuilder {
     }
 }
 
-/// The single public entrypoint of the crate: owns one [`Engine`] (so PJRT
-/// executables compile once per process, not once per experiment), the
-/// synthetic datasets and the on-disk cache, and runs typed [`JobSpec`]s
-/// into structured [`JobResult`]s.
+/// The single public entrypoint of the crate: owns one [`ExecBackend`]
+/// (so program plans/executables compile once per process, not once per
+/// experiment), the synthetic datasets and the on-disk cache, and runs
+/// typed [`JobSpec`]s into structured [`JobResult`]s.
 ///
 /// ```no_run
 /// use agn_approx::api::{ApproxSession, JobSpec};
@@ -101,7 +110,7 @@ impl SessionBuilder {
 /// # Ok(()) }
 /// ```
 pub struct ApproxSession {
-    engine: Engine,
+    engine: Box<dyn ExecBackend>,
     artifacts: PathBuf,
     cache_dir: PathBuf,
     cfg: RunConfig,
@@ -119,6 +128,7 @@ impl ApproxSession {
             artifacts: artifacts.into(),
             cache_dir: None,
             cfg: RunConfig::default(),
+            backend: BackendKind::Native,
         }
     }
 
@@ -189,13 +199,13 @@ impl ApproxSession {
     }
 
     /// Composable low-level access: the per-model [`Pipeline`] (created and
-    /// cached on first use) together with the shared engine. Advanced
+    /// cached on first use) together with the shared backend. Advanced
     /// callers drive the paper stages directly; [`ApproxSession::run`] is
     /// the high-level path built on exactly this.
-    pub fn pipeline(&mut self, model: &str) -> AgnResult<(&mut Pipeline, &mut Engine)> {
+    pub fn pipeline(&mut self, model: &str) -> AgnResult<(&mut Pipeline, &mut dyn ExecBackend)> {
         if !self.pipelines.contains_key(model) {
             let pipe = Pipeline::with_cache_dir(
-                &self.engine,
+                &*self.engine,
                 model,
                 self.cfg.clone(),
                 &self.cache_dir,
@@ -204,12 +214,12 @@ impl ApproxSession {
             .map_err(|source| AgnError::Artifacts { model: model.to_string(), source })?;
             self.pipelines.insert(model.to_string(), pipe);
         }
-        Ok((self.pipelines.get_mut(model).unwrap(), &mut self.engine))
+        Ok((self.pipelines.get_mut(model).unwrap(), &mut *self.engine))
     }
 
-    /// Read-only engine access (platform name, manifest loading, stats).
-    pub fn engine(&self) -> &Engine {
-        &self.engine
+    /// Read-only backend access (platform name, manifest loading, stats).
+    pub fn engine(&self) -> &dyn ExecBackend {
+        &*self.engine
     }
 
     /// The artifact directory this session reads.

@@ -14,7 +14,7 @@ use crate::errormodel::model::row_aggregates;
 use crate::errormodel::{layer_error_map, mc};
 use crate::matching::{self, assignment_luts};
 use crate::multipliers::{build_layer_lut, signed_catalog, unsigned_catalog, Catalog};
-use crate::runtime::{Engine, LayerInfo};
+use crate::runtime::{ExecBackend, LayerInfo};
 use crate::search::EvalMode;
 use crate::simulator::{approx_matmul, LayerCapture, LutSet, SimNet};
 use crate::tensor::TensorF;
@@ -156,7 +156,7 @@ pub fn table1(session: &mut ApproxSession, mc_trials: usize) -> Result<Table1Rep
 /// evaluations Figure 4 needs (they cost another retrain).
 pub fn sweep_lambda(
     pipe: &mut Pipeline,
-    engine: &mut Engine,
+    engine: &mut dyn ExecBackend,
     catalog: &Catalog,
     lambda: f32,
     fig4_controls: bool,
@@ -308,7 +308,7 @@ pub fn energy_sweep(
 /// within the budget for each method that finds one.
 fn run_baselines(
     pipe: &mut Pipeline,
-    engine: &mut Engine,
+    engine: &mut dyn ExecBackend,
     baseline_top1: f64,
     budget_pp: f64,
 ) -> Result<Vec<MethodResult>> {
@@ -659,29 +659,21 @@ pub fn catalog_job() -> CatalogReport {
     CatalogReport { catalogs }
 }
 
-/// Artifact inventory + platform facts.
+/// Model inventory (on-disk artifacts + synthetic zoo) + platform facts.
 pub fn info_job(session: &ApproxSession) -> Result<InfoReport> {
     let platform = session.engine().platform();
     let mut models = Vec::new();
-    for entry in std::fs::read_dir(session.artifacts_dir())? {
-        let p = entry?.path();
-        if p.to_string_lossy().ends_with(".manifest.json") {
-            let model = p
-                .file_name()
-                .unwrap()
-                .to_string_lossy()
-                .replace(".manifest.json", "");
-            let m = session.engine().manifest(&model)?;
-            models.push(ModelInfo {
-                model: m.model.clone(),
-                arch: m.arch.clone(),
-                param_count: m.param_count,
-                num_layers: m.num_layers,
-                batch: m.batch,
-                input_shape: m.input_shape.clone(),
-                programs: m.programs.len(),
-            });
-        }
+    for model in session.engine().list_models() {
+        let m = session.engine().manifest(&model)?;
+        models.push(ModelInfo {
+            model: m.model.clone(),
+            arch: m.arch.clone(),
+            param_count: m.param_count,
+            num_layers: m.num_layers,
+            batch: m.batch,
+            input_shape: m.input_shape.clone(),
+            programs: m.programs.len(),
+        });
     }
     models.sort_by(|a, b| a.model.cmp(&b.model));
     Ok(InfoReport { platform, models })

@@ -3,15 +3,16 @@
 //! trained states so experiments compose without retraining from scratch.
 //!
 //! A `Pipeline` is per-model state (manifest, datasets, cache paths); the
-//! PJRT [`Engine`] is *not* owned here — it is passed into each stage so
-//! one engine (and its compiled-executable cache) can be shared across
-//! pipelines and jobs. [`crate::api::ApproxSession`] owns that pairing.
+//! execution backend ([`ExecBackend`]) is *not* owned here — it is passed
+//! into each stage so one backend (and its compiled-plan cache) can be
+//! shared across pipelines and jobs. [`crate::api::ApproxSession`] owns
+//! that pairing.
 
 use crate::datasets::{Dataset, DatasetCache, DatasetSpec, Split};
 use crate::errormodel::model::LayerOperands;
 use crate::matching::{self, MatchOutcome};
 use crate::multipliers::Catalog;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{ExecBackend, Manifest};
 use crate::search::{self, EvalMetrics, EvalMode, LrSchedule, TrainState};
 use crate::simulator::{accuracy, LutSet, SimNet};
 use crate::tensor::TensorF;
@@ -103,7 +104,7 @@ pub struct Pipeline {
 impl Pipeline {
     /// Per-model pipeline sharing `engine`'s artifact directory; the cache
     /// dir is derived from it (see [`default_cache_dir`]).
-    pub fn new(engine: &Engine, model: &str, cfg: RunConfig) -> Result<Pipeline> {
+    pub fn new(engine: &dyn ExecBackend, model: &str, cfg: RunConfig) -> Result<Pipeline> {
         let cache_dir = default_cache_dir(engine.artifacts_dir());
         Self::with_cache_dir(engine, model, cfg, &cache_dir, &mut DatasetCache::default())
     }
@@ -111,7 +112,7 @@ impl Pipeline {
     /// Like [`Pipeline::new`] with an explicit cache directory and a shared
     /// dataset cache (so several pipelines reuse one loaded dataset).
     pub fn with_cache_dir(
-        engine: &Engine,
+        engine: &dyn ExecBackend,
         model: &str,
         cfg: RunConfig,
         cache_dir: &Path,
@@ -165,7 +166,7 @@ impl Pipeline {
     // -- stages --------------------------------------------------------------
 
     /// QAT baseline parameters (cached across experiments).
-    pub fn baseline(&mut self, engine: &mut Engine) -> Result<TrainState> {
+    pub fn baseline(&mut self, engine: &mut dyn ExecBackend) -> Result<TrainState> {
         let tag = format!("qat{}", self.cfg.qat_steps);
         let path = self.cache_path(&tag);
         if let Some(flat) = self.load_vec(&path, self.manifest.param_count) {
@@ -187,7 +188,7 @@ impl Pipeline {
     }
 
     /// Calibration (frozen activation absmax + pre-activation std).
-    pub fn calibrate(&mut self, engine: &mut Engine, flat: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn calibrate(&mut self, engine: &mut dyn ExecBackend, flat: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
         let manifest = self.manifest.clone();
         search::calibrate(engine, &manifest, &self.train, flat, self.cfg.calib_batches)
     }
@@ -214,7 +215,7 @@ impl Pipeline {
     /// Cached per (lambda, steps).
     pub fn search_at(
         &mut self,
-        engine: &mut Engine,
+        engine: &mut dyn ExecBackend,
         base: &TrainState,
         lambda: f32,
     ) -> Result<TrainState> {
@@ -257,7 +258,7 @@ impl Pipeline {
     /// Behavioral retraining under an assignment's LUTs.
     pub fn retrain(
         &mut self,
-        engine: &mut Engine,
+        engine: &mut dyn ExecBackend,
         state: &mut TrainState,
         luts: &[Vec<i32>],
         act_scales: &[f32],
@@ -278,8 +279,8 @@ impl Pipeline {
         Ok(())
     }
 
-    /// PJRT evaluation on the validation split.
-    pub fn evaluate(&mut self, engine: &mut Engine, flat: &[f32], mode: EvalMode) -> Result<EvalMetrics> {
+    /// Backend evaluation on the validation split.
+    pub fn evaluate(&mut self, engine: &mut dyn ExecBackend, flat: &[f32], mode: EvalMode) -> Result<EvalMetrics> {
         let manifest = self.manifest.clone();
         search::evaluate(engine, &manifest, &self.val, flat, mode, self.cfg.eval_batches)
     }

@@ -2,30 +2,57 @@
 //!
 //! Production reproduction of **"Combining Gradients and Probabilities for
 //! Heterogeneous Approximation of Neural Networks"** (Trommer, Waschneck,
-//! Kumar — ICCAD 2022) as a three-layer Rust + JAX + Pallas system.
+//! Kumar — ICCAD 2022).
 //!
 //! The crate is the Layer-3 coordinator: it owns datasets, the gradient
 //! search driver, the probabilistic multiplier error model, the multiplier
 //! catalog, matching/energy accounting, the baselines and the job runners.
-//! Compute graphs (Layer 2, JAX) and kernels (Layer 1, Pallas) are
-//! AOT-compiled to HLO text by `python/compile/` and executed through
-//! [`runtime`] on the PJRT CPU client — Python never runs at run time.
+//! Model programs (`train_qat`, `train_agn`, `train_approx`, `eval`,
+//! `eval_agn`, `eval_approx`, `calibrate`) execute through a pluggable
+//! [`runtime::ExecBackend`]:
+//!
+//! * **native** (default) — pure Rust: quantized forward/backward through
+//!   [`simulator::train`], layer-LUT approximate matmuls through
+//!   [`simulator`] + [`multipliers::build_layer_lut`]. Needs no Python, no
+//!   XLA and no `artifacts/` directory — zoo models get in-memory
+//!   synthetic manifests ([`runtime::synthetic`]).
+//! * **pjrt** (cargo feature `pjrt`) — executes HLO-text artifacts
+//!   AOT-compiled by `python/compile/` on the PJRT CPU client. Python is
+//!   only needed at artifact-build time, never at run time; the native
+//!   backend needs it at no time at all.
 //!
 //! ## The session/job API
 //!
 //! [`api`] is the single public entrypoint. An [`api::ApproxSession`] owns
-//! one PJRT engine (compiled executables are cached per process, not per
-//! experiment), the synthetic datasets and the on-disk trained-state cache;
-//! typed [`api::JobSpec`]s run into structured [`api::JobResult`]s, and
-//! text/JSON renderings are views over those results:
+//! one execution backend (compiled program plans are cached per process,
+//! not per experiment), the synthetic datasets and the on-disk
+//! trained-state cache; typed [`api::JobSpec`]s run into structured
+//! [`api::JobResult`]s, and text/JSON renderings are views over those
+//! results:
 //!
 //! ```no_run
 //! use agn_approx::api::{ApproxSession, JobSpec};
 //!
 //! # fn main() -> Result<(), agn_approx::api::AgnError> {
+//! // Native backend by default: works in a fresh checkout, no artifacts.
 //! let mut session = ApproxSession::builder("artifacts").build()?;
 //! let result = session.run(JobSpec::Eval { model: "resnet8".into() })?;
 //! println!("{}", agn_approx::api::render(&result));
+//! # Ok(()) }
+//! ```
+//!
+//! Selecting a backend explicitly (the CLI flag `--backend native|pjrt`
+//! does exactly this):
+//!
+//! ```no_run
+//! use agn_approx::api::ApproxSession;
+//! use agn_approx::runtime::{BackendKind, ExecBackend as _};
+//!
+//! # fn main() -> Result<(), agn_approx::api::AgnError> {
+//! let session = ApproxSession::builder("artifacts")
+//!     .backend(BackendKind::Native)
+//!     .build()?;
+//! println!("platform: {}", session.engine().platform());
 //! # Ok(()) }
 //! ```
 //!
@@ -33,9 +60,10 @@
 //! is an implementation detail of the internals. Advanced callers can drop
 //! one level down via [`api::ApproxSession::pipeline`] and compose the
 //! paper stages (baseline → calibrate → search → match → retrain → eval)
-//! directly against the same shared engine and cache.
+//! directly against the same shared backend and cache.
 //!
-//! See DESIGN.md for the system inventory and the experiment index.
+//! See DESIGN.md for the system inventory and README.md for the quickstart
+//! and feature matrix.
 
 pub mod api;
 pub mod baselines;

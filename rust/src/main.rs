@@ -11,6 +11,7 @@
 
 use agn_approx::api::{AgnError, ApproxSession, JobResult, JobSpec, RunConfig, render, save_json};
 use agn_approx::coordinator::experiments;
+use agn_approx::runtime::BackendKind;
 use agn_approx::util::cli::Args;
 use std::path::PathBuf;
 
@@ -20,11 +21,20 @@ agn-approx — heterogeneous approximation of neural networks (ICCAD'22 repro)
 USAGE: agn-approx <command> [flags]
 
 Commands map 1:1 onto the library's typed job API: the CLI builds one
-ApproxSession (shared PJRT engine + dataset + state cache), runs a JobSpec,
-and prints the structured JobResult. In Rust, the same flow is:
+ApproxSession (shared execution backend + dataset + state cache), runs a
+JobSpec, and prints the structured JobResult. In Rust, the same flow is:
 
     let mut session = ApproxSession::builder(\"artifacts\").build()?;
     let result = session.run(JobSpec::Eval { model: \"resnet8\".into() })?;
+
+BACKENDS (--backend native|pjrt)
+  native  (default) pure-Rust execution: training, search, matching and
+          behavioral evaluation run in process. Needs no Python, no XLA
+          and no artifacts/ directory — zoo models (tinynet, resnet8/14/
+          20/32, vgg16) get in-memory synthetic manifests.
+  pjrt    executes the AOT-compiled HLO artifacts on the PJRT CPU client.
+          Requires building with `--features pjrt`, the xla_extension
+          native library, and `make artifacts` run beforehand.
 
 COMMANDS
   table1            error-model quality (Pearson / median rel. error)
@@ -37,10 +47,11 @@ COMMANDS
   search            one gradient-search run; prints learned sigma_l
   eval              evaluate the cached QAT baseline
   catalog           print the multiplier catalogs
-  info              list artifacts and manifest facts
+  info              list servable models and manifest facts
   help              this text
 
 COMMON FLAGS
+  --backend B          execution backend         [native]
   --artifacts DIR      artifact directory        [artifacts]
   --results DIR        JSON result directory     [results]
   --models a,b         model list                [command-specific]
@@ -48,7 +59,7 @@ COMMON FLAGS
   --qat-steps N        QAT baseline steps        [300 | 15000 with --paper]
   --search-steps N     gradient-search steps     [120 | 6000 with --paper]
   --retrain-steps N    behavioral retrain steps  [30 | 1500 with --paper]
-  --eval-batches N     eval batches (PJRT path)  [8]
+  --eval-batches N     eval batches              [8]
   --calib-batches N    calibration batches       [4]
   --k-samples N        error-model sample patches[512]
   --lambdas l1,l2,...  lambda sweep              [0,0.05,0.1,0.2,0.3,0.45,0.6]
@@ -69,6 +80,7 @@ const SWITCHES: &[&str] = &["paper", "no-baselines"];
 
 /// Every flag the CLI understands (typo guard; see `Args::warn_unknown`).
 const KNOWN_FLAGS: &[&str] = &[
+    "backend",
     "artifacts",
     "results",
     "models",
@@ -164,8 +176,15 @@ fn real_main() -> Result<(), AgnError> {
     }
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let results_dir = PathBuf::from(args.str_or("results", "results"));
+    let backend: BackendKind = args
+        .str_or("backend", "native")
+        .parse()
+        .map_err(AgnError::invalid_spec)?;
 
-    let mut session = ApproxSession::builder(&artifacts).config(run_config(&args)).build()?;
+    let mut session = ApproxSession::builder(&artifacts)
+        .config(run_config(&args))
+        .backend(backend)
+        .build()?;
     let print_stats = matches!(spec, JobSpec::Eval { .. });
     let result = session.run(spec)?;
     print!("{}", render(&result));

@@ -1,0 +1,176 @@
+//! The pluggable execution backend: everything the coordinator needs from
+//! "something that runs manifest programs" — compile/execute/stats over
+//! [`Manifest`] + [`Value`].
+//!
+//! Two implementations exist:
+//! * [`crate::runtime::NativeBackend`] — pure Rust, always available. Runs
+//!   the manifest programs through the in-tree simulator/trainer and
+//!   synthesizes in-memory manifests for the model zoo when `artifacts/`
+//!   is absent.
+//! * [`crate::runtime::Engine`] (cargo feature `pjrt`) — the PJRT/XLA
+//!   engine executing AOT-compiled HLO text artifacts.
+
+use super::manifest::Manifest;
+use super::value::Value;
+use anyhow::Result;
+use std::path::Path;
+
+/// Execution/compilation accounting, snapshot via [`ExecBackend::stats`].
+///
+/// `compile_count` increments once per freshly-compiled (model, program)
+/// executable/plan; a warm cache hit leaves it untouched, so
+/// `compile_count == cached_executables` holds exactly when every
+/// executable was compiled once.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    pub exec_count: u64,
+    pub exec_seconds: f64,
+    pub compile_count: u64,
+    pub compile_seconds: f64,
+    pub cached_executables: usize,
+}
+
+/// A backend that can load model manifests and execute their programs.
+///
+/// The program vocabulary is fixed by `python/compile/train.py` (and
+/// mirrored natively): `train_qat`, `train_agn`, `train_approx`, `eval`,
+/// `eval_agn`, `eval_approx`, `calibrate`. Inputs/outputs are host
+/// [`Value`]s validated against the manifest's program signatures.
+pub trait ExecBackend {
+    /// Stable backend identifier (`"native"` / `"pjrt"`).
+    fn kind(&self) -> BackendKind;
+
+    /// Human-readable platform string (e.g. `"native-cpu"`, `"cpu"`).
+    fn platform(&self) -> String;
+
+    /// The artifact directory this backend loads manifests from.
+    fn artifacts_dir(&self) -> &Path;
+
+    /// Load a model manifest. The native backend falls back to an
+    /// in-memory synthetic manifest for known zoo models when the artifact
+    /// directory has none.
+    fn manifest(&self, model: &str) -> Result<Manifest>;
+
+    /// Models this backend can serve: manifests found on disk plus (native
+    /// only) the synthetic zoo.
+    fn list_models(&self) -> Vec<String>;
+
+    /// Pre-compile a program (front-load compile cost before timing).
+    fn warmup(&mut self, manifest: &Manifest, program: &str) -> Result<()>;
+
+    /// Execute `program` with host values; returns host values.
+    fn run(&mut self, manifest: &Manifest, program: &str, inputs: &[Value])
+        -> Result<Vec<Value>>;
+
+    /// Snapshot of the cumulative execute/compile accounting.
+    fn stats(&self) -> EngineStats;
+}
+
+/// Which backend implementation to construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust execution through the in-tree simulator/trainer.
+    Native,
+    /// PJRT/XLA execution of AOT HLO artifacts (cargo feature `pjrt`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<BackendKind, String> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend {other:?} (expected native|pjrt)")),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Validate host inputs against a manifest program signature — the shared
+/// contract check of every [`ExecBackend::run`] implementation, so the
+/// backends cannot diverge in arity/dtype/shape error behavior.
+pub fn validate_inputs(manifest: &Manifest, program: &str, inputs: &[Value]) -> Result<()> {
+    let info = manifest.program(program)?;
+    anyhow::ensure!(
+        inputs.len() == info.inputs.len(),
+        "{}::{program}: expected {} inputs, got {}",
+        manifest.model,
+        info.inputs.len(),
+        inputs.len()
+    );
+    for (i, (v, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
+        anyhow::ensure!(
+            v.dtype() == spec.dtype && v.shape() == spec.shape.as_slice(),
+            "{}::{program} input {i}: expected {} {:?}, got {} {:?}",
+            manifest.model,
+            spec.dtype,
+            spec.shape,
+            v.dtype(),
+            v.shape()
+        );
+    }
+    Ok(())
+}
+
+/// Construct a backend of the requested kind over an artifact directory.
+///
+/// `BackendKind::Pjrt` fails with a readable error unless the crate was
+/// built with `--features pjrt` *and* a PJRT client can be constructed.
+pub fn create_backend(
+    kind: BackendKind,
+    artifacts_dir: impl Into<std::path::PathBuf>,
+) -> Result<Box<dyn ExecBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::new(artifacts_dir))),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(super::engine::Engine::new(artifacts_dir)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => anyhow::bail!(
+            "backend `pjrt` requires building with `--features pjrt` \
+             (and the xla_extension native library); use `--backend native`"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_round_trips() {
+        for kind in [BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(kind.as_str().parse::<BackendKind>().unwrap(), kind);
+        }
+        assert!("metal".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn native_backend_always_constructs() {
+        let b = create_backend(BackendKind::Native, "artifacts").unwrap();
+        assert_eq!(b.kind(), BackendKind::Native);
+        assert_eq!(b.stats(), EngineStats::default());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let err = create_backend(BackendKind::Pjrt, "artifacts").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

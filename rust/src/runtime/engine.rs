@@ -6,27 +6,13 @@
 //! reassigns instruction ids, which is what makes jax>=0.5 output loadable
 //! on xla_extension 0.5.1 — DESIGN.md).
 
+use super::backend::{BackendKind, EngineStats, ExecBackend};
 use super::manifest::Manifest;
 use super::value::Value;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
-
-/// Execution/compilation accounting, snapshot via [`Engine::stats`].
-///
-/// `compile_count` increments once per freshly-compiled (model, program)
-/// executable; a warm cache hit leaves it untouched, so
-/// `compile_count == cached_executables` holds exactly when every
-/// executable was compiled once.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct EngineStats {
-    pub exec_count: u64,
-    pub exec_seconds: f64,
-    pub compile_count: u64,
-    pub compile_seconds: f64,
-    pub cached_executables: usize,
-}
 
 pub struct Engine {
     client: xla::PjRtClient,
@@ -120,25 +106,8 @@ impl Engine {
         program: &str,
         inputs: &[Value],
     ) -> Result<Vec<Value>> {
+        super::backend::validate_inputs(manifest, program, inputs)?;
         let info = manifest.program(program)?.clone();
-        anyhow::ensure!(
-            inputs.len() == info.inputs.len(),
-            "{}::{program}: expected {} inputs, got {}",
-            manifest.model,
-            info.inputs.len(),
-            inputs.len()
-        );
-        for (i, (v, spec)) in inputs.iter().zip(&info.inputs).enumerate() {
-            anyhow::ensure!(
-                v.dtype() == spec.dtype && v.shape() == spec.shape.as_slice(),
-                "{}::{program} input {i}: expected {} {:?}, got {} {:?}",
-                manifest.model,
-                spec.dtype,
-                spec.shape,
-                v.dtype(),
-                v.shape()
-            );
-        }
         let literals: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
         let exe = self.executable(manifest, program)?;
         let t0 = Instant::now();
@@ -170,6 +139,45 @@ impl Engine {
             .zip(&info.outputs)
             .map(|(lit, spec)| from_literal(&lit, spec.dtype.as_str(), &spec.shape))
             .collect()
+    }
+}
+
+impl ExecBackend for Engine {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+
+    fn platform(&self) -> String {
+        Engine::platform(self)
+    }
+
+    fn artifacts_dir(&self) -> &Path {
+        Engine::artifacts_dir(self)
+    }
+
+    fn manifest(&self, model: &str) -> Result<Manifest> {
+        Engine::manifest(self, model)
+    }
+
+    fn list_models(&self) -> Vec<String> {
+        super::manifest::list_disk_models(&self.artifacts_dir)
+    }
+
+    fn warmup(&mut self, manifest: &Manifest, program: &str) -> Result<()> {
+        Engine::warmup(self, manifest, program)
+    }
+
+    fn run(
+        &mut self,
+        manifest: &Manifest,
+        program: &str,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>> {
+        Engine::run(self, manifest, program, inputs)
+    }
+
+    fn stats(&self) -> EngineStats {
+        Engine::stats(self)
     }
 }
 

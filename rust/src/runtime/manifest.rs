@@ -69,11 +69,38 @@ pub struct Manifest {
     pub layers: Vec<LayerInfo>,
     pub programs: std::collections::BTreeMap<String, ProgramInfo>,
     pub init_params_file: String,
+    /// In-memory init parameters (synthetic manifests); file-backed
+    /// manifests leave this `None` and read `init_params_file` instead.
+    /// `Arc` keeps the frequent `Manifest::clone()`s in the pipeline from
+    /// copying the whole parameter vector.
+    pub init_params: Option<std::sync::Arc<Vec<f32>>>,
+}
+
+/// Manifest file path for `model` under `artifacts_dir`.
+pub fn manifest_path(artifacts_dir: &Path, model: &str) -> PathBuf {
+    artifacts_dir.join(format!("{model}.manifest.json"))
+}
+
+/// Model names with a manifest file in `artifacts_dir`, sorted. Missing or
+/// unreadable directories yield an empty list (callers decide whether that
+/// is an error).
+pub fn list_disk_models(artifacts_dir: &Path) -> Vec<String> {
+    let mut models = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(artifacts_dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().to_string();
+            if let Some(model) = name.strip_suffix(".manifest.json") {
+                models.push(model.to_string());
+            }
+        }
+    }
+    models.sort();
+    models
 }
 
 impl Manifest {
     pub fn load(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
-        let path = artifacts_dir.join(format!("{model}.manifest.json"));
+        let path = manifest_path(artifacts_dir, model);
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts MODELS={model}`?)"))?;
         let v = json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
@@ -162,6 +189,7 @@ impl Manifest {
             layers,
             programs,
             init_params_file: v.req("init_params")?.as_str().unwrap_or_default().to_string(),
+            init_params: None,
         })
     }
 
@@ -179,8 +207,13 @@ impl Manifest {
         Ok(&flat[l.offset..l.offset + l.size()])
     }
 
-    /// Load the initial flat parameter vector exported at AOT time.
+    /// Load the initial flat parameter vector: the in-memory copy for
+    /// synthetic manifests, the AOT-exported file otherwise.
     pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        if let Some(p) = &self.init_params {
+            anyhow::ensure!(p.len() == self.param_count, "init params size mismatch");
+            return Ok(p.as_ref().clone());
+        }
         let path = self.dir.join(&self.init_params_file);
         let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
         anyhow::ensure!(bytes.len() == self.param_count * 4, "init params size mismatch");

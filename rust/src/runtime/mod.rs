@@ -1,10 +1,20 @@
-//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the CPU
-//! PJRT client. This is the only place the `xla` crate is touched.
+//! Execution runtime: the pluggable [`ExecBackend`] trait, the pure-Rust
+//! [`NativeBackend`] (always available), and the PJRT/XLA [`Engine`]
+//! (cargo feature `pjrt`). Manifests and host [`Value`]s are shared by all
+//! backends; synthetic in-memory manifests make the native path work
+//! without an `artifacts/` directory.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod native;
+pub mod synthetic;
 pub mod value;
 
-pub use engine::{Engine, EngineStats};
+pub use backend::{create_backend, BackendKind, EngineStats, ExecBackend};
+#[cfg(feature = "pjrt")]
+pub use engine::Engine;
 pub use manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
+pub use native::NativeBackend;
 pub use value::Value;

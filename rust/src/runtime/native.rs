@@ -1,0 +1,478 @@
+//! The pure-Rust execution backend: runs the manifest programs through the
+//! in-tree trainer/simulator ([`crate::simulator::train`]). No Python, no
+//! XLA, no `artifacts/` directory required — unknown-on-disk zoo models get
+//! in-memory synthetic manifests ([`super::synthetic`]).
+//!
+//! "Compilation" here is plan construction: resolving the program name,
+//! checking the manifest declares it, and validating that the architecture's
+//! op topology builds. Plans are cached per (model, program) so the
+//! compile-once accounting ([`EngineStats`]) behaves exactly like the PJRT
+//! engine's executable cache — the session-level compile-once regression
+//! holds on either backend.
+
+use super::backend::{BackendKind, EngineStats, ExecBackend};
+use super::manifest::Manifest;
+use super::synthetic;
+use super::value::Value;
+use crate::simulator::train::{self, Mode, TrainNet};
+use crate::tensor::TensorF;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ProgramKind {
+    Eval,
+    EvalAgn,
+    EvalApprox,
+    TrainQat,
+    TrainAgn,
+    TrainApprox,
+    Calibrate,
+}
+
+impl ProgramKind {
+    fn parse(name: &str) -> Result<ProgramKind> {
+        Ok(match name {
+            "eval" => ProgramKind::Eval,
+            "eval_agn" => ProgramKind::EvalAgn,
+            "eval_approx" => ProgramKind::EvalApprox,
+            "train_qat" => ProgramKind::TrainQat,
+            "train_agn" => ProgramKind::TrainAgn,
+            "train_approx" => ProgramKind::TrainApprox,
+            "calibrate" => ProgramKind::Calibrate,
+            other => anyhow::bail!("native backend has no program {other:?}"),
+        })
+    }
+}
+
+pub struct NativeBackend {
+    artifacts_dir: PathBuf,
+    plans: HashMap<String, ProgramKind>,
+    exec_seconds: f64,
+    exec_count: u64,
+    compile_seconds: f64,
+    compile_count: u64,
+}
+
+impl NativeBackend {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> NativeBackend {
+        NativeBackend {
+            artifacts_dir: artifacts_dir.into(),
+            plans: HashMap::new(),
+            exec_seconds: 0.0,
+            exec_count: 0,
+            compile_seconds: 0.0,
+            compile_count: 0,
+        }
+    }
+
+    /// Resolve (or fetch the cached) plan for (manifest, program).
+    fn plan(&mut self, manifest: &Manifest, program: &str) -> Result<ProgramKind> {
+        let key = format!("{}::{}", manifest.model, program);
+        if let Some(&kind) = self.plans.get(&key) {
+            return Ok(kind);
+        }
+        let t0 = Instant::now();
+        manifest.program(program)?; // the manifest must declare it
+        let kind = ProgramKind::parse(program)?;
+        // validate the topology once per (model, program), like an AOT compile
+        crate::simulator::net::build_ops(&manifest.arch, &manifest.layers)?;
+        self.compile_seconds += t0.elapsed().as_secs_f64();
+        self.compile_count += 1;
+        log::debug!("native: planned {key}");
+        self.plans.insert(key, kind);
+        Ok(kind)
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    fn manifest(&self, model: &str) -> Result<Manifest> {
+        // synthesize only when no manifest file exists at all — a present
+        // but unreadable/corrupt artifact must surface its error, not be
+        // silently replaced by the synthetic toy model
+        if !super::manifest::manifest_path(&self.artifacts_dir, model).exists()
+            && synthetic::is_known(model)
+        {
+            log::debug!("native: no on-disk manifest for {model}; synthesizing");
+            return synthetic::manifest(&self.artifacts_dir, model);
+        }
+        Manifest::load(&self.artifacts_dir, model)
+    }
+
+    fn list_models(&self) -> Vec<String> {
+        let mut models: Vec<String> = synthetic::MODELS.iter().map(|m| m.to_string()).collect();
+        models.extend(super::manifest::list_disk_models(&self.artifacts_dir));
+        models.sort();
+        models.dedup();
+        models
+    }
+
+    fn warmup(&mut self, manifest: &Manifest, program: &str) -> Result<()> {
+        self.plan(manifest, program).map(|_| ())
+    }
+
+    fn run(
+        &mut self,
+        manifest: &Manifest,
+        program: &str,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>> {
+        super::backend::validate_inputs(manifest, program, inputs)?;
+        let kind = self.plan(manifest, program)?;
+        let t0 = Instant::now();
+        let out = execute(manifest, kind, inputs);
+        self.exec_seconds += t0.elapsed().as_secs_f64();
+        self.exec_count += 1;
+        out
+    }
+
+    fn stats(&self) -> EngineStats {
+        EngineStats {
+            exec_count: self.exec_count,
+            exec_seconds: self.exec_seconds,
+            compile_count: self.compile_count,
+            compile_seconds: self.compile_seconds,
+            cached_executables: self.plans.len(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// program bodies
+
+fn tensor_input(v: &Value) -> Result<TensorF> {
+    Ok(TensorF::from_vec(v.shape(), v.as_f32()?.to_vec()))
+}
+
+fn scalar_input(v: &Value) -> Result<f32> {
+    let d = v.as_f32()?;
+    d.first().copied().ok_or_else(|| anyhow!("empty scalar input"))
+}
+
+fn seed_input(v: &Value) -> Result<u64> {
+    match v {
+        Value::U32 { data, .. } if data.len() == 2 => {
+            Ok(((data[0] as u64) << 32) | data[1] as u64)
+        }
+        _ => Err(anyhow!("seed input must be uint32[2]")),
+    }
+}
+
+fn labels_input(v: &Value) -> Result<Vec<i32>> {
+    Ok(v.as_i32()?.to_vec())
+}
+
+fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<Vec<Value>> {
+    match kind {
+        ProgramKind::Eval => {
+            let flat = inputs[0].as_f32()?;
+            let x = tensor_input(&inputs[1])?;
+            let y = labels_input(&inputs[2])?;
+            let net = TrainNet::new(manifest, flat)?;
+            let pass = train::forward(&net, &x, &Mode::Qat);
+            let (loss, _) = train::softmax_xent(&pass.logits, &y);
+            Ok(vec![Value::vec_f32(train::metrics3(&pass.logits, &y, loss))])
+        }
+        ProgramKind::EvalAgn => {
+            let flat = inputs[0].as_f32()?;
+            let sigmas = inputs[1].as_f32()?;
+            let x = tensor_input(&inputs[2])?;
+            let y = labels_input(&inputs[3])?;
+            let seed = seed_input(&inputs[4])?;
+            let net = TrainNet::new(manifest, flat)?;
+            let pass = train::forward(&net, &x, &Mode::Agn { sigmas, seed });
+            let (loss, _) = train::softmax_xent(&pass.logits, &y);
+            Ok(vec![Value::vec_f32(train::metrics3(&pass.logits, &y, loss))])
+        }
+        ProgramKind::EvalApprox => {
+            let flat = inputs[0].as_f32()?;
+            let x = tensor_input(&inputs[1])?;
+            let y = labels_input(&inputs[2])?;
+            let luts = inputs[3].as_i32()?;
+            let act_scales = inputs[4].as_f32()?;
+            let net = TrainNet::new(manifest, flat)?;
+            let pass = train::forward(&net, &x, &Mode::Approx { luts, act_scales });
+            let (loss, _) = train::softmax_xent(&pass.logits, &y);
+            Ok(vec![Value::vec_f32(train::metrics3(&pass.logits, &y, loss))])
+        }
+        ProgramKind::Calibrate => {
+            let flat = inputs[0].as_f32()?;
+            let x = tensor_input(&inputs[1])?;
+            let y = labels_input(&inputs[2])?;
+            let net = TrainNet::new(manifest, flat)?;
+            let pass = train::forward(&net, &x, &Mode::Calib);
+            let (loss, _) = train::softmax_xent(&pass.logits, &y);
+            Ok(vec![
+                Value::vec_f32(pass.absmax.clone()),
+                Value::vec_f32(pass.ystd.clone()),
+                Value::vec_f32(train::metrics3(&pass.logits, &y, loss)),
+            ])
+        }
+        ProgramKind::TrainQat => {
+            let mut flat = inputs[0].as_f32()?.to_vec();
+            let mut mom = inputs[1].as_f32()?.to_vec();
+            let x = tensor_input(&inputs[2])?;
+            let y = labels_input(&inputs[3])?;
+            let lr = scalar_input(&inputs[4])?;
+            let net = TrainNet::new(manifest, &flat)?;
+            let pass = train::forward(&net, &x, &Mode::Qat);
+            let (loss, dl) = train::softmax_xent(&pass.logits, &y);
+            let grads = train::backward(&net, &pass, &dl);
+            train::sgd_update(&mut flat, &mut mom, &grads.flat, lr);
+            let metrics = train::metrics3(&pass.logits, &y, loss);
+            Ok(vec![Value::vec_f32(flat), Value::vec_f32(mom), Value::vec_f32(metrics)])
+        }
+        ProgramKind::TrainAgn => {
+            let mut flat = inputs[0].as_f32()?.to_vec();
+            let mut mom = inputs[1].as_f32()?.to_vec();
+            let mut sig = inputs[2].as_f32()?.to_vec();
+            let mut sig_mom = inputs[3].as_f32()?.to_vec();
+            let x = tensor_input(&inputs[4])?;
+            let y = labels_input(&inputs[5])?;
+            let seed = seed_input(&inputs[6])?;
+            let lr = scalar_input(&inputs[7])?;
+            let lam = scalar_input(&inputs[8])?;
+            let sigma_max = scalar_input(&inputs[9])?;
+            let net = TrainNet::new(manifest, &flat)?;
+            let pass = train::forward(&net, &x, &Mode::Agn { sigmas: &sig, seed });
+            let (task, dl) = train::softmax_xent(&pass.logits, &y);
+            let grads = train::backward(&net, &pass, &dl);
+            let ln = train::noise_loss(&sig, &net.rel_costs, sigma_max);
+            let gln = train::noise_loss_grad(&sig, &net.rel_costs, sigma_max);
+            let gsig: Vec<f32> = grads
+                .sigmas
+                .iter()
+                .zip(&gln)
+                .map(|(&gt, &gn)| gt + lam * gn)
+                .collect();
+            let total = task + lam * ln;
+            train::sgd_update(&mut flat, &mut mom, &grads.flat, lr);
+            train::sgd_update(&mut sig, &mut sig_mom, &gsig, lr);
+            let metrics = vec![
+                total,
+                task,
+                ln,
+                train::correct_count(&pass.logits, &y) as f32,
+                train::topk_correct_count(&pass.logits, &y, train::TOPK) as f32,
+            ];
+            Ok(vec![
+                Value::vec_f32(flat),
+                Value::vec_f32(mom),
+                Value::vec_f32(sig),
+                Value::vec_f32(sig_mom),
+                Value::vec_f32(metrics),
+            ])
+        }
+        ProgramKind::TrainApprox => {
+            let mut flat = inputs[0].as_f32()?.to_vec();
+            let mut mom = inputs[1].as_f32()?.to_vec();
+            let x = tensor_input(&inputs[2])?;
+            let y = labels_input(&inputs[3])?;
+            let lr = scalar_input(&inputs[4])?;
+            let luts = inputs[5].as_i32()?;
+            let act_scales = inputs[6].as_f32()?;
+            let net = TrainNet::new(manifest, &flat)?;
+            let pass = train::forward(&net, &x, &Mode::Approx { luts, act_scales });
+            let (loss, dl) = train::softmax_xent(&pass.logits, &y);
+            let grads = train::backward(&net, &pass, &dl);
+            train::sgd_update(&mut flat, &mut mom, &grads.flat, lr);
+            let metrics = train::metrics3(&pass.logits, &y, loss);
+            Ok(vec![Value::vec_f32(flat), Value::vec_f32(mom), Value::vec_f32(metrics)])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{Dataset, DatasetSpec, Split};
+    use crate::multipliers::{build_layer_lut, unsigned_catalog};
+    use crate::quant;
+    use crate::simulator::{accuracy, LutSet, SimNet};
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new("artifacts")
+    }
+
+    fn batch(manifest: &Manifest) -> (Value, Value, Vec<f32>, Vec<i32>) {
+        let spec = DatasetSpec::synth_cifar(
+            (manifest.input_shape[0], manifest.input_shape[1]),
+            13,
+        );
+        let data = Dataset::load(&spec, Split::Val);
+        let (xs, ys) = data.eval_batch(manifest.batch, 0);
+        let xv = Value::f32(
+            &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+            xs.clone(),
+        );
+        let yv = Value::i32(&[manifest.batch], ys.clone());
+        (xv, yv, xs, ys)
+    }
+
+    #[test]
+    fn synthesizes_manifest_when_artifacts_missing() {
+        let b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        assert_eq!(m.model, "tinynet");
+        assert!(m.init_params.is_some() || m.dir.join(&m.init_params_file).exists());
+        assert!(b.manifest("no_such_model").is_err());
+        assert!(b.list_models().contains(&"resnet8".to_string()));
+    }
+
+    #[test]
+    fn eval_program_runs_and_counts_stats() {
+        let mut b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        let flat = m.load_init_params().unwrap();
+        let (xv, yv, _, _) = batch(&m);
+        let out = b
+            .run(&m, "eval", &[Value::vec_f32(flat), xv, yv])
+            .unwrap();
+        let metrics = out[0].as_f32().unwrap();
+        assert!(metrics[0] > 0.0 && metrics[0].is_finite());
+        assert!(metrics[2] >= metrics[1]);
+        let s = b.stats();
+        assert_eq!(s.compile_count, 1);
+        assert_eq!(s.cached_executables, 1);
+        assert_eq!(s.exec_count, 1);
+    }
+
+    #[test]
+    fn compile_once_accounting_on_reuse() {
+        let mut b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        let flat = m.load_init_params().unwrap();
+        let (xv, yv, _, _) = batch(&m);
+        for _ in 0..3 {
+            b.run(&m, "eval", &[Value::vec_f32(flat.clone()), xv.clone(), yv.clone()])
+                .unwrap();
+        }
+        let s = b.stats();
+        assert_eq!(s.compile_count, 1, "plan must be cached");
+        assert_eq!(s.exec_count, 3);
+        assert_eq!(s.compile_count as usize, s.cached_executables);
+    }
+
+    #[test]
+    fn input_validation_fails_fast() {
+        let mut b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        let err = b.run(&m, "eval", &[Value::scalar_f32(0.0)]).unwrap_err();
+        assert!(err.to_string().contains("expected"), "{err}");
+        assert!(b.run(&m, "nonexistent", &[]).is_err());
+    }
+
+    #[test]
+    fn eval_approx_parity_with_simnet() {
+        // backend-parity: the native eval_approx program must agree with a
+        // direct SimNet LUT forward on the same operands and scales
+        let mut b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        let flat = m.load_init_params().unwrap();
+        let (xv, yv, xs, ys) = batch(&m);
+
+        let absmax: Vec<f32> = {
+            let out = b
+                .run(&m, "calibrate", &[Value::vec_f32(flat.clone()), xv.clone(), yv.clone()])
+                .unwrap();
+            out[0].as_f32().unwrap().to_vec()
+        };
+        let scales: Vec<f32> = m
+            .layers
+            .iter()
+            .zip(&absmax)
+            .map(|(l, &am)| {
+                if l.act_signed {
+                    quant::act_scale_signed(am)
+                } else {
+                    quant::act_scale(am)
+                }
+            })
+            .collect();
+        let cat = unsigned_catalog();
+        let inst = cat.get("mul8u_trc4").unwrap();
+        let luts: Vec<Vec<i32>> =
+            m.layers.iter().map(|l| build_layer_lut(inst, l.act_signed)).collect();
+        let mut flat_luts = Vec::with_capacity(m.num_layers * 65536);
+        for l in &luts {
+            flat_luts.extend_from_slice(l);
+        }
+
+        let out = b
+            .run(
+                &m,
+                "eval_approx",
+                &[
+                    Value::vec_f32(flat.clone()),
+                    xv,
+                    yv,
+                    Value::i32(&[m.num_layers, 65536], flat_luts),
+                    Value::vec_f32(scales),
+                ],
+            )
+            .unwrap();
+        let metrics = out[0].as_f32().unwrap();
+
+        let net = SimNet::new(&m, &flat).unwrap();
+        let x = TensorF::from_vec(
+            &[m.batch, m.input_shape[0], m.input_shape[1], 3],
+            xs,
+        );
+        let logits = net.forward(&x, &absmax, &LutSet::PerLayer(&luts), None);
+        let (top1, top5) = accuracy(&logits, &ys, 5);
+        assert!(
+            (metrics[1] as i64 - top1 as i64).abs() <= 1,
+            "top-1 native program {} vs SimNet {top1}",
+            metrics[1]
+        );
+        assert!(
+            (metrics[2] as i64 - top5 as i64).abs() <= 1,
+            "top-5 native program {} vs SimNet {top5}",
+            metrics[2]
+        );
+    }
+
+    #[test]
+    fn train_qat_one_step_changes_params_and_is_deterministic() {
+        let mut b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        let flat = m.load_init_params().unwrap();
+        let zeros = vec![0f32; flat.len()];
+        let (xv, yv, _, _) = batch(&m);
+        let run = |b: &mut NativeBackend| {
+            b.run(
+                &m,
+                "train_qat",
+                &[
+                    Value::vec_f32(flat.clone()),
+                    Value::vec_f32(zeros.clone()),
+                    xv.clone(),
+                    yv.clone(),
+                    Value::scalar_f32(0.05),
+                ],
+            )
+            .unwrap()
+        };
+        let a = run(&mut b);
+        let b2 = run(&mut b);
+        let fa = a[0].as_f32().unwrap();
+        let fb = b2[0].as_f32().unwrap();
+        assert_eq!(fa, fb, "native training must be deterministic");
+        assert_ne!(fa, flat.as_slice(), "params must move");
+        assert!(fa.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,352 @@
+//! In-memory synthetic manifests for the model zoo.
+//!
+//! When `artifacts/` has no AOT manifest for a model, the native backend
+//! synthesizes one: the same layer tape the Python AOT pipeline would emit
+//! (`python/compile/models.py`), with deterministic He-normal init
+//! parameters generated in process. No files are read or written — this is
+//! what makes the default-feature tier-1 gate (`cargo test -q`) runnable on
+//! a machine that has never executed the Python side.
+//!
+//! Model sizes are scaled for the single-core CPU testbed (DESIGN.md
+//! §Substitutions): 8x8 inputs for the ResNet family, 16x16 for the VGG16
+//! stand-in, batch 16 — the same role CIFAR-sized synthetic data plays for
+//! the paper's CIFAR-10/Tiny-ImageNet experiments.
+
+use super::manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Batch size of every synthetic manifest.
+pub const BATCH: usize = 16;
+
+/// Models the native backend can synthesize manifests for.
+pub const MODELS: &[&str] = &[
+    "tinynet",
+    "resnet8",
+    "resnet14",
+    "resnet20",
+    "resnet32",
+    "vgg16",
+    "vgg16_signed",
+];
+
+pub fn is_known(model: &str) -> bool {
+    MODELS.contains(&model)
+}
+
+/// Synthesize the manifest (layers, leaves, program signatures, in-memory
+/// init parameters) for `model`. Deterministic per model name.
+pub fn manifest(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
+    enum Family {
+        Tiny,
+        Resnet(usize),
+        Vgg,
+    }
+    // single source of truth per model: family + arch tag + shape facts
+    let (family, arch, hw, classes, act_signed) = match model {
+        "tinynet" => (Family::Tiny, "tinynet", (8, 8), 10, false),
+        "resnet8" => (Family::Resnet(1), "resnet8", (8, 8), 10, false),
+        "resnet14" => (Family::Resnet(2), "resnet14", (8, 8), 10, false),
+        "resnet20" => (Family::Resnet(3), "resnet20", (8, 8), 10, false),
+        "resnet32" => (Family::Resnet(5), "resnet32", (8, 8), 10, false),
+        "vgg16" => (Family::Vgg, "vgg16", (16, 16), 20, false),
+        "vgg16_signed" => (Family::Vgg, "vgg16", (16, 16), 20, true),
+        other => bail!("no synthetic manifest for model {other:?} (have {MODELS:?})"),
+    };
+    let mut b = Builder::new(model);
+    match family {
+        Family::Tiny => b.tinynet(hw, classes, act_signed),
+        Family::Resnet(n) => b.resnet(n, hw, classes, act_signed),
+        Family::Vgg => b.vgg(hw, classes, act_signed),
+    }
+    let num_layers = b.layers.len();
+    let param_count = b.init.len();
+    let programs = program_signatures(param_count, num_layers, hw);
+    Ok(Manifest {
+        dir: artifacts_dir.to_path_buf(),
+        model: model.to_string(),
+        arch: arch.to_string(),
+        act_signed,
+        batch: BATCH,
+        input_shape: vec![hw.0, hw.1, 3],
+        classes,
+        param_count,
+        num_layers,
+        leaves: b.leaves,
+        layers: b.layers,
+        programs,
+        init_params_file: format!("<synthetic:{model}>"),
+        init_params: Some(std::sync::Arc::new(b.init)),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// architecture builders
+
+struct Builder {
+    layers: Vec<LayerInfo>,
+    leaves: Vec<LeafInfo>,
+    init: Vec<f32>,
+    rng: Pcg32,
+}
+
+impl Builder {
+    fn new(model: &str) -> Builder {
+        // FNV-1a over the model name: stable per-model init stream.
+        let mut h = 0xcbf29ce484222325u64;
+        for &byte in model.as_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Builder {
+            layers: Vec::new(),
+            leaves: Vec::new(),
+            init: Vec::new(),
+            rng: Pcg32::new(h, 0x5e_117_17),
+        }
+    }
+
+    fn leaf(&mut self, path: String, shape: Vec<usize>, values: Vec<f32>) {
+        debug_assert_eq!(shape.iter().product::<usize>(), values.len());
+        self.leaves.push(LeafInfo { path, offset: self.init.len(), shape });
+        self.init.extend_from_slice(&values);
+    }
+
+    fn he_normal(&mut self, n: usize, fan_in: usize) -> Vec<f32> {
+        let std = (2.0 / fan_in as f32).sqrt();
+        (0..n).map(|_| self.rng.normal_f32(0.0, std)).collect()
+    }
+
+    /// Conv layer with BN affine params; returns its output spatial dims.
+    #[allow(clippy::too_many_arguments)]
+    fn conv(
+        &mut self,
+        name: &str,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        in_hw: (usize, usize),
+        act_signed: bool,
+    ) -> (usize, usize) {
+        let out_hw = (
+            (in_hw.0 + 2 * pad - k) / stride + 1,
+            (in_hw.1 + 2 * pad - k) / stride + 1,
+        );
+        let fan_in = k * k * cin;
+        self.layers.push(LayerInfo {
+            name: name.to_string(),
+            kind: "conv".to_string(),
+            cin,
+            cout,
+            k,
+            stride,
+            pad,
+            in_hw,
+            out_hw,
+            fan_in,
+            mults_per_image: out_hw.0 * out_hw.1 * fan_in * cout,
+            act_signed,
+        });
+        let w = self.he_normal(fan_in * cout, fan_in);
+        self.leaf(format!("{name}/w"), vec![k, k, cin, cout], w);
+        self.leaf(format!("{name}/gamma"), vec![cout], vec![1.0; cout]);
+        self.leaf(format!("{name}/beta"), vec![cout], vec![0.0; cout]);
+        out_hw
+    }
+
+    /// Fully-connected layer with bias.
+    fn fc(&mut self, name: &str, cin: usize, cout: usize, act_signed: bool) {
+        self.layers.push(LayerInfo {
+            name: name.to_string(),
+            kind: "fc".to_string(),
+            cin,
+            cout,
+            k: 1,
+            stride: 1,
+            pad: 0,
+            in_hw: (1, 1),
+            out_hw: (1, 1),
+            fan_in: cin,
+            mults_per_image: cin * cout,
+            act_signed,
+        });
+        let w = self.he_normal(cin * cout, cin);
+        self.leaf(format!("{name}/w"), vec![cin, cout], w);
+        self.leaf(format!("{name}/b"), vec![cout], vec![0.0; cout]);
+    }
+
+    /// tinynet: conv0 -> conv1(stride 2) -> GAP -> fc.
+    fn tinynet(&mut self, hw: (usize, usize), classes: usize, act_signed: bool) {
+        let h1 = self.conv("conv0", 3, 8, 3, 1, 1, hw, act_signed);
+        let _ = self.conv("conv1", 8, 16, 3, 2, 1, h1, act_signed);
+        self.fc("fc", 16, classes, act_signed);
+    }
+
+    /// CIFAR-style 6n+2 ResNet, widths 8/16/32, stage strides 1/2/2.
+    fn resnet(&mut self, n: usize, hw: (usize, usize), classes: usize, act_signed: bool) {
+        let widths = [8usize, 16, 32];
+        let mut cur_hw = self.conv("conv0", 3, widths[0], 3, 1, 1, hw, act_signed);
+        let mut cin = widths[0];
+        for (s, &cout) in widths.iter().enumerate() {
+            for blk in 0..n {
+                let stride = if s > 0 && blk == 0 { 2 } else { 1 };
+                let base = format!("s{s}b{blk}");
+                let mid_hw =
+                    self.conv(&format!("{base}_conv1"), cin, cout, 3, stride, 1, cur_hw, act_signed);
+                let _ = self.conv(&format!("{base}_conv2"), cout, cout, 3, 1, 1, mid_hw, act_signed);
+                if stride != 1 || cin != cout {
+                    let _ = self.conv(&format!("{base}_short"), cin, cout, 1, stride, 0, cur_hw, act_signed);
+                }
+                cur_hw = mid_hw;
+                cin = cout;
+            }
+        }
+        self.fc("fc", widths[2], classes, act_signed);
+    }
+
+    /// VGG-style sequential stand-in: three conv pairs with 2x2 pools
+    /// between them (inferred by the simulator from the spatial dims),
+    /// GAP transition, one fc head.
+    fn vgg(&mut self, hw: (usize, usize), classes: usize, act_signed: bool) {
+        let plan: &[(usize, usize)] = &[(3, 8), (8, 8), (8, 16), (16, 16), (16, 32), (32, 32)];
+        let mut cur_hw = hw;
+        for (i, &(cin, cout)) in plan.iter().enumerate() {
+            let name = format!("conv{i}");
+            cur_hw = self.conv(&name, cin, cout, 3, 1, 1, cur_hw, act_signed);
+            // a 2x2 pool follows every second conv except the last pair;
+            // encode it by halving the next conv's input dims
+            if i % 2 == 1 && i + 1 < plan.len() {
+                cur_hw = (cur_hw.0 / 2, cur_hw.1 / 2);
+            }
+        }
+        self.fc("fc", 32, classes, act_signed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// program signatures (the contract `search/` drives the backend with)
+
+fn program_signatures(n: usize, l: usize, hw: (usize, usize)) -> BTreeMap<String, ProgramInfo> {
+    let f32s = |shape: Vec<usize>| TensorSpec { dtype: "float32".into(), shape };
+    let i32s = |shape: Vec<usize>| TensorSpec { dtype: "int32".into(), shape };
+    let u32s = |shape: Vec<usize>| TensorSpec { dtype: "uint32".into(), shape };
+    let x = f32s(vec![BATCH, hw.0, hw.1, 3]);
+    let y = i32s(vec![BATCH]);
+    let scalar = || f32s(vec![]);
+    let params = || f32s(vec![n]);
+    let per_layer = || f32s(vec![l]);
+    let luts = || i32s(vec![l, 65536]);
+    let seed = || u32s(vec![2]);
+    let metrics3 = || f32s(vec![3]);
+    let metrics5 = || f32s(vec![5]);
+
+    let mut programs = BTreeMap::new();
+    let mut add = |name: &str, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| {
+        programs.insert(
+            name.to_string(),
+            ProgramInfo { file: format!("<native:{name}>"), inputs, outputs },
+        );
+    };
+    add("eval", vec![params(), x.clone(), y.clone()], vec![metrics3()]);
+    add(
+        "eval_agn",
+        vec![params(), per_layer(), x.clone(), y.clone(), seed()],
+        vec![metrics3()],
+    );
+    add(
+        "eval_approx",
+        vec![params(), x.clone(), y.clone(), luts(), per_layer()],
+        vec![metrics3()],
+    );
+    add(
+        "train_qat",
+        vec![params(), params(), x.clone(), y.clone(), scalar()],
+        vec![params(), params(), metrics3()],
+    );
+    add(
+        "train_agn",
+        vec![
+            params(),
+            params(),
+            per_layer(),
+            per_layer(),
+            x.clone(),
+            y.clone(),
+            seed(),
+            scalar(),
+            scalar(),
+            scalar(),
+        ],
+        vec![params(), params(), per_layer(), per_layer(), metrics5()],
+    );
+    add(
+        "train_approx",
+        vec![params(), params(), x.clone(), y.clone(), scalar(), luts(), per_layer()],
+        vec![params(), params(), metrics3()],
+    );
+    add("calibrate", vec![params(), x, y], vec![per_layer(), per_layer(), metrics3()]);
+    programs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_synthesize() {
+        for model in MODELS {
+            let m = manifest(Path::new("artifacts"), model).unwrap();
+            assert_eq!(m.model, *model);
+            assert_eq!(m.num_layers, m.layers.len());
+            assert!(m.param_count > 0);
+            assert_eq!(m.init_params.as_ref().unwrap().len(), m.param_count);
+            assert_eq!(m.programs.len(), 7);
+            // leaf offsets tile the flat vector exactly
+            let total: usize = m.leaves.iter().map(|leaf| leaf.size()).sum();
+            assert_eq!(total, m.param_count, "{model}");
+            let flat = m.load_init_params().unwrap();
+            assert!(flat.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        assert!(manifest(Path::new("artifacts"), "lenet").is_err());
+        assert!(!is_known("lenet"));
+        assert!(is_known("resnet8"));
+    }
+
+    #[test]
+    fn resnet_family_layer_counts() {
+        // 6n+2: conv0 + 3 stages x n blocks x 2 convs + 2 shortcuts + fc
+        let m8 = manifest(Path::new("a"), "resnet8").unwrap();
+        assert_eq!(m8.layers.iter().filter(|l| l.name.ends_with("_short")).count(), 2);
+        assert_eq!(m8.layers.iter().filter(|l| l.kind == "conv").count(), 1 + 3 * 2 + 2);
+        let m20 = manifest(Path::new("a"), "resnet20").unwrap();
+        assert!(m20.layers.len() > m8.layers.len());
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = manifest(Path::new("a"), "tinynet").unwrap();
+        let b = manifest(Path::new("a"), "tinynet").unwrap();
+        assert_eq!(a.init_params, b.init_params);
+        let c = manifest(Path::new("a"), "resnet8").unwrap();
+        assert_ne!(a.init_params, c.init_params);
+    }
+
+    #[test]
+    fn simnet_builds_from_every_synthetic_manifest() {
+        for model in MODELS {
+            let m = manifest(Path::new("a"), model).unwrap();
+            let flat = m.load_init_params().unwrap();
+            let net = crate::simulator::SimNet::new(&m, &flat)
+                .unwrap_or_else(|e| panic!("{model}: {e}"));
+            assert!(!net.ops.is_empty());
+        }
+    }
+}

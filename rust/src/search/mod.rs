@@ -3,12 +3,13 @@
 //! Owns the run-time training loops: QAT baseline training, the AGN
 //! gradient search (jointly optimizing weights and the per-layer
 //! perturbation factors sigma_l), behavioral retraining under matched
-//! multipliers, calibration and evaluation. All compute is the AOT'd HLO
-//! programs executed through [`crate::runtime::Engine`]; this module owns
-//! data feeding, schedules, seeds and metric collection.
+//! multipliers, calibration and evaluation. All compute is manifest
+//! programs executed through a [`crate::runtime::ExecBackend`] (native or
+//! PJRT); this module owns data feeding, schedules, seeds and metric
+//! collection.
 
 use crate::datasets::Dataset;
-use crate::runtime::{Engine, Manifest, Value};
+use crate::runtime::{ExecBackend, Manifest, Value};
 use crate::util::rng::Pcg32;
 use anyhow::Result;
 
@@ -100,7 +101,7 @@ fn batch_values(manifest: &Manifest, xs: Vec<f32>, ys: Vec<i32>) -> (Value, Valu
 /// Train the 8-bit QAT baseline (paper: QAT after float reference training;
 /// we train QAT from scratch — see DESIGN.md §Substitutions on schedules).
 pub fn train_qat(
-    engine: &mut Engine,
+    engine: &mut dyn ExecBackend,
     manifest: &Manifest,
     data: &Dataset,
     state: &mut TrainState,
@@ -140,7 +141,7 @@ pub fn train_qat(
 /// AGN gradient search (paper §3.2): one call = one lambda point.
 #[allow(clippy::too_many_arguments)]
 pub fn gradient_search(
-    engine: &mut Engine,
+    engine: &mut dyn ExecBackend,
     manifest: &Manifest,
     data: &Dataset,
     state: &mut TrainState,
@@ -190,7 +191,7 @@ pub fn gradient_search(
 /// Behavioral retraining with the matched multiplier LUTs (paper §4.2, STE).
 #[allow(clippy::too_many_arguments)]
 pub fn retrain_approx(
-    engine: &mut Engine,
+    engine: &mut dyn ExecBackend,
     manifest: &Manifest,
     data: &Dataset,
     state: &mut TrainState,
@@ -241,7 +242,7 @@ pub fn retrain_approx(
 /// Calibration: per-layer activation absmax (max over batches) and
 /// pre-activation batch std (mean over batches), from sample data.
 pub fn calibrate(
-    engine: &mut Engine,
+    engine: &mut dyn ExecBackend,
     manifest: &Manifest,
     data: &Dataset,
     flat: &[f32],
@@ -287,7 +288,7 @@ pub struct EvalMetrics {
 }
 
 pub fn evaluate(
-    engine: &mut Engine,
+    engine: &mut dyn ExecBackend,
     manifest: &Manifest,
     data: &Dataset,
     flat: &[f32],

@@ -1,7 +1,11 @@
-//! Native int8 behavioral simulation substrate (ProxSim/TFApprox role).
+//! Native behavioral simulation substrate (ProxSim/TFApprox role): the
+//! int8 LUT simulator ([`net`]) and the native trainer ([`train`]) behind
+//! the default execution backend.
 
 pub mod matmul;
 pub mod net;
+pub mod train;
 
 pub use matmul::{approx_dw, approx_matmul, exact_matmul};
 pub use net::{accuracy, Activ, LayerCapture, LutSet, Op, SimLayer, SimNet};
+pub use train::TrainNet;

@@ -24,7 +24,7 @@ pub enum Activ {
     Relu6,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub enum Op {
     /// Approximable layer `idx` followed by optional BN and activation.
     Layer { idx: usize, bn: bool, act: Activ },
@@ -107,7 +107,7 @@ impl SimNet {
                 bias: get("b"),
             });
         }
-        let ops = build_ops(&manifest.arch, &layers)?;
+        let ops = build_ops(&manifest.arch, &manifest.layers)?;
         Ok(SimNet {
             arch: manifest.arch.clone(),
             classes: manifest.classes,
@@ -366,7 +366,10 @@ fn apply_act(mut x: TensorF, act: Activ) -> TensorF {
 // ---------------------------------------------------------------------------
 // topology reconstruction
 
-fn build_ops(arch: &str, layers: &[SimLayer]) -> Result<Vec<Op>> {
+/// Reconstruct the op sequence of an architecture from its layer tape.
+/// Shared by the int8 simulator ([`SimNet`]) and the float trainer
+/// ([`crate::simulator::train::TrainNet`]).
+pub(crate) fn build_ops(arch: &str, layers: &[LayerInfo]) -> Result<Vec<Op>> {
     match arch {
         "resnet8" | "resnet14" | "resnet20" | "resnet32" => resnet_ops(layers),
         "mobilenetv2" => mobilenet_ops(layers),
@@ -379,26 +382,26 @@ fn build_ops(arch: &str, layers: &[SimLayer]) -> Result<Vec<Op>> {
 /// from spatial-dimension changes between consecutive conv layers; the
 /// conv->fc transition is either a global-average-pool (fc.cin == last
 /// cout) or maxpool+flatten (fc.cin == cout*h*w after an inferred pool).
-fn sequential_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
+fn sequential_ops(layers: &[LayerInfo]) -> Result<Vec<Op>> {
     let mut ops = Vec::new();
     let convs: Vec<usize> = layers
         .iter()
         .enumerate()
-        .filter(|(_, l)| l.info.kind == "conv")
+        .filter(|(_, l)| l.kind == "conv")
         .map(|(i, _)| i)
         .collect();
     let fcs: Vec<usize> = layers
         .iter()
         .enumerate()
-        .filter(|(_, l)| l.info.kind == "fc")
+        .filter(|(_, l)| l.kind == "fc")
         .map(|(i, _)| i)
         .collect();
     anyhow::ensure!(!convs.is_empty() && !fcs.is_empty(), "sequential net needs conv+fc");
     for (pos, &ci) in convs.iter().enumerate() {
         ops.push(Op::Layer { idx: ci, bn: true, act: Activ::Relu });
-        let out_hw = layers[ci].info.out_hw;
+        let out_hw = layers[ci].out_hw;
         if let Some(&next) = convs.get(pos + 1) {
-            let in_hw = layers[next].info.in_hw;
+            let in_hw = layers[next].in_hw;
             if in_hw.0 < out_hw.0 {
                 anyhow::ensure!(in_hw.0 == out_hw.0 / 2, "unsupported pool ratio");
                 ops.push(Op::MaxPool { k: 2, s: 2 });
@@ -406,8 +409,8 @@ fn sequential_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
         }
     }
     // conv -> fc transition
-    let last = &layers[*convs.last().unwrap()].info;
-    let fc0 = &layers[fcs[0]].info;
+    let last = &layers[*convs.last().unwrap()];
+    let fc0 = &layers[fcs[0]];
     let (h, w) = last.out_hw;
     if fc0.cin == last.cout {
         ops.push(Op::GlobalAvg);
@@ -431,9 +434,9 @@ fn sequential_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
 }
 
 /// CIFAR ResNet: conv0 + blocks named s{stage}b{block}_{conv1,conv2,short}.
-fn resnet_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
+fn resnet_ops(layers: &[LayerInfo]) -> Result<Vec<Op>> {
     let find = |name: &str| -> Option<usize> {
-        layers.iter().position(|l| l.info.name == name)
+        layers.iter().position(|l| l.name == name)
     };
     let mut ops = vec![Op::Layer {
         idx: find("conv0").ok_or_else(|| anyhow!("resnet missing conv0"))?,
@@ -443,7 +446,7 @@ fn resnet_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
     // discover block prefixes in layer order
     let mut prefixes: Vec<String> = Vec::new();
     for l in layers {
-        if let Some(base) = l.info.name.strip_suffix("_conv1") {
+        if let Some(base) = l.name.strip_suffix("_conv1") {
             prefixes.push(base.to_string());
         }
     }
@@ -469,8 +472,8 @@ fn resnet_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
 }
 
 /// MobileNetV2: stem + b{i}_{exp,dw,prj} + head + fc.
-fn mobilenet_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
-    let find = |name: &str| layers.iter().position(|l| l.info.name == name);
+fn mobilenet_ops(layers: &[LayerInfo]) -> Result<Vec<Op>> {
+    let find = |name: &str| layers.iter().position(|l| l.name == name);
     let mut ops = vec![Op::Layer {
         idx: find("stem").ok_or_else(|| anyhow!("mobilenet missing stem"))?,
         bn: true,
@@ -485,9 +488,9 @@ fn mobilenet_ops(layers: &[SimLayer]) -> Result<Vec<Op>> {
         let exp = find(&format!("b{bi}_exp"));
         let prj = find(&format!("b{bi}_prj"))
             .ok_or_else(|| anyhow!("block b{bi} missing prj"))?;
-        let block_cin = layers[exp.unwrap_or(dw)].info.cin;
-        let block_cout = layers[prj].info.cout;
-        let stride = layers[dw].info.stride;
+        let block_cin = layers[exp.unwrap_or(dw)].cin;
+        let block_cout = layers[prj].cout;
+        let stride = layers[dw].stride;
         let residual = stride == 1 && block_cin == block_cout;
         if residual {
             ops.push(Op::Save);

@@ -1,0 +1,912 @@
+//! Native training: forward/backward through the quantized network in pure
+//! Rust — the engine behind the native backend's `train_*`/`eval*`
+//! programs (the role `python/compile/train.py` plays for the PJRT path).
+//!
+//! Semantics mirror the AOT programs:
+//! * **qat** — fake-quantized forward (dynamic per-batch scales, int8
+//!   grids from [`crate::quant`]), straight-through float gradients.
+//! * **agn** — qat forward + additive Gaussian noise on each approximable
+//!   layer's pre-BN output, scale `sigma_l * std(y_l)` (paper Eq. 7); the
+//!   task gradient w.r.t. `sigma_l` flows through the injected noise.
+//! * **approx** — behavioral LUT forward (frozen activation scales) with
+//!   STE float gradients (paper §4.2 retraining).
+//! * **calib** — qat forward recording per-layer activation absmax and
+//!   pre-activation std.
+//!
+//! Deviation from the AOT path (documented, small): the straight-through
+//! backward uses the raw float operands rather than their fake-quantized
+//! values. BatchNorm uses batch statistics, exactly like the Python side
+//! and [`SimNet`](crate::simulator::SimNet).
+
+use crate::quant;
+use crate::runtime::manifest::{LayerInfo, Manifest};
+use crate::simulator::matmul::{approx_matmul, exact_matmul};
+use crate::simulator::net::{build_ops, Activ, Op};
+use crate::tensor::TensorF;
+use crate::util::rng::Pcg32;
+use anyhow::{bail, Result};
+
+const BN_EPS: f32 = 1e-5;
+const MOMENTUM: f32 = 0.9;
+/// Top-k used by every metrics vector (paper: top-5).
+pub const TOPK: usize = 5;
+
+/// Side of one per-layer product LUT (rows x cols = 65536 entries).
+pub const LUT_LEN: usize = 65536;
+
+// ---------------------------------------------------------------------------
+// network
+
+struct TrainLayer {
+    info: LayerInfo,
+    /// Float weights [K, N] (conv: K = k*k*cin with (ki, kj, c) ordering).
+    w: Vec<f32>,
+    w_off: usize,
+    gamma: Option<(Vec<f32>, usize)>,
+    beta: Option<(Vec<f32>, usize)>,
+    bias: Option<(Vec<f32>, usize)>,
+}
+
+/// A differentiable view of one model at one flat parameter vector.
+pub struct TrainNet {
+    ops: Vec<Op>,
+    layers: Vec<TrainLayer>,
+    pub input_hw: (usize, usize),
+    pub classes: usize,
+    pub param_count: usize,
+    /// Relative multiplication cost c_l per layer (Eq. 10).
+    pub rel_costs: Vec<f32>,
+}
+
+impl TrainNet {
+    pub fn new(manifest: &Manifest, flat: &[f32]) -> Result<TrainNet> {
+        anyhow::ensure!(
+            flat.len() == manifest.param_count,
+            "param vector size {} vs manifest {}",
+            flat.len(),
+            manifest.param_count
+        );
+        let mut layers = Vec::with_capacity(manifest.layers.len());
+        for info in &manifest.layers {
+            if info.kind == "dwconv" {
+                bail!("native training does not support dwconv layers yet (model {})", manifest.model);
+            }
+            let leaf = |suffix: &str| -> Option<(Vec<f32>, usize)> {
+                let l = manifest.leaf(&format!("{}/{suffix}", info.name)).ok()?;
+                Some((flat[l.offset..l.offset + l.size()].to_vec(), l.offset))
+            };
+            let (w, w_off) = leaf("w")
+                .ok_or_else(|| anyhow::anyhow!("layer {} missing weight leaf", info.name))?;
+            layers.push(TrainLayer {
+                info: info.clone(),
+                w,
+                w_off,
+                gamma: leaf("gamma"),
+                beta: leaf("beta"),
+                bias: leaf("b"),
+            });
+        }
+        let ops = build_ops(&manifest.arch, &manifest.layers)?;
+        let total: f64 = manifest.layers.iter().map(|l| l.mults_per_image as f64).sum();
+        let rel_costs = manifest
+            .layers
+            .iter()
+            .map(|l| (l.mults_per_image as f64 / total.max(1.0)) as f32)
+            .collect();
+        Ok(TrainNet {
+            ops,
+            layers,
+            input_hw: (manifest.input_shape[0], manifest.input_shape[1]),
+            classes: manifest.classes,
+            param_count: manifest.param_count,
+            rel_costs,
+        })
+    }
+}
+
+/// Forward mode, mirroring the AOT `Ctx` modes.
+pub enum Mode<'a> {
+    Qat,
+    Agn { sigmas: &'a [f32], seed: u64 },
+    /// `luts` is the flat [L, 65536] table, `act_scales` the frozen s_x.
+    Approx { luts: &'a [i32], act_scales: &'a [f32] },
+    Calib,
+}
+
+// ---------------------------------------------------------------------------
+// forward
+
+struct BnCache {
+    mean: Vec<f32>,
+    invstd: Vec<f32>,
+}
+
+struct LayerCache {
+    /// Float patches [M, K] (the matmul LHS).
+    p: Vec<f32>,
+    m: usize,
+    kdim: usize,
+    n: usize,
+    in_shape: Vec<usize>,
+    /// Pre-BN forward value [M, N] (after STE substitution / noise).
+    y0: Vec<f32>,
+    /// Injected noise map std(y)*eps (None outside AGN mode).
+    noise: Option<Vec<f32>>,
+    bn: Option<BnCache>,
+    /// Post-BN pre-activation value [M, N] (== y0 when bn is absent).
+    y1: Vec<f32>,
+}
+
+enum OpCache {
+    Layer(Box<LayerCache>),
+    Shortcut(Option<Box<LayerCache>>),
+    MaxPool { in_shape: Vec<usize>, argmax: Vec<usize> },
+    GlobalAvg { in_shape: Vec<usize> },
+    Flatten { in_shape: Vec<usize> },
+    AddSaved { sum: Vec<f32> },
+    Nothing,
+}
+
+/// Everything backward needs, plus the calibration sinks.
+pub struct FwdPass {
+    pub logits: TensorF,
+    caches: Vec<OpCache>,
+    pub absmax: Vec<f32>,
+    pub ystd: Vec<f32>,
+}
+
+/// One forward pass in the given mode.
+pub fn forward(net: &TrainNet, x: &TensorF, mode: &Mode) -> FwdPass {
+    let l = net.layers.len();
+    let mut absmax = vec![0f32; l];
+    let mut ystd = vec![0f32; l];
+    let mut rng = match mode {
+        Mode::Agn { seed, .. } => Pcg32::new(*seed, 0xa6e),
+        _ => Pcg32::new(0, 0),
+    };
+    let mut caches: Vec<OpCache> = Vec::with_capacity(net.ops.len());
+    let mut stack: Vec<TensorF> = Vec::new();
+    let mut y = x.clone();
+    for op in &net.ops {
+        match *op {
+            Op::Layer { idx, bn, act } => {
+                let (out, cache) = apply_layer(
+                    net, idx, bn, act, &y, mode, &mut rng, &mut absmax, &mut ystd,
+                );
+                y = out;
+                caches.push(OpCache::Layer(Box::new(cache)));
+            }
+            Op::MaxPool { k, s } => {
+                let in_shape = y.shape.clone();
+                let (out, argmax) = crate::tensor::max_pool_with_argmax(&y, k, s);
+                y = out;
+                caches.push(OpCache::MaxPool { in_shape, argmax });
+            }
+            Op::GlobalAvg => {
+                let in_shape = y.shape.clone();
+                y = crate::tensor::global_avg_pool(&y);
+                caches.push(OpCache::GlobalAvg { in_shape });
+            }
+            Op::Flatten => {
+                let in_shape = y.shape.clone();
+                let b = y.shape[0];
+                let rest: usize = y.shape[1..].iter().product();
+                y = y.reshape(&[b, rest]);
+                caches.push(OpCache::Flatten { in_shape });
+            }
+            Op::Save => {
+                stack.push(y.clone());
+                caches.push(OpCache::Nothing);
+            }
+            Op::Shortcut { layer } => {
+                let saved = stack.pop().expect("residual stack underflow");
+                match layer {
+                    None => {
+                        stack.push(saved);
+                        caches.push(OpCache::Shortcut(None));
+                    }
+                    Some(idx) => {
+                        let (out, cache) = apply_layer(
+                            net,
+                            idx,
+                            true,
+                            Activ::None,
+                            &saved,
+                            mode,
+                            &mut rng,
+                            &mut absmax,
+                            &mut ystd,
+                        );
+                        stack.push(out);
+                        caches.push(OpCache::Shortcut(Some(Box::new(cache))));
+                    }
+                }
+            }
+            Op::AddSaved { act } => {
+                let sc = stack.pop().expect("residual stack underflow");
+                assert_eq!(sc.shape, y.shape, "residual shape mismatch");
+                for (a, b) in y.data.iter_mut().zip(&sc.data) {
+                    *a += b;
+                }
+                let sum = y.data.clone();
+                apply_act_inplace(&mut y.data, act);
+                caches.push(OpCache::AddSaved { sum });
+            }
+        }
+    }
+    FwdPass { logits: y, caches, absmax, ystd }
+}
+
+/// One approximable layer forward. Returns the output tensor + cache.
+#[allow(clippy::too_many_arguments)]
+fn apply_layer(
+    net: &TrainNet,
+    idx: usize,
+    bn: bool,
+    act: Activ,
+    x: &TensorF,
+    mode: &Mode,
+    rng: &mut Pcg32,
+    absmax: &mut [f32],
+    ystd: &mut [f32],
+) -> (TensorF, LayerCache) {
+    let layer = &net.layers[idx];
+    let info = &layer.info;
+    let signed = info.act_signed;
+    let in_shape = x.shape.clone();
+
+    // patches [M, K]
+    let (p, m, kdim, out_hw) = if info.kind == "conv" {
+        let patches = crate::tensor::im2col(x, info.k, info.k, info.stride, info.pad);
+        let m = patches.shape[0] * patches.shape[1] * patches.shape[2];
+        let kdim = patches.shape[3];
+        let hw = (patches.shape[1], patches.shape[2]);
+        (patches.data, m, kdim, Some(hw))
+    } else {
+        (x.data.clone(), x.shape[0], x.shape[1], None)
+    };
+    let n = info.cout;
+    debug_assert_eq!(layer.w.len(), kdim * n);
+
+    // quantized matmul (fake-quant or behavioral LUT)
+    let (w_codes, s_w) = quant::quantize_weights(&layer.w);
+    let w_cols: Vec<u8> = w_codes.iter().map(|&c| (c as i32 + 128) as u8).collect();
+    let p_absmax = p.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    let s_x = match mode {
+        Mode::Approx { act_scales, .. } => act_scales[idx],
+        _ => {
+            if signed {
+                quant::act_scale_signed(p_absmax)
+            } else {
+                quant::act_scale(p_absmax)
+            }
+        }
+    };
+    let codes = quant::quantize_acts(&p, s_x, signed);
+    let acc = match mode {
+        Mode::Approx { luts, .. } => {
+            let lut = &luts[idx * LUT_LEN..(idx + 1) * LUT_LEN];
+            approx_matmul(&codes, &w_cols, lut, m, kdim, n)
+        }
+        _ => exact_matmul(&codes, &w_cols, signed, m, kdim, n),
+    };
+    let scale = s_x * s_w;
+    let mut y0: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
+
+    // calibration sinks (raw patches absmax, pre-noise pre-BN output std)
+    absmax[idx] = absmax[idx].max(p_absmax);
+    ystd[idx] = std_of(&y0);
+
+    // AGN injection (paper Eq. 7): y += sigma_l * std(y) * eps
+    let noise = if let Mode::Agn { sigmas, .. } = mode {
+        let std0 = ystd[idx]; // std_of(&y0), just recorded above
+        let map: Vec<f32> = y0.iter().map(|_| std0 * rng.normal() as f32).collect();
+        let s = sigmas[idx];
+        for (v, nz) in y0.iter_mut().zip(&map) {
+            *v += s * nz;
+        }
+        Some(map)
+    } else {
+        None
+    };
+
+    // bias (fc head)
+    if let Some((b, _)) = &layer.bias {
+        for mi in 0..m {
+            for ni in 0..n {
+                y0[mi * n + ni] += b[ni];
+            }
+        }
+    }
+
+    // batchnorm (batch statistics)
+    let (y1, bn_cache) = if bn {
+        if let (Some((gamma, _)), Some((beta, _))) = (&layer.gamma, &layer.beta) {
+            let (out, mean, invstd) = batchnorm_fwd(&y0, m, n, gamma, beta);
+            (out, Some(BnCache { mean, invstd }))
+        } else {
+            (y0.clone(), None)
+        }
+    } else {
+        (y0.clone(), None)
+    };
+
+    let mut out_data = y1.clone();
+    apply_act_inplace(&mut out_data, act);
+    let out = match out_hw {
+        Some((ho, wo)) => TensorF::from_vec(&[in_shape[0], ho, wo, n], out_data),
+        None => TensorF::from_vec(&[m, n], out_data),
+    };
+    (out, LayerCache { p, m, kdim, n, in_shape, y0, noise, bn: bn_cache, y1 })
+}
+
+fn apply_act_inplace(data: &mut [f32], act: Activ) {
+    match act {
+        Activ::None => {}
+        Activ::Relu => {
+            for v in data.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        Activ::Relu6 => {
+            for v in data.iter_mut() {
+                *v = v.clamp(0.0, 6.0);
+            }
+        }
+    }
+}
+
+fn std_of(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let mean: f64 = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var: f64 = xs.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>() / n;
+    var.sqrt() as f32
+}
+
+/// BN forward over rows x channels; returns (out, mean, gamma-free invstd).
+fn batchnorm_fwd(
+    y0: &[f32],
+    rows: usize,
+    c: usize,
+    gamma: &[f32],
+    beta: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut mean = vec![0f64; c];
+    for r in 0..rows {
+        for ci in 0..c {
+            mean[ci] += y0[r * c + ci] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= rows.max(1) as f64;
+    }
+    let mut var = vec![0f64; c];
+    for r in 0..rows {
+        for ci in 0..c {
+            let d = y0[r * c + ci] as f64 - mean[ci];
+            var[ci] += d * d;
+        }
+    }
+    for v in var.iter_mut() {
+        *v /= rows.max(1) as f64;
+    }
+    let mean32: Vec<f32> = mean.iter().map(|&m| m as f32).collect();
+    let invstd: Vec<f32> = var.iter().map(|&v| 1.0 / ((v as f32) + BN_EPS).sqrt()).collect();
+    let mut out = vec![0f32; y0.len()];
+    for r in 0..rows {
+        for ci in 0..c {
+            let xhat = (y0[r * c + ci] - mean32[ci]) * invstd[ci];
+            out[r * c + ci] = gamma[ci] * xhat + beta[ci];
+        }
+    }
+    (out, mean32, invstd)
+}
+
+// ---------------------------------------------------------------------------
+// backward
+
+/// Parameter + sigma gradients of one forward pass.
+pub struct Grads {
+    pub flat: Vec<f32>,
+    pub sigmas: Vec<f32>,
+}
+
+/// Backpropagate `dlogits` through the recorded pass. Straight-through
+/// float gradients for the quantized matmuls (see module docs).
+pub fn backward(net: &TrainNet, pass: &FwdPass, dlogits: &TensorF) -> Grads {
+    let mut grads = Grads {
+        flat: vec![0f32; net.param_count],
+        sigmas: vec![0f32; net.layers.len()],
+    };
+    let mut g = dlogits.data.clone();
+    let mut back_stack: Vec<Vec<f32>> = Vec::new();
+    for (op, cache) in net.ops.iter().zip(&pass.caches).rev() {
+        match (*op, cache) {
+            (Op::Layer { idx, bn, act }, OpCache::Layer(lc)) => {
+                g = layer_backward(net, idx, bn, act, lc, g, &mut grads);
+            }
+            (Op::MaxPool { .. }, OpCache::MaxPool { in_shape, argmax }) => {
+                let mut gi = vec![0f32; in_shape.iter().product()];
+                for (o, &src) in argmax.iter().enumerate() {
+                    gi[src] += g[o];
+                }
+                g = gi;
+            }
+            (Op::GlobalAvg, OpCache::GlobalAvg { in_shape }) => {
+                let (b, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+                let inv = 1.0 / (h * w) as f32;
+                let mut gi = vec![0f32; b * h * w * c];
+                for bi in 0..b {
+                    for i in 0..h {
+                        for j in 0..w {
+                            for ci in 0..c {
+                                gi[((bi * h + i) * w + j) * c + ci] = g[bi * c + ci] * inv;
+                            }
+                        }
+                    }
+                }
+                g = gi;
+            }
+            (Op::Flatten, OpCache::Flatten { .. }) => {}
+            (Op::Save, OpCache::Nothing) => {
+                let g_saved = back_stack.pop().expect("backward residual underflow");
+                debug_assert_eq!(g_saved.len(), g.len());
+                for (a, b) in g.iter_mut().zip(&g_saved) {
+                    *a += b;
+                }
+            }
+            (Op::Shortcut { layer }, OpCache::Shortcut(lc)) => {
+                let gsc = back_stack.pop().expect("backward residual underflow");
+                match (layer, lc) {
+                    (Some(idx), Some(lc)) => {
+                        let gi = layer_backward(net, idx, true, Activ::None, lc, gsc, &mut grads);
+                        back_stack.push(gi);
+                    }
+                    _ => back_stack.push(gsc),
+                }
+            }
+            (Op::AddSaved { act }, OpCache::AddSaved { sum }) => {
+                act_backward_inplace(&mut g, sum, act);
+                back_stack.push(g.clone());
+            }
+            _ => unreachable!("op/cache mismatch in backward"),
+        }
+    }
+    grads
+}
+
+/// Gradient through one approximable layer; returns the gradient w.r.t.
+/// the layer input. Accumulates parameter gradients into `grads`.
+fn layer_backward(
+    net: &TrainNet,
+    idx: usize,
+    bn: bool,
+    act: Activ,
+    lc: &LayerCache,
+    mut g: Vec<f32>,
+    grads: &mut Grads,
+) -> Vec<f32> {
+    let layer = &net.layers[idx];
+    let info = &layer.info;
+    let (m, kdim, n) = (lc.m, lc.kdim, lc.n);
+    debug_assert_eq!(g.len(), m * n);
+
+    // activation
+    act_backward_inplace(&mut g, &lc.y1, act);
+
+    // batchnorm
+    if bn {
+        if let (Some(bnc), Some((gamma, g_off)), Some((_, b_off))) =
+            (&lc.bn, &layer.gamma, &layer.beta)
+        {
+            let rows = m as f32;
+            let mut sum_g = vec![0f32; n];
+            let mut sum_gx = vec![0f32; n];
+            for r in 0..m {
+                for ci in 0..n {
+                    let gi = g[r * n + ci];
+                    let xhat = (lc.y0[r * n + ci] - bnc.mean[ci]) * bnc.invstd[ci];
+                    sum_g[ci] += gi;
+                    sum_gx[ci] += gi * xhat;
+                }
+            }
+            for ci in 0..n {
+                grads.flat[g_off + ci] += sum_gx[ci]; // dgamma
+                grads.flat[b_off + ci] += sum_g[ci]; // dbeta
+            }
+            for r in 0..m {
+                for ci in 0..n {
+                    let xhat = (lc.y0[r * n + ci] - bnc.mean[ci]) * bnc.invstd[ci];
+                    g[r * n + ci] = gamma[ci]
+                        * bnc.invstd[ci]
+                        * (g[r * n + ci] - sum_g[ci] / rows - xhat * sum_gx[ci] / rows);
+                }
+            }
+        }
+    }
+
+    // AGN: dL/dsigma_l = sum(g * std*eps)
+    if let Some(noise) = &lc.noise {
+        let mut ds = 0f32;
+        for (gi, nz) in g.iter().zip(noise) {
+            ds += gi * nz;
+        }
+        grads.sigmas[idx] += ds;
+    }
+
+    // bias
+    if let Some((_, b_off)) = &layer.bias {
+        for r in 0..m {
+            for ci in 0..n {
+                grads.flat[b_off + ci] += g[r * n + ci];
+            }
+        }
+    }
+
+    // matmul: dW = p^T g (accumulated at w_off), dp = g W^T
+    for r in 0..m {
+        let grow = &g[r * n..(r + 1) * n];
+        let prow = &lc.p[r * kdim..(r + 1) * kdim];
+        for (ki, &pv) in prow.iter().enumerate() {
+            if pv == 0.0 {
+                continue;
+            }
+            let wrow = &mut grads.flat[layer.w_off + ki * n..layer.w_off + (ki + 1) * n];
+            for (wg, &gv) in wrow.iter_mut().zip(grow) {
+                *wg += pv * gv;
+            }
+        }
+    }
+    let mut gp = vec![0f32; m * kdim];
+    for r in 0..m {
+        let grow = &g[r * n..(r + 1) * n];
+        let gprow = &mut gp[r * kdim..(r + 1) * kdim];
+        for ki in 0..kdim {
+            let wrow = &layer.w[ki * n..(ki + 1) * n];
+            let mut s = 0f32;
+            for (wv, gv) in wrow.iter().zip(grow) {
+                s += wv * gv;
+            }
+            gprow[ki] = s;
+        }
+    }
+
+    if info.kind == "conv" {
+        col2im(&gp, &lc.in_shape, info.k, info.k, info.stride, info.pad)
+    } else {
+        gp
+    }
+}
+
+fn act_backward_inplace(g: &mut [f32], preact: &[f32], act: Activ) {
+    match act {
+        Activ::None => {}
+        Activ::Relu => {
+            for (gi, &y) in g.iter_mut().zip(preact) {
+                if y <= 0.0 {
+                    *gi = 0.0;
+                }
+            }
+        }
+        Activ::Relu6 => {
+            for (gi, &y) in g.iter_mut().zip(preact) {
+                if !(0.0..6.0).contains(&y) {
+                    *gi = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Transpose of [`crate::tensor::im2col`] (gradient routing back to x).
+fn col2im(
+    gp: &[f32],
+    in_shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let (b, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    let mut gx = vec![0f32; b * h * w * c];
+    for bi in 0..b {
+        for oi in 0..ho {
+            for oj in 0..wo {
+                let base = ((bi * ho + oi) * wo + oj) * k;
+                for ki in 0..kh {
+                    let ii = oi * stride + ki;
+                    if ii < pad || ii - pad >= h {
+                        continue;
+                    }
+                    for kj in 0..kw {
+                        let jj = oj * stride + kj;
+                        if jj < pad || jj - pad >= w {
+                            continue;
+                        }
+                        let src = ((bi * h + (ii - pad)) * w + (jj - pad)) * c;
+                        let dst = base + (ki * kw + kj) * c;
+                        for ci in 0..c {
+                            gx[src + ci] += gp[dst + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    gx
+}
+
+// ---------------------------------------------------------------------------
+// loss, metrics, optimizer
+
+/// Mean softmax cross-entropy and its gradient w.r.t. the logits.
+pub fn softmax_xent(logits: &TensorF, labels: &[i32]) -> (f32, TensorF) {
+    let b = logits.shape[0];
+    let c = logits.shape[1];
+    assert_eq!(labels.len(), b);
+    let mut dl = TensorF::zeros(&logits.shape);
+    let mut loss = 0f64;
+    for bi in 0..b {
+        let row = &logits.data[bi * c..(bi + 1) * c];
+        let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let exps: Vec<f64> = row.iter().map(|&v| ((v - max) as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        let label = labels[bi] as usize;
+        loss += -(exps[label] / z).ln();
+        let drow = &mut dl.data[bi * c..(bi + 1) * c];
+        for ci in 0..c {
+            let p = (exps[ci] / z) as f32;
+            drow[ci] = (p - if ci == label { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    ((loss / b as f64) as f32, dl)
+}
+
+/// Top-1 correct count.
+pub fn correct_count(logits: &TensorF, labels: &[i32]) -> usize {
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    (0..b)
+        .filter(|&bi| {
+            let row = &logits.data[bi * c..(bi + 1) * c];
+            let mut best = 0usize;
+            for ci in 1..c {
+                if row[ci] > row[best] {
+                    best = ci;
+                }
+            }
+            best == labels[bi] as usize
+        })
+        .count()
+}
+
+/// Top-k correct count via the rank test (matches the AOT formulation).
+pub fn topk_correct_count(logits: &TensorF, labels: &[i32], k: usize) -> usize {
+    let (b, c) = (logits.shape[0], logits.shape[1]);
+    (0..b)
+        .filter(|&bi| {
+            let row = &logits.data[bi * c..(bi + 1) * c];
+            let lv = row[labels[bi] as usize];
+            row.iter().filter(|&&v| v > lv).count() < k
+        })
+        .count()
+}
+
+/// `[loss, correct, topk_correct]` — the metrics vector of every program.
+pub fn metrics3(logits: &TensorF, labels: &[i32], loss: f32) -> Vec<f32> {
+    vec![
+        loss,
+        correct_count(logits, labels) as f32,
+        topk_correct_count(logits, labels, TOPK) as f32,
+    ]
+}
+
+/// Paper Eq. 10: `L_N = -sum_l min(|sigma_l|, sigma_max) * c_l`.
+pub fn noise_loss(sigmas: &[f32], rel_costs: &[f32], sigma_max: f32) -> f32 {
+    -sigmas
+        .iter()
+        .zip(rel_costs)
+        .map(|(&s, &c)| s.abs().min(sigma_max) * c)
+        .sum::<f32>()
+}
+
+/// Subgradient of Eq. 10 (Eq. 12): `-c_l * sign(sigma_l)` inside the cap.
+pub fn noise_loss_grad(sigmas: &[f32], rel_costs: &[f32], sigma_max: f32) -> Vec<f32> {
+    sigmas
+        .iter()
+        .zip(rel_costs)
+        .map(|(&s, &c)| {
+            if s.abs() >= sigma_max {
+                0.0
+            } else if s < 0.0 {
+                c
+            } else {
+                -c
+            }
+        })
+        .collect()
+}
+
+/// SGD with momentum 0.9 (the AOT `_sgd`): `m' = 0.9 m + g; p' = p - lr m'`.
+pub fn sgd_update(params: &mut [f32], mom: &mut [f32], grad: &[f32], lr: f32) {
+    debug_assert_eq!(params.len(), mom.len());
+    debug_assert_eq!(params.len(), grad.len());
+    for ((p, m), &g) in params.iter_mut().zip(mom.iter_mut()).zip(grad) {
+        *m = MOMENTUM * *m + g;
+        *p -= lr * *m;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::synthetic;
+    use std::path::Path;
+
+    fn net_and_params(model: &str) -> (Manifest, Vec<f32>) {
+        let m = synthetic::manifest(Path::new("artifacts"), model).unwrap();
+        let flat = m.load_init_params().unwrap();
+        (m, flat)
+    }
+
+    fn batch(manifest: &Manifest, seed: u64) -> (TensorF, Vec<i32>) {
+        use crate::datasets::{Dataset, DatasetSpec, Split};
+        let spec = DatasetSpec::synth_cifar(
+            (manifest.input_shape[0], manifest.input_shape[1]),
+            seed,
+        );
+        let data = Dataset::load(&spec, Split::Train);
+        let (xs, ys) = data.eval_batch(manifest.batch, 0);
+        let x = TensorF::from_vec(
+            &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+            xs,
+        );
+        (x, ys)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        for model in ["tinynet", "resnet8"] {
+            let (m, flat) = net_and_params(model);
+            let net = TrainNet::new(&m, &flat).unwrap();
+            let (x, ys) = batch(&m, 3);
+            let pass = forward(&net, &x, &Mode::Qat);
+            assert_eq!(pass.logits.shape, vec![m.batch, m.classes]);
+            assert!(pass.logits.data.iter().all(|v| v.is_finite()));
+            assert!(pass.absmax.iter().all(|&v| v > 0.0), "{model}: {:?}", pass.absmax);
+            assert!(pass.ystd.iter().all(|&v| v > 0.0));
+            let (loss, _) = softmax_xent(&pass.logits, &ys);
+            assert!(loss.is_finite() && loss > 0.0);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference_on_fc_bias() {
+        // The head bias is the one parameter the quantized forward is
+        // *smooth* in (it is added after all integer grids), so finite
+        // differences validate the analytic backward exactly there.
+        let (m, mut flat) = net_and_params("tinynet");
+        let (x, ys) = batch(&m, 5);
+        let loss_at = |flat: &[f32]| -> f32 {
+            let net = TrainNet::new(&m, flat).unwrap();
+            let pass = forward(&net, &x, &Mode::Qat);
+            softmax_xent(&pass.logits, &ys).0
+        };
+        let net = TrainNet::new(&m, &flat).unwrap();
+        let pass = forward(&net, &x, &Mode::Qat);
+        let (_, dl) = softmax_xent(&pass.logits, &ys);
+        let grads = backward(&net, &pass, &dl);
+        let fc_b = m.leaf("fc/b").unwrap().clone();
+        let eps = 1e-3f32;
+        for &i in &[fc_b.offset, fc_b.offset + 3, fc_b.offset + fc_b.size() - 1] {
+            let orig = flat[i];
+            flat[i] = orig + eps;
+            let up = loss_at(&flat);
+            flat[i] = orig - eps;
+            let down = loss_at(&flat);
+            flat[i] = orig;
+            let numeric = (up - down) / (2.0 * eps);
+            let analytic = grads.flat[i];
+            assert!(
+                (numeric - analytic).abs() < 0.02 * numeric.abs().max(analytic.abs()).max(0.01),
+                "param {i}: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn qat_training_reduces_loss_natively() {
+        let (m, mut flat) = net_and_params("tinynet");
+        let net0 = TrainNet::new(&m, &flat).unwrap();
+        let mut mom = vec![0f32; net0.param_count];
+        let (x, ys) = batch(&m, 7);
+        let first = {
+            let pass = forward(&net0, &x, &Mode::Qat);
+            softmax_xent(&pass.logits, &ys).0
+        };
+        let mut last = first;
+        for _ in 0..30 {
+            let net = TrainNet::new(&m, &flat).unwrap();
+            let pass = forward(&net, &x, &Mode::Qat);
+            let (loss, dl) = softmax_xent(&pass.logits, &ys);
+            let grads = backward(&net, &pass, &dl);
+            sgd_update(&mut flat, &mut mom, &grads.flat, 0.05);
+            last = loss;
+        }
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+        assert!(flat.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn agn_noise_perturbs_and_sigma_gradient_flows() {
+        let (m, flat) = net_and_params("tinynet");
+        let net = TrainNet::new(&m, &flat).unwrap();
+        let (x, ys) = batch(&m, 9);
+        let sig = vec![0.5f32; m.num_layers];
+        let clean = forward(&net, &x, &Mode::Qat);
+        let noisy = forward(&net, &x, &Mode::Agn { sigmas: &sig, seed: 1 });
+        assert_ne!(clean.logits.data, noisy.logits.data);
+        let (_, dl) = softmax_xent(&noisy.logits, &ys);
+        let grads = backward(&net, &noisy, &dl);
+        assert!(grads.sigmas.iter().any(|&g| g != 0.0), "{:?}", grads.sigmas);
+    }
+
+    #[test]
+    fn noise_loss_and_grad_follow_eq10() {
+        let costs = vec![0.25f32, 0.75];
+        let sig = vec![0.1f32, -0.2];
+        let ln = noise_loss(&sig, &costs, 0.5);
+        assert!((ln - -(0.1 * 0.25 + 0.2 * 0.75)).abs() < 1e-6);
+        let g = noise_loss_grad(&sig, &costs, 0.5);
+        assert_eq!(g, vec![-0.25, 0.75]);
+        // capped sigma contributes zero gradient
+        let g2 = noise_loss_grad(&[0.9, 0.2], &costs, 0.5);
+        assert_eq!(g2[0], 0.0);
+    }
+
+    #[test]
+    fn approx_mode_matches_exact_lut_qat_forward() {
+        // with the exact multiplier LUT and the calibrated frozen scales,
+        // the approx forward must be very close to the qat forward
+        let (m, flat) = net_and_params("tinynet");
+        let net = TrainNet::new(&m, &flat).unwrap();
+        let (x, _) = batch(&m, 11);
+        let calib = forward(&net, &x, &Mode::Calib);
+        let scales: Vec<f32> = m
+            .layers
+            .iter()
+            .zip(&calib.absmax)
+            .map(|(l, &am)| {
+                if l.act_signed {
+                    quant::act_scale_signed(am)
+                } else {
+                    quant::act_scale(am)
+                }
+            })
+            .collect();
+        let cat = crate::multipliers::unsigned_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        let mut luts = Vec::with_capacity(m.num_layers * LUT_LEN);
+        for l in &m.layers {
+            luts.extend_from_slice(&crate::multipliers::build_layer_lut(exact, l.act_signed));
+        }
+        let qat = forward(&net, &x, &Mode::Qat);
+        let approx = forward(&net, &x, &Mode::Approx { luts: &luts, act_scales: &scales });
+        // same grids, same scales -> identical integer products; tiny
+        // divergence can only come from the dynamic-vs-frozen scales
+        let max_rel: f32 = qat
+            .logits
+            .data
+            .iter()
+            .zip(&approx.logits.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        let spread = qat.logits.data.iter().fold(0f32, |acc, &v| acc.max(v.abs()));
+        assert!(max_rel <= 0.25 * spread.max(1.0), "divergence {max_rel} vs spread {spread}");
+    }
+}

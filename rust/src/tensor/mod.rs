@@ -120,27 +120,41 @@ pub fn im2col<T: Copy + Default>(
 
 /// 2x2-style max pool (kernel k, stride s) on NHWC f32.
 pub fn max_pool(x: &TensorF, k: usize, s: usize) -> TensorF {
+    max_pool_with_argmax(x, k, s).0
+}
+
+/// Max pool that also returns, per output element, the flat input index of
+/// the selected maximum (first-wins on ties) — the trainer routes pooling
+/// gradients through these indices.
+pub fn max_pool_with_argmax(x: &TensorF, k: usize, s: usize) -> (TensorF, Vec<usize>) {
     let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let ho = (h - k) / s + 1;
     let wo = (w - k) / s + 1;
     let mut out = Tensor::zeros(&[b, ho, wo, c]);
+    let mut argmax = vec![0usize; b * ho * wo * c];
     for bi in 0..b {
         for oi in 0..ho {
             for oj in 0..wo {
                 for ci in 0..c {
-                    let mut m = f32::NEG_INFINITY;
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0usize;
                     for ki in 0..k {
                         for kj in 0..k {
-                            m = m.max(x.data[x.idx4(bi, oi * s + ki, oj * s + kj, ci)]);
+                            let src = x.idx4(bi, oi * s + ki, oj * s + kj, ci);
+                            if x.data[src] > best {
+                                best = x.data[src];
+                                best_idx = src;
+                            }
                         }
                     }
                     let di = out.idx4(bi, oi, oj, ci);
-                    out.data[di] = m;
+                    out.data[di] = best;
+                    argmax[di] = best_idx;
                 }
             }
         }
     }
-    out
+    (out, argmax)
 }
 
 /// Global average pool NHWC -> [B, C].

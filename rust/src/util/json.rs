@@ -18,12 +18,22 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+/// Parse failure with the byte offset it occurred at. `Display`/`Error`
+/// are hand-implemented — the default build's external dependency set is
+/// exactly `anyhow` + `log` (the offline crate set; no `thiserror`).
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // -- accessors ---------------------------------------------------------

@@ -2,15 +2,10 @@
 //! small resnet8 path, AgnError display/classification, spec validation,
 //! and the compile-once regression for a reused session.
 //!
-//! PJRT-dependent tests skip when artifacts/ is not built (same convention
-//! as the other integration suites).
+//! Everything here runs on the native backend with synthetic in-memory
+//! manifests — no `artifacts/` directory, no skips.
 
 use agn_approx::api::{AgnError, ApproxSession, JobResult, JobSpec, RunConfig};
-use std::path::Path;
-
-fn have(model: &str) -> bool {
-    Path::new(&format!("artifacts/{model}.manifest.json")).exists()
-}
 
 fn tiny_cfg() -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -24,7 +19,11 @@ fn tiny_cfg() -> RunConfig {
     cfg
 }
 
-// -- error surface (no artifacts needed) ------------------------------------
+fn tiny_session() -> ApproxSession {
+    ApproxSession::builder("artifacts").config(tiny_cfg()).build().unwrap()
+}
+
+// -- error surface (no backend needed) ---------------------------------------
 
 #[test]
 fn agn_error_display_messages() {
@@ -54,15 +53,11 @@ fn agn_error_display_messages() {
     assert!(e.source().is_some());
 }
 
-// -- spec validation (needs a session, not artifacts) ------------------------
+// -- spec validation ---------------------------------------------------------
 
 #[test]
 fn invalid_specs_are_rejected_before_any_work() {
-    // PJRT client may be unavailable in minimal environments
-    let Ok(mut session) = ApproxSession::builder("artifacts").config(tiny_cfg()).build() else {
-        eprintln!("skipping: no PJRT client");
-        return;
-    };
+    let mut session = tiny_session();
     let err = session
         .run(JobSpec::EnergySweep {
             models: vec![],
@@ -78,7 +73,8 @@ fn invalid_specs_are_rejected_before_any_work() {
         .unwrap_err();
     assert!(matches!(err, AgnError::InvalidSpec(_)), "{err:?}");
 
-    // a missing model is an Artifacts error, not a panic
+    // a model neither on disk nor in the synthetic zoo is an Artifacts
+    // error, not a panic
     let err = session.run(JobSpec::Eval { model: "no_such_model".into() }).unwrap_err();
     assert!(matches!(err, AgnError::Artifacts { .. }), "{err:?}");
     // nothing above should count as a completed job
@@ -89,9 +85,7 @@ fn invalid_specs_are_rejected_before_any_work() {
 
 #[test]
 fn catalog_and_info_jobs_return_structured_data() {
-    let Ok(mut session) = ApproxSession::builder("artifacts").config(tiny_cfg()).build() else {
-        return;
-    };
+    let mut session = tiny_session();
     let result = session.run(JobSpec::Catalog).unwrap();
     let JobResult::Catalog(cat) = &result else { panic!("wrong variant") };
     assert_eq!(cat.catalogs.len(), 2);
@@ -103,21 +97,18 @@ fn catalog_and_info_jobs_return_structured_data() {
         assert!(text.contains(&c.name));
     }
 
-    if Path::new("artifacts").is_dir() {
-        let JobResult::Info(info) = session.run(JobSpec::Info).unwrap() else {
-            panic!("wrong variant")
-        };
-        assert!(!info.platform.is_empty());
-    }
+    // Info lists the synthetic zoo even with no artifacts/ directory
+    let JobResult::Info(info) = session.run(JobSpec::Info).unwrap() else {
+        panic!("wrong variant")
+    };
+    assert!(!info.platform.is_empty());
+    assert!(info.models.iter().any(|m| m.model == "resnet8"), "{:?}", info.models);
+    assert!(info.models.iter().all(|m| m.param_count > 0 && m.programs > 0));
 }
 
 #[test]
 fn eval_and_search_round_trip_on_resnet8() {
-    if !have("resnet8") {
-        eprintln!("skipping: artifacts/ not built");
-        return;
-    }
-    let mut session = ApproxSession::builder("artifacts").config(tiny_cfg()).build().unwrap();
+    let mut session = tiny_session();
 
     let result = session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap();
     let eval = result.as_eval().expect("Eval spec must yield Eval result");
@@ -140,20 +131,16 @@ fn eval_and_search_round_trip_on_resnet8() {
     assert!(agn_approx::api::render(&JobResult::Search(search.clone())).contains("resnet8"));
 }
 
-// -- compile-once regression -------------------------------------------------
+// -- compile-once regression (EngineStats on the native backend) -------------
 
 #[test]
 fn reused_session_compiles_each_program_exactly_once() {
-    if !have("resnet8") {
-        eprintln!("skipping: artifacts/ not built");
-        return;
-    }
-    let mut session = ApproxSession::builder("artifacts").config(tiny_cfg()).build().unwrap();
+    let mut session = tiny_session();
 
     session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap();
     let first = session.stats().engine;
-    assert!(first.compile_count >= 1, "eval must compile at least one program");
-    // each cached executable was compiled exactly once
+    assert!(first.compile_count >= 1, "eval must compile at least one program plan");
+    // each cached plan was compiled exactly once
     assert_eq!(first.compile_count as usize, first.cached_executables);
 
     session.run(JobSpec::Eval { model: "resnet8".into() }).unwrap();

@@ -1,34 +1,32 @@
-//! Integration: the two behavioral simulators (AOT Pallas LUT path vs the
-//! native Rust simulator) must agree — same quantization grids, same
-//! im2col ordering, same batch-stats BN. A drift here invalidates Table 1's
-//! ground truth, so this is the most load-bearing test in the suite.
+//! Integration: two independent behavioral implementations must agree —
+//! the native backend's `eval_approx` program (quantized STE forward in
+//! `simulator::train`) against a direct `SimNet` LUT forward. Same
+//! quantization grids, same im2col ordering, same batch-stats BN. A drift
+//! here invalidates Table 1's ground truth, so this is the most
+//! load-bearing consistency check in the suite. Runs on the synthetic
+//! tinynet manifest — no artifacts, no skips.
 
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
-use agn_approx::runtime::{Engine, Manifest, Value};
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend, Manifest, Value};
 use agn_approx::simulator::{accuracy, LutSet, SimNet};
 use agn_approx::tensor::TensorF;
-use std::path::Path;
 
-fn setup() -> Option<(Engine, Manifest, Dataset, Vec<f32>)> {
-    let dir = Path::new("artifacts");
-    let engine = Engine::new(dir).ok()?;
-    let manifest = engine.manifest("tinynet").ok()?;
+fn setup() -> (Box<dyn ExecBackend>, Manifest, Dataset, Vec<f32>) {
+    let engine = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let manifest = engine.manifest("tinynet").unwrap();
     let spec = DatasetSpec::synth_cifar(
         (manifest.input_shape[0], manifest.input_shape[1]),
         11,
     );
     let data = Dataset::load(&spec, Split::Val);
-    let flat = manifest.load_init_params().ok()?;
-    Some((engine, manifest, data, flat))
+    let flat = manifest.load_init_params().unwrap();
+    (engine, manifest, data, flat)
 }
 
 fn cross_check(instance_name: &str) {
-    let Some((mut engine, manifest, data, flat)) = setup() else {
-        eprintln!("skipping: artifacts/ not built");
-        return;
-    };
-    // calibrate scales through the AOT program so both sides share them
+    let (mut engine, manifest, data, flat) = setup();
+    // calibrate scales through the backend program so both sides share them
     let (xs, ys) = data.eval_batch(manifest.batch, 0);
     let xv = Value::f32(
         &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
@@ -60,13 +58,13 @@ fn cross_check(instance_name: &str) {
         })
         .collect();
 
-    // AOT path
+    // backend program path
     let l = manifest.num_layers;
     let mut luts_flat = Vec::with_capacity(l * 65536);
     for lt in &luts {
         luts_flat.extend_from_slice(lt);
     }
-    let aot = engine
+    let program = engine
         .run(
             &manifest,
             "eval_approx",
@@ -79,9 +77,9 @@ fn cross_check(instance_name: &str) {
             ],
         )
         .unwrap();
-    let aot_m = aot[0].as_f32().unwrap();
+    let program_m = program[0].as_f32().unwrap();
 
-    // native path
+    // native simulator path
     let net = SimNet::new(&manifest, &flat).unwrap();
     let x = TensorF::from_vec(
         &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
@@ -91,14 +89,14 @@ fn cross_check(instance_name: &str) {
     let (top1, top5) = accuracy(&logits, &ys, 5);
 
     assert!(
-        (aot_m[1] as i64 - top1 as i64).abs() <= 1,
-        "{instance_name}: top-1 mismatch AOT {} vs native {top1}",
-        aot_m[1]
+        (program_m[1] as i64 - top1 as i64).abs() <= 1,
+        "{instance_name}: top-1 mismatch program {} vs simulator {top1}",
+        program_m[1]
     );
     assert!(
-        (aot_m[2] as i64 - top5 as i64).abs() <= 1,
-        "{instance_name}: top-5 mismatch AOT {} vs native {top5}",
-        aot_m[2]
+        (program_m[2] as i64 - top5 as i64).abs() <= 1,
+        "{instance_name}: top-5 mismatch program {} vs simulator {top5}",
+        program_m[2]
     );
 }
 

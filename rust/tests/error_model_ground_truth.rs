@@ -2,7 +2,8 @@
 //! behavioral ground truth on real network operands — the mini version of
 //! paper Table 1, with the paper's qualitative ordering asserted:
 //! multi-dist Pearson > single-dist/MC Pearson, and multi-dist Pearson
-//! near-perfect.
+//! near-perfect. Runs on the synthetic tinynet manifest (native backend
+//! path) — no artifacts, no skips.
 
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::errormodel::layer_error_map;
@@ -10,18 +11,15 @@ use agn_approx::errormodel::mc::mc_sigma_e;
 use agn_approx::errormodel::model::{estimate_with_aggregates, row_aggregates};
 use agn_approx::matching::collect_operands;
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
-use agn_approx::runtime::Manifest;
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
 use agn_approx::simulator::{approx_matmul, LutSet, SimNet};
 use agn_approx::tensor::TensorF;
 use agn_approx::util::stats;
-use std::path::Path;
 
 #[test]
 fn multi_dist_tracks_behavioral_truth() {
-    let Ok(manifest) = Manifest::load(Path::new("artifacts"), "tinynet") else {
-        eprintln!("skipping: artifacts/ not built");
-        return;
-    };
+    let backend = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let manifest = backend.manifest("tinynet").unwrap();
     let flat = manifest.load_init_params().unwrap();
     let net = SimNet::new(&manifest, &flat).unwrap();
     let spec = DatasetSpec::synth_cifar(net.input_hw, 5);
@@ -57,6 +55,11 @@ fn multi_dist_tracks_behavioral_truth() {
                 continue;
             }
             let cap = caps.iter().find(|c| c.layer == li).unwrap();
+            if cap.m < 64 {
+                // too few neuron rows for a stable ground-truth std
+                // (the synthetic tinynet head sees batch-many rows only)
+                continue;
+            }
             let approx =
                 approx_matmul(&cap.x_codes, &layer.w_cols, &lut, cap.m, cap.k, cap.n);
             let errs: Vec<f64> = approx

@@ -1,0 +1,79 @@
+//! Guard: the integration suites must never silently self-skip under
+//! default features. Before the native backend existed, every suite began
+//! with `eprintln!("skipping: artifacts/ not built"); return;` — so the
+//! tier-1 gate could go green while executing zero real assertions. This
+//! test makes that convention impossible to reintroduce:
+//!
+//! 1. it scans `tests/*.rs` for the skip-print convention, and
+//! 2. it proves the native backend can actually serve every model the
+//!    suites rely on (so there is nothing left to skip *for*).
+
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
+use std::path::Path;
+
+#[test]
+fn no_test_file_contains_a_silent_skip_path() {
+    // needles built by concatenation so they never match this file's own
+    // source; covers both historical skip variants — the print-based one
+    // and the bare `if !Path::new("artifacts/...").exists() { return; }`
+    let banned: Vec<String> = vec![
+        ["skip", "ping:"].concat(),                      // eprintln convention
+        ["eprintln!(\"", "skip"].concat(),               // any printed skip
+        ["Path::new(\"", "artifacts"].concat(),          // artifacts-dir gating
+        ["manifest.json\")", ".exists()"].concat(),      // bare-return gating
+    ];
+    let this_file = Path::new(file!())
+        .file_name()
+        .unwrap()
+        .to_string_lossy()
+        .to_string();
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests");
+    let mut scanned = 0usize;
+    for entry in std::fs::read_dir(&dir).expect("tests/ must be readable") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("rs") {
+            continue;
+        }
+        if path.file_name().unwrap().to_string_lossy() == this_file.as_str() {
+            continue;
+        }
+        let src = std::fs::read_to_string(&path).unwrap();
+        for needle in &banned {
+            assert!(
+                !src.contains(needle.as_str()),
+                "{path:?} contains {needle:?} — a silent self-skip path; integration \
+                 suites must run real assertions on the native backend instead"
+            );
+        }
+        scanned += 1;
+    }
+    assert!(scanned >= 5, "expected the integration suites in tests/, found {scanned}");
+}
+
+#[test]
+fn native_backend_serves_every_suite_model() {
+    // the models the integration suites and CLI defaults depend on
+    // (vgg16_signed backs the table3 signed row)
+    let backend = create_backend(BackendKind::Native, "artifacts").unwrap();
+    for model in
+        ["tinynet", "resnet8", "resnet14", "resnet20", "resnet32", "vgg16", "vgg16_signed"]
+    {
+        let m = backend
+            .manifest(model)
+            .unwrap_or_else(|e| panic!("native backend cannot serve {model}: {e}"));
+        assert!(m.param_count > 0);
+        assert!(m.load_init_params().is_ok(), "{model} has no init params");
+        for program in [
+            "eval",
+            "eval_agn",
+            "eval_approx",
+            "train_qat",
+            "train_agn",
+            "train_approx",
+            "calibrate",
+        ] {
+            assert!(m.program(program).is_ok(), "{model} missing program {program}");
+        }
+    }
+}

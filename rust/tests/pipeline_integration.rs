@@ -1,14 +1,15 @@
 //! Integration: the full paper pipeline on tinynet with tiny step counts —
 //! baseline -> calibrate -> gradient search -> matching -> retrain -> eval,
 //! driven through the composable session API (`ApproxSession::pipeline`
-//! hands out the per-model pipeline plus the shared engine).
-//! Asserts structural invariants, not accuracies (step counts are minimal).
+//! hands out the per-model pipeline plus the shared backend).
+//! Runs on the native backend with a synthetic manifest — no artifacts,
+//! no skips. Asserts structural invariants, not accuracies (step counts
+//! are minimal).
 
 use agn_approx::api::{ApproxSession, RunConfig};
 use agn_approx::matching::assignment_luts;
 use agn_approx::multipliers::unsigned_catalog;
 use agn_approx::search::EvalMode;
-use std::path::Path;
 
 fn tiny_cfg() -> RunConfig {
     let mut cfg = RunConfig::default();
@@ -28,10 +29,6 @@ fn tiny_session() -> ApproxSession {
 
 #[test]
 fn full_pipeline_composes() {
-    if !Path::new("artifacts/tinynet.manifest.json").exists() {
-        eprintln!("skipping: artifacts/ not built");
-        return;
-    }
     let mut session = tiny_session();
     let (pipe, engine) = session.pipeline("tinynet").unwrap();
     let base = pipe.baseline(engine).unwrap();
@@ -82,9 +79,6 @@ fn full_pipeline_composes() {
 
 #[test]
 fn matching_margin_zero_sigma_gives_exact_network() {
-    if !Path::new("artifacts/tinynet.manifest.json").exists() {
-        return;
-    }
     let mut session = tiny_session();
     let (pipe, engine) = session.pipeline("tinynet").unwrap();
     let base = pipe.baseline(engine).unwrap();
@@ -101,29 +95,27 @@ fn matching_margin_zero_sigma_gives_exact_network() {
 }
 
 #[test]
-fn evaluate_sim_agrees_with_pjrt_eval_on_exact_path() {
-    if !Path::new("artifacts/tinynet.manifest.json").exists() {
-        return;
-    }
+fn evaluate_sim_agrees_with_backend_eval_on_exact_path() {
     let mut session = tiny_session();
     let (pipe, engine) = session.pipeline("tinynet").unwrap();
     let base = pipe.baseline(engine).unwrap();
     let (absmax, _) = pipe.calibrate(engine, &base.flat).unwrap();
-    let pjrt = pipe.evaluate(engine, &base.flat, EvalMode::Qat).unwrap();
+    let backend_eval = pipe.evaluate(engine, &base.flat, EvalMode::Qat).unwrap();
     let sim = pipe
         .evaluate_sim(
             &base.flat,
             &absmax,
             &agn_approx::simulator::LutSet::Exact,
-            pjrt.n,
+            backend_eval.n,
         )
         .unwrap();
-    // PJRT eval uses dynamic per-batch scales, the simulator frozen ones:
-    // small divergence allowed, gross divergence means a quantization bug
+    // the backend eval uses dynamic per-batch scales, the simulator frozen
+    // ones: small divergence allowed, gross divergence means a
+    // quantization bug
     assert!(
-        (pjrt.top1 - sim.top1).abs() < 0.15,
-        "PJRT {} vs simulator {}",
-        pjrt.top1,
+        (backend_eval.top1 - sim.top1).abs() < 0.2,
+        "backend {} vs simulator {}",
+        backend_eval.top1,
         sim.top1
     );
 }

@@ -1,20 +1,23 @@
-//! Integration: the AOT bridge. Loads the tinynet HLO-text artifacts on the
-//! PJRT CPU client and checks program semantics end to end (these are the
-//! same artifacts `make artifacts` builds; Python is NOT involved here).
+//! Integration: the execution-backend bridge. Drives the manifest programs
+//! end to end on the native backend (synthetic tinynet manifest — no
+//! artifacts, no skips) and checks program semantics: metric sanity, input
+//! validation, loss descent under training, the lambda/sigma response of
+//! the gradient search, and AGN degradation.
+//!
+//! With `--features pjrt` and built artifacts the same assertions hold on
+//! the PJRT backend — the program contract is backend-independent.
 
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
-use agn_approx::runtime::{Engine, Value};
+use agn_approx::runtime::{create_backend, BackendKind, ExecBackend, Manifest, Value};
 use agn_approx::search::{self, LrSchedule, TrainState};
-use std::path::Path;
 
-fn engine() -> Option<(Engine, agn_approx::runtime::Manifest)> {
-    let dir = Path::new("artifacts");
-    let engine = Engine::new(dir).ok()?;
-    let manifest = engine.manifest("tinynet").ok()?;
-    Some((engine, manifest))
+fn backend() -> (Box<dyn ExecBackend>, Manifest) {
+    let engine = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let manifest = engine.manifest("tinynet").unwrap();
+    (engine, manifest)
 }
 
-fn data(manifest: &agn_approx::runtime::Manifest) -> Dataset {
+fn data(manifest: &Manifest) -> Dataset {
     let spec = DatasetSpec::synth_cifar(
         (manifest.input_shape[0], manifest.input_shape[1]),
         7,
@@ -24,10 +27,7 @@ fn data(manifest: &agn_approx::runtime::Manifest) -> Dataset {
 
 #[test]
 fn eval_runs_and_metrics_are_sane() {
-    let Some((mut engine, manifest)) = engine() else {
-        eprintln!("skipping: artifacts/ not built");
-        return;
-    };
+    let (mut engine, manifest) = backend();
     let flat = manifest.load_init_params().unwrap();
     let d = data(&manifest);
     let (xs, ys) = d.eval_batch(manifest.batch, 0);
@@ -53,9 +53,7 @@ fn eval_runs_and_metrics_are_sane() {
 
 #[test]
 fn input_validation_fails_fast() {
-    let Some((mut engine, manifest)) = engine() else {
-        return;
-    };
+    let (mut engine, manifest) = backend();
     let err = engine
         .run(&manifest, "eval", &[Value::scalar_f32(0.0)])
         .unwrap_err();
@@ -64,14 +62,13 @@ fn input_validation_fails_fast() {
 }
 
 #[test]
-fn qat_training_reduces_loss_via_pjrt() {
-    let Some((mut engine, manifest)) = engine() else {
-        return;
-    };
+fn qat_training_reduces_loss() {
+    let (mut engine, manifest) = backend();
     let d = data(&manifest);
     let mut state = TrainState::init(&manifest, 0.1).unwrap();
     let lr = LrSchedule { base: 0.05, decay: 0.9, every: 50 };
-    let hist = search::train_qat(&mut engine, &manifest, &d, &mut state, 40, lr, 3).unwrap();
+    let hist =
+        search::train_qat(&mut *engine, &manifest, &d, &mut state, 40, lr, 3).unwrap();
     let first = hist.steps[0].loss;
     let last = hist.steps.last().unwrap().loss;
     assert!(last < first, "loss did not decrease: {first} -> {last}");
@@ -79,20 +76,18 @@ fn qat_training_reduces_loss_via_pjrt() {
 
 #[test]
 fn gradient_search_learns_sigmas_and_responds_to_lambda() {
-    let Some((mut engine, manifest)) = engine() else {
-        return;
-    };
+    let (mut engine, manifest) = backend();
     let d = data(&manifest);
     let lr = LrSchedule { base: 0.02, decay: 0.9, every: 100 };
 
-    let run = |engine: &mut Engine, lambda: f32| {
+    let run = |engine: &mut dyn ExecBackend, lambda: f32| {
         let mut st = TrainState::init(&manifest, 0.05).unwrap();
         search::gradient_search(engine, &manifest, &d, &mut st, 40, lr, lambda, 0.5, 3)
             .unwrap();
         st.sigmas.iter().map(|s| s.abs() as f64).sum::<f64>() / st.sigmas.len() as f64
     };
-    let low = run(&mut engine, 0.0);
-    let high = run(&mut engine, 0.6);
+    let low = run(&mut *engine, 0.0);
+    let high = run(&mut *engine, 0.6);
     assert!(
         high > low,
         "lambda must push sigmas up: lam0 -> {low:.4}, lam0.6 -> {high:.4}"
@@ -101,13 +96,11 @@ fn gradient_search_learns_sigmas_and_responds_to_lambda() {
 
 #[test]
 fn calibrate_returns_positive_stats() {
-    let Some((mut engine, manifest)) = engine() else {
-        return;
-    };
+    let (mut engine, manifest) = backend();
     let d = data(&manifest);
     let flat = manifest.load_init_params().unwrap();
     let (absmax, ystd) =
-        search::calibrate(&mut engine, &manifest, &d, &flat, 2).unwrap();
+        search::calibrate(&mut *engine, &manifest, &d, &flat, 2).unwrap();
     assert_eq!(absmax.len(), manifest.num_layers);
     assert!(absmax.iter().all(|&v| v > 0.0), "{absmax:?}");
     assert!(ystd.iter().all(|&v| v > 0.0), "{ystd:?}");
@@ -115,16 +108,14 @@ fn calibrate_returns_positive_stats() {
 
 #[test]
 fn agn_eval_degrades_with_huge_sigma() {
-    let Some((mut engine, manifest)) = engine() else {
-        return;
-    };
+    let (mut engine, manifest) = backend();
     let d = data(&manifest);
     // train a bit first so clean accuracy is meaningful
     let mut st = TrainState::init(&manifest, 0.0).unwrap();
     let lr = LrSchedule { base: 0.05, decay: 0.9, every: 100 };
-    search::train_qat(&mut engine, &manifest, &d, &mut st, 60, lr, 5).unwrap();
+    search::train_qat(&mut *engine, &manifest, &d, &mut st, 60, lr, 5).unwrap();
     let clean = search::evaluate(
-        &mut engine,
+        &mut *engine,
         &manifest,
         &d,
         &st.flat,
@@ -134,7 +125,7 @@ fn agn_eval_degrades_with_huge_sigma() {
     .unwrap();
     let sig = vec![5.0f32; manifest.num_layers];
     let noisy = search::evaluate(
-        &mut engine,
+        &mut *engine,
         &manifest,
         &d,
         &st.flat,

@@ -1,0 +1,112 @@
+//! API-surface stub of the `xla-rs` PJRT bindings.
+//!
+//! The real bindings link against the `xla_extension` native library, which
+//! is not part of the offline crate set. This stub mirrors exactly the API
+//! subset `agn_approx::runtime::engine` uses so the `pjrt` cargo feature
+//! typechecks everywhere; every entry point that would touch the native
+//! library returns [`Error::Unavailable`] instead. To run the PJRT backend
+//! for real, replace the `xla = { path = "vendor/xla" }` dependency with the
+//! actual `xla-rs` bindings (same API) and install `xla_extension`.
+
+/// Error type matching the `{e:?}`-formatting the engine layer relies on.
+#[derive(Debug)]
+pub enum Error {
+    /// The native `xla_extension` library is not linked into this build.
+    Unavailable(&'static str),
+}
+
+const UNAVAILABLE: Error = Error::Unavailable(
+    "xla_extension not linked: vendor/xla is an API stub; install the real xla-rs bindings to execute HLO",
+);
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types that can cross the (stub) PJRT boundary.
+pub trait Element: Copy {}
+impl Element for f32 {}
+impl Element for f64 {}
+impl Element for i32 {}
+impl Element for i64 {}
+impl Element for u32 {}
+impl Element for u8 {}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Element>(_data: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(UNAVAILABLE)
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(UNAVAILABLE)
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(UNAVAILABLE)
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(UNAVAILABLE)
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub: there is no native PJRT CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(UNAVAILABLE)
+    }
+}
