@@ -22,7 +22,13 @@ fn main() -> Result<(), agn_approx::api::AgnError> {
     cfg.search_steps = args.usize_or("search-steps", 80);
     cfg.retrain_steps = args.usize_or("retrain-steps", 20);
 
-    let mut session = ApproxSession::builder(&artifacts).config(cfg).build()?;
+    // sweeps are the workload the compute pool exists for: every lambda
+    // re-runs search + retrain + evaluation, all bit-identical at any
+    // --threads value (0 = auto: AGN_THREADS env var, else all cores)
+    let mut session = ApproxSession::builder(&artifacts)
+        .config(cfg)
+        .threads(args.usize_or("threads", 0))
+        .build()?;
     let result = session.run(JobSpec::ParetoFront {
         models: vec!["resnet8".into()],
         lambdas,

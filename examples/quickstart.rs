@@ -30,11 +30,15 @@ fn main() -> Result<(), agn_approx::api::AgnError> {
 
     println!("== agn-approx quickstart: {model} on SynthCIFAR ==");
     let t0 = Instant::now();
-    let mut session = ApproxSession::builder(&artifacts).config(cfg).build()?;
+    let mut session = ApproxSession::builder(&artifacts)
+        .config(cfg)
+        .threads(args.usize_or("threads", 0))
+        .build()?;
     println!(
-        "session up (platform={}, cache={})",
+        "session up (platform={}, cache={}, threads={})",
         session.engine().platform(),
-        session.cache_dir().display()
+        session.cache_dir().display(),
+        session.compute().threads
     );
 
     // 1. QAT baseline

@@ -3,16 +3,43 @@
 //! §4.2 reports gradient-search wall-clock).
 //!
 //! Runs on the native backend (synthetic resnet8 manifest; always
-//! available). With `--features pjrt` and built artifacts, a PJRT section
-//! benches the same programs on the XLA path — only that section skips
-//! when the PJRT client or artifacts are unavailable.
+//! available), including a compute-pool scaling lane (train_qat at 1/2/4
+//! worker threads — see EXPERIMENTS.md §Perf). With `--features pjrt` and
+//! built artifacts, a PJRT section benches the same programs on the XLA
+//! path — only that section skips when the PJRT client or artifacts are
+//! unavailable.
 
 use agn_approx::api::{ApproxSession, JobSpec, RunConfig};
 use agn_approx::benchkit::Bench;
+use agn_approx::compute::ComputeConfig;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
-use agn_approx::runtime::{create_backend, BackendKind, ExecBackend, Value};
+use agn_approx::runtime::{
+    create_backend, create_backend_with, BackendKind, ExecBackend, Manifest, Value,
+};
 use agn_approx::util::rng::Pcg32;
+
+/// The canonical train_qat invocation (params, momentum, batch, labels,
+/// lr) — built once so the per-backend lane and the thread-scaling lane
+/// can never drift apart in call shape.
+fn train_qat_inputs(manifest: &Manifest, flat: &[f32], lr: f32) -> Vec<Value> {
+    let spec = DatasetSpec::synth_cifar(
+        (manifest.input_shape[0], manifest.input_shape[1]),
+        42,
+    );
+    let data = Dataset::load(&spec, Split::Train);
+    let (xs, ys) = data.batch(manifest.batch, 0);
+    vec![
+        Value::vec_f32(flat.to_vec()),
+        Value::vec_f32(vec![0f32; flat.len()]),
+        Value::f32(
+            &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+            xs,
+        ),
+        Value::i32(&[manifest.batch], ys),
+        Value::scalar_f32(lr),
+    ]
+}
 
 fn bench_backend(b: &mut Bench, engine: &mut dyn ExecBackend, tag: &str) {
     let manifest = engine.manifest("resnet8").expect("resnet8 manifest");
@@ -43,20 +70,9 @@ fn bench_backend(b: &mut Bench, engine: &mut dyn ExecBackend, tag: &str) {
     });
     b.throughput(manifest.batch as f64, "images");
 
+    let tq_inputs = train_qat_inputs(&manifest, &flat, 0.01);
     b.bench(&format!("{tag}/execute/train_qat"), || {
-        engine
-            .run(
-                &manifest,
-                "train_qat",
-                &[
-                    Value::vec_f32(flat.clone()),
-                    Value::vec_f32(zeros.clone()),
-                    xv.clone(),
-                    yv.clone(),
-                    Value::scalar_f32(0.01),
-                ],
-            )
-            .unwrap()
+        engine.run(&manifest, "train_qat", &tq_inputs).unwrap()
     });
     b.throughput(manifest.batch as f64, "images");
 
@@ -122,6 +138,27 @@ fn main() {
         e2.warmup(&m2, "eval").unwrap();
     });
     bench_backend(&mut b, &mut *native, "native");
+
+    // compute-pool scaling lane: the heaviest program (train_qat — the
+    // trainer GEMM + LUT hot paths) on fixed worker counts. Outputs are
+    // bit-identical across thread counts; only wall-clock moves.
+    {
+        let manifest = native.manifest("resnet8").expect("resnet8 manifest");
+        let flat = manifest.load_init_params().expect("init");
+        let inputs = train_qat_inputs(&manifest, &flat, 0.01);
+        for t in [1usize, 2, 4] {
+            let mut bt = create_backend_with(
+                BackendKind::Native,
+                "artifacts",
+                ComputeConfig::with_threads(t),
+            )
+            .unwrap();
+            b.bench(&format!("native/t{t}/execute/train_qat"), || {
+                bt.run(&manifest, "train_qat", &inputs).unwrap()
+            });
+            b.throughput(manifest.batch as f64, "images");
+        }
+    }
 
     // session/job API overhead on a warm backend: baseline loads from the
     // state cache, evaluation is one batch

@@ -1,9 +1,14 @@
 //! Behavioral-simulator benchmarks: LUT matmul throughput (the deployment
-//! evaluation hot path behind Tables 2/3 and the ALWANN baseline) and a
-//! full resnet8 forward. Target: >= 5e7 approx-MACs/s single core
-//! (DESIGN.md §Perf).
+//! evaluation hot path behind Tables 2/3 and the ALWANN baseline), the
+//! trainer GEMM workloads, the compute-pool thread scaling, and a full
+//! resnet8 forward. Target: >= 5e7 approx-MACs/s single core
+//! (DESIGN.md §Perf); see EXPERIMENTS.md §Perf for recorded runs.
+//!
+//! Emits the machine-readable `BENCH_kernels.json` (benchkit JSON export)
+//! so the perf trajectory can be tracked across PRs.
 
 use agn_approx::benchkit::Bench;
+use agn_approx::compute::{self, ComputeConfig, ComputePool};
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
 use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
@@ -11,6 +16,26 @@ use agn_approx::simulator::matmul::approx_matmul_naive;
 use agn_approx::simulator::{approx_matmul, exact_matmul, LutSet, SimNet};
 use agn_approx::tensor::TensorF;
 use agn_approx::util::rng::Pcg32;
+
+/// Thread counts for the scaling sections (§Perf: the 4-thread row is the
+/// acceptance gate vs. the 1-thread row).
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// The f32 reference without blocking: naive (m, n, k) loop order, the
+/// "serial" column of the §Perf serial-vs-blocked-vs-parallel table.
+fn gemm_naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut s = 0f32;
+            for ki in 0..k {
+                s += a[mi * k + ki] * b[ki * n + ni];
+            }
+            c[mi * n + ni] = s;
+        }
+    }
+    c
+}
 
 fn main() {
     let mut b = Bench::new("simulator");
@@ -37,19 +62,67 @@ fn main() {
         b.throughput((m * k * n) as f64 / 1e6, "M-MACs");
     }
 
-    // full-network forward (synthetic manifest; no artifacts needed)
+    // compute-pool thread scaling on the LUT matmul hot path (§Perf
+    // acceptance: >= 2x at 4 threads vs t1 on multi-core hosts; outputs
+    // are bit-identical at every row, so this is pure throughput)
+    {
+        let (m, k, n) = (4096usize, 144usize, 32usize);
+        let x: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        for t in THREADS {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t));
+            b.bench(&format!("approx_matmul_pool/t{t}/{m}x{k}x{n}"), || {
+                compute::approx_matmul_pool(&pool, &x, &w, &lut, m, k, n)
+            });
+            b.throughput((m * k * n) as f64 / 1e6, "M-MACs");
+        }
+    }
+
+    // trainer GEMM workloads (simulator::train backward: dW += pᵀg and
+    // dp = g Wᵀ at a conv-layer shape): naive serial vs blocked (t1) vs
+    // blocked parallel
+    {
+        let (m, k, n) = (4096usize, 144usize, 32usize);
+        let p: Vec<f32> = (0..m * k).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let wmat: Vec<f32> = (0..k * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let g: Vec<f32> = (0..m * n).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let macs = (m * k * n) as f64 / 1e6;
+
+        b.bench(&format!("gemm_naive/{m}x{k}x{n}"), || gemm_naive(&p, &wmat, m, k, n));
+        b.throughput(macs, "M-MACs");
+        for t in THREADS {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t));
+            b.bench(&format!("gemm/t{t}/{m}x{k}x{n}"), || {
+                compute::gemm(&pool, &p, &wmat, m, k, n)
+            });
+            b.throughput(macs, "M-MACs");
+            b.bench(&format!("gemm_at_acc/t{t}/{m}x{k}x{n}"), || {
+                let mut dw = vec![0f32; k * n];
+                compute::gemm_at_acc(&pool, &p, &g, m, k, n, &mut dw);
+                dw
+            });
+            b.throughput(macs, "M-MACs");
+            b.bench(&format!("gemm_bt/t{t}/{m}x{k}x{n}"), || {
+                compute::gemm_bt(&pool, &g, &wmat, m, n, k)
+            });
+            b.throughput(macs, "M-MACs");
+        }
+    }
+
+    // full-network forward (synthetic manifest; no artifacts needed):
+    // serial pool vs the environment-default pool
     {
         let backend = create_backend(BackendKind::Native, "artifacts").unwrap();
         let manifest = backend.manifest("resnet8").expect("resnet8 manifest");
         let flat = manifest.load_init_params().expect("init params");
-        let net = SimNet::new(&manifest, &flat).expect("simnet");
-        let spec = DatasetSpec::synth_cifar(net.input_hw, 42);
+        let spec = DatasetSpec::synth_cifar(
+            (manifest.input_shape[0], manifest.input_shape[1]),
+            42,
+        );
         let data = Dataset::load(&spec, Split::Val);
         let (xs, _) = data.eval_batch(manifest.batch, 0);
-        let x = TensorF::from_vec(
-            &[manifest.batch, net.input_hw.0, net.input_hw.1, 3],
-            xs,
-        );
+        let hw = (manifest.input_shape[0], manifest.input_shape[1]);
+        let x = TensorF::from_vec(&[manifest.batch, hw.0, hw.1, 3], xs);
         let absmax = vec![6.0f32; manifest.num_layers];
         let luts: Vec<Vec<i32>> = manifest
             .layers
@@ -62,6 +135,7 @@ fn main() {
             .map(|l| l.mults_per_image as f64)
             .sum::<f64>()
             * manifest.batch as f64;
+        let net = SimNet::new(&manifest, &flat).expect("simnet");
         b.bench("resnet8_forward_exact/batch", || {
             net.forward(&x, &absmax, &LutSet::Exact, None)
         });
@@ -70,6 +144,19 @@ fn main() {
             net.forward(&x, &absmax, &LutSet::PerLayer(&luts), None)
         });
         b.throughput(macs / 1e6, "M-MACs");
+        for t in THREADS {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t));
+            let netp = SimNet::with_pool(&manifest, &flat, pool).expect("simnet");
+            b.bench(&format!("resnet8_forward_lut/t{t}/batch"), || {
+                netp.forward(&x, &absmax, &LutSet::PerLayer(&luts), None)
+            });
+            b.throughput(macs / 1e6, "M-MACs");
+        }
+    }
+
+    match b.save_json("BENCH_kernels.json") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
     }
     b.finish();
 }

@@ -3,10 +3,11 @@
 
 use super::error::{AgnError, AgnResult};
 use super::job::{JobResult, JobSpec};
+use crate::compute::ComputeConfig;
 use crate::coordinator::experiments;
 use crate::coordinator::pipeline::{default_cache_dir, Pipeline, RunConfig};
 use crate::datasets::DatasetCache;
-use crate::runtime::{create_backend, BackendKind, EngineStats, ExecBackend};
+use crate::runtime::{create_backend_with, BackendKind, EngineStats, ExecBackend};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -21,6 +22,9 @@ pub struct SessionStats {
     pub models_loaded: usize,
     /// Where cached train states live.
     pub cache_dir: PathBuf,
+    /// Worker count of the session's compute layer (`--threads` /
+    /// [`SessionBuilder::threads`] / `AGN_THREADS`).
+    pub compute_threads: usize,
 }
 
 /// Builder for [`ApproxSession`]; the artifact directory is the only
@@ -31,6 +35,7 @@ pub struct SessionBuilder {
     cache_dir: Option<PathBuf>,
     cfg: RunConfig,
     backend: BackendKind,
+    threads: usize,
 }
 
 impl SessionBuilder {
@@ -38,6 +43,16 @@ impl SessionBuilder {
     /// pure-Rust path that needs no artifacts and no XLA library).
     pub fn backend(mut self, kind: BackendKind) -> Self {
         self.backend = kind;
+        self
+    }
+
+    /// Worker count for the compute layer (LUT matmuls, trainer GEMMs,
+    /// simulator sweeps). `0` (the default) means "auto": the
+    /// `AGN_THREADS` environment variable, else all available cores.
+    /// Results are **bit-identical at any thread count**
+    /// ([`crate::compute`]), so this is purely a throughput knob.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
         self
     }
 
@@ -70,11 +85,13 @@ impl SessionBuilder {
     /// Construct the session: builds the execution backend and creates the
     /// cache directory. Model artifacts/manifests are loaded lazily per job.
     pub fn build(self) -> AgnResult<ApproxSession> {
-        let engine =
-            create_backend(self.backend, &self.artifacts).map_err(|source| AgnError::Engine {
+        let compute = ComputeConfig::resolve(self.threads);
+        let engine = create_backend_with(self.backend, &self.artifacts, compute).map_err(
+            |source| AgnError::Engine {
                 context: format!("constructing {} backend", self.backend),
                 source,
-            })?;
+            },
+        )?;
         let cache_dir = self
             .cache_dir
             .unwrap_or_else(|| default_cache_dir(&self.artifacts));
@@ -87,6 +104,7 @@ impl SessionBuilder {
             artifacts: self.artifacts,
             cache_dir,
             cfg: self.cfg,
+            compute,
             pipelines: HashMap::new(),
             datasets: DatasetCache::default(),
             jobs_run: 0,
@@ -114,6 +132,9 @@ pub struct ApproxSession {
     artifacts: PathBuf,
     cache_dir: PathBuf,
     cfg: RunConfig,
+    /// Compute-layer configuration shared by the backend and every
+    /// per-model pipeline (simulator sweeps, operand collection).
+    compute: ComputeConfig,
     pipelines: HashMap<String, Pipeline>,
     /// Loaded synthetic datasets, shared across pipelines with the same
     /// spec (the ResNet family shares one SynthCIFAR copy).
@@ -129,6 +150,7 @@ impl ApproxSession {
             cache_dir: None,
             cfg: RunConfig::default(),
             backend: BackendKind::Native,
+            threads: 0,
         }
     }
 
@@ -208,6 +230,7 @@ impl ApproxSession {
                 &*self.engine,
                 model,
                 self.cfg.clone(),
+                self.compute,
                 &self.cache_dir,
                 &mut self.datasets,
             )
@@ -237,6 +260,11 @@ impl ApproxSession {
         &self.cfg
     }
 
+    /// The compute-layer configuration this session runs with.
+    pub fn compute(&self) -> ComputeConfig {
+        self.compute
+    }
+
     /// Aggregate session accounting (engine counters, jobs run, models).
     pub fn stats(&self) -> SessionStats {
         SessionStats {
@@ -244,6 +272,7 @@ impl ApproxSession {
             jobs_run: self.jobs_run,
             models_loaded: self.pipelines.len(),
             cache_dir: self.cache_dir.clone(),
+            compute_threads: self.compute.threads,
         }
     }
 }

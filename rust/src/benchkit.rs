@@ -10,6 +10,8 @@
 //! b.finish();
 //! ```
 
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 pub struct BenchResult {
@@ -19,6 +21,9 @@ pub struct BenchResult {
     pub min_s: f64,
     pub p50_s: f64,
     pub p90_s: f64,
+    /// Work per measurement + unit name, set by [`Bench::throughput`]
+    /// (e.g. `(4.7, "M-MACs")`); carried into the JSON export.
+    pub throughput: Option<(f64, String)>,
 }
 
 pub struct Bench {
@@ -78,6 +83,7 @@ impl Bench {
             min_s: samples[0],
             p50_s: samples[samples.len() / 2],
             p90_s: samples[samples.len() * 9 / 10],
+            throughput: None,
         };
         println!(
             "{:<44} {:>12} (p50 {:>12}, p90 {:>12}, min {:>12}, n={})",
@@ -92,18 +98,90 @@ impl Bench {
         self.results.last().unwrap()
     }
 
-    /// Report a derived throughput for the last result.
-    pub fn throughput(&self, units: f64, unit_name: &str) {
-        if let Some(last) = self.results.last() {
+    /// Report a derived throughput for the last result (and record it for
+    /// the JSON export).
+    pub fn throughput(&mut self, units: f64, unit_name: &str) {
+        if let Some(last) = self.results.last_mut() {
             println!(
                 "{:<44} {:>12.2} {unit_name}/s",
                 format!("  -> {}", last.name),
                 units / last.p50_s
             );
+            last.throughput = Some((units, unit_name.to_string()));
         }
+    }
+
+    /// The machine-readable form of this group (the `BENCH_*.json` files):
+    /// every result with its robust summary stats and, when recorded, the
+    /// derived p50 throughput.
+    pub fn to_json(&self) -> Json {
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("mean_s", Json::num(r.mean_s)),
+                    ("min_s", Json::num(r.min_s)),
+                    ("p50_s", Json::num(r.p50_s)),
+                    ("p90_s", Json::num(r.p90_s)),
+                ];
+                if let Some((units, unit)) = &r.throughput {
+                    pairs.push(("units", Json::num(*units)));
+                    pairs.push(("unit", Json::str(unit.clone())));
+                    // a sub-resolution p50 of exactly 0 would serialize as
+                    // a bare `inf` token — invalid JSON; omit the derived
+                    // rate instead (units + p50_s remain for consumers)
+                    let per_s = units / r.p50_s;
+                    if per_s.is_finite() {
+                        pairs.push(("per_s", Json::num(per_s)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("group", Json::str(self.group.clone())),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// Write [`Bench::to_json`] to `path`; returns the written path.
+    pub fn save_json(&self, path: impl AsRef<Path>) -> std::io::Result<PathBuf> {
+        let path = path.as_ref().to_path_buf();
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        Ok(path)
     }
 
     pub fn finish(self) {
         println!("=== end group: {} ({} benches) ===", self.group, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_export_carries_stats_and_throughput() {
+        let mut b = Bench::new("testgroup");
+        // real work behind an opaque bound so the optimizer cannot
+        // const-fold it away and p50 stays > 0 even on coarse timers
+        let n = std::hint::black_box(50_000u64);
+        b.bench("xor_fold", || (0..n).fold(0u64, |a, x| a ^ x.wrapping_mul(31)));
+        b.throughput(50_000.0, "ops");
+        let j = b.to_json();
+        assert_eq!(j.req("group").unwrap().as_str(), Some("testgroup"));
+        let rs = j.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].req("name").unwrap().as_str(), Some("xor_fold"));
+        assert!(rs[0].req("p50_s").unwrap().as_f64().unwrap() > 0.0);
+        let per_s = rs[0].req("per_s").unwrap().as_f64().unwrap();
+        assert!(per_s.is_finite() && per_s > 0.0);
+        assert_eq!(rs[0].req("unit").unwrap().as_str(), Some("ops"));
+        // the whole export must round-trip through the in-repo parser
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req("group").unwrap().as_str(), Some("testgroup"));
     }
 }

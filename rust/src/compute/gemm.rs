@@ -1,0 +1,303 @@
+//! Blocked f32 GEMM kernels for the trainer's float hot paths
+//! (`simulator::train`): the backward weight-gradient `gemm_at_acc`
+//! (`c += aᵀb`), the backward input-gradient `gemm_bt` (`c = a bᵀ`), and
+//! the batch-parallel `col2im_pool` gradient scatter — those three are
+//! what the trainer calls. The general [`gemm`] (`c = a b`) is the
+//! reference shape of the family: it anchors the §Perf
+//! serial-vs-blocked-vs-parallel bench lane (`bench_simulator`) and is
+//! the kernel future float forward paths build on.
+//!
+//! Determinism contract (shared with [`super::lut`]): every kernel fixes
+//! one per-output-element summation order (the reduction index ascending),
+//! parallelizes only over **disjoint output row chunks**, and processes
+//! reduction blocks in ascending order — so results are bit-identical at
+//! any thread count, and blocking changes memory traffic, never the float
+//! summation order.
+
+use super::pool::ComputePool;
+
+/// Reduction-dimension panel: one `a`-row panel + the matching `b` rows fit
+/// L1/L2 while the output row stays register/cache resident.
+const KC: usize = 256;
+/// Row panel for the transposed-accumulate kernel (how many `b` rows are
+/// kept hot per pass over the packed `aᵀ` chunk).
+const MC: usize = 128;
+
+/// c[M, N] = a[M, K] @ b[K, N]. Blocked over K panels of [`KC`], row-chunk
+/// parallel over M; summation order per output element is k ascending.
+/// Currently exercised by `bench_simulator` (the §Perf lane) and the
+/// determinism property tests; the trainer's backward uses the
+/// specialized [`gemm_at_acc`]/[`gemm_bt`] forms below.
+pub fn gemm(pool: &ComputePool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    let mut c = vec![0f32; m * n];
+    pool.run_rows(&mut c, n, m * k * n, |rows, out| {
+        for k0 in (0..k).step_by(KC) {
+            let k1 = (k0 + KC).min(k);
+            for (ri, mi) in rows.clone().enumerate() {
+                let arow = &a[mi * k..(mi + 1) * k];
+                let orow = &mut out[ri * n..(ri + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+    c
+}
+
+/// out[K, N] += a[M, K]ᵀ @ b[M, N] — the weight-gradient kernel
+/// (`dW += pᵀ g`). Packs the transposed `a` chunk once per worker (operand
+/// packing: the [K, M] layout turns the stride-K column walk into a
+/// contiguous row walk), then accumulates `b` row panels of [`MC`] in
+/// ascending row order. Row-chunk parallel over K; summation order per
+/// output element is m ascending, zero `a` entries skipped exactly like
+/// the serial kernel.
+pub fn gemm_at_acc(
+    pool: &ComputePool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), m * n, "b shape");
+    assert_eq!(out.len(), k * n, "out shape");
+    pool.run_rows(out, n, m * k * n, |rows, chunk| {
+        // pack aᵀ for this chunk's output rows: at[local_k][r] = a[r][k]
+        let rk = rows.end - rows.start;
+        let mut at = vec![0f32; rk * m];
+        for (ri, ki) in rows.clone().enumerate() {
+            let dst = &mut at[ri * m..(ri + 1) * m];
+            for (r, d) in dst.iter_mut().enumerate() {
+                *d = a[r * k + ki];
+            }
+        }
+        for r0 in (0..m).step_by(MC) {
+            let r1 = (r0 + MC).min(m);
+            for ri in 0..rk {
+                let atrow = &at[ri * m..(ri + 1) * m];
+                let orow = &mut chunk[ri * n..(ri + 1) * n];
+                for r in r0..r1 {
+                    let av = atrow[r];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[r * n..(r + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// c[M, K] = a[M, N] @ b[K, N]ᵀ — the input-gradient kernel (`dp = g Wᵀ`):
+/// both operands walk rows contiguously (dot products of `a` rows with `b`
+/// rows). Row-chunk parallel over M; summation order per output element is
+/// n ascending with `b_elem * a_elem` operand order (matching the serial
+/// trainer kernel exactly).
+pub fn gemm_bt(
+    pool: &ComputePool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    kdim: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * n, "a shape");
+    assert_eq!(b.len(), kdim * n, "b shape");
+    let mut c = vec![0f32; m * kdim];
+    pool.run_rows(&mut c, kdim, m * n * kdim, |rows, out| {
+        for (ri, mi) in rows.clone().enumerate() {
+            let arow = &a[mi * n..(mi + 1) * n];
+            let orow = &mut out[ri * kdim..(ri + 1) * kdim];
+            for (ki, o) in orow.iter_mut().enumerate() {
+                let brow = &b[ki * n..(ki + 1) * n];
+                let mut s = 0f32;
+                for (&bv, &av) in brow.iter().zip(arow.iter()) {
+                    s += bv * av;
+                }
+                *o = s;
+            }
+        }
+    });
+    c
+}
+
+/// Transpose of `tensor::im2col` (gradient routing back to x), parallel
+/// over the **batch** dimension: each image's input-gradient slice is
+/// written by exactly one worker, so the overlapping patch scatter stays
+/// race-free and bit-identical at any thread count. `gp` is the patch
+/// gradient [B*Ho*Wo, kh*kw*C]; returns gx [B, H, W, C] flattened.
+pub fn col2im_pool(
+    pool: &ComputePool,
+    gp: &[f32],
+    in_shape: &[usize],
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let (b, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (w + 2 * pad - kw) / stride + 1;
+    let k = kh * kw * c;
+    debug_assert_eq!(gp.len(), b * ho * wo * k);
+    let mut gx = vec![0f32; b * h * w * c];
+    let image = h * w * c;
+    pool.run_rows(&mut gx, image, gp.len(), |batches, out| {
+        for (local, bi) in batches.enumerate() {
+            let img = &mut out[local * image..(local + 1) * image];
+            for oi in 0..ho {
+                for oj in 0..wo {
+                    let base = ((bi * ho + oi) * wo + oj) * k;
+                    for ki in 0..kh {
+                        let ii = oi * stride + ki;
+                        if ii < pad || ii - pad >= h {
+                            continue;
+                        }
+                        for kj in 0..kw {
+                            let jj = oj * stride + kj;
+                            if jj < pad || jj - pad >= w {
+                                continue;
+                            }
+                            let src = ((ii - pad) * w + (jj - pad)) * c;
+                            let dst = base + (ki * kw + kj) * c;
+                            for ci in 0..c {
+                                img[src + ci] += gp[dst + ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    gx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::pool::ComputeConfig;
+    use crate::util::rng::Pcg32;
+
+    fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                let mut s = 0f64;
+                for ki in 0..k {
+                    s += a[mi * k + ki] as f64 * b[ki * n + ni] as f64;
+                }
+                c[mi * n + ni] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn gemm_close_to_f64_reference_and_bit_identical_across_threads() {
+        let mut rng = Pcg32::seeded(11);
+        let (m, k, n) = (17, 300, 7); // k = 300 spans two KC=256 panels
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let serial = gemm(&ComputePool::serial(), &a, &b, m, k, n);
+        let want = naive_gemm(&a, &b, m, k, n);
+        for (got, want) in serial.iter().zip(&want) {
+            assert!((got - want).abs() <= 1e-4 * want.abs().max(1.0), "{got} vs {want}");
+        }
+        for t in [2usize, 3, 8] {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0);
+            assert_eq!(gemm(&pool, &a, &b, m, k, n), serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn gemm_at_acc_matches_transposed_reference() {
+        let mut rng = Pcg32::seeded(12);
+        let (m, k, n) = (150, 9, 5); // m spans two MC panels
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, m * n);
+        // reference in the trainer's historical loop order: r outer
+        // ascending — the kernel's r-panel blocking preserves exactly that
+        // per-element order, so equality below is exact, not approximate
+        let mut want = vec![0.5f32; k * n]; // nonzero init: kernel accumulates
+        for r in 0..m {
+            for ki in 0..k {
+                let av = a[r * k + ki];
+                if av == 0.0 {
+                    continue;
+                }
+                for ni in 0..n {
+                    want[ki * n + ni] += av * b[r * n + ni];
+                }
+            }
+        }
+        let mut serial = vec![0.5f32; k * n];
+        gemm_at_acc(&ComputePool::serial(), &a, &b, m, k, n, &mut serial);
+        assert_eq!(serial, want);
+        for t in [2usize, 4, 8] {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0);
+            let mut par = vec![0.5f32; k * n];
+            gemm_at_acc(&pool, &a, &b, m, k, n, &mut par);
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn gemm_bt_matches_dot_reference() {
+        let mut rng = Pcg32::seeded(13);
+        let (m, n, kdim) = (11, 23, 6);
+        let a = rand_vec(&mut rng, m * n);
+        let b = rand_vec(&mut rng, kdim * n);
+        let serial = gemm_bt(&ComputePool::serial(), &a, &b, m, n, kdim);
+        for mi in 0..m {
+            for ki in 0..kdim {
+                let mut s = 0f32;
+                for ni in 0..n {
+                    s += b[ki * n + ni] * a[mi * n + ni];
+                }
+                assert_eq!(serial[mi * kdim + ki], s);
+            }
+        }
+        for t in [2usize, 4, 8] {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0);
+            assert_eq!(gemm_bt(&pool, &a, &b, m, n, kdim), serial, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn col2im_pool_bit_identical_across_threads() {
+        let mut rng = Pcg32::seeded(14);
+        let in_shape = [5usize, 8, 8, 3];
+        let (kh, kw, stride, pad) = (3usize, 3usize, 1usize, 1usize);
+        let (b, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
+        let ho = (h + 2 * pad - kh) / stride + 1;
+        let wo = (w + 2 * pad - kw) / stride + 1;
+        let gp = rand_vec(&mut rng, b * ho * wo * kh * kw * c);
+        let serial = col2im_pool(&ComputePool::serial(), &gp, &in_shape, kh, kw, stride, pad);
+        assert_eq!(serial.len(), b * h * w * c);
+        assert!(serial.iter().any(|&v| v != 0.0));
+        for t in [2usize, 3, 8] {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0);
+            let par = col2im_pool(&pool, &gp, &in_shape, kh, kw, stride, pad);
+            assert_eq!(par, serial, "threads={t}");
+        }
+    }
+}

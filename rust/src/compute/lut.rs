@@ -1,0 +1,292 @@
+//! Integer LUT kernels — the native mirror of the L1 Pallas kernel
+//! (`python/compile/kernels/approx_lut.py`), used as behavioral ground
+//! truth and for fast deployment evaluation.
+//!
+//! Semantics are identical by construction: activation row codes in
+//! [0, 255], weight column codes = weight code + 128, i32 accumulation of
+//! `lut[row * 256 + col]`. All accumulation is **wrapping** — the exact and
+//! LUT paths share one overflow behavior in debug and release builds.
+//!
+//! Each kernel comes in two forms sharing one per-row body:
+//! * the serial form (`approx_matmul`, `exact_matmul`, `approx_dw`) —
+//!   unchanged public signatures, re-exported by `simulator::matmul`;
+//! * the `_pool` form — M-row-chunk parallel over a [`ComputePool`],
+//!   bit-identical to the serial form at any thread count because every
+//!   row is produced by the same serial row body exactly once.
+
+use super::pool::ComputePool;
+use std::ops::Range;
+
+/// Rows `rows` of `acc[M, N] = sum_k lut[x[m,k] * 256 + w[k,n]]`, written
+/// into `out` (the chunk slice holding exactly those rows).
+///
+/// Loop order (m, k, n) keeps the LUT row for `x[m,k]` hot in L1 and walks
+/// `w` and the accumulator sequentially — see EXPERIMENTS.md §Perf for the
+/// measured effect vs. the naive (m, n, k) order.
+#[inline]
+fn approx_rows(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    for (ri, mi) in rows.enumerate() {
+        let xrow = &x_codes[mi * k..(mi + 1) * k];
+        let orow = &mut out[ri * n..(ri + 1) * n];
+        for (ki, &xc) in xrow.iter().enumerate() {
+            let lrow = &lut[(xc as usize) * 256..(xc as usize) * 256 + 256];
+            let wrow = &w_cols[ki * n..(ki + 1) * n];
+            for (o, &wc) in orow.iter_mut().zip(wrow.iter()) {
+                *o = (*o).wrapping_add(lrow[wc as usize]);
+            }
+        }
+    }
+}
+
+/// Rows of the exact integer matmul on the same operand encoding.
+#[inline]
+fn exact_rows(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    act_signed: bool,
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    for (ri, mi) in rows.enumerate() {
+        let xrow = &x_codes[mi * k..(mi + 1) * k];
+        let orow = &mut out[ri * n..(ri + 1) * n];
+        for (ki, &xc) in xrow.iter().enumerate() {
+            let xv = if act_signed { xc as i32 - 128 } else { xc as i32 };
+            if xv == 0 {
+                continue;
+            }
+            let wrow = &w_cols[ki * n..(ki + 1) * n];
+            for (o, &wc) in orow.iter_mut().zip(wrow.iter()) {
+                *o = (*o).wrapping_add(xv.wrapping_mul(wc as i32 - 128));
+            }
+        }
+    }
+}
+
+/// Rows of the depthwise variant: x_codes [M, taps, C], w_cols [taps, C]
+/// -> acc rows [rows, C].
+#[inline]
+fn dw_rows_kernel(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    rows: Range<usize>,
+    taps: usize,
+    c: usize,
+    out: &mut [i32],
+) {
+    for (ri, mi) in rows.enumerate() {
+        let orow = &mut out[ri * c..(ri + 1) * c];
+        for t in 0..taps {
+            let xr = &x_codes[(mi * taps + t) * c..(mi * taps + t + 1) * c];
+            let wr = &w_cols[t * c..(t + 1) * c];
+            for ci in 0..c {
+                orow[ci] = orow[ci].wrapping_add(lut[(xr[ci] as usize) * 256 + wr[ci] as usize]);
+            }
+        }
+    }
+}
+
+fn check_dense(x_codes: &[u8], w_cols: &[u8], lut: &[i32], m: usize, k: usize, n: usize) {
+    assert_eq!(x_codes.len(), m * k, "x codes shape");
+    assert_eq!(w_cols.len(), k * n, "w cols shape");
+    assert_eq!(lut.len(), 256 * 256, "lut size");
+}
+
+/// acc[M, N] = sum_k lut[x[m,k] * 256 + w[k,n]] — serial.
+pub fn approx_matmul(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    check_dense(x_codes, w_cols, lut, m, k, n);
+    let mut acc = vec![0i32; m * n];
+    approx_rows(x_codes, w_cols, lut, 0..m, k, n, &mut acc);
+    acc
+}
+
+/// [`approx_matmul`], M-row-parallel over `pool`. Bit-identical to the
+/// serial form at any thread count (disjoint row chunks, same row body).
+pub fn approx_matmul_pool(
+    pool: &ComputePool,
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    check_dense(x_codes, w_cols, lut, m, k, n);
+    let mut acc = vec![0i32; m * n];
+    pool.run_rows(&mut acc, n, m * k * n, |rows, out| {
+        approx_rows(x_codes, w_cols, lut, rows, k, n, out);
+    });
+    acc
+}
+
+/// The naive (m, n, k) loop order — kept for the §Perf before/after bench
+/// (`bench_simulator`): it gathers the LUT row per inner-loop step and
+/// strides `w_cols` by n, so it is memory-bound on LUT row fetches.
+#[doc(hidden)]
+pub fn approx_matmul_naive(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut acc = vec![0i32; m * n];
+    for mi in 0..m {
+        for ni in 0..n {
+            let mut s = 0i32;
+            for ki in 0..k {
+                let xc = x_codes[mi * k + ki] as usize;
+                let wc = w_cols[ki * n + ni] as usize;
+                s = s.wrapping_add(lut[xc * 256 + wc]);
+            }
+            acc[mi * n + ni] = s;
+        }
+    }
+    acc
+}
+
+/// Exact integer matmul on the same operand encoding (reference / fast path
+/// when the layer is mapped to the accurate multiplier) — serial. Uses the
+/// same wrapping accumulation as the LUT path, so the two cannot diverge in
+/// release-vs-debug overflow behavior.
+pub fn exact_matmul(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    act_signed: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut acc = vec![0i32; m * n];
+    exact_rows(x_codes, w_cols, act_signed, 0..m, k, n, &mut acc);
+    acc
+}
+
+/// [`exact_matmul`], M-row-parallel over `pool`.
+pub fn exact_matmul_pool(
+    pool: &ComputePool,
+    x_codes: &[u8],
+    w_cols: &[u8],
+    act_signed: bool,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    let mut acc = vec![0i32; m * n];
+    pool.run_rows(&mut acc, n, m * k * n, |rows, out| {
+        exact_rows(x_codes, w_cols, act_signed, rows, k, n, out);
+    });
+    acc
+}
+
+/// Depthwise variant: x_codes [M, taps, C], w_cols [taps, C] -> acc [M, C]
+/// — serial.
+pub fn approx_dw(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    taps: usize,
+    c: usize,
+) -> Vec<i32> {
+    assert_eq!(x_codes.len(), m * taps * c);
+    assert_eq!(w_cols.len(), taps * c);
+    let mut acc = vec![0i32; m * c];
+    dw_rows_kernel(x_codes, w_cols, lut, 0..m, taps, c, &mut acc);
+    acc
+}
+
+/// [`approx_dw`], M-row-parallel over `pool`.
+pub fn approx_dw_pool(
+    pool: &ComputePool,
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    m: usize,
+    taps: usize,
+    c: usize,
+) -> Vec<i32> {
+    assert_eq!(x_codes.len(), m * taps * c);
+    assert_eq!(w_cols.len(), taps * c);
+    let mut acc = vec![0i32; m * c];
+    pool.run_rows(&mut acc, c, m * taps * c, |rows, out| {
+        dw_rows_kernel(x_codes, w_cols, lut, rows, taps, c, out);
+    });
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::pool::ComputeConfig;
+    use crate::multipliers::{build_layer_lut, unsigned_catalog};
+
+    fn exact_lut() -> Vec<i32> {
+        let cat = unsigned_catalog();
+        build_layer_lut(&cat.instances[cat.exact_index()], false)
+    }
+
+    #[test]
+    fn pool_variants_match_serial_on_odd_shapes() {
+        let lut = exact_lut();
+        // shapes chosen so chunk boundaries land mid-row-group
+        for (m, k, n) in [(1, 5, 3), (7, 11, 5), (13, 17, 4)] {
+            let x: Vec<u8> = (0..m * k).map(|i| ((i * 37 + 5) % 256) as u8).collect();
+            let w: Vec<u8> = (0..k * n).map(|i| ((i * 91 + 9) % 256) as u8).collect();
+            let serial_a = approx_matmul(&x, &w, &lut, m, k, n);
+            let serial_e = exact_matmul(&x, &w, true, m, k, n);
+            for t in [1usize, 2, 3, 8] {
+                // work floor 0: force genuine fan-out on these small shapes
+                let pool =
+                    ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0);
+                assert_eq!(approx_matmul_pool(&pool, &x, &w, &lut, m, k, n), serial_a);
+                assert_eq!(exact_matmul_pool(&pool, &x, &w, true, m, k, n), serial_e);
+            }
+        }
+    }
+
+    #[test]
+    fn dw_pool_matches_serial() {
+        let lut = exact_lut();
+        let (m, taps, c) = (9, 9, 5);
+        let x: Vec<u8> = (0..m * taps * c).map(|i| ((i * 13) % 256) as u8).collect();
+        let w: Vec<u8> = (0..taps * c).map(|i| ((i * 7) % 256) as u8).collect();
+        let serial = approx_dw(&x, &w, &lut, m, taps, c);
+        for t in [1usize, 2, 4, 8] {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0);
+            assert_eq!(approx_dw_pool(&pool, &x, &w, &lut, m, taps, c), serial);
+        }
+    }
+
+    #[test]
+    fn exact_matmul_wraps_instead_of_panicking() {
+        // k large enough to overflow i32 with max-magnitude products:
+        // 255 * 127 * 70000 > 2^31. Wrapping semantics must hold in every
+        // profile (this test would abort under checked arithmetic).
+        let k = 70_000usize;
+        let x = vec![255u8; k];
+        let w = vec![255u8; k]; // code 255 -> weight 127
+        let acc = exact_matmul(&x, &w, false, 1, k, 1);
+        let want = (0..k).fold(0i32, |a, _| a.wrapping_add(255 * 127));
+        assert_eq!(acc[0], want);
+    }
+}

@@ -1,0 +1,38 @@
+//! The unified compute layer: blocked kernels + a deterministic scoped
+//! thread-pool shared by the behavioral simulator ([`crate::simulator`]),
+//! the native trainer ([`crate::simulator::train`]) and the native
+//! execution backend ([`crate::runtime::NativeBackend`]).
+//!
+//! Three parts:
+//! * [`pool`] — [`ComputePool`]/[`ComputeConfig`]: scoped `std::thread`
+//!   workers with deterministic contiguous row-chunk partitioning (no new
+//!   dependencies; `anyhow` + `log` remains the whole default dep set).
+//! * [`gemm`] — blocked/tiled f32 GEMM with operand packing for the
+//!   trainer's backward weight/input gradients and the `col2im` scatter.
+//! * [`lut`] — the integer LUT matmul kernels (moved out of
+//!   `simulator::matmul`, which stays as a thin re-export) with
+//!   M-row-parallel variants.
+//!
+//! **Determinism contract.** Every `_pool` kernel is bit-identical to its
+//! serial form at any thread count: parallelism is only over disjoint
+//! output row chunks computed from `(rows, threads)` alone, each row runs
+//! the identical serial body, and chunked reductions merge in chunk order.
+//! `rust/tests/property_suite.rs` enforces this across thread counts
+//! {1, 2, 4, 8} and odd chunk boundaries. A per-chunk work floor keeps
+//! tiny layers inline (spawns cost more than they save there); it is a
+//! scheduling heuristic only and never affects results.
+//!
+//! Configuration threads top-down: `main.rs --threads N` →
+//! [`crate::api::SessionBuilder::threads`] → `coordinator::Pipeline` and
+//! the execution backends; `AGN_THREADS` supplies the env default.
+
+pub mod gemm;
+pub mod lut;
+pub mod pool;
+
+pub use gemm::{col2im_pool, gemm, gemm_at_acc, gemm_bt};
+pub use lut::{
+    approx_dw, approx_dw_pool, approx_matmul, approx_matmul_naive, approx_matmul_pool,
+    exact_matmul, exact_matmul_pool,
+};
+pub use pool::{partition, ComputeConfig, ComputePool};

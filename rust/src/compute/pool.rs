@@ -1,0 +1,341 @@
+//! The deterministic worker pool behind every hot kernel.
+//!
+//! Design constraints (ISSUE 5 / the NIR-style determinism bar):
+//!
+//! * **No new dependencies** — the pool is built on scoped `std::thread`
+//!   (`std::thread::scope`), so the default dependency set stays exactly
+//!   `anyhow` + `log`.
+//! * **Deterministic by construction** — work is partitioned into
+//!   *contiguous row chunks* computed only from `(rows, threads)`
+//!   ([`partition`]); each chunk is produced by exactly one worker running
+//!   the identical serial per-row kernel into a disjoint output slice, and
+//!   chunked reductions are merged in chunk order. Outputs are therefore
+//!   bit-identical at any thread count, including `threads = 1`.
+//!
+//! Configuration flows `main.rs --threads N` → `api::SessionBuilder::threads`
+//! → `coordinator::Pipeline` / the execution backends; the `AGN_THREADS`
+//! environment variable supplies the default (CI runs the suite at 1 and 4).
+
+use std::ops::Range;
+
+/// How the compute layer parallelizes: the worker count used by every
+/// pool-aware kernel. `threads == 1` is the exact serial path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ComputeConfig {
+    /// Worker count (>= 1). See [`ComputeConfig::resolve`] for how `0`
+    /// ("auto") is interpreted at the CLI/env boundary.
+    pub threads: usize,
+}
+
+impl ComputeConfig {
+    /// The exact serial configuration (one worker, no spawning).
+    pub fn serial() -> ComputeConfig {
+        ComputeConfig { threads: 1 }
+    }
+
+    /// A fixed worker count (clamped to >= 1).
+    pub fn with_threads(threads: usize) -> ComputeConfig {
+        ComputeConfig { threads: threads.max(1) }
+    }
+
+    /// Resolve a CLI-style request: `n > 0` is taken literally, `n == 0`
+    /// ("auto") defers to [`ComputeConfig::from_env`].
+    pub fn resolve(n: usize) -> ComputeConfig {
+        if n > 0 {
+            ComputeConfig { threads: n }
+        } else {
+            ComputeConfig::from_env()
+        }
+    }
+
+    /// The environment default: `AGN_THREADS` when set to a positive
+    /// integer, otherwise all available cores. Because every pool kernel is
+    /// bit-identical across thread counts, "all cores" is a safe default —
+    /// the CI determinism lanes pin `AGN_THREADS=1` and `AGN_THREADS=4`.
+    pub fn from_env() -> ComputeConfig {
+        let env = std::env::var("AGN_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        if env > 0 {
+            return ComputeConfig { threads: env };
+        }
+        ComputeConfig {
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+}
+
+impl Default for ComputeConfig {
+    /// [`ComputeConfig::from_env`] — env-tunable so the tier-1 suite can be
+    /// run serial and parallel without code changes.
+    fn default() -> ComputeConfig {
+        ComputeConfig::from_env()
+    }
+}
+
+/// Deterministic partition of `n` row indices into at most `parts`
+/// contiguous chunks. The first `n % parts` chunks carry one extra row, so
+/// the layout depends only on `(n, parts)` — never on scheduling.
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Minimum *work units* per chunk before fan-out is worth a thread spawn
+/// (~10–50 µs each). Work is what the caller declares — kernels pass their
+/// total inner-loop operation count (e.g. `m*k*n` MACs), not the output
+/// size, so reduction-heavy kernels with small outputs (a [K, N]
+/// weight-gradient over a long M reduction) still fan out. At ~1e8–1e9
+/// ops/s a 128Ki-op chunk runs 0.1–1.3 ms, amortizing the spawn to a few
+/// percent; a 16×10×64 fc head (10 Ki ops) stays inline. Chunking never
+/// changes results (each row is the same serial body), so this is purely
+/// a scheduling heuristic.
+const DEFAULT_MIN_CHUNK_WORK: usize = 128 * 1024;
+
+/// The scoped worker pool. Cheap to clone (it is a worker-count handle);
+/// workers are scoped `std::thread`s spawned per parallel region, so
+/// borrowed operands need no `'static` bounds and no channels.
+#[derive(Clone, Debug)]
+pub struct ComputePool {
+    threads: usize,
+    min_chunk_work: usize,
+}
+
+impl ComputePool {
+    pub fn new(cfg: ComputeConfig) -> ComputePool {
+        ComputePool {
+            threads: cfg.threads.max(1),
+            min_chunk_work: DEFAULT_MIN_CHUNK_WORK,
+        }
+    }
+
+    /// Override the per-chunk work floor ([`DEFAULT_MIN_CHUNK_WORK`]).
+    /// `0` forces one chunk per worker even for tiny work — the property
+    /// tests use this to drive the genuinely parallel path on odd shapes.
+    pub fn with_min_chunk_work(mut self, work: usize) -> ComputePool {
+        self.min_chunk_work = work;
+        self
+    }
+
+    /// How many chunks `work` total work units are worth: capped by the
+    /// worker count and by the work floor.
+    fn fan_out(&self, work: usize) -> usize {
+        if self.min_chunk_work == 0 {
+            return self.threads;
+        }
+        self.threads.min((work / self.min_chunk_work).max(1))
+    }
+
+    /// One-worker pool: runs everything inline on the caller thread.
+    pub fn serial() -> ComputePool {
+        ComputePool::new(ComputeConfig::serial())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(rows, chunk)` over disjoint row-chunks of `out` in parallel,
+    /// where `out` is a row-major `[rows, width]` buffer and `work` is the
+    /// caller's total work estimate (inner-loop op count, e.g. `m*k*n` for
+    /// a matmul — used only for the fan-out heuristic, never for
+    /// partitioning). Each chunk is the mutable sub-slice holding exactly
+    /// the rows in `rows`; chunks never overlap, so results are
+    /// bit-identical at any thread count provided `f` itself only depends
+    /// on the row range.
+    pub fn run_rows<T, F>(&self, out: &mut [T], width: usize, work: usize, f: F)
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        if width == 0 {
+            assert!(out.is_empty(), "width 0 with a non-empty out buffer");
+            return;
+        }
+        if out.is_empty() {
+            return;
+        }
+        // hard assert: a truncated trailing row in a release build would be
+        // silently wrong output, not a crash — fail loudly instead
+        assert_eq!(out.len() % width, 0, "out must be [rows, width]");
+        let rows = out.len() / width;
+        let chunks = partition(rows, self.fan_out(work));
+        if chunks.len() <= 1 {
+            f(0..rows, out);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest: &mut [T] = out;
+            let mut first: Option<(Range<usize>, &mut [T])> = None;
+            for (i, r) in chunks.into_iter().enumerate() {
+                let (head, tail) =
+                    std::mem::take(&mut rest).split_at_mut((r.end - r.start) * width);
+                rest = tail;
+                if i == 0 {
+                    // the caller thread works too: chunk 0 runs inline
+                    first = Some((r, head));
+                } else {
+                    scope.spawn(move || f(r, head));
+                }
+            }
+            if let Some((r, head)) = first {
+                f(r, head);
+            }
+        });
+    }
+
+    /// Map each row-chunk of `0..rows` to a value; results come back **in
+    /// chunk order** (not completion order), so chunked reductions merged
+    /// left-to-right are deterministic.
+    pub fn map_chunks<T, F>(&self, rows: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, Range<usize>) -> T + Sync,
+    {
+        let chunks = partition(rows, self.threads);
+        if chunks.len() <= 1 {
+            return chunks.into_iter().enumerate().map(|(i, r)| f(i, r)).collect();
+        }
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut iter = chunks.into_iter().enumerate();
+            let first = iter.next();
+            let handles: Vec<_> = iter.map(|(i, r)| scope.spawn(move || f(i, r))).collect();
+            let mut results = Vec::with_capacity(handles.len() + 1);
+            if let Some((i, r)) = first {
+                results.push(f(i, r));
+            }
+            for h in handles {
+                results.push(h.join().expect("compute worker panicked"));
+            }
+            results
+        })
+    }
+}
+
+impl Default for ComputePool {
+    fn default() -> ComputePool {
+        ComputePool::new(ComputeConfig::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_is_contiguous_and_complete() {
+        for n in [0usize, 1, 2, 3, 7, 8, 64, 65] {
+            for parts in [1usize, 2, 3, 4, 8, 100] {
+                let chunks = partition(n, parts);
+                assert!(chunks.len() <= parts.max(1));
+                assert!(chunks.len() <= n.max(1));
+                let mut next = 0usize;
+                for c in &chunks {
+                    assert_eq!(c.start, next, "gap at n={n} parts={parts}");
+                    assert!(c.end > c.start, "empty chunk at n={n} parts={parts}");
+                    next = c.end;
+                }
+                assert_eq!(next, n, "incomplete cover at n={n} parts={parts}");
+                // balanced: sizes differ by at most one
+                if let (Some(min), Some(max)) = (
+                    chunks.iter().map(|c| c.end - c.start).min(),
+                    chunks.iter().map(|c| c.end - c.start).max(),
+                ) {
+                    assert!(max - min <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partition_depends_only_on_inputs() {
+        assert_eq!(partition(10, 4), partition(10, 4));
+        assert_eq!(partition(10, 4), vec![0..3, 3..6, 6..8, 8..10]);
+    }
+
+    #[test]
+    fn run_rows_fills_disjoint_chunks() {
+        for threads in [1usize, 2, 3, 8] {
+            // floor 0: force real fan-out even on this tiny buffer
+            let pool =
+                ComputePool::new(ComputeConfig::with_threads(threads)).with_min_chunk_work(0);
+            let (rows, width) = (13usize, 3usize);
+            let mut out = vec![0usize; rows * width];
+            pool.run_rows(&mut out, width, rows * width, |rs, chunk| {
+                for (i, r) in rs.clone().enumerate() {
+                    for c in 0..width {
+                        chunk[i * width + c] = r * width + c;
+                    }
+                }
+            });
+            let want: Vec<usize> = (0..rows * width).collect();
+            assert_eq!(out, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_rows_handles_degenerate_shapes() {
+        let pool = ComputePool::new(ComputeConfig::with_threads(4));
+        let mut empty: Vec<u8> = Vec::new();
+        pool.run_rows(&mut empty, 4, 16, |_, _| panic!("no chunks expected"));
+        let mut one = vec![0u8; 5];
+        pool.run_rows(&mut one, 5, 5, |rs, chunk| {
+            assert_eq!(rs, 0..1);
+            chunk.fill(7);
+        });
+        assert_eq!(one, vec![7u8; 5]);
+    }
+
+    #[test]
+    fn map_chunks_returns_chunk_order() {
+        let pool = ComputePool::new(ComputeConfig::with_threads(4));
+        let got = pool.map_chunks(10, |i, r| (i, r.start, r.end));
+        let want: Vec<(usize, usize, usize)> = partition(10, 4)
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| (i, r.start, r.end))
+            .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn small_work_runs_inline_under_the_default_floor() {
+        let pool = ComputePool::new(ComputeConfig::with_threads(8));
+        // 16x64x10 fc-head matmul (10 Ki MACs): one chunk (inline), no spawns
+        assert_eq!(pool.fan_out(16 * 64 * 10), 1);
+        // conv hot shape (4096x144x32 ~ 18.9 M MACs): full fan-out
+        assert_eq!(pool.fan_out(4096 * 144 * 32), 8);
+        // a reduction-heavy kernel with a small [K, N] output must still
+        // fan out — work is the op count, not the output size
+        assert_eq!(pool.fan_out(144 * 32 * 4096), 8);
+        // floor 0 forces chunk-per-worker even for tiny work
+        let forced = ComputePool::new(ComputeConfig::with_threads(8)).with_min_chunk_work(0);
+        assert_eq!(forced.fan_out(16), 8);
+    }
+
+    #[test]
+    fn config_resolution() {
+        assert_eq!(ComputeConfig::serial().threads, 1);
+        assert_eq!(ComputeConfig::with_threads(0).threads, 1);
+        assert_eq!(ComputeConfig::with_threads(6).threads, 6);
+        assert_eq!(ComputeConfig::resolve(3).threads, 3);
+        assert!(ComputeConfig::resolve(0).threads >= 1);
+        assert!(ComputeConfig::from_env().threads >= 1);
+    }
+}

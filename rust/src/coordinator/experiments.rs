@@ -72,7 +72,7 @@ fn ground_truth_sigma(cap: &LayerCapture, w_cols: &[u8], info: &LayerInfo, lut: 
 
 /// Run an exact capture forward over one batch.
 fn capture_forward(pipe: &Pipeline, flat: &[f32], absmax: &[f32]) -> Result<Vec<LayerCapture>> {
-    let net = SimNet::new(&pipe.manifest, flat)?;
+    let net = SimNet::with_pool(&pipe.manifest, flat, pipe.pool.clone())?;
     let (h, w) = net.input_hw;
     let batch = pipe.manifest.batch;
     let (xs, _) = pipe.train.eval_batch(batch, 0);
@@ -91,7 +91,7 @@ pub fn table1(session: &mut ApproxSession, mc_trials: usize) -> Result<Table1Rep
     let (absmax, _ystd) = pipe.calibrate(engine, &base.flat)?;
     let ops = pipe.operands(&base.flat, &absmax)?;
     let caps = capture_forward(pipe, &base.flat, &absmax)?;
-    let net = SimNet::new(&pipe.manifest, &base.flat)?;
+    let net = SimNet::with_pool(&pipe.manifest, &base.flat, pipe.pool.clone())?;
     let catalog = unsigned_catalog();
     let subset = table1_subset(&catalog);
 

@@ -8,6 +8,7 @@
 //! shared across pipelines and jobs. [`crate::api::ApproxSession`] owns
 //! that pairing.
 
+use crate::compute::{ComputeConfig, ComputePool};
 use crate::datasets::{Dataset, DatasetCache, DatasetSpec, Split};
 use crate::errormodel::model::LayerOperands;
 use crate::matching::{self, MatchOutcome};
@@ -98,23 +99,37 @@ pub struct Pipeline {
     pub val: std::sync::Arc<Dataset>,
     pub cfg: RunConfig,
     pub cache_dir: PathBuf,
+    /// Compute pool for the native-simulator fast paths (sweep evaluation,
+    /// operand capture). Mirrors the session's backend configuration;
+    /// results are bit-identical at any thread count ([`crate::compute`]).
+    pub pool: ComputePool,
     pub timings: Timings,
 }
 
 impl Pipeline {
     /// Per-model pipeline sharing `engine`'s artifact directory; the cache
-    /// dir is derived from it (see [`default_cache_dir`]).
+    /// dir is derived from it (see [`default_cache_dir`]) and the compute
+    /// configuration from the environment.
     pub fn new(engine: &dyn ExecBackend, model: &str, cfg: RunConfig) -> Result<Pipeline> {
         let cache_dir = default_cache_dir(engine.artifacts_dir());
-        Self::with_cache_dir(engine, model, cfg, &cache_dir, &mut DatasetCache::default())
+        Self::with_cache_dir(
+            engine,
+            model,
+            cfg,
+            ComputeConfig::default(),
+            &cache_dir,
+            &mut DatasetCache::default(),
+        )
     }
 
-    /// Like [`Pipeline::new`] with an explicit cache directory and a shared
-    /// dataset cache (so several pipelines reuse one loaded dataset).
+    /// Like [`Pipeline::new`] with an explicit compute configuration,
+    /// cache directory and a shared dataset cache (so several pipelines
+    /// reuse one loaded dataset).
     pub fn with_cache_dir(
         engine: &dyn ExecBackend,
         model: &str,
         cfg: RunConfig,
+        compute: ComputeConfig,
         cache_dir: &Path,
         datasets: &mut DatasetCache,
     ) -> Result<Pipeline> {
@@ -135,6 +150,7 @@ impl Pipeline {
             val,
             cfg,
             cache_dir: cache_dir.to_path_buf(),
+            pool: ComputePool::new(compute),
             timings: Timings::default(),
         })
     }
@@ -293,7 +309,7 @@ impl Pipeline {
         luts: &LutSet,
         images: usize,
     ) -> Result<EvalMetrics> {
-        let net = SimNet::new(&self.manifest, flat)?;
+        let net = SimNet::with_pool(&self.manifest, flat, self.pool.clone())?;
         let (h, w) = net.input_hw;
         let batch = self.manifest.batch;
         let n = images.min(self.val.len());
@@ -321,7 +337,7 @@ impl Pipeline {
 
     /// Operand collection for the error model (k patches per layer).
     pub fn operands(&self, flat: &[f32], act_absmax: &[f32]) -> Result<Vec<LayerOperands>> {
-        let net = SimNet::new(&self.manifest, flat)?;
+        let net = SimNet::with_pool(&self.manifest, flat, self.pool.clone())?;
         matching::collect_operands(
             &net,
             &self.manifest,

@@ -62,12 +62,23 @@
 //! paper stages (baseline → calibrate → search → match → retrain → eval)
 //! directly against the same shared backend and cache.
 //!
+//! ## The compute layer
+//!
+//! Every dense hot path (LUT matmuls, trainer GEMMs, `col2im`) runs on
+//! [`compute`]: blocked kernels over a deterministic scoped thread-pool
+//! ([`compute::ComputePool`]). Parallel outputs are **bit-identical** to
+//! the serial kernels at any thread count (disjoint row chunks, fixed
+//! summation order, chunk-ordered merges). Configure with `--threads N` on
+//! the CLI, [`api::SessionBuilder::threads`] in code, or the `AGN_THREADS`
+//! environment variable (default: all cores).
+//!
 //! See DESIGN.md for the system inventory and README.md for the quickstart
 //! and feature matrix.
 
 pub mod api;
 pub mod baselines;
 pub mod benchkit;
+pub mod compute;
 pub mod coordinator;
 pub mod datasets;
 pub mod errormodel;

@@ -31,10 +31,13 @@ BACKENDS (--backend native|pjrt)
   native  (default) pure-Rust execution: training, search, matching and
           behavioral evaluation run in process. Needs no Python, no XLA
           and no artifacts/ directory — zoo models (tinynet, resnet8/14/
-          20/32, vgg16) get in-memory synthetic manifests.
+          20/32, vgg16) get in-memory synthetic manifests. Hot kernels run
+          on the deterministic compute pool (--threads below): results are
+          bit-identical at any thread count.
   pjrt    executes the AOT-compiled HLO artifacts on the PJRT CPU client.
           Requires building with `--features pjrt`, the xla_extension
-          native library, and `make artifacts` run beforehand.
+          native library, and `make artifacts` run beforehand. XLA manages
+          its own threading (--threads is ignored).
 
 COMMANDS
   table1            error-model quality (Pearson / median rel. error)
@@ -52,6 +55,8 @@ COMMANDS
 
 COMMON FLAGS
   --backend B          execution backend         [native]
+  --threads N          compute worker threads; 0 = auto (AGN_THREADS env
+                       var, else all cores)      [0]
   --artifacts DIR      artifact directory        [artifacts]
   --results DIR        JSON result directory     [results]
   --models a,b         model list                [command-specific]
@@ -81,6 +86,7 @@ const SWITCHES: &[&str] = &["paper", "no-baselines"];
 /// Every flag the CLI understands (typo guard; see `Args::warn_unknown`).
 const KNOWN_FLAGS: &[&str] = &[
     "backend",
+    "threads",
     "artifacts",
     "results",
     "models",
@@ -184,6 +190,7 @@ fn real_main() -> Result<(), AgnError> {
     let mut session = ApproxSession::builder(&artifacts)
         .config(run_config(&args))
         .backend(backend)
+        .threads(args.usize_or("threads", 0))
         .build()?;
     let print_stats = matches!(spec, JobSpec::Eval { .. });
     let result = session.run(spec)?;
@@ -199,9 +206,9 @@ fn real_main() -> Result<(), AgnError> {
     if print_stats {
         let s = session.stats();
         println!(
-            "engine: {} executions, {:.2}s exec, {} compiles, {:.2}s compile",
+            "engine: {} executions, {:.2}s exec, {} compiles, {:.2}s compile, {} threads",
             s.engine.exec_count, s.engine.exec_seconds, s.engine.compile_count,
-            s.engine.compile_seconds
+            s.engine.compile_seconds, s.compute_threads
         );
     }
     Ok(())

@@ -128,7 +128,9 @@ pub fn validate_inputs(manifest: &Manifest, program: &str, inputs: &[Value]) -> 
     Ok(())
 }
 
-/// Construct a backend of the requested kind over an artifact directory.
+/// Construct a backend of the requested kind over an artifact directory
+/// with the environment-default compute configuration
+/// ([`crate::compute::ComputeConfig::default`]).
 ///
 /// `BackendKind::Pjrt` fails with a readable error unless the crate was
 /// built with `--features pjrt` *and* a PJRT client can be constructed.
@@ -136,15 +138,37 @@ pub fn create_backend(
     kind: BackendKind,
     artifacts_dir: impl Into<std::path::PathBuf>,
 ) -> Result<Box<dyn ExecBackend>> {
+    create_backend_with(kind, artifacts_dir, crate::compute::ComputeConfig::default())
+}
+
+/// [`create_backend`] with an explicit compute configuration — the
+/// `--threads N` / [`crate::api::SessionBuilder::threads`] path. The
+/// native backend runs its kernels on a [`crate::compute::ComputePool`]
+/// of `compute.threads` workers (results are bit-identical at any thread
+/// count); the PJRT engine manages its own XLA threading and ignores it.
+pub fn create_backend_with(
+    kind: BackendKind,
+    artifacts_dir: impl Into<std::path::PathBuf>,
+    compute: crate::compute::ComputeConfig,
+) -> Result<Box<dyn ExecBackend>> {
     match kind {
-        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::new(artifacts_dir))),
+        BackendKind::Native => Ok(Box::new(super::native::NativeBackend::with_compute(
+            artifacts_dir,
+            compute,
+        ))),
         #[cfg(feature = "pjrt")]
-        BackendKind::Pjrt => Ok(Box::new(super::engine::Engine::new(artifacts_dir)?)),
+        BackendKind::Pjrt => {
+            let _ = compute; // XLA owns its own intra-op threading
+            Ok(Box::new(super::engine::Engine::new(artifacts_dir)?))
+        }
         #[cfg(not(feature = "pjrt"))]
-        BackendKind::Pjrt => anyhow::bail!(
-            "backend `pjrt` requires building with `--features pjrt` \
-             (and the xla_extension native library); use `--backend native`"
-        ),
+        BackendKind::Pjrt => {
+            let _ = compute;
+            anyhow::bail!(
+                "backend `pjrt` requires building with `--features pjrt` \
+                 (and the xla_extension native library); use `--backend native`"
+            )
+        }
     }
 }
 
@@ -163,6 +187,14 @@ mod tests {
     #[test]
     fn native_backend_always_constructs() {
         let b = create_backend(BackendKind::Native, "artifacts").unwrap();
+        assert_eq!(b.kind(), BackendKind::Native);
+        assert_eq!(b.stats(), EngineStats::default());
+    }
+
+    #[test]
+    fn native_backend_accepts_explicit_compute_config() {
+        let cfg = crate::compute::ComputeConfig::with_threads(3);
+        let b = create_backend_with(BackendKind::Native, "artifacts", cfg).unwrap();
         assert_eq!(b.kind(), BackendKind::Native);
         assert_eq!(b.stats(), EngineStats::default());
     }

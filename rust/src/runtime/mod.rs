@@ -12,7 +12,7 @@ pub mod native;
 pub mod synthetic;
 pub mod value;
 
-pub use backend::{create_backend, BackendKind, EngineStats, ExecBackend};
+pub use backend::{create_backend, create_backend_with, BackendKind, EngineStats, ExecBackend};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};

@@ -14,6 +14,7 @@ use super::backend::{BackendKind, EngineStats, ExecBackend};
 use super::manifest::Manifest;
 use super::synthetic;
 use super::value::Value;
+use crate::compute::{ComputeConfig, ComputePool};
 use crate::simulator::train::{self, Mode, TrainNet};
 use crate::tensor::TensorF;
 use anyhow::{anyhow, Result};
@@ -50,6 +51,9 @@ impl ProgramKind {
 pub struct NativeBackend {
     artifacts_dir: PathBuf,
     plans: HashMap<String, ProgramKind>,
+    /// Compute pool shared by every program execution; bit-identical
+    /// results at any thread count ([`crate::compute`]).
+    pool: ComputePool,
     exec_seconds: f64,
     exec_count: u64,
     compile_seconds: f64,
@@ -57,10 +61,22 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Backend with the environment-default compute configuration
+    /// (`AGN_THREADS`, else all cores); see [`NativeBackend::with_compute`].
     pub fn new(artifacts_dir: impl Into<PathBuf>) -> NativeBackend {
+        Self::with_compute(artifacts_dir, ComputeConfig::default())
+    }
+
+    /// Backend over an explicit compute configuration (the
+    /// `--threads`/session-builder path).
+    pub fn with_compute(
+        artifacts_dir: impl Into<PathBuf>,
+        compute: ComputeConfig,
+    ) -> NativeBackend {
         NativeBackend {
             artifacts_dir: artifacts_dir.into(),
             plans: HashMap::new(),
+            pool: ComputePool::new(compute),
             exec_seconds: 0.0,
             exec_count: 0,
             compile_seconds: 0.0,
@@ -134,7 +150,7 @@ impl ExecBackend for NativeBackend {
         super::backend::validate_inputs(manifest, program, inputs)?;
         let kind = self.plan(manifest, program)?;
         let t0 = Instant::now();
-        let out = execute(manifest, kind, inputs);
+        let out = execute(manifest, kind, inputs, &self.pool);
         self.exec_seconds += t0.elapsed().as_secs_f64();
         self.exec_count += 1;
         out
@@ -176,13 +192,18 @@ fn labels_input(v: &Value) -> Result<Vec<i32>> {
     Ok(v.as_i32()?.to_vec())
 }
 
-fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<Vec<Value>> {
+fn execute(
+    manifest: &Manifest,
+    kind: ProgramKind,
+    inputs: &[Value],
+    pool: &ComputePool,
+) -> Result<Vec<Value>> {
     match kind {
         ProgramKind::Eval => {
             let flat = inputs[0].as_f32()?;
             let x = tensor_input(&inputs[1])?;
             let y = labels_input(&inputs[2])?;
-            let net = TrainNet::new(manifest, flat)?;
+            let net = TrainNet::with_pool(manifest, flat, pool.clone())?;
             let pass = train::forward(&net, &x, &Mode::Qat);
             let (loss, _) = train::softmax_xent(&pass.logits, &y);
             Ok(vec![Value::vec_f32(train::metrics3(&pass.logits, &y, loss))])
@@ -193,7 +214,7 @@ fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<V
             let x = tensor_input(&inputs[2])?;
             let y = labels_input(&inputs[3])?;
             let seed = seed_input(&inputs[4])?;
-            let net = TrainNet::new(manifest, flat)?;
+            let net = TrainNet::with_pool(manifest, flat, pool.clone())?;
             let pass = train::forward(&net, &x, &Mode::Agn { sigmas, seed });
             let (loss, _) = train::softmax_xent(&pass.logits, &y);
             Ok(vec![Value::vec_f32(train::metrics3(&pass.logits, &y, loss))])
@@ -204,7 +225,7 @@ fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<V
             let y = labels_input(&inputs[2])?;
             let luts = inputs[3].as_i32()?;
             let act_scales = inputs[4].as_f32()?;
-            let net = TrainNet::new(manifest, flat)?;
+            let net = TrainNet::with_pool(manifest, flat, pool.clone())?;
             let pass = train::forward(&net, &x, &Mode::Approx { luts, act_scales });
             let (loss, _) = train::softmax_xent(&pass.logits, &y);
             Ok(vec![Value::vec_f32(train::metrics3(&pass.logits, &y, loss))])
@@ -213,7 +234,7 @@ fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<V
             let flat = inputs[0].as_f32()?;
             let x = tensor_input(&inputs[1])?;
             let y = labels_input(&inputs[2])?;
-            let net = TrainNet::new(manifest, flat)?;
+            let net = TrainNet::with_pool(manifest, flat, pool.clone())?;
             let pass = train::forward(&net, &x, &Mode::Calib);
             let (loss, _) = train::softmax_xent(&pass.logits, &y);
             Ok(vec![
@@ -228,7 +249,7 @@ fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<V
             let x = tensor_input(&inputs[2])?;
             let y = labels_input(&inputs[3])?;
             let lr = scalar_input(&inputs[4])?;
-            let net = TrainNet::new(manifest, &flat)?;
+            let net = TrainNet::with_pool(manifest, &flat, pool.clone())?;
             let pass = train::forward(&net, &x, &Mode::Qat);
             let (loss, dl) = train::softmax_xent(&pass.logits, &y);
             let grads = train::backward(&net, &pass, &dl);
@@ -247,7 +268,7 @@ fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<V
             let lr = scalar_input(&inputs[7])?;
             let lam = scalar_input(&inputs[8])?;
             let sigma_max = scalar_input(&inputs[9])?;
-            let net = TrainNet::new(manifest, &flat)?;
+            let net = TrainNet::with_pool(manifest, &flat, pool.clone())?;
             let pass = train::forward(&net, &x, &Mode::Agn { sigmas: &sig, seed });
             let (task, dl) = train::softmax_xent(&pass.logits, &y);
             let grads = train::backward(&net, &pass, &dl);
@@ -285,7 +306,7 @@ fn execute(manifest: &Manifest, kind: ProgramKind, inputs: &[Value]) -> Result<V
             let lr = scalar_input(&inputs[4])?;
             let luts = inputs[5].as_i32()?;
             let act_scales = inputs[6].as_f32()?;
-            let net = TrainNet::new(manifest, &flat)?;
+            let net = TrainNet::with_pool(manifest, &flat, pool.clone())?;
             let pass = train::forward(&net, &x, &Mode::Approx { luts, act_scales });
             let (loss, dl) = train::softmax_xent(&pass.logits, &y);
             let grads = train::backward(&net, &pass, &dl);

@@ -1,121 +1,14 @@
-//! Integer LUT matmul — the native mirror of the L1 Pallas kernel
-//! (`python/compile/kernels/approx_lut.py`), used as behavioral ground
-//! truth and for fast deployment evaluation.
-//!
-//! Semantics are identical by construction: activation row codes in
-//! [0, 255], weight column codes = weight code + 128, i32 accumulation of
-//! `lut[row * 256 + col]`.
+//! Thin compatibility re-export: the integer LUT matmul kernels moved to
+//! [`crate::compute::lut`] (the unified compute layer), where they gained
+//! M-row-parallel `_pool` variants that are bit-identical to these serial
+//! forms by construction. Existing callers of `simulator::matmul::*` keep
+//! working unchanged; see EXPERIMENTS.md §Perf for the measured loop-order
+//! and threading effects.
 
-/// acc[M, N] = sum_k lut[x[m,k] * 256 + w[k,n]].
-///
-/// Loop order (m, k, n) keeps the LUT row for `x[m,k]` hot in L1 and walks
-/// `w` and `acc` sequentially — see EXPERIMENTS.md §Perf for the measured
-/// effect vs. the naive (m, n, k) order.
-pub fn approx_matmul(
-    x_codes: &[u8],
-    w_cols: &[u8],
-    lut: &[i32],
-    m: usize,
-    k: usize,
-    n: usize,
-) -> Vec<i32> {
-    assert_eq!(x_codes.len(), m * k, "x codes shape");
-    assert_eq!(w_cols.len(), k * n, "w cols shape");
-    assert_eq!(lut.len(), 256 * 256, "lut size");
-    let mut acc = vec![0i32; m * n];
-    for mi in 0..m {
-        let xrow = &x_codes[mi * k..(mi + 1) * k];
-        let out = &mut acc[mi * n..(mi + 1) * n];
-        for (ki, &xc) in xrow.iter().enumerate() {
-            let lrow = &lut[(xc as usize) * 256..(xc as usize) * 256 + 256];
-            let wrow = &w_cols[ki * n..(ki + 1) * n];
-            for (o, &wc) in out.iter_mut().zip(wrow.iter()) {
-                *o = (*o).wrapping_add(lrow[wc as usize]);
-            }
-        }
-    }
-    acc
-}
-
-/// The naive (m, n, k) loop order — kept for the §Perf before/after bench
-/// (`bench_simulator`): it gathers the LUT row per inner-loop step and
-/// strides `w_cols` by n, so it is memory-bound on LUT row fetches.
-#[doc(hidden)]
-pub fn approx_matmul_naive(
-    x_codes: &[u8],
-    w_cols: &[u8],
-    lut: &[i32],
-    m: usize,
-    k: usize,
-    n: usize,
-) -> Vec<i32> {
-    let mut acc = vec![0i32; m * n];
-    for mi in 0..m {
-        for ni in 0..n {
-            let mut s = 0i32;
-            for ki in 0..k {
-                let xc = x_codes[mi * k + ki] as usize;
-                let wc = w_cols[ki * n + ni] as usize;
-                s = s.wrapping_add(lut[xc * 256 + wc]);
-            }
-            acc[mi * n + ni] = s;
-        }
-    }
-    acc
-}
-
-/// Exact integer matmul on the same operand encoding (reference / fast path
-/// when the layer is mapped to the accurate multiplier).
-pub fn exact_matmul(
-    x_codes: &[u8],
-    w_cols: &[u8],
-    act_signed: bool,
-    m: usize,
-    k: usize,
-    n: usize,
-) -> Vec<i32> {
-    let mut acc = vec![0i32; m * n];
-    for mi in 0..m {
-        let xrow = &x_codes[mi * k..(mi + 1) * k];
-        let out = &mut acc[mi * n..(mi + 1) * n];
-        for (ki, &xc) in xrow.iter().enumerate() {
-            let xv = if act_signed { xc as i32 - 128 } else { xc as i32 };
-            if xv == 0 {
-                continue;
-            }
-            let wrow = &w_cols[ki * n..(ki + 1) * n];
-            for (o, &wc) in out.iter_mut().zip(wrow.iter()) {
-                *o += xv * (wc as i32 - 128);
-            }
-        }
-    }
-    acc
-}
-
-/// Depthwise variant: x_codes [M, taps, C], w_cols [taps, C] -> acc [M, C].
-pub fn approx_dw(
-    x_codes: &[u8],
-    w_cols: &[u8],
-    lut: &[i32],
-    m: usize,
-    taps: usize,
-    c: usize,
-) -> Vec<i32> {
-    assert_eq!(x_codes.len(), m * taps * c);
-    assert_eq!(w_cols.len(), taps * c);
-    let mut acc = vec![0i32; m * c];
-    for mi in 0..m {
-        let out = &mut acc[mi * c..(mi + 1) * c];
-        for t in 0..taps {
-            let xr = &x_codes[(mi * taps + t) * c..(mi * taps + t + 1) * c];
-            let wr = &w_cols[t * c..(t + 1) * c];
-            for ci in 0..c {
-                out[ci] += lut[(xr[ci] as usize) * 256 + wr[ci] as usize];
-            }
-        }
-    }
-    acc
-}
+pub use crate::compute::lut::{
+    approx_dw, approx_dw_pool, approx_matmul, approx_matmul_naive, approx_matmul_pool,
+    exact_matmul, exact_matmul_pool,
+};
 
 #[cfg(test)]
 mod tests {

@@ -1,6 +1,7 @@
 //! Native behavioral simulation substrate (ProxSim/TFApprox role): the
 //! int8 LUT simulator ([`net`]) and the native trainer ([`train`]) behind
-//! the default execution backend.
+//! the default execution backend. Dense kernels live in the unified
+//! compute layer ([`crate::compute`]); [`matmul`] re-exports them.
 
 pub mod matmul;
 pub mod net;

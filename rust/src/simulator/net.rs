@@ -9,9 +9,9 @@
 //! batch-stats BN, same quantization grids); the cross-check test in
 //! `rust/tests/` compares it against the AOT `eval_approx` program.
 
+use crate::compute::{approx_dw_pool, approx_matmul_pool, exact_matmul_pool, ComputePool};
 use crate::quant;
 use crate::runtime::manifest::{LayerInfo, Manifest};
-use crate::simulator::matmul::{approx_dw, approx_matmul, exact_matmul};
 use crate::tensor::{self, TensorF};
 use anyhow::{anyhow, bail, Result};
 
@@ -82,10 +82,20 @@ pub struct SimNet {
     pub input_hw: (usize, usize),
     pub ops: Vec<Op>,
     pub layers: Vec<SimLayer>,
+    /// Compute pool for the LUT kernels; parallel results are bit-identical
+    /// to serial by construction ([`crate::compute`]), so evaluation
+    /// numbers never depend on the thread count.
+    pub pool: ComputePool,
 }
 
 impl SimNet {
+    /// Serial-pool construction (back-compat); see [`SimNet::with_pool`].
     pub fn new(manifest: &Manifest, flat: &[f32]) -> Result<SimNet> {
+        Self::with_pool(manifest, flat, ComputePool::serial())
+    }
+
+    /// Construct over an explicit compute pool (the session/pipeline path).
+    pub fn with_pool(manifest: &Manifest, flat: &[f32], pool: ComputePool) -> Result<SimNet> {
         anyhow::ensure!(flat.len() == manifest.param_count, "param vector size");
         let mut layers = Vec::with_capacity(manifest.layers.len());
         for info in &manifest.layers {
@@ -114,6 +124,7 @@ impl SimNet {
             input_hw: (manifest.input_shape[0], manifest.input_shape[1]),
             ops,
             layers,
+            pool,
         })
     }
 
@@ -208,13 +219,15 @@ impl SimNet {
                 debug_assert_eq!(layer.w_cols.len(), kdim * n);
                 let codes = quant::quantize_acts(&x2d, s_x, signed);
                 let acc = match lut {
-                    Some(l) => approx_matmul(&codes, &layer.w_cols, l, m, kdim, n),
-                    None => exact_matmul(&codes, &layer.w_cols, signed, m, kdim, n),
+                    Some(l) => approx_matmul_pool(&self.pool, &codes, &layer.w_cols, l, m, kdim, n),
+                    None => exact_matmul_pool(&self.pool, &codes, &layer.w_cols, signed, m, kdim, n),
                 };
                 if let Some(cap) = capture {
                     let exact = match lut {
                         None => acc.clone(),
-                        Some(_) => exact_matmul(&codes, &layer.w_cols, signed, m, kdim, n),
+                        Some(_) => {
+                            exact_matmul_pool(&self.pool, &codes, &layer.w_cols, signed, m, kdim, n)
+                        }
                     };
                     cap.push(LayerCapture {
                         layer: idx,
@@ -249,13 +262,13 @@ impl SimNet {
                 let codes = quant::quantize_acts(&p.data, s_x, signed);
                 // exact dwconv path shares approx_dw with the exact LUT
                 let acc = match lut {
-                    Some(l) => approx_dw(&codes, &layer.w_cols, l, m, taps, c),
+                    Some(l) => approx_dw_pool(&self.pool, &codes, &layer.w_cols, l, m, taps, c),
                     None => {
                         let exact = crate::multipliers::build_layer_lut(
                             &exact_instance(),
                             signed,
                         );
-                        approx_dw(&codes, &layer.w_cols, &exact, m, taps, c)
+                        approx_dw_pool(&self.pool, &codes, &layer.w_cols, &exact, m, taps, c)
                     }
                 };
                 if let Some(cap) = capture {
@@ -263,7 +276,9 @@ impl SimNet {
                         crate::multipliers::build_layer_lut(&exact_instance(), signed);
                     let exact = match lut {
                         None => acc.clone(),
-                        Some(_) => approx_dw(&codes, &layer.w_cols, &exact_lut, m, taps, c),
+                        Some(_) => {
+                            approx_dw_pool(&self.pool, &codes, &layer.w_cols, &exact_lut, m, taps, c)
+                        }
                     };
                     cap.push(LayerCapture {
                         layer: idx,

@@ -18,9 +18,9 @@
 //! values. BatchNorm uses batch statistics, exactly like the Python side
 //! and [`SimNet`](crate::simulator::SimNet).
 
+use crate::compute::{self, approx_matmul_pool, exact_matmul_pool, ComputePool};
 use crate::quant;
 use crate::runtime::manifest::{LayerInfo, Manifest};
-use crate::simulator::matmul::{approx_matmul, exact_matmul};
 use crate::simulator::net::{build_ops, Activ, Op};
 use crate::tensor::TensorF;
 use crate::util::rng::Pcg32;
@@ -56,10 +56,20 @@ pub struct TrainNet {
     pub param_count: usize,
     /// Relative multiplication cost c_l per layer (Eq. 10).
     pub rel_costs: Vec<f32>,
+    /// Compute pool for the matmul/GEMM/col2im hot paths; parallel results
+    /// are bit-identical to serial ([`crate::compute`]), so training stays
+    /// deterministic at any thread count.
+    pub pool: ComputePool,
 }
 
 impl TrainNet {
+    /// Serial-pool construction (back-compat); see [`TrainNet::with_pool`].
     pub fn new(manifest: &Manifest, flat: &[f32]) -> Result<TrainNet> {
+        Self::with_pool(manifest, flat, ComputePool::serial())
+    }
+
+    /// Construct over an explicit compute pool (the native-backend path).
+    pub fn with_pool(manifest: &Manifest, flat: &[f32], pool: ComputePool) -> Result<TrainNet> {
         anyhow::ensure!(
             flat.len() == manifest.param_count,
             "param vector size {} vs manifest {}",
@@ -100,6 +110,7 @@ impl TrainNet {
             classes: manifest.classes,
             param_count: manifest.param_count,
             rel_costs,
+            pool,
         })
     }
 }
@@ -286,9 +297,9 @@ fn apply_layer(
     let acc = match mode {
         Mode::Approx { luts, .. } => {
             let lut = &luts[idx * LUT_LEN..(idx + 1) * LUT_LEN];
-            approx_matmul(&codes, &w_cols, lut, m, kdim, n)
+            approx_matmul_pool(&net.pool, &codes, &w_cols, lut, m, kdim, n)
         }
-        _ => exact_matmul(&codes, &w_cols, signed, m, kdim, n),
+        _ => exact_matmul_pool(&net.pool, &codes, &w_cols, signed, m, kdim, n),
     };
     let scale = s_x * s_w;
     let mut y0: Vec<f32> = acc.iter().map(|&a| a as f32 * scale).collect();
@@ -546,36 +557,16 @@ fn layer_backward(
         }
     }
 
-    // matmul: dW = p^T g (accumulated at w_off), dp = g W^T
-    for r in 0..m {
-        let grow = &g[r * n..(r + 1) * n];
-        let prow = &lc.p[r * kdim..(r + 1) * kdim];
-        for (ki, &pv) in prow.iter().enumerate() {
-            if pv == 0.0 {
-                continue;
-            }
-            let wrow = &mut grads.flat[layer.w_off + ki * n..layer.w_off + (ki + 1) * n];
-            for (wg, &gv) in wrow.iter_mut().zip(grow) {
-                *wg += pv * gv;
-            }
-        }
-    }
-    let mut gp = vec![0f32; m * kdim];
-    for r in 0..m {
-        let grow = &g[r * n..(r + 1) * n];
-        let gprow = &mut gp[r * kdim..(r + 1) * kdim];
-        for ki in 0..kdim {
-            let wrow = &layer.w[ki * n..(ki + 1) * n];
-            let mut s = 0f32;
-            for (wv, gv) in wrow.iter().zip(grow) {
-                s += wv * gv;
-            }
-            gprow[ki] = s;
-        }
-    }
+    // matmul: dW += p^T g (accumulated at w_off), dp = g W^T — blocked
+    // compute-layer kernels, row-chunk parallel over the pool. The packed
+    // gemm_at_acc keeps the historical summation order (m ascending, zero
+    // patches skipped), so gradients match the old serial loops exactly.
+    let dw = &mut grads.flat[layer.w_off..layer.w_off + kdim * n];
+    compute::gemm_at_acc(&net.pool, &lc.p, &g, m, kdim, n, dw);
+    let gp = compute::gemm_bt(&net.pool, &g, &layer.w, m, n, kdim);
 
     if info.kind == "conv" {
-        col2im(&gp, &lc.in_shape, info.k, info.k, info.stride, info.pad)
+        compute::col2im_pool(&net.pool, &gp, &lc.in_shape, info.k, info.k, info.stride, info.pad)
     } else {
         gp
     }
@@ -599,47 +590,6 @@ fn act_backward_inplace(g: &mut [f32], preact: &[f32], act: Activ) {
             }
         }
     }
-}
-
-/// Transpose of [`crate::tensor::im2col`] (gradient routing back to x).
-fn col2im(
-    gp: &[f32],
-    in_shape: &[usize],
-    kh: usize,
-    kw: usize,
-    stride: usize,
-    pad: usize,
-) -> Vec<f32> {
-    let (b, h, w, c) = (in_shape[0], in_shape[1], in_shape[2], in_shape[3]);
-    let ho = (h + 2 * pad - kh) / stride + 1;
-    let wo = (w + 2 * pad - kw) / stride + 1;
-    let k = kh * kw * c;
-    let mut gx = vec![0f32; b * h * w * c];
-    for bi in 0..b {
-        for oi in 0..ho {
-            for oj in 0..wo {
-                let base = ((bi * ho + oi) * wo + oj) * k;
-                for ki in 0..kh {
-                    let ii = oi * stride + ki;
-                    if ii < pad || ii - pad >= h {
-                        continue;
-                    }
-                    for kj in 0..kw {
-                        let jj = oj * stride + kj;
-                        if jj < pad || jj - pad >= w {
-                            continue;
-                        }
-                        let src = ((bi * h + (ii - pad)) * w + (jj - pad)) * c;
-                        let dst = base + (ki * kw + kj) * c;
-                        for ci in 0..c {
-                            gx[src + ci] += gp[dst + ci];
-                        }
-                    }
-                }
-            }
-        }
-    }
-    gx
 }
 
 // ---------------------------------------------------------------------------

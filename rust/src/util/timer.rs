@@ -1,24 +1,38 @@
 //! Wall-clock timing helpers used by the search driver and EXPERIMENTS.md
 //! timing sections.
+//!
+//! Safe for the parallel hot paths (`crate::compute`): segments live
+//! behind interior mutability, so workers can record into a shared
+//! [`Timings`] through `&self`. For deterministic aggregation across a
+//! parallel region, accumulate one `Timings` per chunk and [`Timings::merge`]
+//! them in chunk order (the order `ComputePool::map_chunks` returns).
+//! Today's production callers are single-threaded coordinator stages; the
+//! `&self` API + `merge` exist so kernels can start recording without an
+//! API break (the concurrency tests below pin the contract).
 
+use std::sync::Mutex;
 use std::time::Instant;
 
-/// Accumulates named wall-clock segments (single-threaded use).
+/// Accumulates named wall-clock segments. Thread-safe: `add`/`time` take
+/// `&self` and may be called concurrently; segment *order* is first-insert
+/// order, so merge per-thread instances in chunk order when the report
+/// layout must be deterministic.
 #[derive(Debug, Default)]
 pub struct Timings {
-    entries: Vec<(String, f64)>,
+    entries: Mutex<Vec<(String, f64)>>,
 }
 
 impl Timings {
-    pub fn add(&mut self, name: &str, seconds: f64) {
-        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+    pub fn add(&self, name: &str, seconds: f64) {
+        let mut entries = self.entries.lock().expect("timings poisoned");
+        if let Some(e) = entries.iter_mut().find(|(n, _)| n == name) {
             e.1 += seconds;
         } else {
-            self.entries.push((name.to_string(), seconds));
+            entries.push((name.to_string(), seconds));
         }
     }
 
-    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
         self.add(name, t0.elapsed().as_secs_f64());
@@ -27,19 +41,30 @@ impl Timings {
 
     pub fn get(&self, name: &str) -> f64 {
         self.entries
+            .lock()
+            .expect("timings poisoned")
             .iter()
             .find(|(n, _)| n == name)
             .map(|(_, s)| *s)
             .unwrap_or(0.0)
     }
 
-    pub fn entries(&self) -> &[(String, f64)] {
-        &self.entries
+    /// Snapshot of all segments in first-insert order.
+    pub fn entries(&self) -> Vec<(String, f64)> {
+        self.entries.lock().expect("timings poisoned").clone()
+    }
+
+    /// Fold another accumulator into this one (per-thread accumulation:
+    /// call in chunk order for a deterministic segment order).
+    pub fn merge(&self, other: &Timings) {
+        for (name, secs) in other.entries() {
+            self.add(&name, secs);
+        }
     }
 
     pub fn report(&self) -> String {
         let mut s = String::new();
-        for (name, secs) in &self.entries {
+        for (name, secs) in self.entries() {
             s.push_str(&format!("  {name:<32} {secs:>9.2}s\n"));
         }
         s
@@ -52,7 +77,7 @@ mod tests {
 
     #[test]
     fn accumulates() {
-        let mut t = Timings::default();
+        let t = Timings::default();
         t.add("a", 1.0);
         t.add("a", 2.0);
         t.add("b", 0.5);
@@ -64,9 +89,52 @@ mod tests {
 
     #[test]
     fn times_closure() {
-        let mut t = Timings::default();
+        let t = Timings::default();
         let v = t.time("work", || 42);
         assert_eq!(v, 42);
         assert!(t.get("work") >= 0.0);
+    }
+
+    #[test]
+    fn concurrent_adds_lose_nothing() {
+        // the parallel hot-path contract: total time recorded from N
+        // workers equals the sum of their contributions
+        let t = Timings::default();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..1000 {
+                        t.add("kernel", 0.001);
+                    }
+                });
+            }
+        });
+        assert!((t.get("kernel") - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_thread_merge_in_chunk_order_is_deterministic() {
+        let run = || {
+            let total = Timings::default();
+            let locals: Vec<Timings> = (0..3)
+                .map(|i| {
+                    let l = Timings::default();
+                    l.add(&format!("chunk{i}"), i as f64 + 1.0);
+                    l.add("shared", 0.25);
+                    l
+                })
+                .collect();
+            for l in &locals {
+                total.merge(l);
+            }
+            total.entries()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert_eq!(a[0].0, "chunk0");
+        assert_eq!(a[1].0, "shared");
+        let shared = a.iter().find(|(n, _)| n == "shared").unwrap().1;
+        assert!((shared - 0.75).abs() < 1e-12);
     }
 }

@@ -1,6 +1,12 @@
 //! Property-based invariant suite over the coordinator substrates
 //! (in-repo `prop` harness; proptest is not in the offline crate set).
+//!
+//! Includes the compute-layer determinism contract: parallel
+//! `compute::lut` / `compute::gemm` outputs must be **bit-identical** to
+//! the serial kernels across thread counts {1, 2, 4, 8} and odd chunk
+//! boundaries (randomized shapes land mid-chunk on purpose).
 
+use agn_approx::compute::{self, ComputeConfig, ComputePool};
 use agn_approx::coordinator::pareto::{self, Point};
 use agn_approx::errormodel::layer_error_map;
 use agn_approx::errormodel::model::{
@@ -83,6 +89,178 @@ fn prop_exact_matmul_matches_float_reference() {
                 }
             }
         }
+        Ok(())
+    });
+}
+
+/// The thread counts the determinism contract is enforced at (includes
+/// over-subscription: 8 threads on any host, more threads than rows for
+/// small shapes).
+const THREAD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn pools() -> Vec<ComputePool> {
+    THREAD_COUNTS
+        .iter()
+        .map(|&t| ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0))
+        .collect()
+}
+
+#[test]
+fn prop_parallel_lut_matmul_bit_identical_to_serial() {
+    let cat = unsigned_catalog();
+    let luts: Vec<Vec<i32>> = ["mul8u_etm6", "mul8u_trc5"]
+        .iter()
+        .map(|n| build_layer_lut(cat.get(n).unwrap(), false))
+        .collect();
+    let pools = pools();
+    prop::check(40, |g| {
+        let lut = g.choose(&luts);
+        // odd sizes on purpose: chunk boundaries land mid-matrix, and
+        // m < 8 exercises pools with more threads than rows
+        let m = g.usize_in(1..37);
+        let k = g.usize_in(1..24);
+        let n = g.usize_in(1..11);
+        let x = g.vec_u8(m * k..m * k + 1);
+        let w = g.vec_u8(k * n..k * n + 1);
+        let serial = compute::approx_matmul(&x, &w, lut, m, k, n);
+        for pool in &pools {
+            let par = compute::approx_matmul_pool(pool, &x, &w, lut, m, k, n);
+            assert_prop(
+                par == serial,
+                format!("approx_matmul diverged at threads={} m={m} k={k} n={n}", pool.threads()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_exact_matmul_bit_identical_to_serial() {
+    let pools = pools();
+    prop::check(40, |g| {
+        let m = g.usize_in(1..37);
+        let k = g.usize_in(1..24);
+        let n = g.usize_in(1..11);
+        let signed = g.bool();
+        let x = g.vec_u8(m * k..m * k + 1);
+        let w = g.vec_u8(k * n..k * n + 1);
+        let serial = compute::exact_matmul(&x, &w, signed, m, k, n);
+        for pool in &pools {
+            let par = compute::exact_matmul_pool(pool, &x, &w, signed, m, k, n);
+            assert_prop(
+                par == serial,
+                format!("exact_matmul diverged at threads={} m={m} k={k} n={n}", pool.threads()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_dw_bit_identical_to_serial() {
+    let cat = unsigned_catalog();
+    let lut = build_layer_lut(cat.get("mul8u_drm4").unwrap(), false);
+    let pools = pools();
+    prop::check(30, |g| {
+        let m = g.usize_in(1..25);
+        let taps = g.usize_in(1..10);
+        let c = g.usize_in(1..9);
+        let x = g.vec_u8(m * taps * c..m * taps * c + 1);
+        let w = g.vec_u8(taps * c..taps * c + 1);
+        let serial = compute::approx_dw(&x, &w, &lut, m, taps, c);
+        for pool in &pools {
+            let par = compute::approx_dw_pool(pool, &x, &w, &lut, m, taps, c);
+            assert_prop(
+                par == serial,
+                format!("approx_dw diverged at threads={} m={m} taps={taps} c={c}", pool.threads()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_gemm_kernels_bit_identical_to_serial() {
+    // f32 is where parallel reductions classically diverge; the compute
+    // layer's fixed summation order must make every thread count agree to
+    // the last bit, not just approximately
+    let serial_pool = ComputePool::serial();
+    let pools = pools();
+    prop::check(30, |g| {
+        let m = g.usize_in(1..29);
+        let k = g.usize_in(1..17);
+        let n = g.usize_in(1..13);
+        let a = g.vec_f32(m * k..m * k + 1, -2.0..2.0);
+        let b = g.vec_f32(k * n..k * n + 1, -2.0..2.0);
+        let gt = g.vec_f32(m * n..m * n + 1, -1.0..1.0);
+        let c0 = compute::gemm(&serial_pool, &a, &b, m, k, n);
+        let mut dw0 = vec![0.125f32; k * n];
+        compute::gemm_at_acc(&serial_pool, &a, &gt, m, k, n, &mut dw0);
+        let gp0 = compute::gemm_bt(&serial_pool, &gt, &b, m, n, k);
+        for pool in &pools {
+            let t = pool.threads();
+            assert_prop(
+                compute::gemm(pool, &a, &b, m, k, n) == c0,
+                format!("gemm diverged at threads={t} m={m} k={k} n={n}"),
+            )?;
+            let mut dw = vec![0.125f32; k * n];
+            compute::gemm_at_acc(pool, &a, &gt, m, k, n, &mut dw);
+            assert_prop(
+                dw == dw0,
+                format!("gemm_at_acc diverged at threads={t} m={m} k={k} n={n}"),
+            )?;
+            assert_prop(
+                compute::gemm_bt(pool, &gt, &b, m, n, k) == gp0,
+                format!("gemm_bt diverged at threads={t} m={m} k={k} n={n}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_col2im_bit_identical_to_serial() {
+    let serial_pool = ComputePool::serial();
+    let pools = pools();
+    prop::check(20, |g| {
+        let b = g.usize_in(1..7);
+        let h = g.usize_in(3..9);
+        let c = g.usize_in(1..5);
+        let (kh, kw) = (3usize, 3usize);
+        let (stride, pad) = (1usize, 1usize);
+        let ho = (h + 2 * pad - kh) / stride + 1;
+        let in_shape = [b, h, h, c];
+        let len = b * ho * ho * kh * kw * c;
+        let gp = g.vec_f32(len..len + 1, -1.0..1.0);
+        let serial =
+            compute::col2im_pool(&serial_pool, &gp, &in_shape, kh, kw, stride, pad);
+        for pool in &pools {
+            let par = compute::col2im_pool(pool, &gp, &in_shape, kh, kw, stride, pad);
+            assert_prop(
+                par == serial,
+                format!("col2im diverged at threads={} b={b} h={h} c={c}", pool.threads()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_covers_exactly_once() {
+    prop::check(100, |g| {
+        let n = g.usize_in(0..200);
+        let parts = g.usize_in(1..17);
+        let chunks = compute::partition(n, parts);
+        let mut covered = 0usize;
+        let mut next = 0usize;
+        for c in &chunks {
+            assert_prop(c.start == next, format!("gap/overlap at {c:?} (n={n} parts={parts})"))?;
+            assert_prop(c.end > c.start, format!("empty chunk {c:?}"))?;
+            covered += c.end - c.start;
+            next = c.end;
+        }
+        assert_prop(covered == n, format!("covered {covered} of {n}"))?;
+        assert_prop(chunks.len() <= parts, "too many chunks")?;
         Ok(())
     });
 }

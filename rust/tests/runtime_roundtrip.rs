@@ -7,8 +7,11 @@
 //! With `--features pjrt` and built artifacts the same assertions hold on
 //! the PJRT backend — the program contract is backend-independent.
 
+use agn_approx::compute::ComputeConfig;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
-use agn_approx::runtime::{create_backend, BackendKind, ExecBackend, Manifest, Value};
+use agn_approx::runtime::{
+    create_backend, create_backend_with, BackendKind, ExecBackend, Manifest, Value,
+};
 use agn_approx::search::{self, LrSchedule, TrainState};
 
 fn backend() -> (Box<dyn ExecBackend>, Manifest) {
@@ -92,6 +95,53 @@ fn gradient_search_learns_sigmas_and_responds_to_lambda() {
         high > low,
         "lambda must push sigmas up: lam0 -> {low:.4}, lam0.6 -> {high:.4}"
     );
+}
+
+#[test]
+fn train_qat_bit_identical_across_thread_counts() {
+    // the program-level determinism contract of the compute layer: a full
+    // quantized forward + STE backward + SGD step must produce the exact
+    // same parameter vector at every worker count
+    let (engine, manifest) = backend();
+    drop(engine);
+    let flat = manifest.load_init_params().unwrap();
+    let d = data(&manifest);
+    let (xs, ys) = d.eval_batch(manifest.batch, 0);
+    let xv = Value::f32(
+        &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+        xs,
+    );
+    let yv = Value::i32(&[manifest.batch], ys);
+    let zeros = vec![0f32; flat.len()];
+    let run_at = |threads: usize| -> (Vec<f32>, Vec<f32>) {
+        let mut b = create_backend_with(
+            BackendKind::Native,
+            "artifacts",
+            ComputeConfig::with_threads(threads),
+        )
+        .unwrap();
+        let out = b
+            .run(
+                &manifest,
+                "train_qat",
+                &[
+                    Value::vec_f32(flat.clone()),
+                    Value::vec_f32(zeros.clone()),
+                    xv.clone(),
+                    yv.clone(),
+                    Value::scalar_f32(0.05),
+                ],
+            )
+            .unwrap();
+        (out[0].as_f32().unwrap().to_vec(), out[2].as_f32().unwrap().to_vec())
+    };
+    let (params1, metrics1) = run_at(1);
+    assert_ne!(params1, flat, "the step must move the parameters");
+    for threads in [2usize, 4, 8] {
+        let (params_t, metrics_t) = run_at(threads);
+        assert_eq!(params_t, params1, "params diverged at {threads} threads");
+        assert_eq!(metrics_t, metrics1, "metrics diverged at {threads} threads");
+    }
 }
 
 #[test]
