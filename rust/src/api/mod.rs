@@ -62,6 +62,7 @@ pub use session::{ApproxSession, SessionBuilder, SessionStats};
 // Re-exported building blocks for composable/advanced use.
 pub use crate::coordinator::pipeline::{default_cache_dir, state_cache_path, Pipeline, RunConfig};
 pub use crate::coordinator::report::{render, save_json, to_json};
+pub use crate::ir::{ModelIr, TargetDesc};
 
 use std::path::{Path, PathBuf};
 

@@ -8,6 +8,7 @@ use crate::coordinator::experiments;
 use crate::coordinator::pipeline::{default_cache_dir, Pipeline, RunConfig};
 use crate::datasets::DatasetCache;
 use crate::runtime::{create_backend_with, BackendKind, EngineStats, ExecBackend};
+use anyhow::Context as _;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -64,12 +65,13 @@ impl SessionBuilder {
 
     /// Scale the step counts / schedules up to the paper-sized values
     /// ([`RunConfig::paper`]). Non-schedule settings already chosen on this
-    /// builder (seed, sigma_init, sigma_max) are preserved.
+    /// builder (seed, sigma_init, sigma_max, dump_ir) are preserved.
     pub fn paper_scale(mut self) -> Self {
         self.cfg = RunConfig {
             seed: self.cfg.seed,
             sigma_init: self.cfg.sigma_init,
             sigma_max: self.cfg.sigma_max,
+            dump_ir: self.cfg.dump_ir.clone(),
             ..RunConfig::paper()
         };
         self
@@ -79,6 +81,13 @@ impl SessionBuilder {
     /// `<artifacts>/cache`).
     pub fn cache_dir(mut self, dir: impl Into<PathBuf>) -> Self {
         self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Dump per-pass IR snapshots into `dir` whenever a job lowers a model
+    /// through the IR pass pipeline (the `--dump-ir DIR` CLI flag).
+    pub fn dump_ir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.dump_ir = Some(dir.into());
         self
     }
 
@@ -238,6 +247,60 @@ impl ApproxSession {
             self.pipelines.insert(model.to_string(), pipe);
         }
         Ok((self.pipelines.get_mut(model).unwrap(), &mut *self.engine))
+    }
+
+    /// Lift a model this session serves into validated IR
+    /// ([`crate::ir::ModelIr`]) — the `export-ir` CLI path. The returned IR
+    /// carries the full parameter payload; strip it with
+    /// [`crate::ir::ModelIr::with_params_digest`] for structure-only files.
+    pub fn export_ir(&self, model: &str) -> AgnResult<crate::ir::ModelIr> {
+        self.engine
+            .export_ir(model)
+            .map_err(|source| AgnError::Artifacts { model: model.to_string(), source })
+    }
+
+    /// Import a model from an on-disk IR file — the `import-ir` CLI path.
+    ///
+    /// Validates the IR, then materializes runtime artifacts in this
+    /// session's artifact directory: the init parameter file (exact f32
+    /// bytes from the IR payload) and `<model>.manifest.json`, so the
+    /// backend serves the imported model exactly like an AOT-exported one.
+    /// Any cached pipeline for the model is dropped so the next job reloads
+    /// the imported definition. Returns the model name.
+    pub fn import_ir(&mut self, path: &Path) -> AgnResult<String> {
+        let text = std::fs::read_to_string(path).map_err(|source| AgnError::Io {
+            path: path.to_path_buf(),
+            source,
+        })?;
+        let import = |text: &str| -> anyhow::Result<String> {
+            let ir = crate::ir::parse_and_validate(text)?;
+            let mut manifest = self.engine.import_ir(&ir)?;
+            // materialize an inline parameter payload as the external init
+            // file the on-disk manifest form reads — under a canonical name,
+            // since IR from synthetic models carries a `<synthetic:…>`
+            // placeholder that is not a usable file name
+            if let Some(p) = &manifest.init_params {
+                manifest.init_params_file = format!("{}.init.f32", manifest.model);
+                let bytes: Vec<u8> = p.iter().flat_map(|x| x.to_le_bytes()).collect();
+                let init_path = self.artifacts.join(&manifest.init_params_file);
+                std::fs::write(&init_path, bytes)
+                    .with_context(|| format!("writing init params {init_path:?}"))?;
+            }
+            let manifest_path =
+                crate::runtime::manifest_path(&self.artifacts, &manifest.model);
+            let mut json = manifest.to_json().to_string_pretty();
+            json.push('\n');
+            std::fs::write(&manifest_path, json)
+                .with_context(|| format!("writing manifest {manifest_path:?}"))?;
+            Ok(manifest.model.clone())
+        };
+        let model = import(&text).map_err(|source| AgnError::Artifacts {
+            model: path.display().to_string(),
+            source,
+        })?;
+        // drop any cached pipeline so the next job reloads the import
+        self.pipelines.remove(&model);
+        Ok(model)
     }
 
     /// Read-only backend access (platform name, manifest loading, stats).

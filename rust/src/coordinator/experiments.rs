@@ -167,7 +167,10 @@ pub fn sweep_lambda(
     let ops = pipe.operands(&searched.flat, &absmax)?;
     let preds = pipe.predictions(catalog, &ops);
     let outcome = pipe.match_at(catalog, &preds, &searched.sigmas, &ystd);
-    let luts = assignment_luts(&pipe.manifest, catalog, &outcome.instance_indices());
+    // lower the matching outcome through the IR pass pipeline — the LUT
+    // bindings used below are the ones `export-ir` serializes
+    let lowered = pipe.lower(catalog, "gradient_search", &outcome)?;
+    let luts = lowered.luts;
     let act_scales: Vec<f32> = pipe.act_scales(&absmax);
 
     // retrain from gradient-search weights (the paper's flow)
@@ -374,7 +377,7 @@ fn run_baselines(
     let cands = baselines::uniform_candidates(&manifest, &catalog);
     for c in cands.iter().step_by(3) {
         let genome = vec![c.instance; manifest.layers.len()];
-        let luts = assignment_luts(&manifest, &catalog, &genome);
+        let luts = pipe.lower_indices(&catalog, "uniform", &genome)?.luts;
         let mut st = base.clone();
         pipe.retrain(engine, &mut st, &luts, &scales)?;
         let acc = pipe
@@ -555,7 +558,7 @@ pub fn homogeneity(session: &mut ApproxSession, lambda: f32) -> Result<Homogenei
         for &ci in best.iter().take(2) {
             let c = &cands[ci];
             let genome = vec![c.instance; pipe.manifest.layers.len()];
-            let luts = assignment_luts(&pipe.manifest, &catalog_u, &genome);
+            let luts = pipe.lower_indices(&catalog_u, "uniform", &genome)?.luts;
             let mut st = base.clone();
             pipe.retrain(engine, &mut st, &luts, &scales)?;
             let top5 = pipe
@@ -576,7 +579,7 @@ pub fn homogeneity(session: &mut ApproxSession, lambda: f32) -> Result<Homogenei
             let ops = pipe.operands(&searched.flat, &absmax)?;
             let preds = pipe.predictions(&catalog_u, &ops);
             let outcome = pipe.match_at(&catalog_u, &preds, &searched.sigmas, &ystd);
-            let luts = assignment_luts(&pipe.manifest, &catalog_u, &outcome.instance_indices());
+            let luts = pipe.lower(&catalog_u, "gradient_search", &outcome)?.luts;
             let mut st = searched.clone();
             pipe.retrain(engine, &mut st, &luts, &scales)?;
             let top5 = pipe

@@ -38,6 +38,9 @@ pub struct RunConfig {
     pub lr_qat: LrSchedule,
     pub lr_search: LrSchedule,
     pub lr_retrain: LrSchedule,
+    /// When set, every IR pass pipeline run dumps per-pass snapshots into
+    /// this directory (`--dump-ir DIR` on the CLI).
+    pub dump_ir: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -55,6 +58,7 @@ impl Default for RunConfig {
             lr_qat: LrSchedule { base: 0.05, decay: 0.9, every: 60 },
             lr_search: LrSchedule { base: 0.01, decay: 0.9, every: 40 },
             lr_retrain: LrSchedule { base: 0.001, decay: 0.9, every: 10 },
+            dump_ir: None,
         }
     }
 }
@@ -364,6 +368,39 @@ impl Pipeline {
         y_std: &[f32],
     ) -> MatchOutcome {
         matching::match_multipliers(&self.manifest, catalog, predictions, sigmas, y_std, 1.0)
+    }
+
+    /// Lower a matching outcome through the IR pass pipeline
+    /// (`validate → assign → lower → resource_check`) into executable LUT
+    /// bindings. Honors [`RunConfig::dump_ir`] for per-pass snapshots.
+    pub fn lower(
+        &self,
+        catalog: &Catalog,
+        method: &str,
+        outcome: &MatchOutcome,
+    ) -> Result<crate::ir::LoweredModel> {
+        crate::ir::lower(
+            &self.manifest,
+            crate::ir::Assign::from_outcome(catalog, method, outcome),
+            &crate::ir::TargetDesc::native_cpu(),
+            self.cfg.dump_ir.as_deref(),
+        )
+    }
+
+    /// [`Pipeline::lower`] for a raw per-layer instance-index vector (the
+    /// baseline/NSGA-II result shape).
+    pub fn lower_indices(
+        &self,
+        catalog: &Catalog,
+        method: &str,
+        indices: &[usize],
+    ) -> Result<crate::ir::LoweredModel> {
+        crate::ir::lower(
+            &self.manifest,
+            crate::ir::Assign::from_indices(catalog, method, indices),
+            &crate::ir::TargetDesc::native_cpu(),
+            self.cfg.dump_ir.as_deref(),
+        )
     }
 }
 

@@ -1,0 +1,46 @@
+//! Versioned on-disk model IR + lowering pass pipeline.
+//!
+//! The paper's flow is a compilation problem: a quantized network plus
+//! per-layer robustness estimates must be lowered onto concrete
+//! approximate-multiplier instances. This module makes every step of that
+//! flow a first-class, serializable artifact (NIR-style — graphs carry
+//! shapes, quantization metadata and assignments as data):
+//!
+//! * [`ModelIr`] — the deterministic JSON schema ([`SCHEMA_VERSION`]),
+//!   a lossless superset of the runtime [`crate::runtime::Manifest`].
+//! * [`passes`] — `validate` → `assign` → `lower` → `resource_check`,
+//!   each dumpable via `--dump-ir`.
+//! * [`TargetDesc`] — the capability description `resource_check` gates
+//!   against.
+//!
+//! Entry points: [`lower`] for the standard pipeline over a manifest,
+//! [`parse_and_validate`] for reading IR files, and the session-level
+//! `export_ir`/`import_ir` ([`crate::api::ApproxSession`]).
+
+pub mod model;
+pub mod passes;
+pub mod target;
+
+pub use model::{
+    params_digest, AssignmentIr, LayerIr, LoweringIr, ModelIr, ParamsIr, QuantIr, ResourceHintsIr,
+    TensorIr, SCHEMA_VERSION,
+};
+pub use passes::{
+    lower, Assign, Lower, LoweredModel, Pass, PassCtx, PassPipeline, ResourceCheck, Validate,
+};
+pub use target::TargetDesc;
+
+use anyhow::Result;
+
+/// Run the validate pass over an IR (read-only convenience).
+pub fn validate(ir: &ModelIr) -> Result<()> {
+    Validate::check(ir, &PassCtx::new())
+}
+
+/// Parse IR text and run the validate pass — the standard entry point for
+/// anything read from disk.
+pub fn parse_and_validate(text: &str) -> Result<ModelIr> {
+    let ir = ModelIr::parse(text)?;
+    validate(&ir)?;
+    Ok(ir)
+}

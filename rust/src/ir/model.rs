@@ -1,0 +1,777 @@
+//! The versioned on-disk model IR.
+//!
+//! [`ModelIr`] is the serializable superset of [`Manifest`]: everything the
+//! runtime needs to execute a model (layer tape, parameter leaves, program
+//! signatures, init parameters) plus the compilation metadata the paper's
+//! flow produces — per-tensor quantization descriptors, a per-layer
+//! multiplier [`AssignmentIr`], the resolved [`LoweringIr`], and
+//! [`ResourceHintsIr`] for capability checks against a target.
+//!
+//! Serialization is deterministic: JSON via `util/json` whose object type
+//! is a `BTreeMap` (stable alphabetical key order), 2-space indentation,
+//! and hex-encoded little-endian `f32` parameter payloads so that
+//! `serialize → parse → serialize` is byte-identical (including `-0.0` and
+//! other values a decimal float path would not round-trip bit-exactly).
+//!
+//! Schema changes MUST bump [`SCHEMA_VERSION`] and regenerate the goldens
+//! under `rust/tests/golden_ir/` (see EXPERIMENTS.md).
+
+use crate::runtime::manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
+use crate::util::json::{
+    self, arr_field, bool_field, f64_field, obj_field, opt_f64_field, path_join, str_field,
+    u32_field, usize_field, usize_list_field, Json,
+};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Version of the on-disk schema. Bump on any change to the JSON layout
+/// and regenerate the committed goldens.
+pub const SCHEMA_VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// digests + parameter payload encoding
+
+/// FNV-1a 64-bit (the same hash the synthetic builder uses for per-model
+/// init streams).
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// 16-hex-char digest of a flat f32 vector (little-endian byte stream).
+pub fn params_digest(values: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    format!("{:016x}", fnv64(&bytes))
+}
+
+/// 16-hex-char digest of an i32 LUT (little-endian byte stream).
+pub fn lut_digest(values: &[i32]) -> String {
+    let mut bytes = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    format!("{:016x}", fnv64(&bytes))
+}
+
+fn encode_f32_hex(values: &[f32]) -> String {
+    let mut s = String::with_capacity(values.len() * 8);
+    for v in values {
+        for b in v.to_le_bytes() {
+            s.push_str(&format!("{b:02x}"));
+        }
+    }
+    s
+}
+
+fn decode_f32_hex(s: &str, at: &str) -> Result<Vec<f32>> {
+    ensure!(
+        s.len() % 8 == 0,
+        "{at}: hex payload length {} is not a multiple of 8",
+        s.len()
+    );
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(s.len() / 8);
+    let nibble = |b: u8, pos: usize| -> Result<u8> {
+        match b {
+            b'0'..=b'9' => Ok(b - b'0'),
+            b'a'..=b'f' => Ok(b - b'a' + 10),
+            _ => bail!("{at}: invalid hex digit {:?} at offset {pos}", b as char),
+        }
+    };
+    for chunk in 0..s.len() / 8 {
+        let mut le = [0u8; 4];
+        for (i, byte) in le.iter_mut().enumerate() {
+            let p = chunk * 8 + i * 2;
+            *byte = nibble(bytes[p], p)? << 4 | nibble(bytes[p + 1], p + 1)?;
+        }
+        out.push(f32::from_le_bytes(le));
+    }
+    Ok(out)
+}
+
+fn is_hex_digest(s: &str) -> bool {
+    s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+}
+
+// ---------------------------------------------------------------------------
+// quantization metadata
+
+/// Quantization descriptor for a tensor or a layer's activations.
+/// `scale == None` means "calibrate at runtime" (the paper's flow derives
+/// activation scales from a calibration batch); `Some` pins a static scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantIr {
+    pub scheme: String,
+    pub bitwidth: u32,
+    pub scale: Option<f64>,
+}
+
+impl QuantIr {
+    /// Schemes the validate pass accepts.
+    pub const SCHEMES: &'static [&'static str] = &["float32", "int8_symmetric", "uint8_affine"];
+
+    pub fn float32() -> QuantIr {
+        QuantIr { scheme: "float32".into(), bitwidth: 32, scale: None }
+    }
+
+    pub fn int8_symmetric() -> QuantIr {
+        QuantIr { scheme: "int8_symmetric".into(), bitwidth: 8, scale: None }
+    }
+
+    pub fn uint8_affine() -> QuantIr {
+        QuantIr { scheme: "uint8_affine".into(), bitwidth: 8, scale: None }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bitwidth", Json::num(self.bitwidth as f64)),
+            ("scale", self.scale.map(Json::num).unwrap_or(Json::Null)),
+            ("scheme", Json::str(&self.scheme)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<QuantIr> {
+        Ok(QuantIr {
+            scheme: str_field(v, path, "scheme")?,
+            bitwidth: u32_field(v, path, "bitwidth")?,
+            scale: opt_f64_field(v, path, "scale")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tensors + layers
+
+/// A parameter leaf plus its quantization descriptor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorIr {
+    pub leaf: LeafInfo,
+    pub quant: QuantIr,
+}
+
+impl TensorIr {
+    pub fn size(&self) -> usize {
+        self.leaf.size()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("offset", Json::num(self.leaf.offset as f64)),
+            ("path", Json::str(&self.leaf.path)),
+            ("quant", self.quant.to_json()),
+            ("shape", Json::arr_usize(&self.leaf.shape)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<TensorIr> {
+        Ok(TensorIr {
+            leaf: LeafInfo {
+                path: str_field(v, path, "path")?,
+                offset: usize_field(v, path, "offset")?,
+                shape: usize_list_field(v, path, "shape")?,
+            },
+            quant: QuantIr::from_json(json::req_field(v, path, "quant")?, &path_join(path, "quant"))?,
+        })
+    }
+}
+
+/// One approximable layer plus its activation quantization descriptor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerIr {
+    pub info: LayerInfo,
+    pub act_quant: QuantIr,
+}
+
+impl LayerIr {
+    fn to_json(&self) -> Json {
+        let l = &self.info;
+        Json::obj(vec![
+            ("act_quant", self.act_quant.to_json()),
+            ("act_signed", Json::Bool(l.act_signed)),
+            ("cin", Json::num(l.cin as f64)),
+            ("cout", Json::num(l.cout as f64)),
+            ("fan_in", Json::num(l.fan_in as f64)),
+            ("in_hw", Json::arr_usize(&[l.in_hw.0, l.in_hw.1])),
+            ("k", Json::num(l.k as f64)),
+            ("kind", Json::str(&l.kind)),
+            ("mults_per_image", Json::num(l.mults_per_image as f64)),
+            ("name", Json::str(&l.name)),
+            ("out_hw", Json::arr_usize(&[l.out_hw.0, l.out_hw.1])),
+            ("pad", Json::num(l.pad as f64)),
+            ("stride", Json::num(l.stride as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<LayerIr> {
+        let hw = |key: &str| -> Result<(usize, usize)> {
+            let a = usize_list_field(v, path, key)?;
+            ensure!(a.len() == 2, "{path}.{key}: expected 2 elements, got {}", a.len());
+            Ok((a[0], a[1]))
+        };
+        Ok(LayerIr {
+            info: LayerInfo {
+                name: str_field(v, path, "name")?,
+                kind: str_field(v, path, "kind")?,
+                cin: usize_field(v, path, "cin")?,
+                cout: usize_field(v, path, "cout")?,
+                k: usize_field(v, path, "k")?,
+                stride: usize_field(v, path, "stride")?,
+                pad: usize_field(v, path, "pad")?,
+                in_hw: hw("in_hw")?,
+                out_hw: hw("out_hw")?,
+                fan_in: usize_field(v, path, "fan_in")?,
+                mults_per_image: usize_field(v, path, "mults_per_image")?,
+                act_signed: bool_field(v, path, "act_signed")?,
+            },
+            act_quant: QuantIr::from_json(
+                json::req_field(v, path, "act_quant")?,
+                &path_join(path, "act_quant"),
+            )?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// assignments + lowering + hints
+
+/// A serializable multiplier assignment: one catalog instance name per
+/// layer, produced by the `assign` pass from search output or a baseline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssignmentIr {
+    /// Catalog the instance names resolve in (`evo8u` / `evo8s`).
+    pub catalog: String,
+    /// Producer tag (`gradient_search`, `alwann`, `lvrm`, `uniform`, ...).
+    pub method: String,
+    /// One instance name per layer, in layer order.
+    pub instances: Vec<String>,
+    /// 1 - relative multiply energy vs. the all-exact configuration.
+    pub energy_reduction: f64,
+    /// Predicted relative error std per layer (0.0 when the producer does
+    /// not predict, e.g. uniform baselines).
+    pub sigma_pred_rel: Vec<f64>,
+}
+
+impl AssignmentIr {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("catalog", Json::str(&self.catalog)),
+            ("energy_reduction", Json::num(self.energy_reduction)),
+            ("instances", Json::Arr(self.instances.iter().map(Json::str).collect())),
+            ("method", Json::str(&self.method)),
+            ("sigma_pred_rel", Json::arr_f64(&self.sigma_pred_rel)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<AssignmentIr> {
+        let instances = arr_field(v, path, "instances")?
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                e.as_str().map(str::to_string).ok_or_else(|| {
+                    anyhow!("{path}.instances[{i}]: expected string, got {}", e.type_name())
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let sigma_pred_rel = arr_field(v, path, "sigma_pred_rel")?
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                e.as_f64().ok_or_else(|| {
+                    anyhow!("{path}.sigma_pred_rel[{i}]: expected number, got {}", e.type_name())
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(AssignmentIr {
+            catalog: str_field(v, path, "catalog")?,
+            method: str_field(v, path, "method")?,
+            instances,
+            energy_reduction: f64_field(v, path, "energy_reduction")?,
+            sigma_pred_rel,
+        })
+    }
+}
+
+/// Result of the `lower` pass: the assignment resolved against the catalog
+/// into executable LUT bindings. The LUT payloads themselves are rebuilt
+/// deterministically from the catalog at load time; the IR records their
+/// digests so drift is detectable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoweringIr {
+    pub catalog: String,
+    /// Operand grid side of each LUT (always 256 for 8-bit multipliers).
+    pub lut_side: usize,
+    /// FNV-1a digest of each layer's LUT, in layer order.
+    pub lut_digests: Vec<String>,
+    /// Total LUT bytes the lowered model binds (layers * 256^2 * 4).
+    pub lut_bytes: usize,
+}
+
+impl LoweringIr {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("catalog", Json::str(&self.catalog)),
+            ("lut_bytes", Json::num(self.lut_bytes as f64)),
+            ("lut_digests", Json::Arr(self.lut_digests.iter().map(Json::str).collect())),
+            ("lut_side", Json::num(self.lut_side as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<LoweringIr> {
+        let lut_digests = arr_field(v, path, "lut_digests")?
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                e.as_str().map(str::to_string).ok_or_else(|| {
+                    anyhow!("{path}.lut_digests[{i}]: expected string, got {}", e.type_name())
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LoweringIr {
+            catalog: str_field(v, path, "catalog")?,
+            lut_side: usize_field(v, path, "lut_side")?,
+            lut_digests,
+            lut_bytes: usize_field(v, path, "lut_bytes")?,
+        })
+    }
+}
+
+/// Resource footprint hints for the `resource_check` pass. Derived from
+/// the model (never free-form), so validate can cross-check them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResourceHintsIr {
+    pub batch: usize,
+    /// Bytes of one layer's full-product LUT (256^2 * 4).
+    pub lut_bytes_per_layer: usize,
+    /// Bytes of the flat f32 parameter vector.
+    pub param_bytes: usize,
+    /// 0 = no preference (run at whatever the host provides).
+    pub preferred_threads: usize,
+    /// Sum of `mults_per_image` over the layer tape.
+    pub total_mults_per_image: usize,
+}
+
+impl ResourceHintsIr {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("batch", Json::num(self.batch as f64)),
+            ("lut_bytes_per_layer", Json::num(self.lut_bytes_per_layer as f64)),
+            ("param_bytes", Json::num(self.param_bytes as f64)),
+            ("preferred_threads", Json::num(self.preferred_threads as f64)),
+            ("total_mults_per_image", Json::num(self.total_mults_per_image as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<ResourceHintsIr> {
+        Ok(ResourceHintsIr {
+            batch: usize_field(v, path, "batch")?,
+            lut_bytes_per_layer: usize_field(v, path, "lut_bytes_per_layer")?,
+            param_bytes: usize_field(v, path, "param_bytes")?,
+            preferred_threads: usize_field(v, path, "preferred_threads")?,
+            total_mults_per_image: usize_field(v, path, "total_mults_per_image")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// parameter payload
+
+/// How the IR carries the init parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamsIr {
+    /// Full payload inline (hex-encoded little-endian f32) — byte-exact.
+    Inline(Arc<Vec<f32>>),
+    /// Values live in `init_params_file` next to the manifest (AOT export).
+    External,
+    /// Structure-only IR: payload stripped, digest kept (`--strip-params`).
+    Digest { fnv64: String, count: usize },
+}
+
+impl ParamsIr {
+    fn to_json(&self) -> Json {
+        match self {
+            ParamsIr::Inline(p) => Json::obj(vec![
+                ("data", Json::str(encode_f32_hex(p))),
+                ("encoding", Json::str("f32le_hex")),
+            ]),
+            ParamsIr::External => Json::obj(vec![("encoding", Json::str("external"))]),
+            ParamsIr::Digest { fnv64, count } => Json::obj(vec![
+                ("count", Json::num(*count as f64)),
+                ("encoding", Json::str("digest")),
+                ("fnv64", Json::str(fnv64)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json, path: &str) -> Result<ParamsIr> {
+        match str_field(v, path, "encoding")?.as_str() {
+            "f32le_hex" => {
+                let data = str_field(v, path, "data")?;
+                let values = decode_f32_hex(&data, &path_join(path, "data"))?;
+                Ok(ParamsIr::Inline(Arc::new(values)))
+            }
+            "external" => Ok(ParamsIr::External),
+            "digest" => Ok(ParamsIr::Digest {
+                fnv64: str_field(v, path, "fnv64")?,
+                count: usize_field(v, path, "count")?,
+            }),
+            other => bail!(
+                "{}: unknown encoding {other:?} (expected f32le_hex, external or digest)",
+                path_join(path, "encoding")
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// programs (reuse the manifest's ProgramInfo/TensorSpec)
+
+fn spec_to_json(s: &TensorSpec) -> Json {
+    Json::obj(vec![("dtype", Json::str(&s.dtype)), ("shape", Json::arr_usize(&s.shape))])
+}
+
+fn program_to_json(p: &ProgramInfo) -> Json {
+    Json::obj(vec![
+        ("file", Json::str(&p.file)),
+        ("inputs", Json::Arr(p.inputs.iter().map(spec_to_json).collect())),
+        ("outputs", Json::Arr(p.outputs.iter().map(spec_to_json).collect())),
+    ])
+}
+
+fn program_from_json(v: &Json, path: &str) -> Result<ProgramInfo> {
+    let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+        arr_field(v, path, key)?
+            .iter()
+            .enumerate()
+            .map(|(j, s)| {
+                let sp = format!("{path}.{key}[{j}]");
+                Ok(TensorSpec {
+                    dtype: str_field(s, &sp, "dtype")?,
+                    shape: usize_list_field(s, &sp, "shape")?,
+                })
+            })
+            .collect()
+    };
+    Ok(ProgramInfo {
+        file: str_field(v, path, "file")?,
+        inputs: specs("inputs")?,
+        outputs: specs("outputs")?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the IR root
+
+/// The versioned on-disk model description. See the module docs for the
+/// serialization guarantees.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelIr {
+    pub schema_version: u32,
+    pub model: String,
+    pub arch: String,
+    pub act_signed: bool,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+    pub param_count: usize,
+    /// Kept explicit (not derived from `layers.len()`) so the validate
+    /// pass can catch truncated layer tapes.
+    pub num_layers: usize,
+    pub tensors: Vec<TensorIr>,
+    pub layers: Vec<LayerIr>,
+    pub programs: BTreeMap<String, ProgramInfo>,
+    pub init_params_file: String,
+    pub params: ParamsIr,
+    pub assignment: Option<AssignmentIr>,
+    pub lowering: Option<LoweringIr>,
+    pub hints: ResourceHintsIr,
+}
+
+impl ModelIr {
+    /// IR file name for `model` (mirrors `manifest_path` naming).
+    pub fn file_name(model: &str) -> String {
+        format!("{model}.ir.json")
+    }
+
+    /// Lossless lift of a [`Manifest`] into the IR. Quantization metadata
+    /// is inferred from the paper's scheme: weight leaves (`*/w`) are
+    /// int8-symmetric, affine/bias leaves stay float32, activations are
+    /// 8-bit with signedness from the layer tape.
+    pub fn from_manifest(m: &Manifest) -> ModelIr {
+        let tensors = m
+            .leaves
+            .iter()
+            .map(|l| TensorIr {
+                leaf: l.clone(),
+                quant: if l.path.ends_with("/w") {
+                    QuantIr::int8_symmetric()
+                } else {
+                    QuantIr::float32()
+                },
+            })
+            .collect();
+        let layers = m
+            .layers
+            .iter()
+            .map(|l| LayerIr {
+                info: l.clone(),
+                act_quant: if l.act_signed {
+                    QuantIr::int8_symmetric()
+                } else {
+                    QuantIr::uint8_affine()
+                },
+            })
+            .collect();
+        let params = match &m.init_params {
+            Some(p) => ParamsIr::Inline(p.clone()),
+            None => ParamsIr::External,
+        };
+        ModelIr {
+            schema_version: SCHEMA_VERSION,
+            model: m.model.clone(),
+            arch: m.arch.clone(),
+            act_signed: m.act_signed,
+            batch: m.batch,
+            input_shape: m.input_shape.clone(),
+            classes: m.classes,
+            param_count: m.param_count,
+            num_layers: m.num_layers,
+            tensors,
+            layers,
+            programs: m.programs.clone(),
+            init_params_file: m.init_params_file.clone(),
+            params,
+            assignment: None,
+            lowering: None,
+            hints: ResourceHintsIr {
+                batch: m.batch,
+                lut_bytes_per_layer: crate::multipliers::LUT_SIZE * 4,
+                param_bytes: m.param_count * 4,
+                preferred_threads: 0,
+                total_mults_per_image: m.layers.iter().map(|l| l.mults_per_image).sum(),
+            },
+        }
+    }
+
+    /// Lower back to the runtime [`Manifest`] (drops the IR-only metadata;
+    /// `from_manifest(m).to_manifest(&m.dir) == m` for every manifest).
+    /// Digest-only IRs cannot be materialized — re-export without
+    /// `--strip-params`.
+    pub fn to_manifest(&self, artifacts_dir: &Path) -> Result<Manifest> {
+        let init_params = match &self.params {
+            ParamsIr::Inline(p) => Some(p.clone()),
+            ParamsIr::External => None,
+            ParamsIr::Digest { .. } => bail!(
+                "params: cannot materialize a manifest from a digest-only IR for {:?} \
+                 (re-export without --strip-params)",
+                self.model
+            ),
+        };
+        Ok(Manifest {
+            dir: artifacts_dir.to_path_buf(),
+            model: self.model.clone(),
+            arch: self.arch.clone(),
+            act_signed: self.act_signed,
+            batch: self.batch,
+            input_shape: self.input_shape.clone(),
+            classes: self.classes,
+            param_count: self.param_count,
+            num_layers: self.num_layers,
+            leaves: self.tensors.iter().map(|t| t.leaf.clone()).collect(),
+            layers: self.layers.iter().map(|l| l.info.clone()).collect(),
+            programs: self.programs.clone(),
+            init_params_file: self.init_params_file.clone(),
+            init_params,
+        })
+    }
+
+    /// Copy with the parameter payload replaced by its digest (what the
+    /// committed goldens and `--strip-params` store).
+    pub fn with_params_digest(&self) -> ModelIr {
+        let mut ir = self.clone();
+        if let ParamsIr::Inline(p) = &self.params {
+            ir.params = ParamsIr::Digest { fnv64: params_digest(p), count: p.len() };
+        }
+        ir
+    }
+
+    // -- serialization ------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("act_signed", Json::Bool(self.act_signed)),
+            ("arch", Json::str(&self.arch)),
+            ("batch", Json::num(self.batch as f64)),
+            ("classes", Json::num(self.classes as f64)),
+            ("hints", self.hints.to_json()),
+            ("init_params_file", Json::str(&self.init_params_file)),
+            ("input_shape", Json::arr_usize(&self.input_shape)),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            ),
+            ("model", Json::str(&self.model)),
+            ("num_layers", Json::num(self.num_layers as f64)),
+            ("param_count", Json::num(self.param_count as f64)),
+            ("params", self.params.to_json()),
+            (
+                "programs",
+                Json::Obj(
+                    self.programs
+                        .iter()
+                        .map(|(k, p)| (k.clone(), program_to_json(p)))
+                        .collect(),
+                ),
+            ),
+            ("schema_version", Json::num(self.schema_version as f64)),
+            (
+                "tensors",
+                Json::Arr(self.tensors.iter().map(|t| t.to_json()).collect()),
+            ),
+        ];
+        if let Some(a) = &self.assignment {
+            pairs.push(("assignment", a.to_json()));
+        }
+        if let Some(l) = &self.lowering {
+            pairs.push(("lowering", l.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Deterministic pretty serialization (stable key order, trailing
+    /// newline for committed goldens).
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelIr> {
+        let schema_version = u32_field(v, "", "schema_version")?;
+        ensure!(
+            schema_version == SCHEMA_VERSION,
+            "schema_version: unsupported value {schema_version} (this build reads {SCHEMA_VERSION})"
+        );
+        let tensors = arr_field(v, "", "tensors")?
+            .iter()
+            .enumerate()
+            .map(|(i, t)| TensorIr::from_json(t, &format!("tensors[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let layers = arr_field(v, "", "layers")?
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerIr::from_json(l, &format!("layers[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let mut programs = BTreeMap::new();
+        for (name, p) in obj_field(v, "", "programs")? {
+            programs.insert(name.clone(), program_from_json(p, &format!("programs.{name}"))?);
+        }
+        let assignment = match v.get("assignment") {
+            None | Some(Json::Null) => None,
+            Some(a) => Some(AssignmentIr::from_json(a, "assignment")?),
+        };
+        let lowering = match v.get("lowering") {
+            None | Some(Json::Null) => None,
+            Some(l) => Some(LoweringIr::from_json(l, "lowering")?),
+        };
+        Ok(ModelIr {
+            schema_version,
+            model: str_field(v, "", "model")?,
+            arch: str_field(v, "", "arch")?,
+            act_signed: bool_field(v, "", "act_signed")?,
+            batch: usize_field(v, "", "batch")?,
+            input_shape: usize_list_field(v, "", "input_shape")?,
+            classes: usize_field(v, "", "classes")?,
+            param_count: usize_field(v, "", "param_count")?,
+            num_layers: usize_field(v, "", "num_layers")?,
+            tensors,
+            layers,
+            programs,
+            init_params_file: str_field(v, "", "init_params_file")?,
+            params: ParamsIr::from_json(json::req_field(v, "", "params")?, "params")?,
+            assignment,
+            lowering,
+            hints: ResourceHintsIr::from_json(json::req_field(v, "", "hints")?, "hints")?,
+        })
+    }
+
+    /// Parse IR text (no validation beyond field types — run the validate
+    /// pass, or use [`crate::ir::parse_and_validate`]).
+    pub fn parse(text: &str) -> Result<ModelIr> {
+        let v = json::parse(text).map_err(|e| anyhow!("ir json: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Digest check helper used by validate: `true` when the digest fields
+    /// are well-formed 16-hex-char strings.
+    pub fn digest_well_formed(s: &str) -> bool {
+        is_hex_digest(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_hex_roundtrips_bit_patterns() {
+        let values: Vec<f32> = vec![0.0, -0.0, 1.5, -2.75e-5, f32::MIN_POSITIVE, 3.4e38];
+        let enc = encode_f32_hex(&values);
+        let dec = decode_f32_hex(&enc, "params.data").unwrap();
+        let a: Vec<u32> = values.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = dec.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn f32_hex_rejects_bad_payloads() {
+        let e = decode_f32_hex("0011", "p.data").unwrap_err();
+        assert!(e.to_string().contains("p.data"), "{e}");
+        let e = decode_f32_hex("0011223X", "p.data").unwrap_err();
+        assert!(e.to_string().contains("invalid hex digit"), "{e}");
+    }
+
+    #[test]
+    fn digest_shape() {
+        let d = params_digest(&[1.0, 2.0]);
+        assert!(is_hex_digest(&d), "{d}");
+        assert_ne!(d, params_digest(&[2.0, 1.0]));
+        assert!(is_hex_digest(&lut_digest(&[3, -4])));
+    }
+
+    #[test]
+    fn schema_version_gate() {
+        let m = crate::matching::tests_support::fake_manifest(&[100]);
+        let ir = ModelIr::from_manifest(&m);
+        let mut v = ir.to_json();
+        if let Json::Obj(map) = &mut v {
+            map.insert("schema_version".into(), Json::num(99.0));
+        }
+        let err = ModelIr::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("schema_version"), "{err}");
+    }
+
+    #[test]
+    fn manifest_roundtrip_is_lossless() {
+        let m = crate::runtime::synthetic::manifest(Path::new("artifacts"), "tinynet").unwrap();
+        let ir = ModelIr::from_manifest(&m);
+        let back = ir.to_manifest(&m.dir).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn digest_only_ir_cannot_materialize() {
+        let m = crate::runtime::synthetic::manifest(Path::new("artifacts"), "tinynet").unwrap();
+        let ir = ModelIr::from_manifest(&m).with_params_digest();
+        let err = ir.to_manifest(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("strip-params"), "{err}");
+    }
+}

@@ -1,0 +1,875 @@
+//! The IR pass pipeline: `validate` → `assign` → `lower` → `resource_check`.
+//!
+//! Each pass is a small [`Pass`] object over a mutable [`ModelIr`] plus a
+//! [`PassCtx`] carrying the catalogs, the deployment [`TargetDesc`], and
+//! the side outputs lowering produces (resolved instance indices + LUT
+//! payloads). [`PassPipeline`] runs passes in order and, when a dump
+//! directory is set (`--dump-ir`), writes a `{model}.{NN}_{name}.ir.json`
+//! snapshot after every pass (parameters digest-stripped, so dumps stay
+//! reviewable).
+//!
+//! Errors are hard and carry the offending JSON field path — the same
+//! contract as `runtime/manifest` parsing.
+
+use super::model::{lut_digest, AssignmentIr, LoweringIr, ModelIr, ParamsIr};
+use super::target::TargetDesc;
+use crate::matching::MatchOutcome;
+use crate::multipliers::{
+    build_layer_lut, signed_catalog, unsigned_catalog, Catalog, LUT_SIDE, LUT_SIZE,
+};
+use crate::runtime::{Manifest, Value};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// pass infrastructure
+
+/// Shared state threaded through a pipeline run.
+pub struct PassCtx {
+    /// Catalogs assignments may resolve in (default: both built-ins).
+    pub catalogs: Vec<Catalog>,
+    /// Deployment target for `resource_check`.
+    pub target: TargetDesc,
+    /// Snapshot directory (`--dump-ir`); `None` disables dumping.
+    pub dump_dir: Option<PathBuf>,
+    /// Set by [`Lower`]: one full-product LUT per layer.
+    pub luts: Option<Vec<Vec<i32>>>,
+    /// Set by [`Lower`]: resolved catalog instance index per layer.
+    pub instances: Option<Vec<usize>>,
+}
+
+impl PassCtx {
+    pub fn new() -> PassCtx {
+        PassCtx {
+            catalogs: vec![unsigned_catalog(), signed_catalog()],
+            target: TargetDesc::native_cpu(),
+            dump_dir: None,
+            luts: None,
+            instances: None,
+        }
+    }
+
+    pub fn with_target(target: TargetDesc) -> PassCtx {
+        PassCtx { target, ..PassCtx::new() }
+    }
+
+    pub fn catalog(&self, name: &str) -> Result<&Catalog> {
+        self.catalogs.iter().find(|c| c.name == name).ok_or_else(|| {
+            let have: Vec<&str> = self.catalogs.iter().map(|c| c.name.as_str()).collect();
+            anyhow!("unknown catalog {name:?} (have {have:?})")
+        })
+    }
+}
+
+impl Default for PassCtx {
+    fn default() -> PassCtx {
+        PassCtx::new()
+    }
+}
+
+/// One IR transformation or check.
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, ir: &mut ModelIr, ctx: &mut PassCtx) -> Result<()>;
+}
+
+/// An ordered pass sequence with per-pass `--dump-ir` snapshots.
+#[derive(Default)]
+pub struct PassPipeline {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassPipeline {
+    pub fn new() -> PassPipeline {
+        PassPipeline { passes: Vec::new() }
+    }
+
+    pub fn then(mut self, pass: impl Pass + 'static) -> PassPipeline {
+        self.passes.push(Box::new(pass));
+        self
+    }
+
+    pub fn run(&self, ir: &mut ModelIr, ctx: &mut PassCtx) -> Result<()> {
+        for (idx, pass) in self.passes.iter().enumerate() {
+            pass.run(ir, ctx)
+                .with_context(|| format!("pass {:02} ({}) on {}", idx, pass.name(), ir.model))?;
+            if let Some(dir) = &ctx.dump_dir {
+                dump_snapshot(dir, ir, idx, pass.name())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn dump_snapshot(dir: &Path, ir: &ModelIr, idx: usize, pass: &str) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating dump dir {dir:?}"))?;
+    let path = dir.join(format!("{}.{idx:02}_{pass}.ir.json", ir.model));
+    std::fs::write(&path, ir.with_params_digest().to_json_string())
+        .with_context(|| format!("writing IR snapshot {path:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// validate
+
+/// Schema + consistency gate: shapes, offsets, program signatures,
+/// assignment/lowering/hints cross-checks. Pure check — never mutates.
+pub struct Validate;
+
+/// Multiply-energy reduction implied by per-layer instance powers, using
+/// the same arithmetic as `matching::energy_reduction` (f64 sums in layer
+/// order) so recomputation matches stored values exactly.
+fn energy_from_layers(mults: &[usize], powers: &[f64]) -> f64 {
+    let total: f64 = mults.iter().map(|&m| m as f64).sum();
+    let spent: f64 = mults.iter().zip(powers).map(|(&m, &p)| m as f64 * p).sum();
+    1.0 - spent / total
+}
+
+impl Validate {
+    /// The full check, usable on `&ModelIr` (the pass delegates here).
+    pub fn check(ir: &ModelIr, ctx: &PassCtx) -> Result<()> {
+        ensure!(
+            ir.schema_version == super::model::SCHEMA_VERSION,
+            "schema_version: unsupported value {} (this build reads {})",
+            ir.schema_version,
+            super::model::SCHEMA_VERSION
+        );
+        ensure!(!ir.model.is_empty(), "model: must be non-empty");
+        ensure!(!ir.arch.is_empty(), "arch: must be non-empty");
+        ensure!(ir.batch > 0, "batch: must be positive");
+        ensure!(ir.classes > 0, "classes: must be positive");
+        ensure!(
+            ir.input_shape.len() == 3,
+            "input_shape: expected 3 dims (H, W, C), got {}",
+            ir.input_shape.len()
+        );
+        ensure!(
+            ir.input_shape.iter().all(|&d| d > 0),
+            "input_shape: dims must be positive, got {:?}",
+            ir.input_shape
+        );
+        ensure!(
+            ir.num_layers == ir.layers.len(),
+            "num_layers: declares {} but the layer tape has {}",
+            ir.num_layers,
+            ir.layers.len()
+        );
+
+        Self::check_tensors(ir)?;
+        Self::check_params(ir)?;
+        Self::check_layers(ir)?;
+        Self::check_programs(ir)?;
+        Self::check_assignment(ir, ctx)?;
+        Self::check_lowering(ir)?;
+        Self::check_hints(ir)
+    }
+
+    fn check_quant(q: &super::model::QuantIr, at: &str) -> Result<()> {
+        ensure!(
+            super::model::QuantIr::SCHEMES.contains(&q.scheme.as_str()),
+            "{at}.scheme: unknown scheme {:?} (expected one of {:?})",
+            q.scheme,
+            super::model::QuantIr::SCHEMES
+        );
+        ensure!(
+            matches!(q.bitwidth, 8 | 16 | 32),
+            "{at}.bitwidth: expected 8, 16 or 32, got {}",
+            q.bitwidth
+        );
+        if let Some(s) = q.scale {
+            ensure!(s.is_finite() && s > 0.0, "{at}.scale: must be finite and positive, got {s}");
+        }
+        Ok(())
+    }
+
+    fn check_tensors(ir: &ModelIr) -> Result<()> {
+        let mut offset = 0usize;
+        for (i, t) in ir.tensors.iter().enumerate() {
+            ensure!(!t.leaf.path.is_empty(), "tensors[{i}].path: must be non-empty");
+            ensure!(
+                !t.leaf.shape.is_empty() && t.leaf.shape.iter().all(|&d| d > 0),
+                "tensors[{i}].shape: dims must be positive, got {:?}",
+                t.leaf.shape
+            );
+            ensure!(
+                t.leaf.offset == offset,
+                "tensors[{i}].offset: expected {offset} (tensors must tile the flat \
+                 parameter vector contiguously), got {}",
+                t.leaf.offset
+            );
+            if let Some(j) = ir.tensors[..i].iter().position(|o| o.leaf.path == t.leaf.path) {
+                bail!(
+                    "tensors[{i}].path: duplicate path {:?} (also tensors[{j}])",
+                    t.leaf.path
+                );
+            }
+            Self::check_quant(&t.quant, &format!("tensors[{i}].quant"))?;
+            offset += t.size();
+        }
+        ensure!(
+            offset == ir.param_count,
+            "param_count: tensors cover {offset} values but param_count declares {}",
+            ir.param_count
+        );
+        Ok(())
+    }
+
+    fn check_params(ir: &ModelIr) -> Result<()> {
+        match &ir.params {
+            ParamsIr::Inline(p) => {
+                ensure!(
+                    p.len() == ir.param_count,
+                    "params.data: {} values but param_count declares {}",
+                    p.len(),
+                    ir.param_count
+                );
+                ensure!(
+                    p.iter().all(|v| v.is_finite()),
+                    "params.data: contains non-finite values"
+                );
+            }
+            ParamsIr::Digest { fnv64, count } => {
+                ensure!(
+                    *count == ir.param_count,
+                    "params.count: {count} but param_count declares {}",
+                    ir.param_count
+                );
+                ensure!(
+                    ModelIr::digest_well_formed(fnv64),
+                    "params.fnv64: expected 16 lowercase hex chars, got {fnv64:?}"
+                );
+            }
+            ParamsIr::External => ensure!(
+                !ir.init_params_file.is_empty(),
+                "init_params_file: must name the external parameter file"
+            ),
+        }
+        Ok(())
+    }
+
+    fn check_layers(ir: &ModelIr) -> Result<()> {
+        for (i, layer) in ir.layers.iter().enumerate() {
+            let l = &layer.info;
+            let p = format!("layers[{i}]");
+            ensure!(!l.name.is_empty(), "{p}.name: must be non-empty");
+            if let Some(j) = ir.layers[..i].iter().position(|o| o.info.name == l.name) {
+                bail!("{p}.name: duplicate layer name {:?} (also layers[{j}])", l.name);
+            }
+            match l.kind.as_str() {
+                "conv" | "dwconv" => {
+                    ensure!(l.cin > 0, "{p}.cin: must be positive");
+                    ensure!(l.cout > 0, "{p}.cout: must be positive");
+                    ensure!(l.k > 0, "{p}.k: must be positive");
+                    ensure!(l.stride > 0, "{p}.stride: must be positive");
+                    let span = (l.in_hw.0 + 2 * l.pad, l.in_hw.1 + 2 * l.pad);
+                    ensure!(
+                        span.0 >= l.k && span.1 >= l.k,
+                        "{p}.k: kernel {} exceeds padded input {:?}",
+                        l.k,
+                        span
+                    );
+                    let expect = ((span.0 - l.k) / l.stride + 1, (span.1 - l.k) / l.stride + 1);
+                    ensure!(
+                        l.out_hw == expect,
+                        "{p}.out_hw: expected [{}, {}] from in_hw/k/stride/pad, got [{}, {}]",
+                        expect.0,
+                        expect.1,
+                        l.out_hw.0,
+                        l.out_hw.1
+                    );
+                    if l.kind == "conv" {
+                        ensure!(
+                            l.fan_in == l.k * l.k * l.cin,
+                            "{p}.fan_in: expected {} (k*k*cin), got {}",
+                            l.k * l.k * l.cin,
+                            l.fan_in
+                        );
+                        let mults = l.out_hw.0 * l.out_hw.1 * l.fan_in * l.cout;
+                        ensure!(
+                            l.mults_per_image == mults,
+                            "{p}.mults_per_image: expected {mults}, got {}",
+                            l.mults_per_image
+                        );
+                    }
+                }
+                "fc" => {
+                    ensure!(l.cin > 0, "{p}.cin: must be positive");
+                    ensure!(l.cout > 0, "{p}.cout: must be positive");
+                    ensure!(
+                        l.fan_in == l.cin,
+                        "{p}.fan_in: expected cin ({}), got {}",
+                        l.cin,
+                        l.fan_in
+                    );
+                    ensure!(
+                        l.mults_per_image == l.cin * l.cout,
+                        "{p}.mults_per_image: expected {} (cin*cout), got {}",
+                        l.cin * l.cout,
+                        l.mults_per_image
+                    );
+                }
+                other => bail!("{p}.kind: unknown layer kind {other:?} (expected conv, dwconv or fc)"),
+            }
+            Self::check_quant(&layer.act_quant, &format!("{p}.act_quant"))?;
+        }
+        Ok(())
+    }
+
+    fn check_programs(ir: &ModelIr) -> Result<()> {
+        let expected = crate::runtime::synthetic::program_signatures(
+            ir.param_count,
+            ir.num_layers,
+            (ir.input_shape[0], ir.input_shape[1]),
+            ir.input_shape[2],
+            ir.batch,
+        );
+        for (name, prog) in &ir.programs {
+            let p = format!("programs.{name}");
+            ensure!(!prog.file.is_empty(), "{p}.file: must be non-empty");
+            for (tag, specs) in [("inputs", &prog.inputs), ("outputs", &prog.outputs)] {
+                for (j, s) in specs.iter().enumerate() {
+                    ensure!(
+                        matches!(s.dtype.as_str(), "float32" | "int32" | "uint32"),
+                        "{p}.{tag}[{j}].dtype: unknown dtype {:?}",
+                        s.dtype
+                    );
+                }
+            }
+            // the 7 native program names have a fixed signature contract
+            if let Some(exp) = expected.get(name) {
+                for (tag, have, want) in [
+                    ("inputs", &prog.inputs, &exp.inputs),
+                    ("outputs", &prog.outputs, &exp.outputs),
+                ] {
+                    ensure!(
+                        have.len() == want.len(),
+                        "{p}.{tag}: expected {} {tag} for program {name:?}, got {}",
+                        want.len(),
+                        have.len()
+                    );
+                    for (j, (h, w)) in have.iter().zip(want.iter()).enumerate() {
+                        ensure!(
+                            h.dtype == w.dtype && h.shape == w.shape,
+                            "{p}.{tag}[{j}]: expected {} {:?} for program {name:?}, got {} {:?}",
+                            w.dtype,
+                            w.shape,
+                            h.dtype,
+                            h.shape
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_assignment(ir: &ModelIr, ctx: &PassCtx) -> Result<()> {
+        let Some(a) = &ir.assignment else { return Ok(()) };
+        ensure!(!a.method.is_empty(), "assignment.method: must be non-empty");
+        let cat = ctx.catalog(&a.catalog).map_err(|e| anyhow!("assignment.catalog: {e}"))?;
+        ensure!(
+            a.instances.len() == ir.layers.len(),
+            "assignment.instances: expected {} entries (one per layer), got {}",
+            ir.layers.len(),
+            a.instances.len()
+        );
+        ensure!(
+            a.sigma_pred_rel.len() == ir.layers.len(),
+            "assignment.sigma_pred_rel: expected {} entries, got {}",
+            ir.layers.len(),
+            a.sigma_pred_rel.len()
+        );
+        let mut powers = Vec::with_capacity(a.instances.len());
+        for (i, name) in a.instances.iter().enumerate() {
+            let inst = cat.get(name).ok_or_else(|| {
+                anyhow!(
+                    "assignment.instances[{i}]: unknown instance {name:?} in catalog {:?}",
+                    a.catalog
+                )
+            })?;
+            powers.push(inst.power);
+        }
+        ensure!(
+            a.energy_reduction.is_finite(),
+            "assignment.energy_reduction: must be finite, got {}",
+            a.energy_reduction
+        );
+        let mults: Vec<usize> = ir.layers.iter().map(|l| l.info.mults_per_image).collect();
+        if mults.iter().sum::<usize>() > 0 {
+            let implied = energy_from_layers(&mults, &powers);
+            ensure!(
+                (a.energy_reduction - implied).abs() < 1e-6,
+                "assignment.energy_reduction: declares {} but the instances imply {implied}",
+                a.energy_reduction
+            );
+        }
+        Ok(())
+    }
+
+    fn check_lowering(ir: &ModelIr) -> Result<()> {
+        let Some(low) = &ir.lowering else { return Ok(()) };
+        let a = ir
+            .assignment
+            .as_ref()
+            .ok_or_else(|| anyhow!("lowering: present without an assignment"))?;
+        ensure!(
+            low.catalog == a.catalog,
+            "lowering.catalog: {:?} does not match assignment.catalog {:?}",
+            low.catalog,
+            a.catalog
+        );
+        ensure!(low.lut_side == LUT_SIDE, "lowering.lut_side: expected {LUT_SIDE}, got {}", low.lut_side);
+        ensure!(
+            low.lut_digests.len() == ir.layers.len(),
+            "lowering.lut_digests: expected {} entries, got {}",
+            ir.layers.len(),
+            low.lut_digests.len()
+        );
+        for (i, d) in low.lut_digests.iter().enumerate() {
+            ensure!(
+                ModelIr::digest_well_formed(d),
+                "lowering.lut_digests[{i}]: expected 16 lowercase hex chars, got {d:?}"
+            );
+        }
+        let expect = ir.layers.len() * LUT_SIZE * 4;
+        ensure!(
+            low.lut_bytes == expect,
+            "lowering.lut_bytes: expected {expect} (layers * 256^2 * 4), got {}",
+            low.lut_bytes
+        );
+        Ok(())
+    }
+
+    fn check_hints(ir: &ModelIr) -> Result<()> {
+        let h = &ir.hints;
+        ensure!(h.batch == ir.batch, "hints.batch: expected {} (= batch), got {}", ir.batch, h.batch);
+        ensure!(
+            h.lut_bytes_per_layer == LUT_SIZE * 4,
+            "hints.lut_bytes_per_layer: expected {} (256^2 * 4), got {}",
+            LUT_SIZE * 4,
+            h.lut_bytes_per_layer
+        );
+        ensure!(
+            h.param_bytes == ir.param_count * 4,
+            "hints.param_bytes: expected {} (param_count * 4), got {}",
+            ir.param_count * 4,
+            h.param_bytes
+        );
+        let total: usize = ir.layers.iter().map(|l| l.info.mults_per_image).sum();
+        ensure!(
+            h.total_mults_per_image == total,
+            "hints.total_mults_per_image: expected {total}, got {}",
+            h.total_mults_per_image
+        );
+        Ok(())
+    }
+}
+
+impl Pass for Validate {
+    fn name(&self) -> &'static str {
+        "validate"
+    }
+
+    fn run(&self, ir: &mut ModelIr, ctx: &mut PassCtx) -> Result<()> {
+        Validate::check(ir, ctx)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// assign
+
+enum AssignSpec {
+    Uniform { catalog: String, instance: String },
+    Explicit { catalog: String, method: String, instances: Vec<String>, sigma_pred_rel: Vec<f64> },
+}
+
+/// Record a multiplier assignment in the IR: the serializable form of a
+/// baseline (`uniform`, `alwann`, `lvrm`) or the gradient search output.
+/// Replaces any prior assignment and invalidates a stale lowering.
+pub struct Assign {
+    spec: AssignSpec,
+}
+
+impl Assign {
+    /// The same instance for every layer (the §4.2 uniform baseline).
+    pub fn uniform(catalog: &Catalog, instance: &str) -> Assign {
+        Assign {
+            spec: AssignSpec::Uniform {
+                catalog: catalog.name.clone(),
+                instance: instance.to_string(),
+            },
+        }
+    }
+
+    /// Wrap a matching/search [`MatchOutcome`].
+    pub fn from_outcome(catalog: &Catalog, method: &str, outcome: &MatchOutcome) -> Assign {
+        Assign {
+            spec: AssignSpec::Explicit {
+                catalog: catalog.name.clone(),
+                method: method.to_string(),
+                instances: outcome.assignments.iter().map(|a| a.instance_name.clone()).collect(),
+                sigma_pred_rel: outcome.assignments.iter().map(|a| a.sigma_pred_rel).collect(),
+            },
+        }
+    }
+
+    /// Wrap raw per-layer catalog indices (ALWANN/LVRM/NSGA genomes).
+    pub fn from_indices(catalog: &Catalog, method: &str, indices: &[usize]) -> Assign {
+        Assign {
+            spec: AssignSpec::Explicit {
+                catalog: catalog.name.clone(),
+                method: method.to_string(),
+                instances: indices.iter().map(|&i| catalog.instances[i].name.clone()).collect(),
+                sigma_pred_rel: vec![0.0; indices.len()],
+            },
+        }
+    }
+}
+
+impl Pass for Assign {
+    fn name(&self) -> &'static str {
+        "assign"
+    }
+
+    fn run(&self, ir: &mut ModelIr, ctx: &mut PassCtx) -> Result<()> {
+        let (catalog, method, instances, sigma_pred_rel) = match &self.spec {
+            AssignSpec::Uniform { catalog, instance } => {
+                let cat = ctx.catalog(catalog)?;
+                ensure!(
+                    cat.get(instance).is_some(),
+                    "assignment.instances: unknown instance {instance:?} in catalog {catalog:?}"
+                );
+                (
+                    catalog.clone(),
+                    "uniform".to_string(),
+                    vec![instance.clone(); ir.layers.len()],
+                    vec![0.0; ir.layers.len()],
+                )
+            }
+            AssignSpec::Explicit { catalog, method, instances, sigma_pred_rel } => (
+                catalog.clone(),
+                method.clone(),
+                instances.clone(),
+                sigma_pred_rel.clone(),
+            ),
+        };
+        ensure!(
+            instances.len() == ir.layers.len(),
+            "assignment.instances: expected {} entries (one per layer), got {}",
+            ir.layers.len(),
+            instances.len()
+        );
+        let cat = ctx.catalog(&catalog)?;
+        let mut powers = Vec::with_capacity(instances.len());
+        for (i, name) in instances.iter().enumerate() {
+            let inst = cat.get(name).ok_or_else(|| {
+                anyhow!("assignment.instances[{i}]: unknown instance {name:?} in catalog {catalog:?}")
+            })?;
+            powers.push(inst.power);
+        }
+        let mults: Vec<usize> = ir.layers.iter().map(|l| l.info.mults_per_image).collect();
+        let energy_reduction = if mults.iter().sum::<usize>() > 0 {
+            energy_from_layers(&mults, &powers)
+        } else {
+            0.0
+        };
+        ir.assignment = Some(AssignmentIr {
+            catalog,
+            method,
+            instances,
+            energy_reduction,
+            sigma_pred_rel,
+        });
+        // a new assignment invalidates any previously lowered bindings
+        ir.lowering = None;
+        ctx.luts = None;
+        ctx.instances = None;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lower
+
+/// Resolve the recorded assignment against the catalog into executable
+/// LUT bindings: builds one full-product LUT per layer, records digests in
+/// `ir.lowering`, and leaves the payloads in the [`PassCtx`].
+pub struct Lower;
+
+impl Pass for Lower {
+    fn name(&self) -> &'static str {
+        "lower"
+    }
+
+    fn run(&self, ir: &mut ModelIr, ctx: &mut PassCtx) -> Result<()> {
+        let a = ir
+            .assignment
+            .as_ref()
+            .ok_or_else(|| anyhow!("assignment: lower requires one (run the assign pass first)"))?;
+        let cat = ctx.catalog(&a.catalog).map_err(|e| anyhow!("assignment.catalog: {e}"))?;
+        let mut indices = Vec::with_capacity(a.instances.len());
+        for (i, name) in a.instances.iter().enumerate() {
+            let idx = cat.instances.iter().position(|inst| &inst.name == name).ok_or_else(|| {
+                anyhow!(
+                    "assignment.instances[{i}]: unknown instance {name:?} in catalog {:?}",
+                    a.catalog
+                )
+            })?;
+            indices.push(idx);
+        }
+        let luts: Vec<Vec<i32>> = ir
+            .layers
+            .iter()
+            .zip(&indices)
+            .map(|(l, &idx)| build_layer_lut(&cat.instances[idx], l.info.act_signed))
+            .collect();
+        ir.lowering = Some(LoweringIr {
+            catalog: a.catalog.clone(),
+            lut_side: LUT_SIDE,
+            lut_digests: luts.iter().map(|l| lut_digest(l)).collect(),
+            lut_bytes: luts.len() * LUT_SIZE * 4,
+        });
+        ctx.luts = Some(luts);
+        ctx.instances = Some(indices);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// resource_check
+
+/// Capability gate: does the lowered model fit the [`TargetDesc`]?
+pub struct ResourceCheck;
+
+impl Pass for ResourceCheck {
+    fn name(&self) -> &'static str {
+        "resource_check"
+    }
+
+    fn run(&self, ir: &mut ModelIr, ctx: &mut PassCtx) -> Result<()> {
+        let t = &ctx.target;
+        ensure!(
+            ir.hints.param_bytes <= t.max_param_bytes,
+            "hints.param_bytes: {} exceeds target {:?} parameter budget {}",
+            ir.hints.param_bytes,
+            t.name,
+            t.max_param_bytes
+        );
+        ensure!(
+            ir.batch <= t.max_batch,
+            "batch: {} exceeds target {:?} max batch {}",
+            ir.batch,
+            t.name,
+            t.max_batch
+        );
+        if ir.hints.preferred_threads > 0 {
+            ensure!(
+                ir.hints.preferred_threads <= t.max_threads,
+                "hints.preferred_threads: {} exceeds target {:?} max threads {}",
+                ir.hints.preferred_threads,
+                t.name,
+                t.max_threads
+            );
+        }
+        if let Some(a) = &ir.assignment {
+            ensure!(
+                t.supported_catalogs.contains(&a.catalog),
+                "assignment.catalog: target {:?} does not implement catalog {:?} (supports {:?})",
+                t.name,
+                a.catalog,
+                t.supported_catalogs
+            );
+        }
+        if let Some(low) = &ir.lowering {
+            ensure!(
+                low.lut_bytes <= t.max_lut_bytes,
+                "lowering.lut_bytes: {} exceeds target {:?} LUT budget {}",
+                low.lut_bytes,
+                t.name,
+                t.max_lut_bytes
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the standard lowering run
+
+/// A fully lowered model: the annotated IR, its runtime manifest, and the
+/// executable LUT bindings (what `eval_approx`/`train_approx` consume).
+pub struct LoweredModel {
+    pub ir: ModelIr,
+    pub manifest: Manifest,
+    /// One 256x256 full-product LUT per layer.
+    pub luts: Vec<Vec<i32>>,
+    /// Resolved catalog instance index per layer.
+    pub instances: Vec<usize>,
+}
+
+impl LoweredModel {
+    /// The LUT input tensor in program layout: `i32[num_layers, 65536]`.
+    pub fn lut_value(&self) -> Value {
+        let mut flat = Vec::with_capacity(self.luts.len() * LUT_SIZE);
+        for lut in &self.luts {
+            flat.extend_from_slice(lut);
+        }
+        Value::i32(&[self.luts.len(), LUT_SIZE], flat)
+    }
+}
+
+/// Run the standard pipeline `validate → assign → lower → resource_check`
+/// over a manifest and return the lowered model. `dump_dir` enables
+/// per-pass `--dump-ir` snapshots.
+pub fn lower(
+    manifest: &Manifest,
+    assign: Assign,
+    target: &TargetDesc,
+    dump_dir: Option<&Path>,
+) -> Result<LoweredModel> {
+    let mut ir = ModelIr::from_manifest(manifest);
+    let mut ctx = PassCtx::with_target(target.clone());
+    ctx.dump_dir = dump_dir.map(Path::to_path_buf);
+    PassPipeline::new()
+        .then(Validate)
+        .then(assign)
+        .then(Lower)
+        .then(ResourceCheck)
+        .run(&mut ir, &mut ctx)?;
+    let manifest = ir.to_manifest(&manifest.dir)?;
+    let luts = ctx.luts.take().expect("lower pass populates ctx.luts");
+    let instances = ctx.instances.take().expect("lower pass populates ctx.instances");
+    Ok(LoweredModel { ir, manifest, luts, instances })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matching::assignment_luts;
+    use crate::runtime::synthetic;
+
+    fn zoo(model: &str) -> Manifest {
+        synthetic::manifest(Path::new("artifacts"), model).unwrap()
+    }
+
+    #[test]
+    fn zoo_ir_validates() {
+        let ctx = PassCtx::new();
+        for model in synthetic::MODELS {
+            let ir = ModelIr::from_manifest(&zoo(model));
+            Validate::check(&ir, &ctx).unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        }
+    }
+
+    #[test]
+    fn lower_matches_assignment_luts() {
+        let m = zoo("tinynet");
+        let cat = unsigned_catalog();
+        let exact = cat.exact_index();
+        let indices = vec![0, exact, 3];
+        let lowered = lower(
+            &m,
+            Assign::from_indices(&cat, "test", &indices),
+            &TargetDesc::native_cpu(),
+            None,
+        )
+        .unwrap();
+        assert_eq!(lowered.instances, indices);
+        assert_eq!(lowered.luts, assignment_luts(&m, &cat, &indices));
+        let low = lowered.ir.lowering.as_ref().unwrap();
+        assert_eq!(low.lut_digests.len(), 3);
+        assert_eq!(lowered.lut_value().shape(), &[3, LUT_SIZE]);
+        // the annotated IR revalidates cleanly
+        Validate::check(&lowered.ir, &PassCtx::new()).unwrap();
+    }
+
+    #[test]
+    fn uniform_assign_covers_every_layer() {
+        let m = zoo("resnet8");
+        let cat = unsigned_catalog();
+        let lowered =
+            lower(&m, Assign::uniform(&cat, "mul8u_exact"), &TargetDesc::native_cpu(), None)
+                .unwrap();
+        let a = lowered.ir.assignment.as_ref().unwrap();
+        assert_eq!(a.instances.len(), m.layers.len());
+        assert!(a.instances.iter().all(|n| n == "mul8u_exact"));
+        assert!(a.energy_reduction.abs() < 1e-12);
+    }
+
+    #[test]
+    fn resource_check_rejects_over_budget_models() {
+        let cat = unsigned_catalog();
+        // tinynet (3 layers) fits the 4-layer LUT budget of tiny-edge
+        lower(&zoo("tinynet"), Assign::uniform(&cat, "mul8u_exact"), &TargetDesc::tiny_edge(), None)
+            .unwrap();
+        // resnet8 (10 layers) does not
+        let err = lower(
+            &zoo("resnet8"),
+            Assign::uniform(&cat, "mul8u_exact"),
+            &TargetDesc::tiny_edge(),
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("lowering.lut_bytes"), "{err:#}");
+    }
+
+    #[test]
+    fn resource_check_rejects_unsupported_catalog() {
+        let cat = signed_catalog();
+        let err = lower(
+            &zoo("tinynet"),
+            Assign::uniform(&cat, "mul8s_exact"),
+            &TargetDesc::tiny_edge(),
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("assignment.catalog"), "{err:#}");
+    }
+
+    #[test]
+    fn assign_rejects_unknown_instance() {
+        let cat = unsigned_catalog();
+        let err = lower(
+            &zoo("tinynet"),
+            Assign::uniform(&cat, "mul8u_nope"),
+            &TargetDesc::native_cpu(),
+            None,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("mul8u_nope"), "{err:#}");
+    }
+
+    #[test]
+    fn dump_ir_writes_per_pass_snapshots() {
+        let dir = std::env::temp_dir().join(format!("agn_irdump_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cat = unsigned_catalog();
+        lower(
+            &zoo("tinynet"),
+            Assign::uniform(&cat, "mul8u_trc4"),
+            &TargetDesc::native_cpu(),
+            Some(&dir),
+        )
+        .unwrap();
+        let mut names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().to_string())
+            .collect();
+        names.sort();
+        assert_eq!(
+            names,
+            vec![
+                "tinynet.00_validate.ir.json",
+                "tinynet.01_assign.ir.json",
+                "tinynet.02_lower.ir.json",
+                "tinynet.03_resource_check.ir.json",
+            ]
+        );
+        // snapshots are valid digest-stripped IR
+        for n in &names {
+            let text = std::fs::read_to_string(dir.join(n)).unwrap();
+            let ir = ModelIr::parse(&text).unwrap();
+            assert!(matches!(ir.params, ParamsIr::Digest { .. }), "{n}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,80 @@
+//! Target capability descriptions for the `resource_check` pass.
+//!
+//! A [`TargetDesc`] is the deployment side of the IR: what the device the
+//! lowered model is destined for can actually hold and run (HAL-style
+//! target manifests). The default `native-cpu` target is generous — it
+//! describes the in-tree simulator host — while `tiny-edge` models a small
+//! accelerator with a hard LUT budget, so the gate has something real to
+//! reject.
+
+use crate::multipliers::LUT_SIZE;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TargetDesc {
+    pub name: String,
+    /// Multiplier catalogs the target's MAC arrays implement.
+    pub supported_catalogs: Vec<String>,
+    /// Budget for the flat f32 parameter vector.
+    pub max_param_bytes: usize,
+    /// Budget for the bound full-product LUTs (one 256x256 i32 per layer).
+    pub max_lut_bytes: usize,
+    pub max_batch: usize,
+    pub max_threads: usize,
+}
+
+impl TargetDesc {
+    /// The simulator host: effectively unbounded for the model zoo.
+    pub fn native_cpu() -> TargetDesc {
+        TargetDesc {
+            name: "native-cpu".into(),
+            supported_catalogs: vec!["evo8u".into(), "evo8s".into()],
+            max_param_bytes: 1 << 32,
+            max_lut_bytes: 1 << 30,
+            max_batch: 4096,
+            max_threads: 1024,
+        }
+    }
+
+    /// A deliberately tight edge target: unsigned catalog only, LUT SRAM
+    /// for at most 4 layers, batch 16, two cores.
+    pub fn tiny_edge() -> TargetDesc {
+        TargetDesc {
+            name: "tiny-edge".into(),
+            supported_catalogs: vec!["evo8u".into()],
+            max_param_bytes: 1 << 20,
+            max_lut_bytes: 4 * LUT_SIZE * 4,
+            max_batch: 16,
+            max_threads: 2,
+        }
+    }
+
+    /// Resolve a named target (the `--target` CLI flag).
+    pub fn parse(name: &str) -> Result<TargetDesc> {
+        match name {
+            "native-cpu" => Ok(TargetDesc::native_cpu()),
+            "tiny-edge" => Ok(TargetDesc::tiny_edge()),
+            other => bail!("unknown target {other:?} (expected native-cpu|tiny-edge)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_targets_resolve() {
+        assert_eq!(TargetDesc::parse("native-cpu").unwrap(), TargetDesc::native_cpu());
+        assert_eq!(TargetDesc::parse("tiny-edge").unwrap(), TargetDesc::tiny_edge());
+        assert!(TargetDesc::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn tiny_edge_is_tighter_than_native() {
+        let (n, t) = (TargetDesc::native_cpu(), TargetDesc::tiny_edge());
+        assert!(t.max_lut_bytes < n.max_lut_bytes);
+        assert!(t.max_param_bytes < n.max_param_bytes);
+        assert!(!t.supported_catalogs.contains(&"evo8s".to_string()));
+    }
+}

@@ -72,6 +72,17 @@
 //! the CLI, [`api::SessionBuilder::threads`] in code, or the `AGN_THREADS`
 //! environment variable (default: all cores).
 //!
+//! ## The model IR
+//!
+//! [`ir`] is the versioned on-disk form of a model plus its approximation
+//! metadata: a deterministic JSON schema carrying the layer tape, parameter
+//! leaves with quantization descriptors, program signatures, per-layer
+//! multiplier assignments and resource hints, with lossless
+//! `Manifest ↔ IR` conversion. Lowering is a pass pipeline
+//! (`validate → assign → lower → resource_check`, each dumpable with
+//! `--dump-ir`); `export-ir`/`import-ir` on the CLI move models across
+//! machines as single files.
+//!
 //! See DESIGN.md for the system inventory and README.md for the quickstart
 //! and feature matrix.
 
@@ -82,6 +93,7 @@ pub mod compute;
 pub mod coordinator;
 pub mod datasets;
 pub mod errormodel;
+pub mod ir;
 pub mod matching;
 pub mod multipliers;
 pub mod quant;

@@ -49,9 +49,25 @@ COMMANDS
   train             QAT-train a model and report validation accuracy
   search            one gradient-search run; prints learned sigma_l
   eval              evaluate the cached QAT baseline
+  export-ir         write servable models as versioned IR files (*.ir.json)
+  import-ir         materialize a model from an IR file into artifacts/
   catalog           print the multiplier catalogs
   info              list servable models and manifest facts
   help              this text
+
+MODEL IR (export-ir / import-ir)
+  The IR is the versioned on-disk model form: layer tape, parameter leaves
+  with quantization descriptors, program signatures, the init parameter
+  payload (hex-encoded f32, byte-exact), per-layer multiplier assignments
+  and resource hints. `export-ir` then `import-ir` on another checkout
+  reproduces bit-identical eval results.
+
+  export-ir --models a,b --out DIR   write one IR file per model  [out: ir]
+            --strip-params           digest-only payload (for review/goldens;
+                                     such files cannot be imported)
+  import-ir --ir FILE                validate + materialize the model
+            --target T               extra capability gate before import
+                                     (native-cpu | tiny-edge)
 
 COMMON FLAGS
   --backend B          execution backend         [native]
@@ -75,13 +91,15 @@ COMMON FLAGS
   --sigma-max X        sigma_l clamp             [0.5]
   --no-baselines       table2: skip ALWANN/LVRM/uniform
   --mc-trials N        table1 MC trials          [2000]
+  --dump-ir DIR        write per-pass IR snapshots whenever a job lowers a
+                       model (validate/assign/lower/resource_check)
 
 Unrecognized --flags warn instead of silently running defaults.
 ";
 
 /// Boolean flags: never consume the following token, so they can precede
 /// the command (`agn-approx --paper table2`).
-const SWITCHES: &[&str] = &["paper", "no-baselines"];
+const SWITCHES: &[&str] = &["paper", "no-baselines", "strip-params"];
 
 /// Every flag the CLI understands (typo guard; see `Args::warn_unknown`).
 const KNOWN_FLAGS: &[&str] = &[
@@ -105,6 +123,11 @@ const KNOWN_FLAGS: &[&str] = &[
     "sigma-max",
     "no-baselines",
     "mc-trials",
+    "out",
+    "strip-params",
+    "ir",
+    "dump-ir",
+    "target",
 ];
 
 fn run_config(args: &Args) -> RunConfig {
@@ -120,6 +143,7 @@ fn run_config(args: &Args) -> RunConfig {
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.sigma_init = args.f32_or("sigma-init", cfg.sigma_init);
     cfg.sigma_max = args.f32_or("sigma-max", cfg.sigma_max);
+    cfg.dump_ir = args.get("dump-ir").map(PathBuf::from);
     cfg
 }
 
@@ -167,10 +191,92 @@ fn job_spec(cmd: &str, args: &Args) -> Option<JobSpec> {
     }
 }
 
+/// Build the session exactly like the job flow does (shared backend,
+/// config, threads) — the IR subcommands reuse this.
+fn build_session(args: &Args) -> Result<ApproxSession, AgnError> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let backend: BackendKind = args
+        .str_or("backend", "native")
+        .parse()
+        .map_err(AgnError::invalid_spec)?;
+    ApproxSession::builder(&artifacts)
+        .config(run_config(args))
+        .backend(backend)
+        .threads(args.usize_or("threads", 0))
+        .build()
+}
+
+/// `export-ir`: write each servable model as a versioned IR file.
+fn export_ir_cmd(args: &Args) -> Result<(), AgnError> {
+    let session = build_session(args)?;
+    let out_dir = PathBuf::from(args.str_or("out", "ir"));
+    std::fs::create_dir_all(&out_dir)
+        .map_err(|source| AgnError::Io { path: out_dir.clone(), source })?;
+    let models = match args.get("models") {
+        Some(_) => args.list_or("models", ""),
+        None => session.engine().list_models(),
+    };
+    if models.is_empty() {
+        return Err(AgnError::invalid_spec("no models to export (pass --models a,b)"));
+    }
+    for model in &models {
+        let mut ir = session.export_ir(model)?;
+        if args.has("strip-params") {
+            ir = ir.with_params_digest();
+        }
+        let path = out_dir.join(agn_approx::ir::ModelIr::file_name(model));
+        std::fs::write(&path, ir.to_json_string())
+            .map_err(|source| AgnError::Io { path: path.clone(), source })?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// `import-ir`: validate an IR file (optionally against a target) and
+/// materialize runtime artifacts from it.
+fn import_ir_cmd(args: &Args) -> Result<(), AgnError> {
+    let Some(ir_file) = args.get("ir") else {
+        return Err(AgnError::invalid_spec("import-ir requires --ir FILE"));
+    };
+    let path = PathBuf::from(ir_file);
+    if let Some(name) = args.get("target") {
+        let target = agn_approx::ir::TargetDesc::parse(name)
+            .map_err(|e| AgnError::invalid_spec(e.to_string()))?;
+        let text = std::fs::read_to_string(&path)
+            .map_err(|source| AgnError::Io { path: path.clone(), source })?;
+        let gate = || -> anyhow::Result<()> {
+            let mut ir = agn_approx::ir::parse_and_validate(&text)?;
+            let mut ctx = agn_approx::ir::PassCtx::with_target(target);
+            agn_approx::ir::PassPipeline::new()
+                .then(agn_approx::ir::ResourceCheck)
+                .run(&mut ir, &mut ctx)
+        };
+        gate().map_err(|source| AgnError::Artifacts {
+            model: path.display().to_string(),
+            source,
+        })?;
+    }
+    let mut session = build_session(args)?;
+    let model = session.import_ir(&path)?;
+    println!(
+        "imported {} -> {}",
+        path.display(),
+        agn_approx::runtime::manifest_path(session.artifacts_dir(), &model).display()
+    );
+    Ok(())
+}
+
 fn real_main() -> Result<(), AgnError> {
     let args = Args::from_env_with_switches(SWITCHES);
     args.warn_unknown(KNOWN_FLAGS);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        // IR subcommands are artifact plumbing, not jobs — handle them
+        // before the JobSpec flow
+        "export-ir" => return export_ir_cmd(&args),
+        "import-ir" => return import_ir_cmd(&args),
+        _ => {}
+    }
     let Some(spec) = job_spec(cmd, &args) else {
         print!("{HELP}");
         return Ok(());
@@ -180,18 +286,8 @@ fn real_main() -> Result<(), AgnError> {
         print!("{}", render(&JobResult::Catalog(agn_approx::api::catalog())));
         return Ok(());
     }
-    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let results_dir = PathBuf::from(args.str_or("results", "results"));
-    let backend: BackendKind = args
-        .str_or("backend", "native")
-        .parse()
-        .map_err(AgnError::invalid_spec)?;
-
-    let mut session = ApproxSession::builder(&artifacts)
-        .config(run_config(&args))
-        .backend(backend)
-        .threads(args.usize_or("threads", 0))
-        .build()?;
+    let mut session = build_session(&args)?;
     let print_stats = matches!(spec, JobSpec::Eval { .. });
     let result = session.run(spec)?;
     print!("{}", render(&result));

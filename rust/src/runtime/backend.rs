@@ -64,6 +64,21 @@ pub trait ExecBackend {
 
     /// Snapshot of the cumulative execute/compile accounting.
     fn stats(&self) -> EngineStats;
+
+    /// Lift a model this backend serves into validated IR
+    /// ([`crate::ir::ModelIr`]) — the `export-ir` path.
+    fn export_ir(&self, model: &str) -> Result<crate::ir::ModelIr> {
+        let ir = crate::ir::ModelIr::from_manifest(&self.manifest(model)?);
+        crate::ir::validate(&ir)?;
+        Ok(ir)
+    }
+
+    /// Accept IR and produce the runtime manifest this backend can execute
+    /// (validates first) — the `import-ir` path.
+    fn import_ir(&self, ir: &crate::ir::ModelIr) -> Result<Manifest> {
+        crate::ir::validate(ir)?;
+        ir.to_manifest(self.artifacts_dir())
+    }
 }
 
 /// Which backend implementation to construct.

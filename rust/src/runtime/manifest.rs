@@ -1,11 +1,18 @@
 //! Artifact manifest: the Rust-facing description of an AOT'd model,
 //! written by `python/compile/aot.py`.
+//!
+//! Parsing is strict: every malformed field is a hard error carrying the
+//! JSON field path (e.g. `layers[2].cin: expected unsigned integer, got
+//! string`) rather than a silently zero-filled default. The `ir::passes`
+//! validate pass builds on the same guarantee.
 
-use crate::util::json::{self, Json};
-use anyhow::{anyhow, Context, Result};
+use crate::util::json::{
+    self, arr_field, bool_field, obj_field, str_field, usize_field, usize_list_field, Json,
+};
+use anyhow::{anyhow, ensure, Context, Result};
 use std::path::{Path, PathBuf};
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LeafInfo {
     pub path: String,
     pub offset: usize,
@@ -19,7 +26,7 @@ impl LeafInfo {
 }
 
 /// One approximable layer (mirror of `python/compile/models.py` tape entry).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct LayerInfo {
     pub name: String,
     pub kind: String, // conv | dwconv | fc
@@ -35,7 +42,7 @@ pub struct LayerInfo {
     pub act_signed: bool,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
     pub dtype: String,
     pub shape: Vec<usize>,
@@ -47,14 +54,14 @@ impl TensorSpec {
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ProgramInfo {
     pub file: String,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
     pub dir: PathBuf,
     pub model: String,
@@ -108,60 +115,56 @@ impl Manifest {
     }
 
     pub fn from_json(artifacts_dir: &Path, v: &Json) -> Result<Manifest> {
-        let leaves = v
-            .req("leaves")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("leaves not array"))?
+        let leaves = arr_field(v, "", "leaves")?
             .iter()
-            .map(|l| {
+            .enumerate()
+            .map(|(i, l)| {
+                let p = format!("leaves[{i}]");
                 Ok(LeafInfo {
-                    path: l.req("path")?.as_str().unwrap_or_default().to_string(),
-                    offset: l.req("offset")?.as_usize().unwrap_or(0),
-                    shape: l.req("shape")?.usize_list()?,
+                    path: str_field(l, &p, "path")?,
+                    offset: usize_field(l, &p, "offset")?,
+                    shape: usize_list_field(l, &p, "shape")?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
-        let layers = v
-            .req("layers")?
-            .as_arr()
-            .ok_or_else(|| anyhow!("layers not array"))?
+        let layers = arr_field(v, "", "layers")?
             .iter()
-            .map(|l| {
+            .enumerate()
+            .map(|(i, l)| {
+                let p = format!("layers[{i}]");
                 let hw = |key: &str| -> Result<(usize, usize)> {
-                    let a = l.req(key)?.usize_list()?;
+                    let a = usize_list_field(l, &p, key)?;
+                    ensure!(a.len() == 2, "{p}.{key}: expected 2 elements, got {}", a.len());
                     Ok((a[0], a[1]))
                 };
                 Ok(LayerInfo {
-                    name: l.req("name")?.as_str().unwrap_or_default().to_string(),
-                    kind: l.req("kind")?.as_str().unwrap_or_default().to_string(),
-                    cin: l.req("cin")?.as_usize().unwrap_or(0),
-                    cout: l.req("cout")?.as_usize().unwrap_or(0),
-                    k: l.req("k")?.as_usize().unwrap_or(1),
-                    stride: l.req("stride")?.as_usize().unwrap_or(1),
-                    pad: l.req("pad")?.as_usize().unwrap_or(0),
+                    name: str_field(l, &p, "name")?,
+                    kind: str_field(l, &p, "kind")?,
+                    cin: usize_field(l, &p, "cin")?,
+                    cout: usize_field(l, &p, "cout")?,
+                    k: usize_field(l, &p, "k")?,
+                    stride: usize_field(l, &p, "stride")?,
+                    pad: usize_field(l, &p, "pad")?,
                     in_hw: hw("in_hw")?,
                     out_hw: hw("out_hw")?,
-                    fan_in: l.req("fan_in")?.as_usize().unwrap_or(1),
-                    mults_per_image: l.req("mults_per_image")?.as_usize().unwrap_or(0),
-                    act_signed: l.req("act_signed")?.as_bool().unwrap_or(false),
+                    fan_in: usize_field(l, &p, "fan_in")?,
+                    mults_per_image: usize_field(l, &p, "mults_per_image")?,
+                    act_signed: bool_field(l, &p, "act_signed")?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
         let mut programs = std::collections::BTreeMap::new();
-        for (name, p) in v
-            .req("programs")?
-            .as_obj()
-            .ok_or_else(|| anyhow!("programs not object"))?
-        {
+        for (name, p) in obj_field(v, "", "programs")? {
+            let pp = format!("programs.{name}");
             let specs = |key: &str| -> Result<Vec<TensorSpec>> {
-                p.req(key)?
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("{key} not array"))?
+                arr_field(p, &pp, key)?
                     .iter()
-                    .map(|s| {
+                    .enumerate()
+                    .map(|(j, s)| {
+                        let sp = format!("{pp}.{key}[{j}]");
                         Ok(TensorSpec {
-                            dtype: s.req("dtype")?.as_str().unwrap_or_default().to_string(),
-                            shape: s.req("shape")?.usize_list()?,
+                            dtype: str_field(s, &sp, "dtype")?,
+                            shape: usize_list_field(s, &sp, "shape")?,
                         })
                     })
                     .collect()
@@ -169,7 +172,7 @@ impl Manifest {
             programs.insert(
                 name.clone(),
                 ProgramInfo {
-                    file: p.req("file")?.as_str().unwrap_or_default().to_string(),
+                    file: str_field(p, &pp, "file")?,
                     inputs: specs("inputs")?,
                     outputs: specs("outputs")?,
                 },
@@ -177,20 +180,86 @@ impl Manifest {
         }
         Ok(Manifest {
             dir: artifacts_dir.to_path_buf(),
-            model: v.req("model")?.as_str().unwrap_or_default().to_string(),
-            arch: v.req("arch")?.as_str().unwrap_or_default().to_string(),
-            act_signed: v.req("act_signed")?.as_bool().unwrap_or(false),
-            batch: v.req("batch")?.as_usize().unwrap_or(0),
-            input_shape: v.req("input_shape")?.usize_list()?,
-            classes: v.req("classes")?.as_usize().unwrap_or(0),
-            param_count: v.req("param_count")?.as_usize().unwrap_or(0),
-            num_layers: v.req("num_layers")?.as_usize().unwrap_or(0),
+            model: str_field(v, "", "model")?,
+            arch: str_field(v, "", "arch")?,
+            act_signed: bool_field(v, "", "act_signed")?,
+            batch: usize_field(v, "", "batch")?,
+            input_shape: usize_list_field(v, "", "input_shape")?,
+            classes: usize_field(v, "", "classes")?,
+            param_count: usize_field(v, "", "param_count")?,
+            num_layers: usize_field(v, "", "num_layers")?,
             leaves,
             layers,
             programs,
-            init_params_file: v.req("init_params")?.as_str().unwrap_or_default().to_string(),
+            init_params_file: str_field(v, "", "init_params")?,
             init_params: None,
         })
+    }
+
+    /// Serialize to the on-disk manifest JSON shape — the exact inverse of
+    /// [`Manifest::from_json`] (deterministic key order via the `Json`
+    /// object type). `import-ir` materializes manifests with this; the
+    /// in-memory `init_params` copy is not serialized (the on-disk form
+    /// always reads `init_params_file`).
+    pub fn to_json(&self) -> Json {
+        let leaf = |l: &LeafInfo| {
+            Json::obj(vec![
+                ("offset", Json::num(l.offset as f64)),
+                ("path", Json::str(&l.path)),
+                ("shape", Json::arr_usize(&l.shape)),
+            ])
+        };
+        let layer = |l: &LayerInfo| {
+            Json::obj(vec![
+                ("act_signed", Json::Bool(l.act_signed)),
+                ("cin", Json::num(l.cin as f64)),
+                ("cout", Json::num(l.cout as f64)),
+                ("fan_in", Json::num(l.fan_in as f64)),
+                ("in_hw", Json::arr_usize(&[l.in_hw.0, l.in_hw.1])),
+                ("k", Json::num(l.k as f64)),
+                ("kind", Json::str(&l.kind)),
+                ("mults_per_image", Json::num(l.mults_per_image as f64)),
+                ("name", Json::str(&l.name)),
+                ("out_hw", Json::arr_usize(&[l.out_hw.0, l.out_hw.1])),
+                ("pad", Json::num(l.pad as f64)),
+                ("stride", Json::num(l.stride as f64)),
+            ])
+        };
+        let spec = |s: &TensorSpec| {
+            Json::obj(vec![
+                ("dtype", Json::str(&s.dtype)),
+                ("shape", Json::arr_usize(&s.shape)),
+            ])
+        };
+        let program = |p: &ProgramInfo| {
+            Json::obj(vec![
+                ("file", Json::str(&p.file)),
+                ("inputs", Json::Arr(p.inputs.iter().map(spec).collect())),
+                ("outputs", Json::Arr(p.outputs.iter().map(spec).collect())),
+            ])
+        };
+        Json::obj(vec![
+            ("act_signed", Json::Bool(self.act_signed)),
+            ("arch", Json::str(&self.arch)),
+            ("batch", Json::num(self.batch as f64)),
+            ("classes", Json::num(self.classes as f64)),
+            ("init_params", Json::str(&self.init_params_file)),
+            ("input_shape", Json::arr_usize(&self.input_shape)),
+            ("layers", Json::Arr(self.layers.iter().map(layer).collect())),
+            ("leaves", Json::Arr(self.leaves.iter().map(leaf).collect())),
+            ("model", Json::str(&self.model)),
+            ("num_layers", Json::num(self.num_layers as f64)),
+            ("param_count", Json::num(self.param_count as f64)),
+            (
+                "programs",
+                Json::Obj(
+                    self.programs
+                        .iter()
+                        .map(|(k, p)| (k.clone(), program(p)))
+                        .collect(),
+                ),
+            ),
+        ])
     }
 
     /// Find a parameter leaf by its path (e.g. `conv0/w`).
@@ -260,5 +329,50 @@ mod tests {
         assert_eq!(l.size(), 8);
         let flat: Vec<f32> = (0..20).map(|i| i as f32).collect();
         assert_eq!(m.leaf_values(&flat, "conv0/w").unwrap()[0], 4.0);
+    }
+
+    /// Each mutation of the valid sample must fail with an error that names
+    /// the offending field path — no silent zero-filling.
+    #[test]
+    fn malformed_manifest_errors_carry_field_paths() {
+        let cases: &[(&str, &str, &str)] = &[
+            ("\"offset\": 4", "\"offset\": -4", "leaves[0].offset"),
+            ("\"offset\": 4", "\"offset\": 4.5", "leaves[0].offset"),
+            ("\"param_count\": 20", "\"param_count\": \"20\"", "param_count"),
+            ("\"kind\": \"conv\"", "\"kind\": 7", "layers[0].kind"),
+            ("\"fan_in\": 27", "\"fan_in\": null", "layers[0].fan_in"),
+            ("\"in_hw\": [8, 8]", "\"in_hw\": [8]", "layers[0].in_hw"),
+            ("\"act_signed\": false, \"batch\": 4", "\"batch\": 4", "act_signed"),
+            ("\"cin\": 3", "\"cin\": true", "layers[0].cin"),
+            ("\"shape\": [20]", "\"shape\": [20.25]", "programs.eval.inputs[0].shape[0]"),
+            ("\"stride\": 1", "\"strid\": 1", "layers[0].stride: missing"),
+        ];
+        for (from, to, needle) in cases {
+            let text = SAMPLE.replace(from, to);
+            assert_ne!(&text, SAMPLE, "mutation {from:?} did not apply");
+            let v = json::parse(&text).unwrap();
+            let err = Manifest::from_json(Path::new("/tmp"), &v)
+                .expect_err(&format!("mutation {to:?} should fail"));
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "error {msg:?} missing path {needle:?}");
+        }
+    }
+
+    #[test]
+    fn to_json_inverts_from_json() {
+        let v = json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp"), &v).unwrap();
+        let back = Manifest::from_json(Path::new("/tmp"), &m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn manifest_equality_covers_every_field() {
+        let v = json::parse(SAMPLE).unwrap();
+        let a = Manifest::from_json(Path::new("/tmp"), &v).unwrap();
+        let mut b = a.clone();
+        assert_eq!(a, b);
+        b.layers[0].pad = 9;
+        assert_ne!(a, b);
     }
 }

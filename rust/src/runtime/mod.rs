@@ -15,6 +15,6 @@ pub mod value;
 pub use backend::{create_backend, create_backend_with, BackendKind, EngineStats, ExecBackend};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
-pub use manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
+pub use manifest::{manifest_path, LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
 pub use native::NativeBackend;
 pub use value::Value;

@@ -84,6 +84,34 @@ impl NativeBackend {
         }
     }
 
+    /// Execute `program` against a lowered IR ([`crate::ir::LoweredModel`]):
+    /// the LUT bindings the lower pass resolved are spliced into the
+    /// program's LUT input slot (`eval_approx` input 3, `train_approx`
+    /// input 5); programs without a LUT input take `inputs` unchanged.
+    pub fn run_lowered(
+        &mut self,
+        lowered: &crate::ir::LoweredModel,
+        program: &str,
+        inputs: &[Value],
+    ) -> Result<Vec<Value>> {
+        let slot = match program {
+            "eval_approx" => Some(3),
+            "train_approx" => Some(5),
+            _ => None,
+        };
+        let mut all = inputs.to_vec();
+        if let Some(s) = slot {
+            anyhow::ensure!(
+                s <= all.len(),
+                "{}::{program}: expected at least {s} inputs before the LUT slot, got {}",
+                lowered.manifest.model,
+                all.len()
+            );
+            all.insert(s, lowered.lut_value());
+        }
+        self.run(&lowered.manifest, program, &all)
+    }
+
     /// Resolve (or fetch the cached) plan for (manifest, program).
     fn plan(&mut self, manifest: &Manifest, program: &str) -> Result<ProgramKind> {
         let key = format!("{}::{}", manifest.model, program);
@@ -465,6 +493,59 @@ mod tests {
             "top-5 native program {} vs SimNet {top5}",
             metrics[2]
         );
+    }
+
+    #[test]
+    fn run_lowered_splices_luts_bit_identically() {
+        // run_lowered(eval_approx) must equal a manual run with the same
+        // LUTs passed explicitly — the lowered IR is just a carrier
+        let mut b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        let flat = m.load_init_params().unwrap();
+        let (xv, yv, _, _) = batch(&m);
+        let scales = vec![0.1f32; m.num_layers];
+
+        let cat = unsigned_catalog();
+        let lowered = crate::ir::lower(
+            &m,
+            crate::ir::Assign::uniform(&cat, "mul8u_trc4"),
+            &crate::ir::TargetDesc::native_cpu(),
+            None,
+        )
+        .unwrap();
+
+        let via_lowered = b
+            .run_lowered(
+                &lowered,
+                "eval_approx",
+                &[
+                    Value::vec_f32(flat.clone()),
+                    xv.clone(),
+                    yv.clone(),
+                    Value::vec_f32(scales.clone()),
+                ],
+            )
+            .unwrap();
+        let manual = b
+            .run(
+                &m,
+                "eval_approx",
+                &[Value::vec_f32(flat), xv, yv, lowered.lut_value(), Value::vec_f32(scales)],
+            )
+            .unwrap();
+        assert_eq!(
+            via_lowered[0].as_f32().unwrap(),
+            manual[0].as_f32().unwrap(),
+            "lowered-IR execution must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn export_import_ir_roundtrips_through_backend() {
+        let b = backend();
+        let ir = b.export_ir("tinynet").unwrap();
+        let m = b.import_ir(&ir).unwrap();
+        assert_eq!(m, b.manifest("tinynet").unwrap());
     }
 
     #[test]

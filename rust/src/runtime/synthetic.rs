@@ -13,6 +13,7 @@
 //! the paper's CIFAR-10/Tiny-ImageNet experiments.
 
 use super::manifest::{LayerInfo, LeafInfo, Manifest, ProgramInfo, TensorSpec};
+use crate::ir::ModelIr;
 use crate::util::rng::Pcg32;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -37,8 +38,19 @@ pub fn is_known(model: &str) -> bool {
 }
 
 /// Synthesize the manifest (layers, leaves, program signatures, in-memory
-/// init parameters) for `model`. Deterministic per model name.
+/// init parameters) for `model`. Deterministic per model name. Routed
+/// through the IR so every in-memory model is exactly what its exported
+/// `.ir.json` describes.
 pub fn manifest(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
+    model_ir(artifacts_dir, model)?.to_manifest(artifacts_dir)
+}
+
+/// The synthetic zoo as IR: what `export-ir` writes for zoo models.
+pub fn model_ir(artifacts_dir: &Path, model: &str) -> Result<ModelIr> {
+    Ok(ModelIr::from_manifest(&build_manifest(artifacts_dir, model)?))
+}
+
+fn build_manifest(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
     enum Family {
         Tiny,
         Resnet(usize),
@@ -63,7 +75,7 @@ pub fn manifest(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
     }
     let num_layers = b.layers.len();
     let param_count = b.init.len();
-    let programs = program_signatures(param_count, num_layers, hw);
+    let programs = program_signatures(param_count, num_layers, hw, 3, BATCH);
     Ok(Manifest {
         dir: artifacts_dir.to_path_buf(),
         model: model.to_string(),
@@ -230,12 +242,22 @@ impl Builder {
 // ---------------------------------------------------------------------------
 // program signatures (the contract `search/` drives the backend with)
 
-fn program_signatures(n: usize, l: usize, hw: (usize, usize)) -> BTreeMap<String, ProgramInfo> {
+/// The fixed signature contract of the 7 native programs for a model with
+/// `n` params, `l` layers, `hw` input dims, `channels` input channels and
+/// `batch` images per step. Shared with the IR validate pass, which
+/// cross-checks serialized program signatures against this.
+pub(crate) fn program_signatures(
+    n: usize,
+    l: usize,
+    hw: (usize, usize),
+    channels: usize,
+    batch: usize,
+) -> BTreeMap<String, ProgramInfo> {
     let f32s = |shape: Vec<usize>| TensorSpec { dtype: "float32".into(), shape };
     let i32s = |shape: Vec<usize>| TensorSpec { dtype: "int32".into(), shape };
     let u32s = |shape: Vec<usize>| TensorSpec { dtype: "uint32".into(), shape };
-    let x = f32s(vec![BATCH, hw.0, hw.1, 3]);
-    let y = i32s(vec![BATCH]);
+    let x = f32s(vec![batch, hw.0, hw.1, channels]);
+    let y = i32s(vec![batch]);
     let scalar = || f32s(vec![]);
     let params = || f32s(vec![n]);
     let per_layer = || f32s(vec![l]);
@@ -337,6 +359,16 @@ mod tests {
         assert_eq!(a.init_params, b.init_params);
         let c = manifest(Path::new("a"), "resnet8").unwrap();
         assert_ne!(a.init_params, c.init_params);
+    }
+
+    #[test]
+    fn model_ir_agrees_with_manifest() {
+        for model in MODELS {
+            let ir = model_ir(Path::new("artifacts"), model).unwrap();
+            let m = manifest(Path::new("artifacts"), model).unwrap();
+            assert_eq!(ir, ModelIr::from_manifest(&m), "{model}");
+            assert_eq!(ir.to_manifest(Path::new("artifacts")).unwrap(), m, "{model}");
+        }
     }
 
     #[test]

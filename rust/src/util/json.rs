@@ -38,6 +38,18 @@ impl std::error::Error for JsonError {}
 impl Json {
     // -- accessors ---------------------------------------------------------
 
+    /// The JSON type of this value, for error messages.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Json::Null => "null",
+            Json::Bool(_) => "bool",
+            Json::Num(_) => "number",
+            Json::Str(_) => "string",
+            Json::Arr(_) => "array",
+            Json::Obj(_) => "object",
+        }
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -205,6 +217,146 @@ fn write_escaped(out: &mut String, s: &str) {
         }
     }
     out.push('"');
+}
+
+// ---------------------------------------------------------------------------
+// path-aware field accessors
+//
+// Shared by the manifest parser and the IR loader: every extraction failure
+// is a hard error carrying the JSON field path ("layers[2].cin"), never a
+// silently zero-filled default.
+
+/// Join a parent path and a key: `path_join("layers[2]", "cin")` →
+/// `"layers[2].cin"`; an empty parent yields just the key.
+pub fn path_join(path: &str, key: &str) -> String {
+    if path.is_empty() {
+        key.to_string()
+    } else {
+        format!("{path}.{key}")
+    }
+}
+
+/// Required field lookup with a path-carrying error.
+pub fn req_field<'a>(v: &'a Json, path: &str, key: &str) -> anyhow::Result<&'a Json> {
+    match v {
+        Json::Obj(m) => m
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("{}: missing required field", path_join(path, key))),
+        other => Err(anyhow::anyhow!(
+            "{}: expected object, got {}",
+            if path.is_empty() { "<root>" } else { path },
+            other.type_name()
+        )),
+    }
+}
+
+pub fn str_field(v: &Json, path: &str, key: &str) -> anyhow::Result<String> {
+    let f = req_field(v, path, key)?;
+    match f {
+        Json::Str(s) => Ok(s.clone()),
+        other => Err(anyhow::anyhow!(
+            "{}: expected string, got {}",
+            path_join(path, key),
+            other.type_name()
+        )),
+    }
+}
+
+pub fn bool_field(v: &Json, path: &str, key: &str) -> anyhow::Result<bool> {
+    let f = req_field(v, path, key)?;
+    match f {
+        Json::Bool(b) => Ok(*b),
+        other => Err(anyhow::anyhow!(
+            "{}: expected bool, got {}",
+            path_join(path, key),
+            other.type_name()
+        )),
+    }
+}
+
+/// Extract a non-negative integer. Rejects negatives, fractions, and
+/// anything above 2^53 (where f64 stops being exact) instead of truncating.
+fn usize_value(f: &Json, at: &str) -> anyhow::Result<usize> {
+    match f {
+        Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n <= 9e15 => Ok(*n as usize),
+        Json::Num(n) => Err(anyhow::anyhow!("{at}: expected unsigned integer, got {n}")),
+        other => Err(anyhow::anyhow!(
+            "{at}: expected unsigned integer, got {}",
+            other.type_name()
+        )),
+    }
+}
+
+pub fn usize_field(v: &Json, path: &str, key: &str) -> anyhow::Result<usize> {
+    usize_value(req_field(v, path, key)?, &path_join(path, key))
+}
+
+pub fn u32_field(v: &Json, path: &str, key: &str) -> anyhow::Result<u32> {
+    let at = path_join(path, key);
+    let n = usize_value(req_field(v, path, key)?, &at)?;
+    u32::try_from(n).map_err(|_| anyhow::anyhow!("{at}: {n} does not fit in u32"))
+}
+
+pub fn f64_field(v: &Json, path: &str, key: &str) -> anyhow::Result<f64> {
+    let f = req_field(v, path, key)?;
+    match f {
+        Json::Num(n) => Ok(*n),
+        other => Err(anyhow::anyhow!(
+            "{}: expected number, got {}",
+            path_join(path, key),
+            other.type_name()
+        )),
+    }
+}
+
+/// Optional number: absent or `null` yields `None`.
+pub fn opt_f64_field(v: &Json, path: &str, key: &str) -> anyhow::Result<Option<f64>> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Num(n)) => Ok(Some(*n)),
+        Some(other) => Err(anyhow::anyhow!(
+            "{}: expected number or null, got {}",
+            path_join(path, key),
+            other.type_name()
+        )),
+    }
+}
+
+pub fn arr_field<'a>(v: &'a Json, path: &str, key: &str) -> anyhow::Result<&'a [Json]> {
+    let f = req_field(v, path, key)?;
+    match f {
+        Json::Arr(a) => Ok(a),
+        other => Err(anyhow::anyhow!(
+            "{}: expected array, got {}",
+            path_join(path, key),
+            other.type_name()
+        )),
+    }
+}
+
+pub fn obj_field<'a>(
+    v: &'a Json,
+    path: &str,
+    key: &str,
+) -> anyhow::Result<&'a BTreeMap<String, Json>> {
+    let f = req_field(v, path, key)?;
+    match f {
+        Json::Obj(m) => Ok(m),
+        other => Err(anyhow::anyhow!(
+            "{}: expected object, got {}",
+            path_join(path, key),
+            other.type_name()
+        )),
+    }
+}
+
+pub fn usize_list_field(v: &Json, path: &str, key: &str) -> anyhow::Result<Vec<usize>> {
+    let at = path_join(path, key);
+    arr_field(v, path, key)?
+        .iter()
+        .enumerate()
+        .map(|(i, e)| usize_value(e, &format!("{at}[{i}]")))
+        .collect()
 }
 
 // ---------------------------------------------------------------------------
@@ -431,6 +583,31 @@ mod tests {
     fn unicode_escape() {
         let v = parse(r#""éA""#).unwrap();
         assert_eq!(v.as_str(), Some("éA"));
+    }
+
+    #[test]
+    fn field_accessors_carry_paths() {
+        let v = parse(r#"{"n": "x", "b": 1, "a": [1, -2], "o": {"k": 2.5}}"#).unwrap();
+        let e = usize_field(&v, "root", "n").unwrap_err();
+        assert!(e.to_string().contains("root.n"), "{e}");
+        assert!(e.to_string().contains("expected unsigned integer, got string"), "{e}");
+        let e = bool_field(&v, "", "b").unwrap_err();
+        assert!(e.to_string().contains("b: expected bool, got number"), "{e}");
+        let e = usize_list_field(&v, "", "a").unwrap_err();
+        assert!(e.to_string().contains("a[1]"), "{e}");
+        let e = str_field(&v, "", "missing").unwrap_err();
+        assert!(e.to_string().contains("missing: missing required field"), "{e}");
+        assert_eq!(f64_field(v.req("o").unwrap(), "o", "k").unwrap(), 2.5);
+        assert_eq!(opt_f64_field(&v, "", "absent").unwrap(), None);
+    }
+
+    #[test]
+    fn usize_field_rejects_negative_and_fractional() {
+        let v = parse(r#"{"neg": -4, "frac": 1.5, "big": 1e300, "ok": 7}"#).unwrap();
+        assert!(usize_field(&v, "", "neg").unwrap_err().to_string().contains("neg"));
+        assert!(usize_field(&v, "", "frac").is_err());
+        assert!(usize_field(&v, "", "big").is_err());
+        assert_eq!(usize_field(&v, "", "ok").unwrap(), 7);
     }
 
     #[test]

@@ -1,0 +1,38 @@
+//! Golden-IR drift gate. Exporting the zoo as digest-stripped IR must stay
+//! byte-identical to the goldens committed under `tests/golden_ir/`.
+//!
+//! Bootstrap behaviour: a missing golden (or `UPDATE_GOLDENS=1`) is
+//! (re)written instead of compared, and CI follows the test run with
+//! `git diff --exit-code -- tests/golden_ir`, which fails on any drift in
+//! committed goldens. Schema changes must bump `SCHEMA_VERSION` and
+//! regenerate (see tests/golden_ir/README.md).
+
+use agn_approx::ir::ModelIr;
+use agn_approx::runtime::{create_backend, synthetic, BackendKind, ExecBackend};
+use std::path::PathBuf;
+
+#[test]
+fn zoo_ir_matches_committed_goldens() {
+    let engine = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_ir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let update = std::env::var("UPDATE_GOLDENS").map(|v| v == "1").unwrap_or(false);
+    for model in synthetic::MODELS {
+        let ir = engine.export_ir(model).unwrap().with_params_digest();
+        let text = ir.to_json_string();
+        // a golden must itself be valid, parseable IR
+        agn_approx::ir::parse_and_validate(&text)
+            .unwrap_or_else(|e| panic!("{model}: exported IR invalid: {e:#}"));
+        let path = dir.join(ModelIr::file_name(model));
+        if update || !path.exists() {
+            std::fs::write(&path, &text).unwrap();
+            continue;
+        }
+        let committed = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            committed, text,
+            "golden IR drift for {model}: if the schema changed intentionally, bump \
+             SCHEMA_VERSION and regenerate with UPDATE_GOLDENS=1 cargo test golden_ir"
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! End-to-end IR parity: exporting every zoo model to a `.ir.json` file,
+//! importing it into a fresh artifact directory, and evaluating it must be
+//! bit-identical to evaluating the in-memory synthetic model — at 1 and 4
+//! compute threads (the determinism contract composes with the IR path).
+
+use agn_approx::api::ApproxSession;
+use agn_approx::compute::ComputeConfig;
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::ir::ModelIr;
+use agn_approx::runtime::{
+    create_backend, create_backend_with, synthetic, BackendKind, ExecBackend, Manifest, Value,
+};
+use std::path::PathBuf;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("agn_ire2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One fixed eval batch; returns the metric vector as raw f32 bits.
+fn eval_bits(engine: &mut dyn ExecBackend, manifest: &Manifest) -> Vec<u32> {
+    let flat = manifest.load_init_params().unwrap();
+    let spec =
+        DatasetSpec::synth_cifar((manifest.input_shape[0], manifest.input_shape[1]), 7);
+    let d = Dataset::load(&spec, Split::Train);
+    let (xs, ys) = d.eval_batch(manifest.batch, 0);
+    let out = engine
+        .run(
+            manifest,
+            "eval",
+            &[
+                Value::vec_f32(flat),
+                Value::f32(
+                    &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+                    xs,
+                ),
+                Value::i32(&[manifest.batch], ys),
+            ],
+        )
+        .unwrap();
+    out[0].as_f32().unwrap().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn imported_ir_evals_bit_identically_to_synthetic_for_every_zoo_model() {
+    // export the whole zoo's IR to disk once
+    let export_dir = temp_dir("export");
+    let reference = create_backend(BackendKind::Native, "artifacts").unwrap();
+    for model in synthetic::MODELS {
+        let ir = reference.export_ir(model).unwrap();
+        std::fs::write(export_dir.join(ModelIr::file_name(model)), ir.to_json_string())
+            .unwrap();
+    }
+    drop(reference);
+
+    for threads in [1usize, 4] {
+        let compute = ComputeConfig::with_threads(threads);
+
+        // import every IR file into one fresh artifact dir via the session
+        let art_dir = temp_dir(&format!("art{threads}"));
+        let mut session =
+            ApproxSession::builder(art_dir.clone()).threads(threads).build().unwrap();
+        for model in synthetic::MODELS {
+            let imported = session.import_ir(&export_dir.join(ModelIr::file_name(model)));
+            assert_eq!(imported.unwrap(), *model);
+        }
+        drop(session);
+
+        // in-memory synthetic reference vs the materialized on-disk models
+        let mut synth_engine =
+            create_backend_with(BackendKind::Native, "artifacts", compute).unwrap();
+        let mut imported_engine =
+            create_backend_with(BackendKind::Native, &art_dir, compute).unwrap();
+        for model in synthetic::MODELS {
+            let m_ref = synth_engine.manifest(model).unwrap();
+            let m_imp = imported_engine.manifest(model).unwrap();
+            // same model description...
+            assert_eq!(m_ref.layers, m_imp.layers, "{model}");
+            assert_eq!(m_ref.leaves, m_imp.leaves, "{model}");
+            assert_eq!(m_ref.programs, m_imp.programs, "{model}");
+            // ...bit-identical parameters (via the materialized init file)...
+            let bits = |p: &[f32]| p.iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(
+                bits(&m_ref.load_init_params().unwrap()),
+                bits(&m_imp.load_init_params().unwrap()),
+                "{model}: imported init params drifted at {threads} threads"
+            );
+            // ...and bit-identical eval output
+            let want = eval_bits(&mut *synth_engine, &m_ref);
+            let got = eval_bits(&mut *imported_engine, &m_imp);
+            assert_eq!(got, want, "{model}: eval metrics diverged at {threads} threads");
+        }
+        std::fs::remove_dir_all(&art_dir).unwrap();
+    }
+    std::fs::remove_dir_all(&export_dir).unwrap();
+}

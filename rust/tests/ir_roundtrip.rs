@@ -1,0 +1,92 @@
+//! IR serialization roundtrips: for every zoo model the on-disk form is
+//! byte-stable (`serialize → parse → serialize` is the identity on bytes)
+//! and `Manifest → ModelIr → Manifest` is lossless. Parameter payloads are
+//! additionally fuzzed with awkward f32 bit patterns (negative zero,
+//! denormals) through the in-repo property harness.
+
+use agn_approx::ir::{self, Assign, ModelIr, ParamsIr, TargetDesc};
+use agn_approx::multipliers::unsigned_catalog;
+use agn_approx::runtime::{create_backend, synthetic, BackendKind, ExecBackend};
+use agn_approx::util::prop;
+use std::sync::Arc;
+
+fn backend() -> Box<dyn ExecBackend> {
+    create_backend(BackendKind::Native, "artifacts").unwrap()
+}
+
+#[test]
+fn zoo_ir_serialization_is_byte_stable() {
+    let engine = backend();
+    for model in synthetic::MODELS {
+        let ir = engine.export_ir(model).unwrap_or_else(|e| panic!("{model}: {e:#}"));
+        // both the full-payload form and the digest-stripped golden form
+        for variant in [ir.clone(), ir.with_params_digest()] {
+            let text = variant.to_json_string();
+            let reparsed = ModelIr::parse(&text).unwrap_or_else(|e| panic!("{model}: {e:#}"));
+            assert_eq!(reparsed, variant, "{model}: parse is not lossless");
+            assert_eq!(
+                reparsed.to_json_string(),
+                text,
+                "{model}: serialization is not byte-stable"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_ir_manifest_is_lossless_for_every_zoo_model() {
+    let engine = backend();
+    for model in synthetic::MODELS {
+        let m = engine.manifest(model).unwrap();
+        let back = ModelIr::from_manifest(&m).to_manifest(&m.dir).unwrap();
+        assert_eq!(m, back, "{model}: Manifest -> IR -> Manifest drifted");
+    }
+}
+
+#[test]
+fn lowered_ir_roundtrips_and_revalidates() {
+    let engine = backend();
+    let m = engine.manifest("tinynet").unwrap();
+    let cat = unsigned_catalog();
+    let lowered =
+        ir::lower(&m, Assign::uniform(&cat, "mul8u_trc4"), &TargetDesc::native_cpu(), None)
+            .unwrap();
+    // the assignment/lowering-annotated IR also roundtrips byte-exactly
+    let text = lowered.ir.to_json_string();
+    let reparsed = ir::parse_and_validate(&text).unwrap();
+    assert_eq!(reparsed, lowered.ir);
+    assert_eq!(reparsed.to_json_string(), text);
+    assert!(reparsed.assignment.is_some() && reparsed.lowering.is_some());
+}
+
+#[test]
+fn random_param_payloads_roundtrip_bit_exactly() {
+    let engine = backend();
+    let base = engine.export_ir("tinynet").unwrap();
+    let n = base.param_count;
+    prop::check(40, |g| {
+        let mut ir = base.clone();
+        let values: Vec<f32> = (0..n)
+            .map(|i| match i % 5 {
+                // hex encoding must preserve the exact bit pattern even for
+                // values a decimal float path would mangle
+                0 => -0.0,
+                1 => f32::MIN_POSITIVE / 4.0, // denormal
+                2 => -f32::MIN_POSITIVE,
+                _ => g.f32_in(-1.0e3..1.0e3),
+            })
+            .collect();
+        ir.params = ParamsIr::Inline(Arc::new(values.clone()));
+        let text = ir.to_json_string();
+        let reparsed = ModelIr::parse(&text).map_err(|e| format!("{e:#}"))?;
+        prop::assert_prop(reparsed.to_json_string() == text, "serialization not byte-stable")?;
+        let ParamsIr::Inline(decoded) = &reparsed.params else {
+            return prop::assert_prop(false, "params variant changed by roundtrip");
+        };
+        prop::assert_prop(
+            decoded.len() == values.len()
+                && decoded.iter().zip(&values).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "parameter payload bits drifted",
+        )
+    });
+}

@@ -1,0 +1,47 @@
+//! The validate pass is a hard gate: every malformed-IR fixture must be
+//! rejected with an error naming the offending JSON field path, and the
+//! valid fixture must pass `parse_and_validate` untouched.
+
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/malformed_ir")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+}
+
+#[test]
+fn valid_fixture_parses_and_validates() {
+    let ir = agn_approx::ir::parse_and_validate(&fixture("valid.json")).unwrap();
+    assert_eq!(ir.model, "fixture");
+    assert_eq!(ir.param_count, 10);
+    // and its serialization is byte-stable
+    let text = ir.to_json_string();
+    assert_eq!(agn_approx::ir::ModelIr::parse(&text).unwrap().to_json_string(), text);
+}
+
+#[test]
+fn malformed_fixtures_are_rejected_with_field_paths() {
+    // file -> field path the error message must contain
+    let cases: &[(&str, &str)] = &[
+        ("bad_schema_version.json", "schema_version"),
+        ("param_count_mismatch.json", "param_count"),
+        ("tensor_offset_gap.json", "tensors[1].offset"),
+        ("negative_offset.json", "tensors[0].offset"),
+        ("bad_fan_in.json", "layers[0].fan_in"),
+        ("bad_program_signature.json", "programs.eval"),
+        ("unknown_assignment_instance.json", "assignment.instances[0]"),
+        ("params_count_mismatch.json", "params.count"),
+    ];
+    assert!(cases.len() >= 6, "acceptance floor: at least 6 distinct malformed fixtures");
+    for (file, needle) in cases {
+        let err = agn_approx::ir::parse_and_validate(&fixture(file))
+            .expect_err(&format!("{file}: must be rejected"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains(needle),
+            "{file}: error does not name the field path {needle:?}: {msg}"
+        );
+    }
+}
