@@ -39,6 +39,16 @@ pub enum AgnError {
         path: PathBuf,
         source: std::io::Error,
     },
+    /// A training stage diverged numerically (NaN/Inf in loss or state, or
+    /// the loss escaped the divergence bound) and the bounded
+    /// [`crate::robust::RetryPolicy`] was exhausted. `epoch` is the retry
+    /// attempt, `step` the training step it diverged at, `metric` the
+    /// offending loss value.
+    Diverged {
+        epoch: usize,
+        step: usize,
+        metric: f32,
+    },
 }
 
 impl AgnError {
@@ -55,6 +65,13 @@ impl AgnError {
             Err(source) => AgnError::Job { job, source },
         }
     }
+
+    /// Whether an `anyhow` chain bottoms out in [`AgnError::Diverged`] —
+    /// what the pipeline's retry loop branches on (only divergence is
+    /// retryable; every other failure propagates immediately).
+    pub fn is_diverged(err: &anyhow::Error) -> bool {
+        matches!(err.downcast_ref::<AgnError>(), Some(AgnError::Diverged { .. }))
+    }
 }
 
 impl std::fmt::Display for AgnError {
@@ -69,6 +86,10 @@ impl std::fmt::Display for AgnError {
             AgnError::InvalidSpec(msg) => write!(f, "invalid job spec: {msg}"),
             AgnError::Job { job, source } => write!(f, "job `{job}` failed: {source}"),
             AgnError::Io { path, source } => write!(f, "io error on {path:?}: {source}"),
+            AgnError::Diverged { epoch, step, metric } => write!(
+                f,
+                "training diverged at step {step} (attempt {epoch}, loss {metric}); retries exhausted"
+            ),
         }
     }
 }
@@ -80,7 +101,7 @@ impl std::error::Error for AgnError {
             | AgnError::Engine { source, .. }
             | AgnError::Job { source, .. } => Some(&**source),
             AgnError::Io { source, .. } => Some(source),
-            AgnError::InvalidSpec(_) => None,
+            AgnError::InvalidSpec(_) | AgnError::Diverged { .. } => None,
         }
     }
 }
@@ -110,6 +131,16 @@ mod tests {
         let inner = AgnError::invalid_spec("empty model list");
         let wrapped = AgnError::job("table2", anyhow::Error::new(inner));
         assert!(matches!(wrapped, AgnError::InvalidSpec(_)), "{wrapped:?}");
+    }
+
+    #[test]
+    fn diverged_is_detectable_through_anyhow() {
+        let err = anyhow::Error::new(AgnError::Diverged { epoch: 1, step: 42, metric: f32::NAN })
+            .context("stage qat300");
+        assert!(AgnError::is_diverged(&err));
+        assert!(!AgnError::is_diverged(&anyhow::anyhow!("plain failure")));
+        let shown = AgnError::Diverged { epoch: 0, step: 7, metric: 2.5e9 }.to_string();
+        assert!(shown.contains("step 7") && shown.contains("attempt 0"), "{shown}");
     }
 
     #[test]

@@ -56,6 +56,25 @@ impl JobSpec {
             JobSpec::Info => "info",
         }
     }
+
+    /// The model names a job will train/evaluate (empty for model-free
+    /// jobs). Used by `resume` tooling to report which models' checkpoints
+    /// a re-run can pick up.
+    pub fn models(&self) -> Vec<&str> {
+        match self {
+            JobSpec::EnergySweep { models, .. }
+            | JobSpec::ParetoFront { models, .. }
+            | JobSpec::LayerBreakdown { models, .. } => {
+                models.iter().map(String::as_str).collect()
+            }
+            JobSpec::AgnVsBehavioral { model, .. }
+            | JobSpec::Search { model, .. }
+            | JobSpec::Eval { model } => vec![model.as_str()],
+            JobSpec::Table1 { .. } => vec!["resnet8"],
+            JobSpec::Homogeneity { .. } => vec!["vgg16"],
+            JobSpec::Catalog | JobSpec::Info => Vec::new(),
+        }
+    }
 }
 
 /// The structured outcome of one [`JobSpec`]; variants mirror the spec.
@@ -140,6 +159,14 @@ mod tests {
             "table2"
         );
         assert_eq!(JobSpec::Catalog.name(), "catalog");
+    }
+
+    #[test]
+    fn models_lists_training_targets() {
+        assert_eq!(JobSpec::Eval { model: "resnet8".into() }.models(), vec!["resnet8"]);
+        assert_eq!(JobSpec::Homogeneity { lambda: 0.1 }.models(), vec!["vgg16"]);
+        assert!(JobSpec::Catalog.models().is_empty());
+        assert!(JobSpec::Info.models().is_empty());
     }
 
     #[test]

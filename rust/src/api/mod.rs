@@ -63,6 +63,7 @@ pub use session::{ApproxSession, SessionBuilder, SessionStats};
 pub use crate::coordinator::pipeline::{default_cache_dir, state_cache_path, Pipeline, RunConfig};
 pub use crate::coordinator::report::{render, save_json, to_json};
 pub use crate::ir::{ModelIr, TargetDesc};
+pub use crate::robust::{FaultPlan, HealthSnapshot, RetryPolicy};
 
 use std::path::{Path, PathBuf};
 

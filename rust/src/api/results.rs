@@ -216,4 +216,7 @@ pub struct ModelInfo {
 pub struct InfoReport {
     pub platform: String,
     pub models: Vec<ModelInfo>,
+    /// Robustness counters at report time (checkpoints, retries, repairs,
+    /// recovered panics, injected faults) — see [`crate::robust::health`].
+    pub health: crate::robust::HealthSnapshot,
 }

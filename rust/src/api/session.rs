@@ -7,6 +7,7 @@ use crate::compute::ComputeConfig;
 use crate::coordinator::experiments;
 use crate::coordinator::pipeline::{default_cache_dir, Pipeline, RunConfig};
 use crate::datasets::DatasetCache;
+use crate::robust::{self, FaultPlan, HealthSnapshot};
 use crate::runtime::{create_backend_with, BackendKind, EngineStats, ExecBackend};
 use anyhow::Context as _;
 use std::collections::HashMap;
@@ -37,6 +38,7 @@ pub struct SessionBuilder {
     cfg: RunConfig,
     backend: BackendKind,
     threads: usize,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl SessionBuilder {
@@ -65,15 +67,44 @@ impl SessionBuilder {
 
     /// Scale the step counts / schedules up to the paper-sized values
     /// ([`RunConfig::paper`]). Non-schedule settings already chosen on this
-    /// builder (seed, sigma_init, sigma_max, dump_ir) are preserved.
+    /// builder (seed, sigma_init, sigma_max, dump_ir, checkpointing and
+    /// retry policy) are preserved.
     pub fn paper_scale(mut self) -> Self {
         self.cfg = RunConfig {
             seed: self.cfg.seed,
             sigma_init: self.cfg.sigma_init,
             sigma_max: self.cfg.sigma_max,
             dump_ir: self.cfg.dump_ir.clone(),
+            checkpoint_every: self.cfg.checkpoint_every,
+            retry: self.cfg.retry,
             ..RunConfig::paper()
         };
+        self
+    }
+
+    /// Checkpoint training stages every `n` steps (0, the default,
+    /// disables). Snapshots are digest-verified `*.ckpt.json` files in the
+    /// cache dir; interrupted stages resume from them **bit-identically**
+    /// to an uninterrupted run, and a stage's checkpoint is removed when it
+    /// completes.
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.cfg.checkpoint_every = n;
+        self
+    }
+
+    /// Bounded retry policy for diverged training stages (see
+    /// [`crate::robust::RetryPolicy`]).
+    pub fn retry(mut self, policy: robust::RetryPolicy) -> Self {
+        self.cfg.retry = policy;
+        self
+    }
+
+    /// Arm a deterministic fault-injection plan ([`FaultPlan`], the
+    /// `--fault-plan` CLI flag) for this session. Each listed fault fires
+    /// exactly once at its trigger point; the robustness layer must absorb
+    /// it or surface a typed error — never abort. Test/debug tool.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
         self
     }
 
@@ -108,6 +139,9 @@ impl SessionBuilder {
             path: cache_dir.clone(),
             source,
         })?;
+        if let Some(plan) = &self.fault_plan {
+            robust::faults::install(plan);
+        }
         Ok(ApproxSession {
             engine,
             artifacts: self.artifacts,
@@ -160,13 +194,48 @@ impl ApproxSession {
             cfg: RunConfig::default(),
             backend: BackendKind::Native,
             threads: 0,
+            fault_plan: None,
         }
     }
 
     /// Run one job to completion and return its structured result.
+    ///
+    /// Panic-isolated: a panic anywhere inside a job runner (outside the
+    /// compute pool, which recovers on its own) is caught here and surfaced
+    /// as a typed [`AgnError::Job`] instead of unwinding through the
+    /// caller. The session stays usable afterwards.
     pub fn run(&mut self, spec: JobSpec) -> AgnResult<JobResult> {
         self.validate(&spec)?;
         let job = spec.name();
+        let attempt =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.run_inner(job, spec)));
+        match attempt {
+            Ok(result) => result,
+            Err(payload) => {
+                let msg = robust::panic_message(payload.as_ref());
+                log::error!("job `{job}` panicked: {msg}");
+                Err(AgnError::Job { job, source: anyhow::anyhow!("panicked: {msg}") })
+            }
+        }
+    }
+
+    /// Re-run `spec` after an interruption, resuming training stages from
+    /// surviving checkpoints. This is `run` with a guard: it refuses (with
+    /// [`AgnError::InvalidSpec`]) when the cache dir holds no checkpoint at
+    /// all, so a typo'd `resume` cannot silently retrain from scratch.
+    pub fn resume(&mut self, spec: JobSpec) -> AgnResult<JobResult> {
+        let ckpts = robust::checkpoint::list_checkpoints(&self.cache_dir);
+        if ckpts.is_empty() {
+            return Err(AgnError::invalid_spec(format!(
+                "nothing to resume: no *.ckpt.json checkpoints in {:?}",
+                self.cache_dir
+            )));
+        }
+        log::info!("resuming with {} checkpoint(s) in {:?}", ckpts.len(), self.cache_dir);
+        self.run(spec)
+    }
+
+    fn run_inner(&mut self, job: &'static str, spec: JobSpec) -> AgnResult<JobResult> {
         let out = match spec {
             JobSpec::Table1 { mc_trials } => {
                 experiments::table1(self, mc_trials).map(JobResult::Table1)
@@ -268,10 +337,13 @@ impl ApproxSession {
     /// Any cached pipeline for the model is dropped so the next job reloads
     /// the imported definition. Returns the model name.
     pub fn import_ir(&mut self, path: &Path) -> AgnResult<String> {
-        let text = std::fs::read_to_string(path).map_err(|source| AgnError::Io {
+        let mut text = std::fs::read_to_string(path).map_err(|source| AgnError::Io {
             path: path.to_path_buf(),
             source,
         })?;
+        if robust::faults::take_ir_corrupt() {
+            text.truncate(text.len() / 2);
+        }
         let import = |text: &str| -> anyhow::Result<String> {
             let ir = crate::ir::parse_and_validate(text)?;
             let mut manifest = self.engine.import_ir(&ir)?;
@@ -326,6 +398,14 @@ impl ApproxSession {
     /// The compute-layer configuration this session runs with.
     pub fn compute(&self) -> ComputeConfig {
         self.compute
+    }
+
+    /// Snapshot of the process-wide robustness counters (checkpoints
+    /// written/resumed, retries, LUT repairs, recovered worker panics,
+    /// injected faults). All-zero (modulo checkpoints written) on a clean
+    /// run — see [`crate::robust::health`].
+    pub fn health(&self) -> HealthSnapshot {
+        robust::health::snapshot()
     }
 
     /// Aggregate session accounting (engine counters, jobs run, models).

@@ -37,7 +37,11 @@ pub fn uniform_candidates(manifest: &Manifest, catalog: &Catalog) -> Vec<Uniform
 
 /// Best uniform candidate meeting an accuracy floor (paper Table 2 protocol:
 /// highest energy reduction whose accuracy loss stays under the budget).
-pub fn best_within_budget(results: &[UniformResult], baseline_top1: f64, budget_pp: f64) -> Option<&UniformResult> {
+pub fn best_within_budget(
+    results: &[UniformResult],
+    baseline_top1: f64,
+    budget_pp: f64,
+) -> Option<&UniformResult> {
     results
         .iter()
         .filter(|r| baseline_top1 - r.top1 <= budget_pp / 100.0 + 1e-9)

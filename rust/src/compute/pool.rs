@@ -15,8 +15,16 @@
 //! Configuration flows `main.rs --threads N` → `api::SessionBuilder::threads`
 //! → `coordinator::Pipeline` / the execution backends; the `AGN_THREADS`
 //! environment variable supplies the default (CI runs the suite at 1 and 4).
+//!
+//! **Panic isolation**: a panicking spawned worker never aborts the
+//! process. Every spawned chunk runs under `catch_unwind`; on panic the
+//! chunk is re-run serially (chunks are pure functions of their row range,
+//! so the recovered output is bit-identical), with a `log::error!` line
+//! and a [`crate::robust::health`] counter bump. A chunk that panics
+//! *again* on the serial re-run is a real kernel bug and propagates.
 
 use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// How the compute layer parallelizes: the worker count used by every
 /// pool-aware kernel. `threads == 1` is the exact serial path.
@@ -190,7 +198,16 @@ impl ComputePool {
                     // the caller thread works too: chunk 0 runs inline
                     first = Some((r, head));
                 } else {
-                    scope.spawn(move || f(r, head));
+                    scope.spawn(move || {
+                        let attempt = catch_unwind(AssertUnwindSafe(|| {
+                            crate::robust::faults::injected_worker_panic_check();
+                            f(r.clone(), &mut *head)
+                        }));
+                        if let Err(payload) = attempt {
+                            recover_chunk(i, &r, crate::robust::panic_message(payload.as_ref()));
+                            f(r, head);
+                        }
+                    });
                 }
             }
             if let Some((r, head)) = first {
@@ -215,17 +232,48 @@ impl ComputePool {
             let f = &f;
             let mut iter = chunks.into_iter().enumerate();
             let first = iter.next();
-            let handles: Vec<_> = iter.map(|(i, r)| scope.spawn(move || f(i, r))).collect();
+            let handles: Vec<_> = iter
+                .map(|(i, r)| {
+                    let rows = r.clone();
+                    let h = scope.spawn(move || {
+                        catch_unwind(AssertUnwindSafe(|| {
+                            crate::robust::faults::injected_worker_panic_check();
+                            f(i, r)
+                        }))
+                    });
+                    (i, rows, h)
+                })
+                .collect();
             let mut results = Vec::with_capacity(handles.len() + 1);
             if let Some((i, r)) = first {
                 results.push(f(i, r));
             }
-            for h in handles {
-                results.push(h.join().expect("compute worker panicked"));
+            for (i, r, h) in handles {
+                results.push(match h.join() {
+                    Ok(Ok(v)) => v,
+                    // panic caught in the worker or escaped past it: log,
+                    // count, and re-run the chunk on the joining thread
+                    // (still in chunk order, so merges stay deterministic)
+                    Ok(Err(payload)) | Err(payload) => {
+                        recover_chunk(i, &r, crate::robust::panic_message(payload.as_ref()));
+                        f(i, r)
+                    }
+                });
             }
             results
         })
     }
+}
+
+/// No-silent-degradation bookkeeping for one recovered worker panic; the
+/// caller re-runs the chunk serially afterwards.
+fn recover_chunk(chunk: usize, rows: &Range<usize>, msg: &str) {
+    log::error!(
+        "compute worker panicked on chunk {chunk} (rows {}..{}): {msg}; re-running serially",
+        rows.start,
+        rows.end
+    );
+    crate::robust::health::note_worker_panic_recovered();
 }
 
 impl Default for ComputePool {
@@ -311,6 +359,38 @@ mod tests {
             .enumerate()
             .map(|(i, r)| (i, r.start, r.end))
             .collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn worker_panic_recovers_bit_identically() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let pool = ComputePool::new(ComputeConfig::with_threads(4)).with_min_chunk_work(0);
+
+        // run_rows: one spawned chunk panics once; the serial re-run must
+        // produce exactly what an unfaulted run produces
+        let tripped = AtomicBool::new(false);
+        let mut out = vec![0usize; 12];
+        pool.run_rows(&mut out, 1, 12, |rs, chunk| {
+            if rs.start > 0 && !tripped.swap(true, Ordering::SeqCst) {
+                panic!("injected test panic");
+            }
+            for (i, r) in rs.clone().enumerate() {
+                chunk[i] = r * 10;
+            }
+        });
+        assert_eq!(out, (0..12).map(|r| r * 10).collect::<Vec<_>>());
+
+        // map_chunks: same contract, results still in chunk order
+        let tripped = AtomicBool::new(false);
+        let got = pool.map_chunks(12, |i, r| {
+            if i > 0 && !tripped.swap(true, Ordering::SeqCst) {
+                panic!("injected test panic");
+            }
+            (i, r.start + r.end)
+        });
+        let want: Vec<(usize, usize)> =
+            partition(12, 4).into_iter().enumerate().map(|(i, r)| (i, r.start + r.end)).collect();
         assert_eq!(got, want);
     }
 

@@ -679,5 +679,5 @@ pub fn info_job(session: &ApproxSession) -> Result<InfoReport> {
         });
     }
     models.sort_by(|a, b| a.model.cmp(&b.model));
-    Ok(InfoReport { platform, models })
+    Ok(InfoReport { platform, models, health: crate::robust::health::snapshot() })
 }

@@ -8,13 +8,16 @@
 //! shared across pipelines and jobs. [`crate::api::ApproxSession`] owns
 //! that pairing.
 
+use crate::api::AgnError;
 use crate::compute::{ComputeConfig, ComputePool};
 use crate::datasets::{Dataset, DatasetCache, DatasetSpec, Split};
 use crate::errormodel::model::LayerOperands;
 use crate::matching::{self, MatchOutcome};
 use crate::multipliers::Catalog;
+use crate::robust::checkpoint::{checkpoint_path, Checkpoint};
+use crate::robust::RetryPolicy;
 use crate::runtime::{ExecBackend, Manifest};
-use crate::search::{self, EvalMetrics, EvalMode, LrSchedule, TrainState};
+use crate::search::{self, EvalMetrics, EvalMode, LrSchedule, TrainHooks, TrainState};
 use crate::simulator::{accuracy, LutSet, SimNet};
 use crate::tensor::TensorF;
 use crate::util::timer::Timings;
@@ -41,6 +44,13 @@ pub struct RunConfig {
     /// When set, every IR pass pipeline run dumps per-pass snapshots into
     /// this directory (`--dump-ir DIR` on the CLI).
     pub dump_ir: Option<PathBuf>,
+    /// Checkpoint every N training steps (`--checkpoint-every`; 0
+    /// disables). Snapshots land next to the state cache and are removed
+    /// when their stage completes.
+    pub checkpoint_every: usize,
+    /// Bounded retry for diverged training stages (`--max-retries` /
+    /// `--retry-backoff`).
+    pub retry: RetryPolicy,
 }
 
 impl Default for RunConfig {
@@ -59,6 +69,8 @@ impl Default for RunConfig {
             lr_search: LrSchedule { base: 0.01, decay: 0.9, every: 40 },
             lr_retrain: LrSchedule { base: 0.001, decay: 0.9, every: 10 },
             dump_ir: None,
+            checkpoint_every: 0,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -173,6 +185,12 @@ impl Pipeline {
     fn load_vec(&self, path: &Path, len: usize) -> Option<Vec<f32>> {
         let bytes = std::fs::read(path).ok()?;
         if bytes.len() != len * 4 {
+            log::warn!(
+                "{}: cached state {path:?} has {} bytes, expected {}; ignoring it",
+                self.manifest.model,
+                bytes.len(),
+                len * 4
+            );
             return None;
         }
         Some(
@@ -181,6 +199,92 @@ impl Pipeline {
                 .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect(),
         )
+    }
+
+    // -- fault tolerance -----------------------------------------------------
+
+    /// Run one training stage under the robustness envelope: resume from a
+    /// surviving checkpoint if one matches `(model, stage, steps, seed)`,
+    /// and on [`AgnError::Diverged`] retry up to
+    /// [`RetryPolicy::max_retries`] times with the learning rate backed off
+    /// and the sigmas re-clamped into `[0, sigma_max]`. The checkpoint file
+    /// is removed once the stage completes; any other error propagates
+    /// immediately.
+    fn run_stage(
+        &self,
+        stage: &str,
+        steps: usize,
+        seed: u64,
+        base_lr: LrSchedule,
+        init: &TrainState,
+        run: &mut dyn FnMut(&mut TrainState, LrSchedule, &TrainHooks) -> Result<()>,
+    ) -> Result<TrainState> {
+        let ckpt_path = checkpoint_path(&self.cache_dir, &self.manifest.model, stage, seed);
+        let mut lr = base_lr;
+        let mut attempt = 0usize;
+        loop {
+            let mut state = init.clone();
+            let mut hooks = TrainHooks {
+                checkpoint_path: (self.cfg.checkpoint_every > 0).then(|| ckpt_path.clone()),
+                checkpoint_every: self.cfg.checkpoint_every,
+                start_step: 0,
+                epoch: attempt,
+                stage: stage.to_string(),
+            };
+            if let Some(c) =
+                Checkpoint::try_resume(&ckpt_path, &self.manifest.model, stage, steps, seed)
+            {
+                hooks.start_step = c.step;
+                hooks.epoch = c.epoch.max(attempt);
+                lr.base = c.lr_base;
+                state = c.state;
+            } else if attempt > 0 {
+                // Fresh retry: same init, backed-off LR, sigmas re-clamped.
+                for s in state.sigmas.iter_mut() {
+                    *s = s.clamp(0.0, self.cfg.sigma_max);
+                }
+            }
+            match run(&mut state, lr, &hooks) {
+                Ok(()) => {
+                    let _ = std::fs::remove_file(&ckpt_path);
+                    return Ok(state);
+                }
+                Err(e) if AgnError::is_diverged(&e) && attempt < self.cfg.retry.max_retries => {
+                    attempt += 1;
+                    lr.base *= self.cfg.retry.backoff;
+                    crate::robust::health::note_retry();
+                    log::warn!(
+                        "{}/{stage}: diverged ({e:#}); retry {attempt}/{} at lr {}",
+                        self.manifest.model,
+                        self.cfg.retry.max_retries,
+                        lr.base
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Fault hook + integrity gate on every lowering: an armed `lutflip`
+    /// fault flips one LUT bit here, and digest verification (with repair
+    /// to the exact multiplier) runs unconditionally, so a corrupted table
+    /// can never reach execution silently.
+    fn guard_lowered(&self, lowered: &mut crate::ir::LoweredModel) -> Result<()> {
+        if let Some((layer, bit)) = crate::robust::faults::take_lut_flip() {
+            if !lowered.luts.is_empty() {
+                let l = layer % lowered.luts.len();
+                let w = bit as usize / 32 % lowered.luts[l].len();
+                lowered.luts[l][w] ^= 1i32 << (bit % 32);
+            }
+        }
+        let repaired = crate::robust::integrity::verify_and_repair(lowered)?;
+        if !repaired.is_empty() {
+            log::warn!(
+                "{}: repaired corrupted LUT(s) for layer(s) {repaired:?}",
+                self.manifest.model
+            );
+        }
+        Ok(())
     }
 
     // -- stages --------------------------------------------------------------
@@ -193,10 +297,29 @@ impl Pipeline {
             log::info!("{}: loaded cached QAT baseline", self.manifest.model);
             return Ok(TrainState::with_params(&self.manifest, flat, self.cfg.sigma_init));
         }
-        let mut state = TrainState::init(&self.manifest, self.cfg.sigma_init)?;
-        let (manifest, train, cfg) = (self.manifest.clone(), &self.train, self.cfg.clone());
-        let hist =
-            search::train_qat(engine, &manifest, train, &mut state, cfg.qat_steps, cfg.lr_qat, cfg.seed)?;
+        let init = TrainState::init(&self.manifest, self.cfg.sigma_init)?;
+        let (manifest, train, cfg) = (self.manifest.clone(), self.train.clone(), self.cfg.clone());
+        let mut hist = search::History::default();
+        let state = self.run_stage(
+            &tag,
+            cfg.qat_steps,
+            cfg.seed,
+            cfg.lr_qat,
+            &init,
+            &mut |state, lr, hooks| {
+                hist = search::train_qat_with(
+                    engine,
+                    &manifest,
+                    &train,
+                    state,
+                    cfg.qat_steps,
+                    lr,
+                    cfg.seed,
+                    hooks,
+                )?;
+                Ok(())
+            },
+        )?;
         self.timings.add("qat_train", 0.0); // wall time tracked by engine
         log::info!(
             "{}: QAT baseline trained, tail acc {:.3}",
@@ -208,7 +331,11 @@ impl Pipeline {
     }
 
     /// Calibration (frozen activation absmax + pre-activation std).
-    pub fn calibrate(&mut self, engine: &mut dyn ExecBackend, flat: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    pub fn calibrate(
+        &mut self,
+        engine: &mut dyn ExecBackend,
+        flat: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
         let manifest = self.manifest.clone();
         search::calibrate(engine, &manifest, &self.train, flat, self.cfg.calib_batches)
     }
@@ -239,11 +366,7 @@ impl Pipeline {
         base: &TrainState,
         lambda: f32,
     ) -> Result<TrainState> {
-        let tag = format!(
-            "agn{}_lam{:.3}",
-            self.cfg.search_steps,
-            lambda
-        );
+        let tag = format!("agn{}_lam{:.3}", self.cfg.search_steps, lambda);
         let ppath = self.cache_path(&format!("{tag}_p"));
         let spath = self.cache_path(&format!("{tag}_s"));
         if let (Some(flat), Some(sig)) = (
@@ -254,21 +377,32 @@ impl Pipeline {
             st.sigmas = sig;
             return Ok(st);
         }
-        let mut state = base.clone();
-        state.sigmas = vec![self.cfg.sigma_init; self.manifest.num_layers];
-        state.sig_mom = vec![0.0; self.manifest.num_layers];
-        let manifest = self.manifest.clone();
-        let cfg = self.cfg.clone();
-        search::gradient_search(
-            engine,
-            &manifest,
-            &self.train,
-            &mut state,
+        let mut init = base.clone();
+        init.sigmas = vec![self.cfg.sigma_init; self.manifest.num_layers];
+        init.sig_mom = vec![0.0; self.manifest.num_layers];
+        let (manifest, train, cfg) = (self.manifest.clone(), self.train.clone(), self.cfg.clone());
+        let seed = cfg.seed ^ (lambda.to_bits() as u64);
+        let state = self.run_stage(
+            &tag,
             cfg.search_steps,
+            seed,
             cfg.lr_search,
-            lambda,
-            cfg.sigma_max,
-            cfg.seed ^ (lambda.to_bits() as u64),
+            &init,
+            &mut |state, lr, hooks| {
+                search::gradient_search_with(
+                    engine,
+                    &manifest,
+                    &train,
+                    state,
+                    cfg.search_steps,
+                    lr,
+                    lambda,
+                    cfg.sigma_max,
+                    seed,
+                    hooks,
+                )?;
+                Ok(())
+            },
         )?;
         self.save_vec(&ppath, &state.flat)?;
         self.save_vec(&spath, &state.sigmas)?;
@@ -283,24 +417,47 @@ impl Pipeline {
         luts: &[Vec<i32>],
         act_scales: &[f32],
     ) -> Result<()> {
-        let manifest = self.manifest.clone();
-        let cfg = self.cfg.clone();
-        search::retrain_approx(
-            engine,
-            &manifest,
-            &self.train,
-            state,
-            luts,
-            act_scales,
+        // Tag the stage by the LUT content so checkpoints from retrains
+        // under different assignments never resume into each other.
+        let mut lut_flat: Vec<i32> = Vec::new();
+        for lut in luts {
+            lut_flat.extend_from_slice(lut);
+        }
+        let digest = crate::ir::model::lut_digest(&lut_flat);
+        let tag = format!("re{}_{}", self.cfg.retrain_steps, &digest[..8]);
+        let (manifest, train, cfg) = (self.manifest.clone(), self.train.clone(), self.cfg.clone());
+        *state = self.run_stage(
+            &tag,
             cfg.retrain_steps,
-            cfg.lr_retrain,
             cfg.seed,
+            cfg.lr_retrain,
+            &state.clone(),
+            &mut |state, lr, hooks| {
+                search::retrain_approx_with(
+                    engine,
+                    &manifest,
+                    &train,
+                    state,
+                    luts,
+                    act_scales,
+                    cfg.retrain_steps,
+                    lr,
+                    cfg.seed,
+                    hooks,
+                )?;
+                Ok(())
+            },
         )?;
         Ok(())
     }
 
     /// Backend evaluation on the validation split.
-    pub fn evaluate(&mut self, engine: &mut dyn ExecBackend, flat: &[f32], mode: EvalMode) -> Result<EvalMetrics> {
+    pub fn evaluate(
+        &mut self,
+        engine: &mut dyn ExecBackend,
+        flat: &[f32],
+        mode: EvalMode,
+    ) -> Result<EvalMetrics> {
         let manifest = self.manifest.clone();
         search::evaluate(engine, &manifest, &self.val, flat, mode, self.cfg.eval_batches)
     }
@@ -354,8 +511,7 @@ impl Pipeline {
 
     /// Error-model predictions for every (layer, instance).
     pub fn predictions(&self, catalog: &Catalog, operands: &[LayerOperands]) -> Vec<Vec<f64>> {
-        let act_signed: Vec<bool> =
-            self.manifest.layers.iter().map(|l| l.act_signed).collect();
+        let act_signed: Vec<bool> = self.manifest.layers.iter().map(|l| l.act_signed).collect();
         matching::predict_all(catalog, operands, &act_signed)
     }
 
@@ -379,12 +535,14 @@ impl Pipeline {
         method: &str,
         outcome: &MatchOutcome,
     ) -> Result<crate::ir::LoweredModel> {
-        crate::ir::lower(
+        let mut lowered = crate::ir::lower(
             &self.manifest,
             crate::ir::Assign::from_outcome(catalog, method, outcome),
             &crate::ir::TargetDesc::native_cpu(),
             self.cfg.dump_ir.as_deref(),
-        )
+        )?;
+        self.guard_lowered(&mut lowered)?;
+        Ok(lowered)
     }
 
     /// [`Pipeline::lower`] for a raw per-layer instance-index vector (the
@@ -395,12 +553,14 @@ impl Pipeline {
         method: &str,
         indices: &[usize],
     ) -> Result<crate::ir::LoweredModel> {
-        crate::ir::lower(
+        let mut lowered = crate::ir::lower(
             &self.manifest,
             crate::ir::Assign::from_indices(catalog, method, indices),
             &crate::ir::TargetDesc::native_cpu(),
             self.cfg.dump_ir.as_deref(),
-        )
+        )?;
+        self.guard_lowered(&mut lowered)?;
+        Ok(lowered)
     }
 }
 
@@ -437,5 +597,8 @@ mod tests {
         assert_eq!(paper.seed, base.seed);
         assert_eq!(paper.sigma_init, base.sigma_init);
         assert_eq!(paper.sigma_max, base.sigma_max);
+        // robustness knobs are inherited, not rescaled
+        assert_eq!(paper.checkpoint_every, base.checkpoint_every);
+        assert_eq!(paper.retry, base.retry);
     }
 }

@@ -270,6 +270,21 @@ fn render_info(r: &InfoReport) -> String {
             m.model, m.arch, m.param_count, m.num_layers, m.batch, m.input_shape, m.programs
         ));
     }
+    let h = &r.health;
+    if h.is_clean() && h.checkpoints_written == 0 {
+        out.push_str("health: clean (no recoveries)\n");
+    } else {
+        out.push_str(&format!(
+            "health: ckpt written={} resumed={} retries={} lut_repairs={} \
+             panics_recovered={} faults_injected={}\n",
+            h.checkpoints_written,
+            h.checkpoints_resumed,
+            h.retries,
+            h.lut_repairs,
+            h.worker_panics_recovered,
+            h.faults_injected
+        ));
+    }
     out
 }
 
@@ -550,6 +565,20 @@ fn info_json(r: &InfoReport) -> Json {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "health",
+            Json::obj(vec![
+                ("checkpoints_written", Json::num(r.health.checkpoints_written as f64)),
+                ("checkpoints_resumed", Json::num(r.health.checkpoints_resumed as f64)),
+                ("retries", Json::num(r.health.retries as f64)),
+                ("lut_repairs", Json::num(r.health.lut_repairs as f64)),
+                (
+                    "worker_panics_recovered",
+                    Json::num(r.health.worker_panics_recovered as f64),
+                ),
+                ("faults_injected", Json::num(r.health.faults_injected as f64)),
+            ]),
         ),
     ])
 }

@@ -62,7 +62,9 @@ pub fn lut_digest(values: &[i32]) -> String {
     format!("{:016x}", fnv64(&bytes))
 }
 
-fn encode_f32_hex(values: &[f32]) -> String {
+/// Hex-encode a flat f32 vector (little-endian, 8 hex chars per value) —
+/// shared with the checkpoint payloads in [`crate::robust::checkpoint`].
+pub(crate) fn encode_f32_hex(values: &[f32]) -> String {
     let mut s = String::with_capacity(values.len() * 8);
     for v in values {
         for b in v.to_le_bytes() {
@@ -72,7 +74,8 @@ fn encode_f32_hex(values: &[f32]) -> String {
     s
 }
 
-fn decode_f32_hex(s: &str, at: &str) -> Result<Vec<f32>> {
+/// Inverse of [`encode_f32_hex`]; `at` prefixes error messages.
+pub(crate) fn decode_f32_hex(s: &str, at: &str) -> Result<Vec<f32>> {
     ensure!(
         s.len() % 8 == 0,
         "{at}: hex payload length {} is not a multiple of 8",
@@ -98,7 +101,7 @@ fn decode_f32_hex(s: &str, at: &str) -> Result<Vec<f32>> {
     Ok(out)
 }
 
-fn is_hex_digest(s: &str) -> bool {
+pub(crate) fn is_hex_digest(s: &str) -> bool {
     s.len() == 16 && s.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
 }
 
@@ -562,9 +565,10 @@ impl ModelIr {
     }
 
     /// Lower back to the runtime [`Manifest`] (drops the IR-only metadata;
-    /// `from_manifest(m).to_manifest(&m.dir) == m` for every manifest).
-    /// Digest-only IRs cannot be materialized — re-export without
-    /// `--strip-params`.
+    /// `from_manifest(m).to_manifest(&m.dir) == m` for every manifest whose
+    /// `init_params_digest` is derivable — i.e. inline params carry their
+    /// recomputed digest, file-backed params carry none). Digest-only IRs
+    /// cannot be materialized — re-export without `--strip-params`.
     pub fn to_manifest(&self, artifacts_dir: &Path) -> Result<Manifest> {
         let init_params = match &self.params {
             ParamsIr::Inline(p) => Some(p.clone()),
@@ -575,6 +579,7 @@ impl ModelIr {
                 self.model
             ),
         };
+        let init_params_digest = init_params.as_deref().map(|p| params_digest(p));
         Ok(Manifest {
             dir: artifacts_dir.to_path_buf(),
             model: self.model.clone(),
@@ -590,6 +595,7 @@ impl ModelIr {
             programs: self.programs.clone(),
             init_params_file: self.init_params_file.clone(),
             init_params,
+            init_params_digest,
         })
     }
 

@@ -159,7 +159,7 @@ impl Validate {
         Self::check_layers(ir)?;
         Self::check_programs(ir)?;
         Self::check_assignment(ir, ctx)?;
-        Self::check_lowering(ir)?;
+        Self::check_lowering(ir, ctx)?;
         Self::check_hints(ir)
     }
 
@@ -405,7 +405,7 @@ impl Validate {
         Ok(())
     }
 
-    fn check_lowering(ir: &ModelIr) -> Result<()> {
+    fn check_lowering(ir: &ModelIr, ctx: &PassCtx) -> Result<()> {
         let Some(low) = &ir.lowering else { return Ok(()) };
         let a = ir
             .assignment
@@ -436,6 +436,20 @@ impl Validate {
             "lowering.lut_bytes: expected {expect} (layers * 256^2 * 4), got {}",
             low.lut_bytes
         );
+        // Integrity cross-check ([`crate::robust::integrity`]): the digests
+        // must equal those of the LUTs the assignment actually lowers to,
+        // so a tampered digest field cannot survive validation.
+        let cat = ctx.catalog(&low.catalog).map_err(|e| anyhow!("lowering.catalog: {e}"))?;
+        for (i, (name, d)) in a.instances.iter().zip(&low.lut_digests).enumerate() {
+            let inst = cat
+                .get(name)
+                .ok_or_else(|| anyhow!("lowering: assignment.instances[{i}] {name:?} unknown"))?;
+            let rebuilt = lut_digest(&build_layer_lut(inst, ir.layers[i].info.act_signed));
+            ensure!(
+                *d == rebuilt,
+                "lowering.lut_digests[{i}]: stored {d} but instance {name:?} lowers to {rebuilt}"
+            );
+        }
         Ok(())
     }
 
@@ -780,6 +794,22 @@ mod tests {
         assert_eq!(lowered.lut_value().shape(), &[3, LUT_SIZE]);
         // the annotated IR revalidates cleanly
         Validate::check(&lowered.ir, &PassCtx::new()).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_tampered_lut_digest() {
+        let cat = unsigned_catalog();
+        let mut lowered = lower(
+            &zoo("tinynet"),
+            Assign::uniform(&cat, "mul8u_trc4"),
+            &TargetDesc::native_cpu(),
+            None,
+        )
+        .unwrap();
+        // a well-formed but wrong digest must fail the rebuild cross-check
+        lowered.ir.lowering.as_mut().unwrap().lut_digests[1] = "0123456789abcdef".into();
+        let err = Validate::check(&lowered.ir, &PassCtx::new()).unwrap_err();
+        assert!(format!("{err:#}").contains("lowering.lut_digests[1]"), "{err:#}");
     }
 
     #[test]

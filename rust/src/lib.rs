@@ -83,6 +83,17 @@
 //! `--dump-ir`); `export-ir`/`import-ir` on the CLI move models across
 //! machines as single files.
 //!
+//! ## Robustness
+//!
+//! [`robust`] is the supervision layer: periodic digest-verified
+//! checkpoints with bit-identical resume ([`robust::checkpoint`]),
+//! per-step numerical guards surfacing [`api::AgnError::Diverged`] with a
+//! bounded [`robust::RetryPolicy`], compute-pool panic isolation, LUT
+//! integrity verification with exact-multiplier fallback
+//! ([`robust::integrity`]), and a deterministic fault-injection harness
+//! ([`robust::FaultPlan`]). The contract is *no silent degradation*: every
+//! recovery logs and bumps a [`robust::HealthSnapshot`] counter.
+//!
 //! See DESIGN.md for the system inventory and README.md for the quickstart
 //! and feature matrix.
 
@@ -97,6 +108,7 @@ pub mod ir;
 pub mod matching;
 pub mod multipliers;
 pub mod quant;
+pub mod robust;
 pub mod runtime;
 pub mod search;
 pub mod simulator;

@@ -49,6 +49,8 @@ COMMANDS
   train             QAT-train a model and report validation accuracy
   search            one gradient-search run; prints learned sigma_l
   eval              evaluate the cached QAT baseline
+  resume <job>      re-run <job> resuming training from checkpoints; fails
+                    when the cache dir holds no *.ckpt.json snapshot
   export-ir         write servable models as versioned IR files (*.ir.json)
   import-ir         materialize a model from an IR file into artifacts/
   catalog           print the multiplier catalogs
@@ -94,6 +96,18 @@ COMMON FLAGS
   --dump-ir DIR        write per-pass IR snapshots whenever a job lowers a
                        model (validate/assign/lower/resource_check)
 
+ROBUSTNESS (see README \"Robustness\")
+  --checkpoint-every N digest-verified training snapshot every N steps into
+                       the cache dir; interrupted stages resume from them
+                       bit-identically (0 disables)       [0]
+  --max-retries N      bounded retries when a training stage diverges
+                       (NaN/Inf loss or state)            [2]
+  --retry-backoff X    learning-rate factor per retry     [0.5]
+  --fault-plan SPEC    arm one-shot fault injection, e.g.
+                       panic@step2,nan@step3,lutflip@layer1:bit7,
+                       ckpt-corrupt,ir-corrupt (test/debug tool; every
+                       fault must be absorbed or surface a typed error)
+
 Unrecognized --flags warn instead of silently running defaults.
 ";
 
@@ -128,6 +142,10 @@ const KNOWN_FLAGS: &[&str] = &[
     "ir",
     "dump-ir",
     "target",
+    "checkpoint-every",
+    "max-retries",
+    "retry-backoff",
+    "fault-plan",
 ];
 
 fn run_config(args: &Args) -> RunConfig {
@@ -144,6 +162,9 @@ fn run_config(args: &Args) -> RunConfig {
     cfg.sigma_init = args.f32_or("sigma-init", cfg.sigma_init);
     cfg.sigma_max = args.f32_or("sigma-max", cfg.sigma_max);
     cfg.dump_ir = args.get("dump-ir").map(PathBuf::from);
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every);
+    cfg.retry.max_retries = args.usize_or("max-retries", cfg.retry.max_retries);
+    cfg.retry.backoff = args.f32_or("retry-backoff", cfg.retry.backoff);
     cfg
 }
 
@@ -199,11 +220,16 @@ fn build_session(args: &Args) -> Result<ApproxSession, AgnError> {
         .str_or("backend", "native")
         .parse()
         .map_err(AgnError::invalid_spec)?;
-    ApproxSession::builder(&artifacts)
+    let mut builder = ApproxSession::builder(&artifacts)
         .config(run_config(args))
         .backend(backend)
-        .threads(args.usize_or("threads", 0))
-        .build()
+        .threads(args.usize_or("threads", 0));
+    if let Some(spec) = args.get("fault-plan") {
+        let plan = agn_approx::robust::FaultPlan::parse(spec)
+            .map_err(|e| AgnError::invalid_spec(e.to_string()))?;
+        builder = builder.fault_plan(plan);
+    }
+    builder.build()
 }
 
 /// `export-ir`: write each servable model as a versioned IR file.
@@ -270,6 +296,12 @@ fn real_main() -> Result<(), AgnError> {
     let args = Args::from_env_with_switches(SWITCHES);
     args.warn_unknown(KNOWN_FLAGS);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    // `resume <job>` re-runs <job> with the checkpoint-presence guard
+    let (cmd, resuming) = if cmd == "resume" {
+        (args.positional.get(1).map(|s| s.as_str()).unwrap_or("help"), true)
+    } else {
+        (cmd, false)
+    };
     match cmd {
         // IR subcommands are artifact plumbing, not jobs — handle them
         // before the JobSpec flow
@@ -289,7 +321,7 @@ fn real_main() -> Result<(), AgnError> {
     let results_dir = PathBuf::from(args.str_or("results", "results"));
     let mut session = build_session(&args)?;
     let print_stats = matches!(spec, JobSpec::Eval { .. });
-    let result = session.run(spec)?;
+    let result = if resuming { session.resume(spec)? } else { session.run(spec)? };
     print!("{}", render(&result));
 
     if result.is_paper_artifact() {

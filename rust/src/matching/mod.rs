@@ -65,7 +65,11 @@ pub fn collect_operands(
 
 /// Predicted error std (float units) for every (layer, instance) pair.
 /// Row-major [layer][instance].
-pub fn predict_all(catalog: &Catalog, operands: &[LayerOperands], act_signed: &[bool]) -> Vec<Vec<f64>> {
+pub fn predict_all(
+    catalog: &Catalog,
+    operands: &[LayerOperands],
+    act_signed: &[bool],
+) -> Vec<Vec<f64>> {
     let mut table = vec![vec![0.0f64; catalog.len()]; operands.len()];
     for (ii, inst) in catalog.instances.iter().enumerate() {
         // error maps depend on the activation grid; compute per distinct grid

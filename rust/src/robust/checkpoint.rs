@@ -1,0 +1,316 @@
+//! Digest-verified training checkpoints (`*.ckpt.json`).
+//!
+//! A [`Checkpoint`] snapshots one training stage mid-run: the full
+//! [`TrainState`] (flat params, momentum, sigmas, sigma momentum) plus the
+//! stage coordinates (model, stage tag, step, seed, retry epoch, effective
+//! learning rate). Payloads use the same hex-encoded little-endian f32
+//! serialization as the model IR, so a resumed run is *bit-identical* to
+//! an uninterrupted one, and each vector carries its own FNV-1a digest so
+//! truncation or corruption is always caught at load, never executed.
+//!
+//! Like the IR, the format is versioned ([`CKPT_SCHEMA_VERSION`]); loaders
+//! reject other versions with a field-path error. Corrupt checkpoints are
+//! never fatal on the auto-resume path: [`Checkpoint::try_resume`] logs a
+//! warning and falls back to a fresh start (the no-silent-degradation
+//! contract — degraded, but loudly).
+
+use crate::ir::model::{decode_f32_hex, encode_f32_hex, params_digest};
+use crate::search::TrainState;
+use crate::util::json::{self, f64_field, path_join, str_field, usize_field, Json};
+use anyhow::{anyhow, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Version of the checkpoint schema. Bump on any layout change.
+pub const CKPT_SCHEMA_VERSION: u32 = 1;
+
+/// One mid-run training snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    /// Stage tag (`qat300`, `agn120_lam0.100`, ...) — also the cache-file
+    /// tag, so checkpoints never resume across incompatible stages.
+    pub stage: String,
+    /// Steps `0..step` are covered by `state`; training resumes at `step`.
+    pub step: usize,
+    /// Total steps of the stage this snapshot belongs to.
+    pub steps: usize,
+    /// Batch-seed base of the stage (resume must replay the same stream).
+    pub seed: u64,
+    /// Retry attempt the stage was in when the snapshot was written.
+    pub epoch: usize,
+    /// Effective base learning rate (after any retry backoff).
+    pub lr_base: f32,
+    pub state: TrainState,
+}
+
+/// Checkpoint file path for one training stage.
+pub fn checkpoint_path(cache_dir: &Path, model: &str, stage: &str, seed: u64) -> PathBuf {
+    cache_dir.join(format!("{model}_{stage}_seed{seed}.ckpt.json"))
+}
+
+/// All `*.ckpt.json` files under `dir`, sorted (empty if unreadable).
+pub fn list_checkpoints(dir: &Path) -> Vec<PathBuf> {
+    let Ok(entries) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut out: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.file_name().is_some_and(|n| n.to_string_lossy().ends_with(".ckpt.json")))
+        .collect();
+    out.sort();
+    out
+}
+
+fn payload_to_json(v: &[f32]) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(v.len() as f64)),
+        ("data", Json::str(encode_f32_hex(v))),
+        ("fnv64", Json::str(params_digest(v))),
+    ])
+}
+
+fn payload_from_json(v: &Json, path: &str) -> Result<Vec<f32>> {
+    let data = str_field(v, path, "data")?;
+    let values = decode_f32_hex(&data, &path_join(path, "data"))?;
+    let count = usize_field(v, path, "count")?;
+    ensure!(
+        count == values.len(),
+        "{}: declares {count} values but data has {}",
+        path_join(path, "count"),
+        values.len()
+    );
+    let stored = str_field(v, path, "fnv64")?;
+    let actual = params_digest(&values);
+    ensure!(
+        stored == actual,
+        "{}: digest mismatch (stored {stored}, payload is {actual})",
+        path_join(path, "fnv64")
+    );
+    Ok(values)
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::num(self.epoch as f64)),
+            ("lr_base", Json::num(self.lr_base as f64)),
+            ("model", Json::str(&self.model)),
+            (
+                "payloads",
+                Json::obj(vec![
+                    ("flat", payload_to_json(&self.state.flat)),
+                    ("mom", payload_to_json(&self.state.mom)),
+                    ("sig_mom", payload_to_json(&self.state.sig_mom)),
+                    ("sigmas", payload_to_json(&self.state.sigmas)),
+                ]),
+            ),
+            ("schema_version", Json::num(CKPT_SCHEMA_VERSION as f64)),
+            // decimal string: u64 seeds can exceed f64's exact-integer range
+            ("seed", Json::str(self.seed.to_string())),
+            ("stage", Json::str(&self.stage)),
+            ("step", Json::num(self.step as f64)),
+            ("steps", Json::num(self.steps as f64)),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        let mut s = self.to_json().to_string_pretty();
+        s.push('\n');
+        s
+    }
+
+    pub fn from_json(v: &Json) -> Result<Checkpoint> {
+        let schema_version = json::u32_field(v, "", "schema_version")?;
+        ensure!(
+            schema_version == CKPT_SCHEMA_VERSION,
+            "schema_version: unsupported value {schema_version} (this build reads {CKPT_SCHEMA_VERSION})"
+        );
+        let step = usize_field(v, "", "step")?;
+        let steps = usize_field(v, "", "steps")?;
+        ensure!(step <= steps, "step: {step} exceeds steps {steps}");
+        let seed_text = str_field(v, "", "seed")?;
+        let seed: u64 = seed_text
+            .parse()
+            .map_err(|_| anyhow!("seed: expected a decimal u64 string, got {seed_text:?}"))?;
+        let payloads = json::req_field(v, "", "payloads")?;
+        Ok(Checkpoint {
+            model: str_field(v, "", "model")?,
+            stage: str_field(v, "", "stage")?,
+            step,
+            steps,
+            seed,
+            epoch: usize_field(v, "", "epoch")?,
+            lr_base: f64_field(v, "", "lr_base")? as f32,
+            state: TrainState {
+                flat: payload_from_json(
+                    json::req_field(payloads, "payloads", "flat")?,
+                    "payloads.flat",
+                )?,
+                mom: payload_from_json(
+                    json::req_field(payloads, "payloads", "mom")?,
+                    "payloads.mom",
+                )?,
+                sigmas: payload_from_json(
+                    json::req_field(payloads, "payloads", "sigmas")?,
+                    "payloads.sigmas",
+                )?,
+                sig_mom: payload_from_json(
+                    json::req_field(payloads, "payloads", "sig_mom")?,
+                    "payloads.sig_mom",
+                )?,
+            },
+        })
+    }
+
+    /// Parse checkpoint text (field-path errors, digests verified).
+    pub fn parse(text: &str) -> Result<Checkpoint> {
+        let v = json::parse(text).map_err(|e| anyhow!("checkpoint json: {e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Atomically write the checkpoint (`.tmp` + rename, so an interrupted
+    /// write can never leave a half-written file under the final name).
+    /// This is also where an armed `ckpt-corrupt` fault fires.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json_string();
+        if super::faults::take_ckpt_corrupt() {
+            text.truncate(text.len() / 2);
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, &text).with_context(|| format!("writing checkpoint {tmp:?}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming checkpoint to {path:?}"))?;
+        super::health::note_checkpoint_written();
+        log::debug!(
+            "{}/{}: checkpoint at step {}/{} -> {path:?}",
+            self.model,
+            self.stage,
+            self.step,
+            self.steps
+        );
+        Ok(())
+    }
+
+    /// Load + verify a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("checkpoint {path:?}"))
+    }
+
+    /// The auto-resume decision for one stage: `Some` only when `path`
+    /// holds a valid checkpoint for exactly this (model, stage, steps,
+    /// seed) with work left to do. Anything else — missing file, corrupt
+    /// or truncated JSON, digest mismatch, stale coordinates — logs a
+    /// warning (except the missing-file case) and starts fresh.
+    pub fn try_resume(
+        path: &Path,
+        model: &str,
+        stage: &str,
+        steps: usize,
+        seed: u64,
+    ) -> Option<Checkpoint> {
+        if !path.exists() {
+            return None;
+        }
+        let c = match Self::load(path) {
+            Ok(c) => c,
+            Err(e) => {
+                log::warn!("{model}/{stage}: ignoring corrupt checkpoint: {e:#}");
+                return None;
+            }
+        };
+        if c.model != model || c.stage != stage || c.steps != steps || c.seed != seed {
+            log::warn!(
+                "{model}/{stage}: ignoring checkpoint {path:?} for {}/{} (steps {}, seed {})",
+                c.model,
+                c.stage,
+                c.steps,
+                c.seed
+            );
+            return None;
+        }
+        if c.step == 0 || c.step >= steps {
+            log::warn!("{model}/{stage}: ignoring checkpoint with no resumable work");
+            return None;
+        }
+        super::health::note_checkpoint_resumed();
+        log::info!("{model}/{stage}: resuming from checkpoint at step {}/{steps}", c.step);
+        Some(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model: "tinynet".into(),
+            stage: "qat8".into(),
+            step: 4,
+            steps: 8,
+            seed: u64::MAX - 7, // beyond f64's exact-integer range on purpose
+            epoch: 1,
+            lr_base: 0.025,
+            state: TrainState {
+                flat: vec![0.0, -0.0, 1.5, -2.75e-5, f32::MIN_POSITIVE],
+                mom: vec![0.25; 5],
+                sigmas: vec![0.1, 0.2],
+                sig_mom: vec![],
+            },
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let c = sample();
+        let back = Checkpoint::parse(&c.to_json_string()).unwrap();
+        assert_eq!(back.model, c.model);
+        assert_eq!(back.seed, c.seed);
+        assert_eq!((back.step, back.steps, back.epoch), (4, 8, 1));
+        assert_eq!(back.lr_base.to_bits(), c.lr_base.to_bits());
+        assert_eq!(bits(&back.state.flat), bits(&c.state.flat));
+        assert_eq!(bits(&back.state.sigmas), bits(&c.state.sigmas));
+        assert!(back.state.sig_mom.is_empty());
+    }
+
+    #[test]
+    fn tampered_payload_is_rejected_with_field_path() {
+        let c = sample();
+        let text = c.to_json_string();
+        // flip one hex digit of the flat payload
+        let tampered = text.replacen("\"data\": \"0000", "\"data\": \"0100", 1);
+        assert_ne!(text, tampered, "expected the flat payload to start with zeros");
+        let err = Checkpoint::parse(&tampered).unwrap_err();
+        assert!(format!("{err:#}").contains("payloads.flat.fnv64"), "{err:#}");
+    }
+
+    #[test]
+    fn save_load_and_resume_filtering() {
+        let dir = std::env::temp_dir().join(format!("agn_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = sample();
+        let path = checkpoint_path(&dir, &c.model, &c.stage, c.seed);
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().state.flat.len(), 5);
+        // exact coordinates resume; any mismatch falls back to fresh
+        assert!(Checkpoint::try_resume(&path, "tinynet", "qat8", 8, c.seed).is_some());
+        assert!(Checkpoint::try_resume(&path, "tinynet", "qat9", 8, c.seed).is_none());
+        assert!(Checkpoint::try_resume(&path, "resnet8", "qat8", 8, c.seed).is_none());
+        assert!(Checkpoint::try_resume(&path, "tinynet", "qat8", 4, c.seed).is_none());
+        assert!(Checkpoint::try_resume(&path, "tinynet", "qat8", 8, 1).is_none());
+        assert!(!list_checkpoints(&dir).is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn schema_version_gate() {
+        let text =
+            sample().to_json_string().replace("\"schema_version\": 1", "\"schema_version\": 9");
+        let err = Checkpoint::parse(&text).unwrap_err();
+        assert!(err.to_string().contains("schema_version"), "{err}");
+    }
+}

@@ -1,0 +1,267 @@
+//! Deterministic fault injection.
+//!
+//! A [`FaultPlan`] is a comma-separated spec of one-shot faults, installed
+//! process-wide by `SessionBuilder::fault_plan` / `--fault-plan`:
+//!
+//! ```text
+//! panic@step2              panic the next spawned pool worker at step 2
+//! nan@step3                poison the updated parameters after step 3
+//! lutflip@layer1:bit7      flip bit 7 of one word of layer 1's LUT
+//! ckpt-corrupt             truncate the next checkpoint file on write
+//! ir-corrupt               truncate the next IR file text on import
+//! ```
+//!
+//! Every fault fires exactly once and is then removed, so the recovery
+//! path it provokes (serial chunk re-run, divergence retry, LUT repair,
+//! discard-and-restart) completes cleanly — which is what
+//! `tests/fault_injection.rs` asserts at threads {1, 4}. Injection and
+//! firing are recorded in [`fired`] and counted by [`super::health`].
+
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// One injectable fault. `step`s refer to training-loop steps
+/// (`search::train_qat` and friends); layer/bit index a lowered LUT.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Panic the next spawned compute-pool worker once step `step` starts.
+    /// Never fires on the serial path (there is no worker to kill).
+    WorkerPanic { step: usize },
+    /// Overwrite one updated parameter with NaN after step `step`, as a
+    /// poisoned-gradient stand-in; the per-step numerical guard must
+    /// surface `AgnError::Diverged`.
+    NanInject { step: usize },
+    /// Flip `bit` of one word of layer `layer`'s lowered LUT; integrity
+    /// verification must catch the digest mismatch and repair.
+    LutFlip { layer: usize, bit: u32 },
+    /// Truncate the next checkpoint file as it is written.
+    CkptCorrupt,
+    /// Truncate the next IR text as it is imported.
+    IrCorrupt,
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Fault::WorkerPanic { step } => write!(f, "panic@step{step}"),
+            Fault::NanInject { step } => write!(f, "nan@step{step}"),
+            Fault::LutFlip { layer, bit } => write!(f, "lutflip@layer{layer}:bit{bit}"),
+            Fault::CkptCorrupt => write!(f, "ckpt-corrupt"),
+            Fault::IrCorrupt => write!(f, "ir-corrupt"),
+        }
+    }
+}
+
+/// An ordered set of one-shot faults.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// Parse a `--fault-plan` spec (see the module docs for the syntax).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            faults.push(Self::parse_one(part)?);
+        }
+        if faults.is_empty() {
+            bail!("fault plan {spec:?}: no faults (syntax: panic@stepN, nan@stepN, lutflip@layerL:bitB, ckpt-corrupt, ir-corrupt)");
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    fn parse_one(part: &str) -> Result<Fault> {
+        if part == "ckpt-corrupt" {
+            return Ok(Fault::CkptCorrupt);
+        }
+        if part == "ir-corrupt" {
+            return Ok(Fault::IrCorrupt);
+        }
+        if let Some(rest) = part.strip_prefix("panic@step") {
+            return Ok(Fault::WorkerPanic { step: parse_num(part, rest)? });
+        }
+        if let Some(rest) = part.strip_prefix("nan@step") {
+            return Ok(Fault::NanInject { step: parse_num(part, rest)? });
+        }
+        if let Some(rest) = part.strip_prefix("lutflip@layer") {
+            let (layer, bit) = rest
+                .split_once(":bit")
+                .ok_or_else(|| anyhow::anyhow!("fault {part:?}: expected lutflip@layerL:bitB"))?;
+            let bit: u32 = parse_num(part, bit)? as u32;
+            if bit >= 32 {
+                bail!("fault {part:?}: bit must be 0..32, got {bit}");
+            }
+            return Ok(Fault::LutFlip { layer: parse_num(part, layer)?, bit });
+        }
+        bail!("unknown fault {part:?} (expected panic@stepN, nan@stepN, lutflip@layerL:bitB, ckpt-corrupt or ir-corrupt)")
+    }
+}
+
+fn parse_num(part: &str, digits: &str) -> Result<usize> {
+    digits
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault {part:?}: {digits:?} is not an unsigned integer"))
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{fault}")?;
+        }
+        Ok(())
+    }
+}
+
+static ACTIVE: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
+static FIRED: Mutex<Vec<String>> = Mutex::new(Vec::new());
+static PANIC_ARMED: AtomicBool = AtomicBool::new(false);
+
+/// Install `plan` process-wide, replacing any previous plan. Loudly: an
+/// armed fault plan is never an ambient default.
+pub fn install(plan: &FaultPlan) {
+    let mut active = ACTIVE.lock().unwrap();
+    *active = plan.faults.clone();
+    FIRED.lock().unwrap().clear();
+    PANIC_ARMED.store(false, Ordering::SeqCst);
+    for f in active.iter() {
+        log::warn!("fault injection armed: {f}");
+    }
+}
+
+/// Drop all pending faults and the fired record.
+pub fn clear() {
+    ACTIVE.lock().unwrap().clear();
+    FIRED.lock().unwrap().clear();
+    PANIC_ARMED.store(false, Ordering::SeqCst);
+}
+
+/// Spec strings of the faults that actually fired, in firing order.
+pub fn fired() -> Vec<String> {
+    FIRED.lock().unwrap().clone()
+}
+
+/// Faults still waiting to fire (an armed-but-unfired worker panic counts).
+pub fn pending() -> usize {
+    ACTIVE.lock().unwrap().len() + PANIC_ARMED.load(Ordering::SeqCst) as usize
+}
+
+fn take(pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
+    let mut active = ACTIVE.lock().unwrap();
+    let idx = active.iter().position(pred)?;
+    Some(active.remove(idx))
+}
+
+fn note_fired(f: &Fault) {
+    FIRED.lock().unwrap().push(f.to_string());
+    super::health::note_fault_injected();
+}
+
+/// Training-loop hook, called once at the start of step `step`. Arms a
+/// pending worker panic for this step and returns whether a NaN poison
+/// fires after this step's update.
+pub fn on_train_step(step: usize) -> bool {
+    if take(|f| matches!(f, Fault::WorkerPanic { step: s } if *s == step)).is_some() {
+        log::warn!("fault injection: arming worker panic for step {step}");
+        PANIC_ARMED.store(true, Ordering::SeqCst);
+    }
+    if let Some(f) = take(|f| matches!(f, Fault::NanInject { step: s } if *s == step)) {
+        log::warn!("fault injection: firing {f}");
+        note_fired(&f);
+        return true;
+    }
+    false
+}
+
+/// Pool-worker hook: panics exactly once if a worker panic is armed.
+/// Called only from *spawned* workers, never from the caller thread, so
+/// the serial path is immune by construction.
+pub fn injected_worker_panic_check() {
+    if PANIC_ARMED.swap(false, Ordering::SeqCst) {
+        // the arming step is not known here; the record is the fault class
+        FIRED.lock().unwrap().push("panic".to_string());
+        super::health::note_fault_injected();
+        panic!("injected compute-worker panic (fault plan)");
+    }
+}
+
+/// LUT-lowering hook: the pending LUT bit-flip, if any.
+pub fn take_lut_flip() -> Option<(usize, u32)> {
+    let f = take(|f| matches!(f, Fault::LutFlip { .. }))?;
+    log::warn!("fault injection: firing {f}");
+    note_fired(&f);
+    match f {
+        Fault::LutFlip { layer, bit } => Some((layer, bit)),
+        _ => unreachable!(),
+    }
+}
+
+/// Checkpoint-writer hook: whether to corrupt the file being written.
+pub fn take_ckpt_corrupt() -> bool {
+    match take(|f| matches!(f, Fault::CkptCorrupt)) {
+        Some(f) => {
+            log::warn!("fault injection: firing {f}");
+            note_fired(&f);
+            true
+        }
+        None => false,
+    }
+}
+
+/// IR-import hook: whether to corrupt the text being imported.
+pub fn take_ir_corrupt() -> bool {
+    match take(|f| matches!(f, Fault::IrCorrupt)) {
+        Some(f) => {
+            log::warn!("fault injection: firing {f}");
+            note_fired(&f);
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Parse-only tests: installing faults is process-global, so firing
+    // behaviour lives in tests/fault_injection.rs (its own test binary).
+
+    #[test]
+    fn parses_every_fault_class() {
+        let p =
+            FaultPlan::parse("panic@step2, nan@step3,lutflip@layer1:bit7,ckpt-corrupt,ir-corrupt")
+                .unwrap();
+        assert_eq!(
+            p.faults,
+            vec![
+                Fault::WorkerPanic { step: 2 },
+                Fault::NanInject { step: 3 },
+                Fault::LutFlip { layer: 1, bit: 7 },
+                Fault::CkptCorrupt,
+                Fault::IrCorrupt,
+            ]
+        );
+    }
+
+    #[test]
+    fn display_roundtrips() {
+        let spec = "panic@step2,nan@step3,lutflip@layer1:bit7,ckpt-corrupt,ir-corrupt";
+        let p = FaultPlan::parse(spec).unwrap();
+        assert_eq!(p.to_string(), spec);
+        assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        let bad_specs =
+            ["", "explode", "panic@stepX", "lutflip@layer1", "lutflip@layer1:bit40", "nan@step"];
+        for bad in bad_specs {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+}

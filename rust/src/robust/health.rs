@@ -1,0 +1,109 @@
+//! Process-wide recovery counters.
+//!
+//! Every self-healing action in the crate (checkpoint writes/resumes,
+//! divergence retries, LUT repairs, recovered worker panics, injected
+//! faults) bumps one of these counters, so a run can always account for
+//! what degraded and what recovered — the observable half of the
+//! no-silent-degradation contract. The `info` job reports a
+//! [`HealthSnapshot`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static CHECKPOINTS_WRITTEN: AtomicU64 = AtomicU64::new(0);
+static CHECKPOINTS_RESUMED: AtomicU64 = AtomicU64::new(0);
+static RETRIES: AtomicU64 = AtomicU64::new(0);
+static LUT_REPAIRS: AtomicU64 = AtomicU64::new(0);
+static WORKER_PANICS_RECOVERED: AtomicU64 = AtomicU64::new(0);
+static FAULTS_INJECTED: AtomicU64 = AtomicU64::new(0);
+
+/// A point-in-time copy of the recovery counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthSnapshot {
+    pub checkpoints_written: u64,
+    pub checkpoints_resumed: u64,
+    pub retries: u64,
+    pub lut_repairs: u64,
+    pub worker_panics_recovered: u64,
+    pub faults_injected: u64,
+}
+
+impl HealthSnapshot {
+    /// True when nothing degraded or recovered. Checkpoint *writes* are
+    /// routine operation and do not count against cleanliness.
+    pub fn is_clean(&self) -> bool {
+        self.checkpoints_resumed == 0
+            && self.retries == 0
+            && self.lut_repairs == 0
+            && self.worker_panics_recovered == 0
+            && self.faults_injected == 0
+    }
+}
+
+pub fn snapshot() -> HealthSnapshot {
+    HealthSnapshot {
+        checkpoints_written: CHECKPOINTS_WRITTEN.load(Ordering::SeqCst),
+        checkpoints_resumed: CHECKPOINTS_RESUMED.load(Ordering::SeqCst),
+        retries: RETRIES.load(Ordering::SeqCst),
+        lut_repairs: LUT_REPAIRS.load(Ordering::SeqCst),
+        worker_panics_recovered: WORKER_PANICS_RECOVERED.load(Ordering::SeqCst),
+        faults_injected: FAULTS_INJECTED.load(Ordering::SeqCst),
+    }
+}
+
+/// Zero every counter (test isolation; a long-lived session keeps them).
+pub fn reset() {
+    for c in [
+        &CHECKPOINTS_WRITTEN,
+        &CHECKPOINTS_RESUMED,
+        &RETRIES,
+        &LUT_REPAIRS,
+        &WORKER_PANICS_RECOVERED,
+        &FAULTS_INJECTED,
+    ] {
+        c.store(0, Ordering::SeqCst);
+    }
+}
+
+pub(crate) fn note_checkpoint_written() {
+    CHECKPOINTS_WRITTEN.fetch_add(1, Ordering::SeqCst);
+}
+
+pub(crate) fn note_checkpoint_resumed() {
+    CHECKPOINTS_RESUMED.fetch_add(1, Ordering::SeqCst);
+}
+
+pub(crate) fn note_retry() {
+    RETRIES.fetch_add(1, Ordering::SeqCst);
+}
+
+pub(crate) fn note_lut_repair() {
+    LUT_REPAIRS.fetch_add(1, Ordering::SeqCst);
+}
+
+pub(crate) fn note_worker_panic_recovered() {
+    WORKER_PANICS_RECOVERED.fetch_add(1, Ordering::SeqCst);
+}
+
+pub(crate) fn note_fault_injected() {
+    FAULTS_INJECTED.fetch_add(1, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        // counters are process-global and other tests may bump them
+        // concurrently, so assert deltas, not absolute values
+        let before = snapshot();
+        note_retry();
+        note_retry();
+        note_lut_repair();
+        let after = snapshot();
+        assert!(after.retries >= before.retries + 2);
+        assert!(after.lut_repairs >= before.lut_repairs + 1);
+        assert!(!after.is_clean());
+        assert!(HealthSnapshot { checkpoints_written: 3, ..Default::default() }.is_clean());
+    }
+}

@@ -1,0 +1,125 @@
+//! LUT integrity verification with exact-multiplier fallback.
+//!
+//! A lowered model carries an FNV-1a digest per layer LUT
+//! (`lowering.lut_digests`). [`verify_luts`] re-hashes the actual LUT
+//! payloads against those digests; [`repair_luts`] replaces every
+//! mismatched table with the catalog's *exact* multiplier LUT — a
+//! numerically safe fallback that costs energy savings, never
+//! correctness — and rewrites the assignment/lowering metadata to match,
+//! so the repaired model is internally consistent again. Per the
+//! no-silent-degradation contract, every repaired layer emits a
+//! `log::error!` line and bumps the [`super::health`] repair counter.
+
+use crate::ir::model::lut_digest;
+use crate::ir::passes::LoweredModel;
+use crate::multipliers::{build_layer_lut, signed_catalog, unsigned_catalog, Catalog};
+use anyhow::{bail, ensure, Result};
+
+/// Resolve a catalog by its IR name (`evo8u` / `evo8s`).
+pub fn catalog_by_name(name: &str) -> Result<Catalog> {
+    match name {
+        "evo8u" => Ok(unsigned_catalog()),
+        "evo8s" => Ok(signed_catalog()),
+        other => bail!("unknown multiplier catalog {other:?} (expected evo8u or evo8s)"),
+    }
+}
+
+/// Layer indices whose LUT payload no longer matches its recorded digest.
+/// A model without lowering metadata has nothing to verify.
+pub fn verify_luts(model: &LoweredModel) -> Vec<usize> {
+    let Some(lowering) = &model.ir.lowering else { return Vec::new() };
+    model
+        .luts
+        .iter()
+        .enumerate()
+        .filter(|(i, lut)| lowering.lut_digests.get(*i).is_none_or(|d| lut_digest(lut) != *d))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Replace every digest-mismatched LUT with the exact multiplier's table
+/// and make the IR metadata consistent again. Returns the repaired layer
+/// indices (empty when the model was already intact).
+pub fn repair_luts(model: &mut LoweredModel) -> Result<Vec<usize>> {
+    let bad = verify_luts(model);
+    if bad.is_empty() {
+        return Ok(bad);
+    }
+    let lowering = model.ir.lowering.as_mut().expect("verify_luts found lowered layers");
+    ensure!(
+        lowering.lut_digests.len() == model.luts.len(),
+        "lowering.lut_digests: {} digests for {} layer LUTs",
+        lowering.lut_digests.len(),
+        model.luts.len()
+    );
+    let cat = catalog_by_name(&lowering.catalog)?;
+    let exact = cat.exact_index();
+    for &i in &bad {
+        log::error!(
+            "{}: layer {i} LUT failed digest verification; falling back to exact multiplier {:?}",
+            model.manifest.model,
+            cat.instances[exact].name
+        );
+        model.luts[i] = build_layer_lut(&cat.instances[exact], model.ir.layers[i].info.act_signed);
+        model.instances[i] = exact;
+        lowering.lut_digests[i] = lut_digest(&model.luts[i]);
+        super::health::note_lut_repair();
+    }
+    if let Some(a) = model.ir.assignment.as_mut() {
+        for &i in &bad {
+            a.instances[i] = cat.instances[exact].name.clone();
+            a.sigma_pred_rel[i] = 0.0;
+        }
+        a.energy_reduction =
+            crate::matching::energy_reduction(&model.manifest, &cat, &model.instances);
+    }
+    Ok(bad)
+}
+
+/// [`verify_luts`] + [`repair_luts`] in one call — the pipeline's hook.
+pub fn verify_and_repair(model: &mut LoweredModel) -> Result<Vec<usize>> {
+    repair_luts(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::passes::{lower, Assign};
+    use crate::ir::target::TargetDesc;
+    use crate::runtime::synthetic;
+    use std::path::Path;
+
+    fn lowered_tinynet(indices: &[usize]) -> LoweredModel {
+        let m = synthetic::manifest(Path::new("artifacts"), "tinynet").unwrap();
+        let cat = unsigned_catalog();
+        lower(&m, Assign::from_indices(&cat, "test", indices), &TargetDesc::native_cpu(), None)
+            .unwrap()
+    }
+
+    #[test]
+    fn intact_model_verifies_clean() {
+        let model = lowered_tinynet(&[0, 1, 2]);
+        assert!(verify_luts(&model).is_empty());
+    }
+
+    #[test]
+    fn bit_flip_is_detected_and_repaired_to_exact() {
+        let cat = unsigned_catalog();
+        let exact = cat.exact_index();
+        let mut model = lowered_tinynet(&[0, 1, 2]);
+        model.luts[1][12345] ^= 1 << 7;
+        assert_eq!(verify_luts(&model), vec![1]);
+        let repaired = repair_luts(&mut model).unwrap();
+        assert_eq!(repaired, vec![1]);
+        assert!(verify_luts(&model).is_empty(), "repair must restore digest consistency");
+        assert_eq!(model.instances[1], exact);
+        let a = model.ir.assignment.as_ref().unwrap();
+        assert_eq!(a.instances[1], cat.instances[exact].name);
+        assert_eq!(a.sigma_pred_rel[1], 0.0);
+    }
+
+    #[test]
+    fn unknown_catalog_name_is_rejected() {
+        assert!(catalog_by_name("evo16u").is_err());
+    }
+}

@@ -1,0 +1,81 @@
+//! Fault tolerance: checkpoint/resume, fault injection, integrity checks.
+//!
+//! The supervision layer under the training pipeline. Four pieces:
+//!
+//! - [`checkpoint`] — periodic, digest-verified training snapshots
+//!   (`*.ckpt.json`, versioned like the model IR) that the pipeline stages
+//!   resume from bit-identically to an uninterrupted run.
+//! - [`faults`] — a deterministic fault-injection harness
+//!   ([`faults::FaultPlan`]): worker panics, NaN poisoning, LUT bit-flips,
+//!   checkpoint/IR corruption, armed from `SessionBuilder::fault_plan` /
+//!   `--fault-plan` and exercised by `tests/fault_injection.rs`.
+//! - [`integrity`] — LUT payloads re-verified against their FNV-1a digests,
+//!   with logged fallback to the exact multiplier on mismatch.
+//! - [`health`] — process-wide counters ([`health::HealthSnapshot`]) of
+//!   every recovery action, surfaced through the `info` job.
+//!
+//! The logging contract is *no silent degradation*: every fallback (serial
+//! re-run of a panicked chunk, LUT repair, discarded corrupt checkpoint,
+//! divergence retry) emits a `log::warn!`/`log::error!` line and bumps a
+//! [`health`] counter. Failures that cannot be absorbed surface as typed
+//! [`crate::api::AgnError`] values — never a process abort.
+
+pub mod checkpoint;
+pub mod faults;
+pub mod health;
+pub mod integrity;
+
+pub use checkpoint::{Checkpoint, CKPT_SCHEMA_VERSION};
+pub use faults::{Fault, FaultPlan};
+pub use health::HealthSnapshot;
+
+/// Bounded retry for diverged training stages: each retry resumes from the
+/// last good checkpoint (or the initial state) with the learning rate
+/// scaled by `backoff` and the sigmas re-clamped into `[0, sigma_max]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries after the first failed attempt (0 disables retrying).
+    pub max_retries: usize,
+    /// Multiplicative learning-rate factor applied per retry.
+    pub backoff: f32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_retries: 2, backoff: 0.5 }
+    }
+}
+
+/// Best-effort text of a caught panic payload (the `&str`/`String` cases
+/// `panic!` produces) — for converting panics into typed, loggable errors.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panic_payloads_render() {
+        let p: Box<dyn std::any::Any + Send> = Box::new("boom");
+        assert_eq!(panic_message(p.as_ref()), "boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(String::from("owned boom"));
+        assert_eq!(panic_message(p.as_ref()), "owned boom");
+        let p: Box<dyn std::any::Any + Send> = Box::new(42usize);
+        assert_eq!(panic_message(p.as_ref()), "non-string panic payload");
+    }
+
+    #[test]
+    fn retry_policy_defaults_are_bounded() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_retries, 2);
+        assert!(p.backoff > 0.0 && p.backoff < 1.0);
+    }
+}

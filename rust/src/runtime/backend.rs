@@ -36,6 +36,13 @@ pub struct EngineStats {
 /// mirrored natively): `train_qat`, `train_agn`, `train_approx`, `eval`,
 /// `eval_agn`, `eval_approx`, `calibrate`. Inputs/outputs are host
 /// [`Value`]s validated against the manifest's program signatures.
+///
+/// Robustness contract ([`crate::robust`]): implementations report
+/// failures as `Err`, never by aborting the process. The native backend
+/// additionally recovers panics inside its compute-pool workers by
+/// re-running the affected chunk serially (bit-identically), and
+/// digest-verifies LUT payloads before executing a lowered model; other
+/// implementations are expected to uphold at least the no-abort half.
 pub trait ExecBackend {
     /// Stable backend identifier (`"native"` / `"pjrt"`).
     fn kind(&self) -> BackendKind;

@@ -81,6 +81,22 @@ pub struct Manifest {
     /// `Arc` keeps the frequent `Manifest::clone()`s in the pipeline from
     /// copying the whole parameter vector.
     pub init_params: Option<std::sync::Arc<Vec<f32>>>,
+    /// FNV-1a digest of the init parameter payload, when known (manifests
+    /// materialized from IR always carry it; hand-written ones may omit
+    /// it). When present, `load_init_params` enforces it — a mismatched
+    /// payload is a hard field-path error, never silently accepted.
+    pub init_params_digest: Option<String>,
+}
+
+fn parse_digest_field(v: &Json) -> Result<Option<String>> {
+    let Some(d) = json::opt_str_field(v, "", "init_params_digest")? else {
+        return Ok(None);
+    };
+    ensure!(
+        crate::ir::model::is_hex_digest(&d),
+        "init_params_digest: expected 16 lowercase hex chars, got {d:?}"
+    );
+    Ok(Some(d))
 }
 
 /// Manifest file path for `model` under `artifacts_dir`.
@@ -193,6 +209,7 @@ impl Manifest {
             programs,
             init_params_file: str_field(v, "", "init_params")?,
             init_params: None,
+            init_params_digest: parse_digest_field(v)?,
         })
     }
 
@@ -238,7 +255,7 @@ impl Manifest {
                 ("outputs", Json::Arr(p.outputs.iter().map(spec).collect())),
             ])
         };
-        Json::obj(vec![
+        let mut pairs = vec![
             ("act_signed", Json::Bool(self.act_signed)),
             ("arch", Json::str(&self.arch)),
             ("batch", Json::num(self.batch as f64)),
@@ -259,7 +276,11 @@ impl Manifest {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        if let Some(d) = &self.init_params_digest {
+            pairs.push(("init_params_digest", Json::str(d)));
+        }
+        Json::obj(pairs)
     }
 
     /// Find a parameter leaf by its path (e.g. `conv0/w`).
@@ -277,19 +298,31 @@ impl Manifest {
     }
 
     /// Load the initial flat parameter vector: the in-memory copy for
-    /// synthetic manifests, the AOT-exported file otherwise.
+    /// synthetic manifests, the AOT-exported file otherwise. When the
+    /// manifest carries `init_params_digest`, the payload is verified
+    /// against it — a mismatch is a hard error with the field path.
     pub fn load_init_params(&self) -> Result<Vec<f32>> {
-        if let Some(p) = &self.init_params {
+        let params = if let Some(p) = &self.init_params {
             anyhow::ensure!(p.len() == self.param_count, "init params size mismatch");
-            return Ok(p.as_ref().clone());
+            p.as_ref().clone()
+        } else {
+            let path = self.dir.join(&self.init_params_file);
+            let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+            anyhow::ensure!(bytes.len() == self.param_count * 4, "init params size mismatch");
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()
+        };
+        if let Some(stored) = &self.init_params_digest {
+            let actual = crate::ir::model::params_digest(&params);
+            anyhow::ensure!(
+                *stored == actual,
+                "init_params_digest: digest mismatch for {} (stored {stored}, payload is {actual})",
+                self.model
+            );
         }
-        let path = self.dir.join(&self.init_params_file);
-        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
-        anyhow::ensure!(bytes.len() == self.param_count * 4, "init params size mismatch");
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        Ok(params)
     }
 
     pub fn program(&self, name: &str) -> Result<&ProgramInfo> {
@@ -364,6 +397,35 @@ mod tests {
         let m = Manifest::from_json(Path::new("/tmp"), &v).unwrap();
         let back = Manifest::from_json(Path::new("/tmp"), &m.to_json()).unwrap();
         assert_eq!(m, back);
+    }
+
+    #[test]
+    fn init_params_digest_is_parsed_serialized_and_enforced() {
+        let v = json::parse(SAMPLE).unwrap();
+        let mut m = Manifest::from_json(Path::new("/tmp"), &v).unwrap();
+        assert_eq!(m.init_params_digest, None);
+        let params: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        m.init_params = Some(std::sync::Arc::new(params.clone()));
+        m.init_params_digest = Some(crate::ir::model::params_digest(&params));
+        assert_eq!(m.load_init_params().unwrap(), params);
+        let back = Manifest::from_json(Path::new("/tmp"), &m.to_json()).unwrap();
+        assert_eq!(back.init_params_digest, m.init_params_digest);
+        // present-but-mismatched digest is a hard field-path error
+        m.init_params_digest = Some("0123456789abcdef".into());
+        let err = m.load_init_params().unwrap_err();
+        assert!(format!("{err:#}").contains("init_params_digest"), "{err:#}");
+    }
+
+    #[test]
+    fn malformed_digest_field_is_rejected() {
+        for bad in ["\"INVALID\"", "\"0123456789abcde\"", "7"] {
+            let text =
+                SAMPLE.replacen("{", &format!("{{\n      \"init_params_digest\": {bad},"), 1);
+            let v = json::parse(&text).unwrap();
+            let err = Manifest::from_json(Path::new("/tmp"), &v)
+                .expect_err(&format!("digest {bad} should be rejected"));
+            assert!(format!("{err:#}").contains("init_params_digest"), "{err:#}");
+        }
     }
 
     #[test]

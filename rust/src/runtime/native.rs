@@ -54,6 +54,9 @@ pub struct NativeBackend {
     /// Compute pool shared by every program execution; bit-identical
     /// results at any thread count ([`crate::compute`]).
     pool: ComputePool,
+    /// LUT sets (keyed by model + joined digests) already digest-verified
+    /// by [`NativeBackend::run_lowered`] — verification runs once per set.
+    verified_luts: std::collections::HashSet<String>,
     exec_seconds: f64,
     exec_count: u64,
     compile_seconds: f64,
@@ -77,6 +80,7 @@ impl NativeBackend {
             artifacts_dir: artifacts_dir.into(),
             plans: HashMap::new(),
             pool: ComputePool::new(compute),
+            verified_luts: std::collections::HashSet::new(),
             exec_seconds: 0.0,
             exec_count: 0,
             compile_seconds: 0.0,
@@ -94,6 +98,25 @@ impl NativeBackend {
         program: &str,
         inputs: &[Value],
     ) -> Result<Vec<Value>> {
+        // Integrity gate, memoized per distinct LUT set: re-hash the LUT
+        // payloads against the lowering digests before first execution. A
+        // mismatch at this point is a hard error — repair belongs to the
+        // lowering pipeline; an executing model must never switch
+        // assignments silently.
+        if let Some(lowering) = &lowered.ir.lowering {
+            let key =
+                format!("{}::{}", lowered.manifest.model, lowering.lut_digests.join(""));
+            if !self.verified_luts.contains(&key) {
+                let bad = crate::robust::integrity::verify_luts(lowered);
+                anyhow::ensure!(
+                    bad.is_empty(),
+                    "{}::{program}: LUT digest verification failed for layer(s) {bad:?}; \
+                     refusing to execute",
+                    lowered.manifest.model
+                );
+                self.verified_luts.insert(key);
+            }
+        }
         let slot = match program {
             "eval_approx" => Some(3),
             "train_approx" => Some(5),
@@ -538,6 +561,36 @@ mod tests {
             manual[0].as_f32().unwrap(),
             "lowered-IR execution must be bit-identical"
         );
+    }
+
+    #[test]
+    fn run_lowered_refuses_digest_mismatched_luts() {
+        let mut b = backend();
+        let m = b.manifest("tinynet").unwrap();
+        let flat = m.load_init_params().unwrap();
+        let (xv, yv, _, _) = batch(&m);
+        let scales = vec![0.1f32; m.num_layers];
+
+        let cat = unsigned_catalog();
+        let mut lowered = crate::ir::lower(
+            &m,
+            crate::ir::Assign::uniform(&cat, "mul8u_trc4"),
+            &crate::ir::TargetDesc::native_cpu(),
+            None,
+        )
+        .unwrap();
+        lowered.luts[0][99] ^= 1; // corrupt one table entry post-lowering
+
+        let err = b
+            .run_lowered(
+                &lowered,
+                "eval_approx",
+                &[Value::vec_f32(flat), xv, yv, Value::vec_f32(scales)],
+            )
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("LUT digest verification failed"), "{msg}");
+        assert!(msg.contains("[0]"), "should name the corrupt layer: {msg}");
     }
 
     #[test]

@@ -76,6 +76,7 @@ fn build_manifest(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
     let num_layers = b.layers.len();
     let param_count = b.init.len();
     let programs = program_signatures(param_count, num_layers, hw, 3, BATCH);
+    let init_params_digest = Some(crate::ir::model::params_digest(&b.init));
     Ok(Manifest {
         dir: artifacts_dir.to_path_buf(),
         model: model.to_string(),
@@ -91,6 +92,7 @@ fn build_manifest(artifacts_dir: &Path, model: &str) -> Result<Manifest> {
         programs,
         init_params_file: format!("<synthetic:{model}>"),
         init_params: Some(std::sync::Arc::new(b.init)),
+        init_params_digest,
     })
 }
 
@@ -127,8 +129,10 @@ impl Builder {
     }
 
     fn he_normal(&mut self, n: usize, fan_in: usize) -> Vec<f32> {
+        // normal_det, not Box-Muller: the zoo init streams feed the
+        // committed IR goldens, which must be bit-identical across libms
         let std = (2.0 / fan_in as f32).sqrt();
-        (0..n).map(|_| self.rng.normal_f32(0.0, std)).collect()
+        (0..n).map(|_| std * self.rng.normal_det() as f32).collect()
     }
 
     /// Conv layer with BN affine params; returns its output spatial dims.

@@ -8,13 +8,16 @@
 //! PJRT); this module owns data feeding, schedules, seeds and metric
 //! collection.
 
+use crate::api::AgnError;
 use crate::datasets::Dataset;
+use crate::robust::checkpoint::Checkpoint;
+use crate::robust::faults;
 use crate::runtime::{ExecBackend, Manifest, Value};
 use crate::util::rng::Pcg32;
 use anyhow::Result;
 
 /// Mutable training state mirroring the flat program signature.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainState {
     pub flat: Vec<f32>,
     pub mom: Vec<f32>,
@@ -88,6 +91,93 @@ impl History {
     }
 }
 
+/// Loss magnitude beyond which a (finite) run is declared diverged.
+pub const DIVERGENCE_LOSS: f32 = 1.0e4;
+
+/// Robustness hooks threaded through a training loop: where (and how
+/// often) to checkpoint, which step to resume from, and the retry-attempt
+/// coordinates recorded in checkpoints and carried into
+/// [`AgnError::Diverged`]. [`TrainHooks::default`] disables all of it —
+/// the plain `train_*` entry points use exactly that.
+#[derive(Clone, Debug, Default)]
+pub struct TrainHooks {
+    /// Checkpoint file to write periodic snapshots to (`None` disables).
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Snapshot every N completed steps (0 disables).
+    pub checkpoint_every: usize,
+    /// First step to run: a resumed loop replays steps `start_step..steps`
+    /// on top of a checkpointed state, bit-identically to an uninterrupted
+    /// run (batch seeds are stateless per step; the AGN noise stream is
+    /// re-advanced deterministically).
+    pub start_step: usize,
+    /// Retry attempt (0 = first try).
+    pub epoch: usize,
+    /// Stage tag recorded in checkpoints and log lines (`qat300`, ...).
+    pub stage: String,
+}
+
+impl TrainHooks {
+    /// Hooks with only a stage tag (no checkpointing, no resume).
+    pub fn stage(tag: &str) -> TrainHooks {
+        TrainHooks { stage: tag.to_string(), ..TrainHooks::default() }
+    }
+}
+
+/// Per-step numerical guard: NaN/Inf in the loss or updated state, or a
+/// finite loss beyond [`DIVERGENCE_LOSS`], surfaces a typed
+/// [`AgnError::Diverged`] (loudly — the pipeline's retry policy decides
+/// whether to back off and retry or propagate).
+fn guard_step(
+    manifest: &Manifest,
+    hooks: &TrainHooks,
+    step: usize,
+    loss: f32,
+    state: &TrainState,
+) -> Result<()> {
+    let healthy = loss.is_finite()
+        && loss.abs() <= DIVERGENCE_LOSS
+        && state.flat.iter().all(|v| v.is_finite())
+        && state.sigmas.iter().all(|v| v.is_finite());
+    if healthy {
+        return Ok(());
+    }
+    log::error!(
+        "{}/{}: numerical divergence at step {step} (loss {loss})",
+        manifest.model,
+        hooks.stage
+    );
+    Err(anyhow::Error::new(AgnError::Diverged { epoch: hooks.epoch, step, metric: loss }))
+}
+
+/// Write a checkpoint if the hooks say this completed step is due one.
+/// Never fires on the final step — a finished stage leaves no checkpoint.
+fn maybe_checkpoint(
+    manifest: &Manifest,
+    hooks: &TrainHooks,
+    state: &TrainState,
+    step: usize,
+    steps: usize,
+    seed: u64,
+    lr: LrSchedule,
+) -> Result<()> {
+    let Some(path) = &hooks.checkpoint_path else { return Ok(()) };
+    let done = step + 1;
+    if hooks.checkpoint_every == 0 || done % hooks.checkpoint_every != 0 || done >= steps {
+        return Ok(());
+    }
+    Checkpoint {
+        model: manifest.model.clone(),
+        stage: hooks.stage.clone(),
+        step: done,
+        steps,
+        seed,
+        epoch: hooks.epoch,
+        lr_base: lr.base,
+        state: state.clone(),
+    }
+    .save(path)
+}
+
 fn batch_values(manifest: &Manifest, xs: Vec<f32>, ys: Vec<i32>) -> (Value, Value) {
     let (h, w, c) = (
         manifest.input_shape[0],
@@ -109,8 +199,24 @@ pub fn train_qat(
     lr: LrSchedule,
     seed: u64,
 ) -> Result<History> {
+    train_qat_with(engine, manifest, data, state, steps, lr, seed, &TrainHooks::stage("qat"))
+}
+
+/// [`train_qat`] with robustness hooks (checkpointing, resume, guards).
+#[allow(clippy::too_many_arguments)]
+pub fn train_qat_with(
+    engine: &mut dyn ExecBackend,
+    manifest: &Manifest,
+    data: &Dataset,
+    state: &mut TrainState,
+    steps: usize,
+    lr: LrSchedule,
+    seed: u64,
+    hooks: &TrainHooks,
+) -> Result<History> {
     let mut hist = History::default();
-    for step in 0..steps {
+    for step in hooks.start_step..steps {
+        let poison = faults::on_train_step(step);
         let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(step as u64));
         let (xv, yv) = batch_values(manifest, xs, ys);
         let out = engine.run(
@@ -126,7 +232,12 @@ pub fn train_qat(
         )?;
         state.flat = out[0].clone().into_f32()?;
         state.mom = out[1].clone().into_f32()?;
+        if poison {
+            state.flat[0] = f32::NAN;
+        }
         let m = out[2].as_f32()?;
+        guard_step(manifest, hooks, step, m[0], state)?;
+        maybe_checkpoint(manifest, hooks, state, step, steps, seed, lr)?;
         hist.steps.push(StepMetrics {
             loss: m[0] as f64,
             task_loss: m[0] as f64,
@@ -151,9 +262,45 @@ pub fn gradient_search(
     sigma_max: f32,
     seed: u64,
 ) -> Result<History> {
+    gradient_search_with(
+        engine,
+        manifest,
+        data,
+        state,
+        steps,
+        lr,
+        lambda,
+        sigma_max,
+        seed,
+        &TrainHooks::stage("agn"),
+    )
+}
+
+/// [`gradient_search`] with robustness hooks. Resume is bit-identical:
+/// the AGN noise stream draws exactly two words per step, so skipping to
+/// `start_step` re-advances the generator to the same position an
+/// uninterrupted run would be at.
+#[allow(clippy::too_many_arguments)]
+pub fn gradient_search_with(
+    engine: &mut dyn ExecBackend,
+    manifest: &Manifest,
+    data: &Dataset,
+    state: &mut TrainState,
+    steps: usize,
+    lr: LrSchedule,
+    lambda: f32,
+    sigma_max: f32,
+    seed: u64,
+    hooks: &TrainHooks,
+) -> Result<History> {
     let mut hist = History::default();
     let mut rng = Pcg32::seeded(seed ^ 0xa9d);
-    for step in 0..steps {
+    for _ in 0..hooks.start_step {
+        rng.next_u32();
+        rng.next_u32();
+    }
+    for step in hooks.start_step..steps {
+        let poison = faults::on_train_step(step);
         let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(step as u64));
         let (xv, yv) = batch_values(manifest, xs, ys);
         let out = engine.run(
@@ -176,7 +323,12 @@ pub fn gradient_search(
         state.mom = out[1].clone().into_f32()?;
         state.sigmas = out[2].clone().into_f32()?;
         state.sig_mom = out[3].clone().into_f32()?;
+        if poison {
+            state.flat[0] = f32::NAN;
+        }
         let m = out[4].as_f32()?;
+        guard_step(manifest, hooks, step, m[0], state)?;
+        maybe_checkpoint(manifest, hooks, state, step, steps, seed, lr)?;
         hist.steps.push(StepMetrics {
             loss: m[0] as f64,
             task_loss: m[1] as f64,
@@ -201,6 +353,34 @@ pub fn retrain_approx(
     lr: LrSchedule,
     seed: u64,
 ) -> Result<History> {
+    retrain_approx_with(
+        engine,
+        manifest,
+        data,
+        state,
+        luts,
+        act_scales,
+        steps,
+        lr,
+        seed,
+        &TrainHooks::stage("retrain"),
+    )
+}
+
+/// [`retrain_approx`] with robustness hooks (checkpointing, resume, guards).
+#[allow(clippy::too_many_arguments)]
+pub fn retrain_approx_with(
+    engine: &mut dyn ExecBackend,
+    manifest: &Manifest,
+    data: &Dataset,
+    state: &mut TrainState,
+    luts: &[Vec<i32>],
+    act_scales: &[f32],
+    steps: usize,
+    lr: LrSchedule,
+    seed: u64,
+    hooks: &TrainHooks,
+) -> Result<History> {
     let l = manifest.num_layers;
     let mut lut_flat = Vec::with_capacity(l * 65536);
     for lut in luts {
@@ -209,7 +389,8 @@ pub fn retrain_approx(
     let lut_v = Value::i32(&[l, 65536], lut_flat);
     let asc = Value::vec_f32(act_scales.to_vec());
     let mut hist = History::default();
-    for step in 0..steps {
+    for step in hooks.start_step..steps {
+        let poison = faults::on_train_step(step);
         let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(0x5e7 + step as u64));
         let (xv, yv) = batch_values(manifest, xs, ys);
         let out = engine.run(
@@ -227,7 +408,12 @@ pub fn retrain_approx(
         )?;
         state.flat = out[0].clone().into_f32()?;
         state.mom = out[1].clone().into_f32()?;
+        if poison {
+            state.flat[0] = f32::NAN;
+        }
         let m = out[2].as_f32()?;
+        guard_step(manifest, hooks, step, m[0], state)?;
+        maybe_checkpoint(manifest, hooks, state, step, steps, seed, lr)?;
         hist.steps.push(StepMetrics {
             loss: m[0] as f64,
             task_loss: m[0] as f64,

@@ -322,6 +322,19 @@ pub fn opt_f64_field(v: &Json, path: &str, key: &str) -> anyhow::Result<Option<f
     }
 }
 
+/// Optional string: absent or `null` yields `None`.
+pub fn opt_str_field(v: &Json, path: &str, key: &str) -> anyhow::Result<Option<String>> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Str(s)) => Ok(Some(s.clone())),
+        Some(other) => Err(anyhow::anyhow!(
+            "{}: expected string or null, got {}",
+            path_join(path, key),
+            other.type_name()
+        )),
+    }
+}
+
 pub fn arr_field<'a>(v: &'a Json, path: &str, key: &str) -> anyhow::Result<&'a [Json]> {
     let f = req_field(v, path, key)?;
     match f {

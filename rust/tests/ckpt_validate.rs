@@ -1,0 +1,59 @@
+//! Corrupt/malformed checkpoint files (the `tests/fixtures/malformed_ckpt/`
+//! set, the checkpoint mirror of `malformed_ir/`) are rejected with
+//! field-path errors, and the auto-resume path treats every one of them as
+//! "start fresh" — never a silent partial resume, never an abort.
+
+use agn_approx::robust::checkpoint::{self, Checkpoint};
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/malformed_ckpt")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("{path:?}: {e}"))
+}
+
+#[test]
+fn valid_fixture_parses_and_resumes() {
+    let c = Checkpoint::parse(&fixture("valid.json")).unwrap();
+    assert_eq!(c.model, "tinynet");
+    assert_eq!((c.step, c.steps, c.seed), (4, 8, 42));
+    assert_eq!(c.state.flat.len(), 4);
+    assert_eq!(c.state.mom.len(), 4);
+    assert_eq!(c.state.sigmas.len(), 2);
+    assert_eq!(c.state.sig_mom.len(), 2);
+}
+
+#[test]
+fn malformed_fixtures_fail_with_field_paths() {
+    let cases = [
+        ("bad_payload_digest.json", "payloads.flat.fnv64"),
+        ("bad_schema_version.json", "schema_version"),
+        ("count_mismatch.json", "payloads.mom.count"),
+        ("truncated_payload.json", "payloads.sigmas.data"),
+        ("step_beyond_steps.json", "step"),
+        ("bad_seed.json", "seed"),
+    ];
+    for (file, needle) in cases {
+        let err = Checkpoint::parse(&fixture(file)).unwrap_err();
+        let shown = format!("{err:#}");
+        assert!(shown.contains(needle), "{file}: {shown:?} should mention {needle:?}");
+    }
+}
+
+#[test]
+fn try_resume_rejects_malformed_and_mismatched() {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("ckpt_validate");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = checkpoint::checkpoint_path(&dir, "tinynet", "qat8", 42);
+
+    // a present-but-mismatched digest is a fresh start, not a resume
+    std::fs::write(&path, fixture("bad_payload_digest.json")).unwrap();
+    assert!(Checkpoint::try_resume(&path, "tinynet", "qat8", 8, 42).is_none());
+
+    std::fs::write(&path, fixture("valid.json")).unwrap();
+    assert!(Checkpoint::try_resume(&path, "tinynet", "qat8", 8, 42).is_some());
+    // same file, wrong coordinates: also a fresh start
+    assert!(Checkpoint::try_resume(&path, "tinynet", "qat8", 8, 43).is_none());
+}

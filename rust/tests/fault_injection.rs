@@ -1,0 +1,214 @@
+//! Tier-1 fault-injection suite: every fault class a
+//! [`agn_approx::robust::FaultPlan`] can arm either recovers bit-identically
+//! or surfaces a typed [`agn_approx::api::AgnError`] — never a process
+//! abort, never a silent wrong answer. The suite is thread-count agnostic;
+//! CI runs it at `AGN_THREADS=1` and `AGN_THREADS=4`.
+//!
+//! Fault and health state is process-global, so every test serializes on
+//! one mutex and starts from `faults::clear()` + `health::reset()`.
+
+use agn_approx::api::{AgnError, ApproxSession, FaultPlan, JobSpec, RunConfig};
+use agn_approx::multipliers::unsigned_catalog;
+use agn_approx::robust::{checkpoint, faults, health, integrity};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Take the suite lock (tolerating poisoning — an earlier failed test must
+/// not wedge the rest) and reset the process-global fault/health state.
+fn serialize() -> MutexGuard<'static, ()> {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    faults::clear();
+    health::reset();
+    guard
+}
+
+/// A fresh per-test workspace with an empty `artifacts/` dir.
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("fault_injection").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("artifacts")).unwrap();
+    dir
+}
+
+fn tiny_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = 12;
+    cfg.search_steps = 8;
+    cfg.retrain_steps = 3;
+    cfg.eval_batches = 2;
+    cfg.calib_batches = 1;
+    cfg.k_samples = 64;
+    cfg.seed = seed; // private cache namespace per test
+    cfg
+}
+
+fn session_in(dir: &Path, cfg: RunConfig, plan: Option<FaultPlan>) -> ApproxSession {
+    let mut builder =
+        ApproxSession::builder(dir.join("artifacts")).cache_dir(dir.join("cache")).config(cfg);
+    if let Some(plan) = plan {
+        builder = builder.fault_plan(plan);
+    }
+    builder.build().unwrap()
+}
+
+fn bits64(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn worker_panic_recovers_bit_identically() {
+    let _guard = serialize();
+    let cfg = tiny_cfg(7001);
+    let spec = || JobSpec::Search { model: "resnet8".into(), lambda: 0.3 };
+
+    let clean_dir = fresh_dir("panic_clean");
+    let mut clean = session_in(&clean_dir, cfg.clone(), None);
+    let want = clean.run(spec()).unwrap().as_search().unwrap().clone();
+
+    health::reset();
+    let fault_dir = fresh_dir("panic_fault");
+    let plan = FaultPlan::parse("panic@step2").unwrap();
+    let mut faulted = session_in(&fault_dir, cfg, Some(plan));
+    let got = faulted.run(spec()).unwrap().as_search().unwrap().clone();
+
+    let fired = faults::fired();
+    let snap = health::snapshot();
+    let pending = faults::pending();
+    faults::clear();
+
+    assert_eq!(got.layer_names, want.layer_names);
+    assert_eq!(bits64(&got.sigmas), bits64(&want.sigmas), "recovery must be bit-identical");
+    if fired.iter().any(|f| f == "panic") {
+        // a pool worker was actually spawned and killed: the serial re-run
+        // of its chunk must have been counted
+        assert!(snap.worker_panics_recovered >= 1, "{snap:?}");
+        assert_eq!(snap.faults_injected, 1);
+        assert_eq!(pending, 0);
+    } else {
+        // serial path (AGN_THREADS=1 or sub-threshold work): no worker is
+        // ever spawned, so the armed panic stays pending by construction
+        assert!(pending <= 1, "unexpected pending faults: {pending}");
+        assert_eq!(snap.worker_panics_recovered, 0);
+    }
+}
+
+#[test]
+fn nan_poison_retries_and_completes() {
+    let _guard = serialize();
+    let dir = fresh_dir("nan_retry");
+    let plan = FaultPlan::parse("nan@step3").unwrap();
+    let mut session = session_in(&dir, tiny_cfg(7002), Some(plan));
+    let result = session.run(JobSpec::Eval { model: "tinynet".into() }).unwrap();
+    let eval = result.as_eval().unwrap();
+    assert!((0.0..=1.0).contains(&eval.top1));
+
+    let snap = health::snapshot();
+    assert_eq!(faults::fired(), ["nan@step3"]);
+    assert_eq!(faults::pending(), 0);
+    assert_eq!(snap.faults_injected, 1);
+    assert!(snap.retries >= 1, "divergence retry must be counted: {snap:?}");
+    faults::clear();
+}
+
+#[test]
+fn nan_without_retries_surfaces_typed_divergence() {
+    let _guard = serialize();
+    let dir = fresh_dir("nan_no_retry");
+    let mut cfg = tiny_cfg(7003);
+    cfg.retry.max_retries = 0;
+    let plan = FaultPlan::parse("nan@step5").unwrap();
+    let mut session = session_in(&dir, cfg, Some(plan));
+    let err = session.run(JobSpec::Eval { model: "tinynet".into() }).unwrap_err();
+    assert!(matches!(err, AgnError::Diverged { step: 5, .. }), "want Diverged at step 5: {err}");
+    assert_eq!(health::snapshot().retries, 0);
+    faults::clear();
+}
+
+#[test]
+fn corrupt_checkpoint_is_rejected_and_restart_matches_clean_run() {
+    let _guard = serialize();
+    let mut cfg = tiny_cfg(7004);
+    cfg.qat_steps = 16;
+    cfg.checkpoint_every = 8;
+    cfg.retry.max_retries = 0;
+    let spec = || JobSpec::Eval { model: "tinynet".into() };
+
+    let clean_dir = fresh_dir("ckpt_clean");
+    let mut clean = session_in(&clean_dir, cfg.clone(), None);
+    let want = clean.run(spec()).unwrap().as_eval().unwrap().clone();
+
+    health::reset();
+    let fault_dir = fresh_dir("ckpt_fault");
+    let plan = FaultPlan::parse("ckpt-corrupt,nan@step12").unwrap();
+    let mut session = session_in(&fault_dir, cfg, Some(plan));
+    let err = session.run(spec()).unwrap_err();
+    assert!(matches!(err, AgnError::Diverged { step: 12, .. }), "{err}");
+    assert_eq!(faults::fired(), ["ckpt-corrupt", "nan@step12"]);
+
+    // the interrupted stage left exactly one (corrupt) snapshot behind
+    let ckpts = checkpoint::list_checkpoints(session.cache_dir());
+    assert_eq!(ckpts.len(), 1, "{ckpts:?}");
+
+    // resume: the corrupt snapshot is rejected loudly and the stage
+    // restarts fresh — bit-identical to a never-interrupted run
+    let got = session.resume(spec()).unwrap().as_eval().unwrap().clone();
+    let snap = health::snapshot();
+    assert_eq!(snap.checkpoints_resumed, 0, "corrupt snapshot must not resume: {snap:?}");
+    assert!(snap.checkpoints_written >= 1, "{snap:?}");
+    assert_eq!(got.top1.to_bits(), want.top1.to_bits());
+    assert_eq!(got.top5.to_bits(), want.top5.to_bits());
+    assert_eq!(got.loss.to_bits(), want.loss.to_bits());
+    assert_eq!(got.n, want.n);
+    // a finished stage leaves no checkpoints behind
+    assert!(checkpoint::list_checkpoints(session.cache_dir()).is_empty());
+    faults::clear();
+}
+
+#[test]
+fn lut_bit_flip_is_repaired_at_lowering() {
+    let _guard = serialize();
+    let dir = fresh_dir("lutflip");
+    let plan = FaultPlan::parse("lutflip@layer0:bit5").unwrap();
+    let mut session = session_in(&dir, tiny_cfg(7005), Some(plan));
+    let (pipe, engine) = session.pipeline("tinynet").unwrap();
+    let base = pipe.baseline(engine).unwrap();
+    let (absmax, ystd) = pipe.calibrate(engine, &base.flat).unwrap();
+    let catalog = unsigned_catalog();
+    let ops = pipe.operands(&base.flat, &absmax).unwrap();
+    let preds = pipe.predictions(&catalog, &ops);
+    let outcome = pipe.match_at(&catalog, &preds, &base.sigmas, &ystd);
+    let lowered = pipe.lower(&catalog, "agn", &outcome).unwrap();
+
+    // the flip was caught by digest verification and repaired in place
+    assert!(integrity::verify_luts(&lowered).is_empty());
+    let snap = health::snapshot();
+    assert!(snap.lut_repairs >= 1, "{snap:?}");
+    assert_eq!(snap.faults_injected, 1);
+    assert_eq!(faults::fired(), ["lutflip@layer0:bit5"]);
+    assert_eq!(faults::pending(), 0);
+    faults::clear();
+}
+
+#[test]
+fn corrupt_ir_import_fails_typed_and_file_survives() {
+    let _guard = serialize();
+    let dir = fresh_dir("ir_corrupt");
+    let plan = FaultPlan::parse("ir-corrupt").unwrap();
+    let mut session = session_in(&dir, tiny_cfg(7006), Some(plan));
+    let ir = session.export_ir("tinynet").unwrap();
+    let path = dir.join("tinynet.ir.json");
+    std::fs::write(&path, ir.to_json_string()).unwrap();
+
+    let err = session.import_ir(&path).unwrap_err();
+    assert!(matches!(err, AgnError::Artifacts { .. }), "{err}");
+    assert_eq!(faults::fired(), ["ir-corrupt"]);
+    assert_eq!(faults::pending(), 0);
+
+    // the fault hit the in-memory text only; a retry reads the intact file
+    let model = session.import_ir(&path).unwrap();
+    assert_eq!(model, "tinynet");
+    assert_eq!(health::snapshot().faults_injected, 1);
+    faults::clear();
+}

@@ -1,0 +1,141 @@
+//! Checkpoint/resume determinism: a training stage interrupted mid-run
+//! (here by an injected NaN poison with retries disabled) and then resumed
+//! from its surviving snapshot must finish **bit-identical** to a run that
+//! was never interrupted — same parameter bits, same momentum bits, same
+//! sigma bits. Covers the QAT and AGN-search stages on tinynet and resnet8;
+//! CI runs the suite at `AGN_THREADS=1` and `AGN_THREADS=4`.
+
+use agn_approx::api::{AgnError, ApproxSession, FaultPlan, RunConfig};
+use agn_approx::robust::{checkpoint, faults, health};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests (fault/health state is process-wide) and reset it.
+fn serialize() -> MutexGuard<'static, ()> {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    faults::clear();
+    health::reset();
+    guard
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_TARGET_TMPDIR")).join("resume_determinism").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("artifacts")).unwrap();
+    dir
+}
+
+fn tiny_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.qat_steps = 16;
+    cfg.search_steps = 8;
+    cfg.retrain_steps = 3;
+    cfg.eval_batches = 2;
+    cfg.calib_batches = 1;
+    cfg.k_samples = 64;
+    cfg.seed = seed; // private cache namespace per test
+    cfg.retry.max_retries = 0; // interruptions must surface, not retry
+    cfg
+}
+
+fn session_in(dir: &Path, cfg: RunConfig, plan: Option<FaultPlan>) -> ApproxSession {
+    let mut builder =
+        ApproxSession::builder(dir.join("artifacts")).cache_dir(dir.join("cache")).config(cfg);
+    if let Some(plan) = plan {
+        builder = builder.fault_plan(plan);
+    }
+    builder.build().unwrap()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Interrupt QAT at step 14 (snapshots land at steps 6 and 12), resume,
+/// and compare against a reference run that never checkpoints at all.
+fn qat_resume_case(model: &str, seed: u64) {
+    let _guard = serialize();
+    let cfg = tiny_cfg(seed);
+
+    let ref_dir = fresh_dir(&format!("qat_ref_{model}"));
+    let mut clean = session_in(&ref_dir, cfg.clone(), None);
+    let (pipe, engine) = clean.pipeline(model).unwrap();
+    let want = pipe.baseline(engine).unwrap();
+
+    let mut cfg = cfg;
+    cfg.checkpoint_every = 6;
+    let dir = fresh_dir(&format!("qat_resume_{model}"));
+    let plan = FaultPlan::parse("nan@step14").unwrap();
+    let mut session = session_in(&dir, cfg, Some(plan));
+    let (pipe, engine) = session.pipeline(model).unwrap();
+    let err = pipe.baseline(engine).unwrap_err();
+    assert!(AgnError::is_diverged(&err), "{err:#}");
+    let ckpts = checkpoint::list_checkpoints(&dir.join("cache"));
+    assert_eq!(ckpts.len(), 1, "{ckpts:?}");
+
+    faults::clear();
+    let before = health::snapshot();
+    let got = pipe.baseline(engine).unwrap();
+    let after = health::snapshot();
+    assert!(after.checkpoints_resumed > before.checkpoints_resumed, "{after:?}");
+    assert_eq!(bits(&got.flat), bits(&want.flat), "{model}: resumed params must match");
+    assert_eq!(bits(&got.mom), bits(&want.mom), "{model}: resumed momentum must match");
+    assert!(checkpoint::list_checkpoints(&dir.join("cache")).is_empty());
+    faults::clear();
+}
+
+/// Interrupt the AGN gradient search at step 7 (snapshot at step 6),
+/// resume, and compare against an uninterrupted reference search.
+fn search_resume_case(model: &str, seed: u64) {
+    let _guard = serialize();
+    let cfg = tiny_cfg(seed);
+
+    let ref_dir = fresh_dir(&format!("search_ref_{model}"));
+    let mut clean = session_in(&ref_dir, cfg.clone(), None);
+    let (pipe, engine) = clean.pipeline(model).unwrap();
+    let base = pipe.baseline(engine).unwrap();
+    let want = pipe.search_at(engine, &base, 0.3).unwrap();
+
+    let mut cfg = cfg;
+    cfg.checkpoint_every = 6;
+    let dir = fresh_dir(&format!("search_resume_{model}"));
+    let mut session = session_in(&dir, cfg, None);
+    let (pipe, engine) = session.pipeline(model).unwrap();
+    let base = pipe.baseline(engine).unwrap(); // trains fault-free
+    faults::install(&FaultPlan::parse("nan@step7").unwrap());
+    let err = pipe.search_at(engine, &base, 0.3).unwrap_err();
+    assert!(AgnError::is_diverged(&err), "{err:#}");
+    assert_eq!(checkpoint::list_checkpoints(&dir.join("cache")).len(), 1);
+
+    faults::clear();
+    let before = health::snapshot();
+    let got = pipe.search_at(engine, &base, 0.3).unwrap();
+    let after = health::snapshot();
+    assert!(after.checkpoints_resumed > before.checkpoints_resumed, "{after:?}");
+    assert_eq!(bits(&got.sigmas), bits(&want.sigmas), "{model}: resumed sigmas must match");
+    assert_eq!(bits(&got.flat), bits(&want.flat), "{model}: resumed params must match");
+    assert_eq!(bits(&got.sig_mom), bits(&want.sig_mom), "{model}: sigma momentum must match");
+    faults::clear();
+}
+
+#[test]
+fn qat_resume_is_bit_identical_tinynet() {
+    qat_resume_case("tinynet", 8101);
+}
+
+#[test]
+fn qat_resume_is_bit_identical_resnet8() {
+    qat_resume_case("resnet8", 8102);
+}
+
+#[test]
+fn search_resume_is_bit_identical_tinynet() {
+    search_resume_case("tinynet", 8103);
+}
+
+#[test]
+fn search_resume_is_bit_identical_resnet8() {
+    search_resume_case("resnet8", 8104);
+}

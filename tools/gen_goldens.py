@@ -1,0 +1,332 @@
+#!/usr/bin/env python3
+"""Regenerate the committed golden IR files under rust/tests/golden_ir/.
+
+Bit-exact offline port of what `UPDATE_GOLDENS=1 cargo test golden_ir`
+writes: for every synthetic-zoo model, the digest-stripped model IR
+(`export_ir(model).with_params_digest().to_json_string()` in Rust). Useful
+on machines without a Rust toolchain; on machines with one, the cargo
+route is equally valid and must produce byte-identical files.
+
+The port reproduces, bit for bit:
+
+- PCG32 (XSH-RR) including the two-step seeding sequence
+  (`util/rng.rs::Pcg32::new`) — self-checked below against the published
+  reference vector for seed 42 / stream 54 before anything is written;
+- `normal_det` (Irwin-Hall: sum of 12 exact f64 uniforms minus 6);
+- the He-normal f32 init chain (`f32 std * f32(normal_det)`, numpy
+  single-precision IEEE ops match Rust's);
+- the synthetic zoo builders (`runtime/synthetic.rs`), FNV-1a 64 digests
+  (`ir/model.rs::params_digest`) and the deterministic JSON writer
+  (`util/json.rs`: sorted keys, 2-space indent — `json.dumps` with
+  `sort_keys=True, indent=2` emits the identical bytes for the all-integer
+  golden payload).
+
+Run from anywhere: `python3 tools/gen_goldens.py`.
+"""
+
+import json
+import os
+import struct
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+PCG_MULT = 6364136223846793005
+LUT_SIZE = 65536
+BATCH = 16
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "rust", "tests", "golden_ir")
+
+
+# ---------------------------------------------------------------------------
+# PCG32 (util/rng.rs)
+
+class Pcg32:
+    def __init__(self, seed: int, stream: int):
+        self.state = 0
+        self.inc = ((stream << 1) | 1) & MASK64
+        self.next_u32()
+        self.state = (self.state + seed) & MASK64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * PCG_MULT + self.inc) & MASK64
+        x = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((x >> rot) | (x << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def normal_det_block(self, n: int) -> list:
+        """n draws of normal_det(): sum of 12 exact f64 uniforms - 6.0."""
+        out = []
+        state = self.state
+        inc = self.inc
+        scale = 2.0 ** -53
+        for _ in range(n):
+            s = 0.0
+            for _ in range(12):
+                old = state
+                state = (old * PCG_MULT + inc) & MASK64
+                x = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+                rot = old >> 59
+                hi = ((x >> rot) | (x << ((32 - rot) & 31))) & 0xFFFFFFFF
+                old = state
+                state = (old * PCG_MULT + inc) & MASK64
+                x = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+                rot = old >> 59
+                lo = ((x >> rot) | (x << ((32 - rot) & 31))) & 0xFFFFFFFF
+                s += (((hi << 32) | lo) >> 11) * scale
+            out.append(s - 6.0)
+        self.state = state
+        return out
+
+
+def self_check_pcg32():
+    """Published XSH-RR reference vector (O'Neill's pcg32-demo, seed 42,
+    stream 54). A mismatch means the port is wrong — abort, write nothing."""
+    rng = Pcg32(42, 54)
+    got = [rng.next_u32() for _ in range(6)]
+    want = [0xA15C02B7, 0x7B47F409, 0xBA1D3330, 0x83D2F293, 0xBFA4784B, 0xCBED606E]
+    assert got == want, f"PCG32 port broken: {[hex(v) for v in got]}"
+
+
+# ---------------------------------------------------------------------------
+# digests (ir/model.rs)
+
+def fnv64_bytes(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+def params_digest(values: np.ndarray) -> str:
+    return format(fnv64_bytes(values.astype("<f4").tobytes()), "016x")
+
+
+# ---------------------------------------------------------------------------
+# synthetic zoo builder (runtime/synthetic.rs)
+
+class Builder:
+    def __init__(self, model: str):
+        self.layers = []
+        self.leaves = []
+        self.init = []  # list of np.float32 arrays, concatenated at the end
+        self.count = 0
+        self.rng = Pcg32(fnv64_bytes(model.encode()), 0x5E11717)
+
+    def leaf(self, path, shape, values: np.ndarray):
+        assert int(np.prod(shape)) == values.size
+        self.leaves.append({"path": path, "offset": self.count, "shape": list(shape)})
+        self.init.append(values.astype(np.float32, copy=False))
+        self.count += values.size
+
+    def he_normal(self, n: int, fan_in: int) -> np.ndarray:
+        # f32 std times f32-cast normal_det draws, multiplied in f32 —
+        # the exact operation order of Builder::he_normal in Rust
+        std = np.sqrt(np.float32(2.0) / np.float32(fan_in))
+        draws = np.array(self.rng.normal_det_block(n), dtype=np.float64)
+        return (std * draws.astype(np.float32)).astype(np.float32)
+
+    def conv(self, name, cin, cout, k, stride, pad, in_hw, act_signed):
+        out_hw = ((in_hw[0] + 2 * pad - k) // stride + 1, (in_hw[1] + 2 * pad - k) // stride + 1)
+        fan_in = k * k * cin
+        self.layers.append({
+            "name": name, "kind": "conv", "cin": cin, "cout": cout, "k": k,
+            "stride": stride, "pad": pad, "in_hw": list(in_hw), "out_hw": list(out_hw),
+            "fan_in": fan_in, "mults_per_image": out_hw[0] * out_hw[1] * fan_in * cout,
+            "act_signed": act_signed,
+        })
+        self.leaf(f"{name}/w", [k, k, cin, cout], self.he_normal(fan_in * cout, fan_in))
+        self.leaf(f"{name}/gamma", [cout], np.ones(cout, dtype=np.float32))
+        self.leaf(f"{name}/beta", [cout], np.zeros(cout, dtype=np.float32))
+        return out_hw
+
+    def fc(self, name, cin, cout, act_signed):
+        self.layers.append({
+            "name": name, "kind": "fc", "cin": cin, "cout": cout, "k": 1,
+            "stride": 1, "pad": 0, "in_hw": [1, 1], "out_hw": [1, 1],
+            "fan_in": cin, "mults_per_image": cin * cout, "act_signed": act_signed,
+        })
+        self.leaf(f"{name}/w", [cin, cout], self.he_normal(cin * cout, cin))
+        self.leaf(f"{name}/b", [cout], np.zeros(cout, dtype=np.float32))
+
+    def tinynet(self, hw, classes, act_signed):
+        h1 = self.conv("conv0", 3, 8, 3, 1, 1, hw, act_signed)
+        self.conv("conv1", 8, 16, 3, 2, 1, h1, act_signed)
+        self.fc("fc", 16, classes, act_signed)
+
+    def resnet(self, n, hw, classes, act_signed):
+        widths = [8, 16, 32]
+        cur_hw = self.conv("conv0", 3, widths[0], 3, 1, 1, hw, act_signed)
+        cin = widths[0]
+        for s, cout in enumerate(widths):
+            for blk in range(n):
+                stride = 2 if s > 0 and blk == 0 else 1
+                base = f"s{s}b{blk}"
+                mid_hw = self.conv(f"{base}_conv1", cin, cout, 3, stride, 1, cur_hw, act_signed)
+                self.conv(f"{base}_conv2", cout, cout, 3, 1, 1, mid_hw, act_signed)
+                if stride != 1 or cin != cout:
+                    self.conv(f"{base}_short", cin, cout, 1, stride, 0, cur_hw, act_signed)
+                cur_hw = mid_hw
+                cin = cout
+        self.fc("fc", widths[2], classes, act_signed)
+
+    def vgg(self, hw, classes, act_signed):
+        plan = [(3, 8), (8, 8), (8, 16), (16, 16), (16, 32), (32, 32)]
+        cur_hw = hw
+        for i, (cin, cout) in enumerate(plan):
+            cur_hw = self.conv(f"conv{i}", cin, cout, 3, 1, 1, cur_hw, act_signed)
+            if i % 2 == 1 and i + 1 < len(plan):
+                cur_hw = (cur_hw[0] // 2, cur_hw[1] // 2)
+        self.fc("fc", 32, classes, act_signed)
+
+
+MODELS = {
+    # model -> (family, arch, hw, classes, act_signed)
+    "tinynet": ("tiny", "tinynet", (8, 8), 10, False),
+    "resnet8": (("resnet", 1), "resnet8", (8, 8), 10, False),
+    "resnet14": (("resnet", 2), "resnet14", (8, 8), 10, False),
+    "resnet20": (("resnet", 3), "resnet20", (8, 8), 10, False),
+    "resnet32": (("resnet", 5), "resnet32", (8, 8), 10, False),
+    "vgg16": ("vgg", "vgg16", (16, 16), 20, False),
+    "vgg16_signed": ("vgg", "vgg16", (16, 16), 20, True),
+}
+
+MODEL_ORDER = ["tinynet", "resnet8", "resnet14", "resnet20", "resnet32", "vgg16", "vgg16_signed"]
+
+
+# ---------------------------------------------------------------------------
+# program signatures (runtime/synthetic.rs::program_signatures)
+
+def program_signatures(n, l, hw, channels, batch):
+    f32 = lambda shape: {"dtype": "float32", "shape": shape}
+    i32 = lambda shape: {"dtype": "int32", "shape": shape}
+    u32 = lambda shape: {"dtype": "uint32", "shape": shape}
+    x = f32([batch, hw[0], hw[1], channels])
+    y = i32([batch])
+    scalar = lambda: f32([])
+    params = lambda: f32([n])
+    per_layer = lambda: f32([l])
+    luts = lambda: i32([l, LUT_SIZE])
+    seed = lambda: u32([2])
+    metrics3 = lambda: f32([3])
+    metrics5 = lambda: f32([5])
+
+    def prog(name, inputs, outputs):
+        return {"file": f"<native:{name}>", "inputs": inputs, "outputs": outputs}
+
+    return {
+        "eval": prog("eval", [params(), x, y], [metrics3()]),
+        "eval_agn": prog("eval_agn", [params(), per_layer(), x, y, seed()], [metrics3()]),
+        "eval_approx": prog("eval_approx", [params(), x, y, luts(), per_layer()], [metrics3()]),
+        "train_qat": prog(
+            "train_qat",
+            [params(), params(), x, y, scalar()],
+            [params(), params(), metrics3()],
+        ),
+        "train_agn": prog(
+            "train_agn",
+            [params(), params(), per_layer(), per_layer(), x, y, seed(), scalar(), scalar(), scalar()],
+            [params(), params(), per_layer(), per_layer(), metrics5()],
+        ),
+        "train_approx": prog(
+            "train_approx",
+            [params(), params(), x, y, scalar(), luts(), per_layer()],
+            [params(), params(), metrics3()],
+        ),
+        "calibrate": prog("calibrate", [params(), x, y], [per_layer(), per_layer(), metrics3()]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# IR assembly (ir/model.rs::from_manifest + with_params_digest)
+
+QUANT_FLOAT32 = {"bitwidth": 32, "scale": None, "scheme": "float32"}
+QUANT_INT8 = {"bitwidth": 8, "scale": None, "scheme": "int8_symmetric"}
+QUANT_UINT8 = {"bitwidth": 8, "scale": None, "scheme": "uint8_affine"}
+
+
+def model_ir(model: str) -> dict:
+    family, arch, hw, classes, act_signed = MODELS[model]
+    b = Builder(model)
+    if family == "tiny":
+        b.tinynet(hw, classes, act_signed)
+    elif family == "vgg":
+        b.vgg(hw, classes, act_signed)
+    else:
+        b.resnet(family[1], hw, classes, act_signed)
+
+    flat = np.concatenate(b.init) if b.init else np.zeros(0, dtype=np.float32)
+    assert flat.size == b.count
+    tensors = [
+        {
+            "offset": leaf["offset"],
+            "path": leaf["path"],
+            "quant": dict(QUANT_INT8 if leaf["path"].endswith("/w") else QUANT_FLOAT32),
+            "shape": leaf["shape"],
+        }
+        for leaf in b.leaves
+    ]
+    layers = [
+        {
+            "act_quant": dict(QUANT_INT8 if l["act_signed"] else QUANT_UINT8),
+            "act_signed": l["act_signed"],
+            "cin": l["cin"],
+            "cout": l["cout"],
+            "fan_in": l["fan_in"],
+            "in_hw": l["in_hw"],
+            "k": l["k"],
+            "kind": l["kind"],
+            "mults_per_image": l["mults_per_image"],
+            "name": l["name"],
+            "out_hw": l["out_hw"],
+            "pad": l["pad"],
+            "stride": l["stride"],
+        }
+        for l in b.layers
+    ]
+    return {
+        "act_signed": act_signed,
+        "arch": arch,
+        "batch": BATCH,
+        "classes": classes,
+        "hints": {
+            "batch": BATCH,
+            "lut_bytes_per_layer": LUT_SIZE * 4,
+            "param_bytes": b.count * 4,
+            "preferred_threads": 0,
+            "total_mults_per_image": sum(l["mults_per_image"] for l in b.layers),
+        },
+        "init_params_file": f"<synthetic:{model}>",
+        "input_shape": [hw[0], hw[1], 3],
+        "layers": layers,
+        "model": model,
+        "num_layers": len(b.layers),
+        "param_count": b.count,
+        "params": {"count": b.count, "encoding": "digest", "fnv64": params_digest(flat)},
+        "programs": program_signatures(b.count, len(b.layers), hw, 3, BATCH),
+        "schema_version": 1,
+    }
+
+
+def main():
+    self_check_pcg32()
+    # f64 -> f32 cast sanity: numpy must round-to-nearest-even like Rust `as`
+    assert np.float32(1.0 + 2.0**-24).item() == 1.0  # exact midpoint -> even
+    assert np.float32(1.0 + 2.0**-23).item() > 1.0
+    assert struct.pack("<f", np.float32(1.0)) == b"\x00\x00\x80\x3f"
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for model in MODEL_ORDER:
+        ir = model_ir(model)
+        text = json.dumps(ir, indent=2, sort_keys=True) + "\n"
+        path = os.path.join(OUT_DIR, f"{model}.ir.json")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"{model}: {ir['num_layers']} layers, {ir['param_count']} params, "
+              f"fnv64 {ir['params']['fnv64']} -> {os.path.relpath(path)}")
+
+
+if __name__ == "__main__":
+    main()
