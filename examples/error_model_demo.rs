@@ -7,6 +7,10 @@
 //!
 //! Run: cargo run --release --example error_model_demo
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::errormodel::model::{estimate_single_dist, estimate_with_aggregates, row_aggregates};
 use agn_approx::errormodel::{layer_error_map, mc};

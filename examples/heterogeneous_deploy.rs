@@ -6,6 +6,10 @@
 //!
 //! Run: cargo run --release --example heterogeneous_deploy
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::cached_baseline_path;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::matching::{assignment_luts, energy_reduction};

@@ -5,6 +5,10 @@
 //!
 //! Run: cargo run --release --example pareto_sweep [-- --lambdas 0.0,0.2,0.5]
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{ApproxSession, JobResult, JobSpec, RunConfig};
 use agn_approx::coordinator::experiments::default_lambdas;
 use agn_approx::util::cli::Args;

@@ -11,6 +11,10 @@
 //!
 //! Run: cargo run --release --example quickstart [-- --qat-steps 200 ...]
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{ApproxSession, JobResult, JobSpec, RunConfig};
 use agn_approx::runtime::ExecBackend as _;
 use agn_approx::util::cli::Args;

@@ -3,6 +3,10 @@
 //! Table 1 / Table 2's machinery). Our target: < 2 s for 49 x ResNet8
 //! single-core (DESIGN.md §Perf).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::benchkit::Bench;
 use agn_approx::errormodel::layer_error_map;
 use agn_approx::errormodel::mc;

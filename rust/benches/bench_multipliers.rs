@@ -2,6 +2,10 @@
 //! and layer-LUT generation (these sit on the critical path of every
 //! matching pass and of LUT upload to the AOT programs).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::benchkit::Bench;
 use agn_approx::multipliers::{build_layer_lut, error_map, unsigned_catalog, MulKind};
 

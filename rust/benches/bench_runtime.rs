@@ -9,6 +9,10 @@
 //! path — only that section skips when the PJRT client or artifacts are
 //! unavailable.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{ApproxSession, JobSpec, RunConfig};
 use agn_approx::benchkit::Bench;
 use agn_approx::compute::ComputeConfig;

@@ -2,6 +2,10 @@
 //! Pareto tooling, dataset batch synthesis (all pure coordinator work that
 //! must stay negligible next to PJRT execute time).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{JobResult, ParetoModelReport, ParetoPoint, ParetoReport, render, to_json};
 use agn_approx::baselines::{nsga2_search, AlwannConfig};
 use agn_approx::benchkit::Bench;

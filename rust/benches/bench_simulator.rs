@@ -7,6 +7,10 @@
 //! Emits the machine-readable `BENCH_kernels.json` (benchkit JSON export)
 //! so the perf trajectory can be tracked across PRs.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::benchkit::Bench;
 use agn_approx::compute::{self, ComputeConfig, ComputePool};
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};

@@ -5,6 +5,10 @@
 //! measured in bench_runtime and reported in EXPERIMENTS.md); these benches
 //! isolate the coordinator-side cost of regenerating each artifact.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::benchkit::Bench;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::errormodel::layer_error_map;

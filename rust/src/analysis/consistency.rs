@@ -1,0 +1,300 @@
+//! Quantization-consistency checking (analysis 2 of [`crate::analysis`]).
+//!
+//! Four rule families, each yielding `Validate`-style JSON field-path
+//! diagnostics instead of hard errors (the caller decides whether the set
+//! gates lowering):
+//!
+//! 1. **Activation grids** — a layer's `act_quant` must describe the grid
+//!    its `act_signed` flag selects (`int8_symmetric` ⇔ signed,
+//!    `uint8_affine` ⇔ unsigned) at bitwidth 8.
+//! 2. **Weight tensors** — every `*/w` leaf must be `int8_symmetric`/8:
+//!    LUT lowering quantizes weights onto the signed 8-bit column grid
+//!    unconditionally (`quant::quantize_weights`).
+//! 3. **Residual joins** — a saved activation is materialized once, on the
+//!    grid of its first consumer, but re-used at the join (and by the
+//!    shortcut layer). All consumers of one saved value must therefore
+//!    agree on scheme/bitwidth/signedness, and on the scale when both pin
+//!    one. Skipped (with a note) when the op tape cannot be reconstructed
+//!    for the architecture.
+//! 4. **Multiplier bindings** — a signed-core catalog instance cannot be
+//!    bound to an unsigned activation grid: `build_layer_lut` clamps its
+//!    operands to `[-128, 127]`, so rows 128..=255 of the unsigned grid
+//!    would alias row 127 (an operand-range violation, not an
+//!    approximation). Unsigned cores on signed grids are fine — the
+//!    sign-magnitude wrapper covers the full signed domain.
+
+use crate::ir::{LayerIr, ModelIr};
+use crate::multipliers::Catalog;
+use crate::simulator::net::{build_ops, Op};
+
+/// One-line grid description used in diagnostics.
+fn grid_descr(l: &LayerIr) -> String {
+    format!(
+        "{}/{}b/{}",
+        l.act_quant.scheme,
+        l.act_quant.bitwidth,
+        if l.info.act_signed { "signed" } else { "unsigned" }
+    )
+}
+
+/// Is the activation quantization a known 8-bit integer grid? (The
+/// overflow analysis can only prove bounds on such grids.)
+pub fn known_int8_grid(l: &LayerIr) -> bool {
+    matches!(l.act_quant.scheme.as_str(), "int8_symmetric" | "uint8_affine")
+        && l.act_quant.bitwidth == 8
+}
+
+/// Consumer groups of saved residual values: for every `Save`/`AddSaved`
+/// pair, the layer indices that read the saved value — the first layer
+/// after the save, any shortcut layer applied to it, and the first layer
+/// after the join (which consumes the sum the saved value feeds).
+pub(crate) fn residual_groups(ops: &[Op]) -> Vec<Vec<usize>> {
+    let first_layer_after = |start: usize| -> Option<usize> {
+        ops[start + 1..].iter().find_map(|op| match op {
+            Op::Layer { idx, .. } => Some(*idx),
+            _ => None,
+        })
+    };
+    let mut saves: Vec<usize> = Vec::new();
+    let mut groups = Vec::new();
+    for (j, op) in ops.iter().enumerate() {
+        match op {
+            Op::Save => saves.push(j),
+            Op::AddSaved { .. } => {
+                let Some(s) = saves.pop() else { continue };
+                let mut group = Vec::new();
+                if let Some(l) = first_layer_after(s) {
+                    group.push(l);
+                }
+                for inner in &ops[s..j] {
+                    if let Op::Shortcut { layer: Some(l) } = inner {
+                        group.push(*l);
+                    }
+                }
+                if let Some(l) = first_layer_after(j) {
+                    group.push(l);
+                }
+                group.sort_unstable();
+                group.dedup();
+                if group.len() > 1 {
+                    groups.push(group);
+                }
+            }
+            _ => {}
+        }
+    }
+    groups
+}
+
+/// Run all consistency rules; returns field-path diagnostics (empty =
+/// consistent).
+pub fn check(ir: &ModelIr, catalogs: &[Catalog]) -> Vec<String> {
+    let mut diags = Vec::new();
+
+    // rule 1: activation grid vs. signedness
+    for (i, l) in ir.layers.iter().enumerate() {
+        let expected = if l.info.act_signed { "int8_symmetric" } else { "uint8_affine" };
+        let scheme = l.act_quant.scheme.as_str();
+        if scheme == "float32" {
+            diags.push(format!(
+                "layers[{i}].act_quant.scheme: float32 activations cannot lower onto the \
+                 8-bit multiplier grid (layer {:?})",
+                l.info.name
+            ));
+        } else if scheme != expected {
+            diags.push(format!(
+                "layers[{i}].act_quant.scheme: {scheme:?} is inconsistent with \
+                 act_signed={} (expected {expected:?})",
+                l.info.act_signed
+            ));
+        }
+        if l.act_quant.bitwidth != 8 && scheme != "float32" {
+            diags.push(format!(
+                "layers[{i}].act_quant.bitwidth: expected 8 for the multiplier operand \
+                 grid, got {}",
+                l.act_quant.bitwidth
+            ));
+        }
+    }
+
+    // rule 2: weight leaves must be on the signed 8-bit column grid
+    for (i, t) in ir.tensors.iter().enumerate() {
+        if !t.leaf.path.ends_with("/w") {
+            continue;
+        }
+        if t.quant.scheme != "int8_symmetric" || t.quant.bitwidth != 8 {
+            diags.push(format!(
+                "tensors[{i}].quant.scheme: weight leaf {:?} must be int8_symmetric/8 \
+                 (LUT lowering quantizes weights to signed 8-bit columns), got {:?}/{}",
+                t.leaf.path, t.quant.scheme, t.quant.bitwidth
+            ));
+        }
+    }
+
+    // rule 3: residual-join grid agreement
+    let infos: Vec<_> = ir.layers.iter().map(|l| l.info.clone()).collect();
+    if let Ok(ops) = build_ops(&ir.arch, &infos) {
+        for group in residual_groups(&ops) {
+            let a = group[0];
+            for &b in &group[1..] {
+                let (la, lb) = (&ir.layers[a], &ir.layers[b]);
+                let same_grid = la.info.act_signed == lb.info.act_signed
+                    && la.act_quant.scheme == lb.act_quant.scheme
+                    && la.act_quant.bitwidth == lb.act_quant.bitwidth;
+                if !same_grid {
+                    diags.push(format!(
+                        "layers[{b}].act_quant: residual join shares a saved activation \
+                         with layers[{a}] ({:?}) but the grids disagree ({} vs {})",
+                        la.info.name,
+                        grid_descr(la),
+                        grid_descr(lb)
+                    ));
+                } else if let (Some(sa), Some(sb)) = (la.act_quant.scale, lb.act_quant.scale) {
+                    if (sa - sb).abs() > 1e-12 * sa.abs().max(sb.abs()) {
+                        diags.push(format!(
+                            "layers[{b}].act_quant.scale: pinned scale {sb} disagrees with \
+                             residual-join partner layers[{a}] ({:?}) scale {sa}",
+                            la.info.name
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    // an unknown arch means no residual structure to check; the
+    // per-layer and per-tensor rules above still apply.
+
+    // rule 4: multiplier-binding signedness
+    if let Some(a) = &ir.assignment {
+        match catalogs.iter().find(|c| c.name == a.catalog) {
+            None => {
+                let have: Vec<&str> = catalogs.iter().map(|c| c.name.as_str()).collect();
+                diags.push(format!(
+                    "assignment.catalog: unknown catalog {:?} (have {have:?})",
+                    a.catalog
+                ));
+            }
+            Some(cat) => {
+                if a.instances.len() != ir.layers.len() {
+                    diags.push(format!(
+                        "assignment.instances: expected {} entries (one per layer), got {}",
+                        ir.layers.len(),
+                        a.instances.len()
+                    ));
+                }
+                for (i, name) in a.instances.iter().enumerate().take(ir.layers.len()) {
+                    let Some(inst) = cat.get(name) else {
+                        diags.push(format!(
+                            "assignment.instances[{i}]: unknown instance {name:?} in \
+                             catalog {:?}",
+                            a.catalog
+                        ));
+                        continue;
+                    };
+                    let layer = &ir.layers[i];
+                    if inst.signed && !layer.info.act_signed {
+                        diags.push(format!(
+                            "assignment.catalog: signed-core instance {name:?} bound to the \
+                             unsigned activation grid of layers[{i}] ({:?}) — rows 128..=255 \
+                             would clamp to the signed operand range",
+                            layer.info.name
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::AssignmentIr;
+    use crate::multipliers::{signed_catalog, unsigned_catalog};
+    use crate::runtime::synthetic;
+    use std::path::Path;
+
+    fn zoo_ir(model: &str) -> ModelIr {
+        let m = synthetic::manifest(Path::new("artifacts"), model).unwrap();
+        ModelIr::from_manifest(&m)
+    }
+
+    fn cats() -> Vec<Catalog> {
+        vec![unsigned_catalog(), signed_catalog()]
+    }
+
+    #[test]
+    fn zoo_models_are_consistent() {
+        for model in synthetic::MODELS {
+            let diags = check(&zoo_ir(model), &cats());
+            assert!(diags.is_empty(), "{model}: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn signed_scheme_on_unsigned_grid_is_flagged() {
+        let mut ir = zoo_ir("tinynet");
+        ir.layers[1].act_quant = crate::ir::QuantIr::int8_symmetric();
+        let diags = check(&ir, &cats());
+        assert!(
+            diags.iter().any(|d| d.starts_with("layers[1].act_quant.scheme")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn residual_join_grid_mismatch_is_flagged() {
+        let mut ir = zoo_ir("resnet8");
+        let infos: Vec<_> = ir.layers.iter().map(|l| l.info.clone()).collect();
+        let ops = build_ops(&ir.arch, &infos).unwrap();
+        let groups = residual_groups(&ops);
+        assert!(!groups.is_empty(), "resnet8 must have residual joins");
+        // flip one join participant to a self-consistent signed grid:
+        // rule 1 stays silent for it, the join rule must fire.
+        let victim = groups[0][0];
+        ir.layers[victim].info.act_signed = true;
+        ir.layers[victim].act_quant = crate::ir::QuantIr::int8_symmetric();
+        let diags = check(&ir, &cats());
+        assert!(
+            diags.iter().any(|d| d.contains("residual join")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn signed_core_on_unsigned_grid_is_flagged() {
+        let mut ir = zoo_ir("tinynet");
+        let n = ir.layers.len();
+        ir.assignment = Some(AssignmentIr {
+            catalog: "evo8s".into(),
+            method: "uniform".into(),
+            instances: vec!["mul8s_exact".into(); n],
+            energy_reduction: 0.0,
+            sigma_pred_rel: vec![0.0; n],
+        });
+        let diags = check(&ir, &cats());
+        assert!(
+            diags.iter().any(|d| d.starts_with("assignment.catalog")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn unsigned_core_on_signed_grid_is_fine() {
+        let mut ir = zoo_ir("vgg16_signed");
+        let n = ir.layers.len();
+        ir.assignment = Some(AssignmentIr {
+            catalog: "evo8u".into(),
+            method: "uniform".into(),
+            instances: vec!["mul8u_trc4".into(); n],
+            energy_reduction: 0.0,
+            sigma_pred_rel: vec![0.0; n],
+        });
+        // sign-magnitude wrapping covers the signed domain; only the
+        // energy field is fake here and consistency does not check it.
+        let diags = check(&ir, &cats());
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+}

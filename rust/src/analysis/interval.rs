@@ -1,0 +1,154 @@
+//! Integer interval arithmetic — the abstract domain shared by the
+//! analyses in [`crate::analysis`].
+//!
+//! Intervals are closed `[lo, hi]` over `i64`. The accumulator values the
+//! overflow analysis bounds are sums of at most `fan_in` 17-bit products,
+//! so `i64` never overflows during analysis itself (|product| < 2^17,
+//! fan_in < 2^32 in any representable layer ⇒ |sum| < 2^49).
+
+/// A closed integer interval `[lo, hi]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interval {
+    pub lo: i64,
+    pub hi: i64,
+}
+
+impl Interval {
+    /// The interval containing exactly `v`.
+    pub fn point(v: i64) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+
+    /// `[lo, hi]` with the bounds normalized into order.
+    pub fn new(lo: i64, hi: i64) -> Interval {
+        if lo <= hi {
+            Interval { lo, hi }
+        } else {
+            Interval { lo: hi, hi: lo }
+        }
+    }
+
+    /// Smallest interval containing both operands (set join).
+    pub fn join(self, other: Interval) -> Interval {
+        Interval { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi) }
+    }
+
+    /// Minkowski sum: every `a + b` with `a ∈ self`, `b ∈ other`.
+    pub fn add(self, other: Interval) -> Interval {
+        Interval { lo: self.lo + other.lo, hi: self.hi + other.hi }
+    }
+
+    /// The sum of `n` independent draws from `self` (the accumulator
+    /// abstraction: `n` products each bounded by this interval).
+    pub fn sum_of(self, n: usize) -> Interval {
+        let n = n as i64;
+        Interval { lo: self.lo * n, hi: self.hi * n }
+    }
+
+    /// Exact product interval of two intervals (corner products).
+    pub fn mul(self, other: Interval) -> Interval {
+        let c = [
+            self.lo * other.lo,
+            self.lo * other.hi,
+            self.hi * other.lo,
+            self.hi * other.hi,
+        ];
+        let mut lo = c[0];
+        let mut hi = c[0];
+        for &v in &c[1..] {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        Interval { lo, hi }
+    }
+
+    /// Does the interval contain `v`?
+    pub fn contains(self, v: i64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+
+    /// Is the interval a subset of `other`?
+    pub fn within(self, other: Interval) -> bool {
+        other.lo <= self.lo && self.hi <= other.hi
+    }
+
+    /// Smallest two's-complement bit width that represents every value in
+    /// the interval (an `n`-bit signed integer holds
+    /// `[-2^(n-1), 2^(n-1) - 1]`).
+    pub fn bits_needed(self) -> u32 {
+        for n in 1..=63u32 {
+            let lo = -(1i64 << (n - 1));
+            let hi = (1i64 << (n - 1)) - 1;
+            if self.lo >= lo && self.hi <= hi {
+                return n;
+            }
+        }
+        64
+    }
+
+    /// Does every value fit a two's-complement `i32`?
+    pub fn fits_i32(self) -> bool {
+        self.bits_needed() <= 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_and_new_normalize() {
+        assert_eq!(Interval::point(5), Interval { lo: 5, hi: 5 });
+        assert_eq!(Interval::new(7, -2), Interval { lo: -2, hi: 7 });
+    }
+
+    #[test]
+    fn join_and_add() {
+        let a = Interval::new(-3, 4);
+        let b = Interval::new(1, 10);
+        assert_eq!(a.join(b), Interval::new(-3, 10));
+        assert_eq!(a.add(b), Interval::new(-2, 14));
+    }
+
+    #[test]
+    fn mul_corner_products() {
+        // unsigned activation codes x signed weight codes
+        let acts = Interval::new(0, 255);
+        let weights = Interval::new(-127, 127);
+        let p = acts.mul(weights);
+        assert_eq!(p, Interval::new(-255 * 127, 255 * 127));
+
+        // signed x signed: the extreme is (-128) * (-127)
+        let sa = Interval::new(-128, 127);
+        let p = sa.mul(weights);
+        assert_eq!(p, Interval::new(-128 * 127, 128 * 127));
+    }
+
+    #[test]
+    fn sum_of_scales_bounds() {
+        let p = Interval::new(-32385, 32385);
+        let acc = p.sum_of(27);
+        assert_eq!(acc, Interval::new(-27 * 32385, 27 * 32385));
+        assert!(acc.fits_i32());
+    }
+
+    #[test]
+    fn bits_needed_boundaries() {
+        assert_eq!(Interval::new(0, 0).bits_needed(), 1);
+        assert_eq!(Interval::new(-1, 0).bits_needed(), 1);
+        assert_eq!(Interval::new(0, 1).bits_needed(), 2);
+        assert_eq!(Interval::new(-128, 127).bits_needed(), 8);
+        assert_eq!(Interval::new(-128, 128).bits_needed(), 9);
+        assert_eq!(Interval::new(i32::MIN as i64, i32::MAX as i64).bits_needed(), 32);
+        assert_eq!(Interval::new(0, i32::MAX as i64 + 1).bits_needed(), 33);
+    }
+
+    #[test]
+    fn within_and_contains() {
+        let outer = Interval::new(-10, 10);
+        assert!(Interval::new(-3, 4).within(outer));
+        assert!(!Interval::new(-11, 4).within(outer));
+        assert!(outer.contains(10));
+        assert!(!outer.contains(11));
+    }
+}

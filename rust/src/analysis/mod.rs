@@ -1,0 +1,295 @@
+//! Static analysis over the model IR — "predict, don't simulate" applied
+//! to the whole lowered network.
+//!
+//! Three analyses run over a shared abstract-interpretation core
+//! ([`interval`]), all purely static (no simulator, no data):
+//!
+//! 1. [`overflow`] — value-range analysis proving each layer's `i32`
+//!    accumulator safe, per-layer verdict [`OverflowVerdict`]. With an
+//!    assignment recorded, the bound folds the assigned multiplier's
+//!    error-map extremes in (the lowered LUT *is* exact + error).
+//! 2. [`consistency`] — quantization-metadata coherence: activation grids
+//!    vs. signedness, weight-tensor schemes, residual-join grid agreement
+//!    and signed-vs-unsigned multiplier bindings, reported as
+//!    `Validate`-style JSON field-path diagnostics.
+//! 3. [`variance`] — static error-variance propagation: the §3.3 error
+//!    model pushed through the network graph to one predicted
+//!    output-noise sigma per assignment, making a search candidate
+//!    screenable without running the simulator.
+//!
+//! The [`Analyze`] pass runs all three between `assign` and `lower` in
+//! the standard pipeline ([`crate::ir::lower`]) and **hard-gates**
+//! lowering: an IR with consistency diagnostics or a non-`Proven` verdict
+//! does not lower. The CLI `analyze` subcommand (and
+//! [`analyze_ir`]) run the same analyses standalone — with
+//! `--analyze-only` the CLI reports without failing the process.
+
+pub mod consistency;
+pub mod interval;
+pub mod overflow;
+pub mod variance;
+
+pub use interval::Interval;
+
+use crate::ir::{ModelIr, Pass, PassCtx};
+use crate::multipliers::{signed_catalog, unsigned_catalog, Catalog};
+use anyhow::{bail, Result};
+
+/// Per-layer overflow verdict of the value-range analysis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverflowVerdict {
+    /// The accumulator interval fits `i32` — overflow is impossible.
+    Proven,
+    /// The interval needs `bits` more than 32 bits; lowering must widen
+    /// the accumulator (not supported) or the IR must shrink the layer.
+    NeedsWidening { bits: u32 },
+    /// The activation grid is not a known 8-bit integer scheme, so the
+    /// operand-range assumptions do not apply and nothing can be proven.
+    Unknown,
+}
+
+impl OverflowVerdict {
+    /// Short stable label for reports and CI greps.
+    pub fn label(&self) -> String {
+        match self {
+            OverflowVerdict::Proven => "proven".into(),
+            OverflowVerdict::NeedsWidening { bits } => format!("needs-widening(+{bits})"),
+            OverflowVerdict::Unknown => "unknown".into(),
+        }
+    }
+}
+
+/// Analysis result for one layer.
+#[derive(Clone, Debug)]
+pub struct LayerAnalysis {
+    pub layer: String,
+    pub kind: String,
+    /// LUT entries summed per output accumulator.
+    pub acc_len: usize,
+    /// Static accumulator interval `[lo, hi]`.
+    pub lo: i64,
+    pub hi: i64,
+    pub verdict: OverflowVerdict,
+    /// Relative error std injected by this layer's multiplier.
+    pub rel_sigma: f64,
+}
+
+/// Full static-analysis report for one model.
+#[derive(Clone, Debug)]
+pub struct ModelAnalysis {
+    pub model: String,
+    /// Catalog/method of the analyzed assignment (None = exact model).
+    pub catalog: Option<String>,
+    pub method: Option<String>,
+    pub layers: Vec<LayerAnalysis>,
+    /// Field-path diagnostics from the consistency analysis (empty =
+    /// consistent).
+    pub diagnostics: Vec<String>,
+    /// Convenience flag: `diagnostics.is_empty()`.
+    pub consistent: bool,
+    /// Where per-layer sigmas came from (`variance::SOURCE_*`).
+    pub sigma_source: &'static str,
+    /// Predicted relative output-noise sigma.
+    pub predicted_sigma: f64,
+    /// False when the op tape was unknown and variance propagation fell
+    /// back to a sequential sum.
+    pub graph: bool,
+}
+
+impl ModelAnalysis {
+    /// Every layer's accumulator proven safe?
+    pub fn overflow_ok(&self) -> bool {
+        self.layers.iter().all(|l| l.verdict == OverflowVerdict::Proven)
+    }
+
+    /// Does the model pass the gate (consistent + all accumulators
+    /// proven)?
+    pub fn passed(&self) -> bool {
+        self.consistent && self.overflow_ok()
+    }
+
+    /// All gate failures as field-path-style lines: the consistency
+    /// diagnostics plus one line per non-proven layer.
+    pub fn failures(&self) -> Vec<String> {
+        let mut out = self.diagnostics.clone();
+        for (i, l) in self.layers.iter().enumerate() {
+            match l.verdict {
+                OverflowVerdict::Proven => {}
+                OverflowVerdict::NeedsWidening { bits } => out.push(format!(
+                    "layers[{i}].fan_in: accumulator interval [{}, {}] exceeds i32 \
+                     (needs {bits} more bits)",
+                    l.lo, l.hi
+                )),
+                OverflowVerdict::Unknown => out.push(format!(
+                    "layers[{i}].act_quant: grid unknown to the overflow analysis — \
+                     accumulator safety unproven"
+                )),
+            }
+        }
+        out
+    }
+}
+
+/// Run all three analyses over an IR, resolving assignments in
+/// `catalogs`. Infallible by design — problems become diagnostics /
+/// verdicts, not errors — so it can report on arbitrary parsed IR.
+pub fn analyze_ir_with(ir: &ModelIr, catalogs: &[Catalog]) -> ModelAnalysis {
+    let diagnostics = consistency::check(ir, catalogs);
+    let var = variance::analyze(ir, catalogs);
+
+    // resolve the assignment once for the overflow bounds
+    let cat = ir
+        .assignment
+        .as_ref()
+        .and_then(|a| catalogs.iter().find(|c| c.name == a.catalog));
+    let layers = ir
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let inst = ir
+                .assignment
+                .as_ref()
+                .zip(cat)
+                .and_then(|(a, c)| a.instances.get(i).and_then(|name| c.get(name)));
+            let product = match inst {
+                // the lowered LUT folds the instance's error extremes in
+                Some(inst) => overflow::product_interval_lut(
+                    &crate::multipliers::build_layer_lut(inst, l.info.act_signed),
+                ),
+                None => overflow::product_interval_exact(l.info.act_signed),
+            };
+            let n = overflow::acc_len(&l.info);
+            let acc = overflow::accumulator_interval(product, n);
+            LayerAnalysis {
+                layer: l.info.name.clone(),
+                kind: l.info.kind.clone(),
+                acc_len: n,
+                lo: acc.lo,
+                hi: acc.hi,
+                verdict: overflow::verdict(acc, consistency::known_int8_grid(l)),
+                rel_sigma: var.per_layer_rel.get(i).copied().unwrap_or(0.0),
+            }
+        })
+        .collect();
+
+    ModelAnalysis {
+        model: ir.model.clone(),
+        catalog: ir.assignment.as_ref().map(|a| a.catalog.clone()),
+        method: ir.assignment.as_ref().map(|a| a.method.clone()),
+        layers,
+        consistent: diagnostics.is_empty(),
+        diagnostics,
+        sigma_source: var.source,
+        predicted_sigma: var.predicted_sigma,
+        graph: var.graph,
+    }
+}
+
+/// [`analyze_ir_with`] over the built-in catalogs — the standalone entry
+/// point (`analyze --ir FILE`).
+pub fn analyze_ir(ir: &ModelIr) -> ModelAnalysis {
+    analyze_ir_with(ir, &[unsigned_catalog(), signed_catalog()])
+}
+
+/// The pipeline pass: runs the analyses, stores the report in
+/// [`PassCtx::analysis`], and fails the pipeline when the gate fails —
+/// this is what makes `lower()` refuse an IR whose analysis fails.
+pub struct Analyze;
+
+impl Pass for Analyze {
+    fn name(&self) -> &'static str {
+        "analyze"
+    }
+
+    fn run(&self, ir: &mut ModelIr, ctx: &mut PassCtx) -> Result<()> {
+        let analysis = analyze_ir_with(ir, &ctx.catalogs);
+        let passed = analysis.passed();
+        let failures = analysis.failures();
+        ctx.analysis = Some(analysis);
+        if !passed {
+            bail!("static analysis failed: {}", failures.join("; "));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::AssignmentIr;
+    use crate::runtime::synthetic;
+    use std::path::Path;
+
+    fn zoo_ir(model: &str) -> ModelIr {
+        let m = synthetic::manifest(Path::new("artifacts"), model).unwrap();
+        ModelIr::from_manifest(&m)
+    }
+
+    #[test]
+    fn zoo_models_pass_without_assignment() {
+        for model in synthetic::MODELS {
+            let a = analyze_ir(&zoo_ir(model));
+            assert!(a.passed(), "{model}: {:?}", a.failures());
+            assert!(a.overflow_ok(), "{model}");
+            assert_eq!(a.sigma_source, variance::SOURCE_EXACT);
+            assert!(a.layers.iter().all(|l| l.lo < 0 && l.hi > 0), "{model}");
+        }
+    }
+
+    #[test]
+    fn uniform_approx_assignment_passes_and_predicts_noise() {
+        let mut ir = zoo_ir("resnet8");
+        let n = ir.layers.len();
+        ir.assignment = Some(AssignmentIr {
+            catalog: "evo8u".into(),
+            method: "uniform".into(),
+            instances: vec!["mul8u_trc4".into(); n],
+            energy_reduction: 0.0,
+            sigma_pred_rel: vec![0.0; n],
+        });
+        let a = analyze_ir(&ir);
+        assert!(a.passed(), "{:?}", a.failures());
+        assert_eq!(a.sigma_source, variance::SOURCE_STATIC);
+        assert!(a.predicted_sigma > 0.0);
+        assert_eq!(a.catalog.as_deref(), Some("evo8u"));
+    }
+
+    #[test]
+    fn analyze_pass_gates_inconsistent_ir() {
+        use crate::ir::{PassCtx, PassPipeline};
+        let mut ir = zoo_ir("tinynet");
+        ir.layers[0].act_quant = crate::ir::QuantIr::int8_symmetric();
+        let mut ctx = PassCtx::new();
+        let err = PassPipeline::new().then(Analyze).run(&mut ir, &mut ctx).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("layers[0].act_quant.scheme"), "{msg}");
+        // the report is still available for inspection
+        let a = ctx.analysis.expect("analysis stored despite gate failure");
+        assert!(!a.passed());
+    }
+
+    #[test]
+    fn verdict_labels_are_stable() {
+        assert_eq!(OverflowVerdict::Proven.label(), "proven");
+        assert_eq!(OverflowVerdict::NeedsWidening { bits: 3 }.label(), "needs-widening(+3)");
+        assert_eq!(OverflowVerdict::Unknown.label(), "unknown");
+    }
+
+    #[test]
+    fn oversized_fan_in_needs_widening() {
+        // hand-grow a layer's fan-in past the i32-safe threshold; the
+        // verdict must flip and the gate must refuse
+        let mut ir = zoo_ir("tinynet");
+        // keep kind "fc" semantics simple: bump fan_in directly (the
+        // analysis reads fan_in, not the shape arithmetic Validate checks)
+        ir.layers[0].info.fan_in = 100_000;
+        let a = analyze_ir(&ir);
+        assert!(matches!(
+            a.layers[0].verdict,
+            OverflowVerdict::NeedsWidening { bits: 1 }
+        ));
+        assert!(!a.passed());
+        assert!(a.failures().iter().any(|f| f.contains("layers[0].fan_in")), "{:?}", a.failures());
+    }
+}

@@ -1,0 +1,140 @@
+//! Value-range / overflow analysis (analysis 1 of [`crate::analysis`]).
+//!
+//! Every approximable layer accumulates `acc_len` LUT entries into an
+//! `i32` (see `compute::lut`). The analysis bounds one LUT entry by an
+//! [`Interval`] — from the quantization grid alone when no assignment is
+//! recorded, or from the *actual* lowered LUT when one is (which folds the
+//! assigned multiplier's error-map extremes in by construction, since
+//! `layer LUT = exact products + error map`) — and scales by `acc_len` to
+//! bound the accumulator. The bound is then checked against `i32`.
+
+use super::interval::Interval;
+use super::OverflowVerdict;
+use crate::runtime::manifest::LayerInfo;
+
+/// Number of LUT entries summed into one output accumulator. For `conv`
+/// and `fc` that is the fan-in; a depthwise conv accumulates one channel's
+/// `k*k` taps only.
+pub fn acc_len(info: &LayerInfo) -> usize {
+    if info.kind == "dwconv" {
+        info.k * info.k
+    } else {
+        info.fan_in
+    }
+}
+
+/// Bound on a single exact product in the layer LUT convention: activation
+/// codes span the full 8-bit grid, weight codes clamp to `[-127, 127]`
+/// (`quant::weight_code`).
+pub fn product_interval_exact(act_signed: bool) -> Interval {
+    let acts = if act_signed {
+        Interval::new(-128, 127)
+    } else {
+        Interval::new(0, 255)
+    };
+    acts.mul(Interval::new(-127, 127))
+}
+
+/// Bound on a single LUT entry of a lowered layer: the extremes of the
+/// reachable LUT domain. Column 0 (weight code -128) is unreachable —
+/// `quant::weight_code` clamps to ±127 — so it is excluded; every
+/// activation row is reachable.
+pub fn product_interval_lut(lut: &[i32]) -> Interval {
+    debug_assert_eq!(lut.len(), 256 * 256);
+    let mut lo = i64::MAX;
+    let mut hi = i64::MIN;
+    for row in 0..256 {
+        for col in 1..256 {
+            let v = lut[row * 256 + col] as i64;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    Interval::new(lo, hi)
+}
+
+/// Accumulator bound for one layer: per-product interval scaled by the
+/// accumulation length.
+pub fn accumulator_interval(product: Interval, acc_len: usize) -> Interval {
+    product.sum_of(acc_len)
+}
+
+/// Turn an accumulator bound into a per-layer verdict. `known_grid` is
+/// false when the activation quantization is not a known 8-bit integer
+/// scheme — then the operand ranges the analysis assumed do not apply and
+/// nothing can be proven.
+pub fn verdict(acc: Interval, known_grid: bool) -> OverflowVerdict {
+    if !known_grid {
+        return OverflowVerdict::Unknown;
+    }
+    let bits = acc.bits_needed();
+    if bits <= 32 {
+        OverflowVerdict::Proven
+    } else {
+        OverflowVerdict::NeedsWidening { bits: bits - 32 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{build_layer_lut, unsigned_catalog};
+
+    #[test]
+    fn exact_lut_interval_matches_grid_interval() {
+        let cat = unsigned_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        for act_signed in [false, true] {
+            let lut = build_layer_lut(exact, act_signed);
+            assert_eq!(
+                product_interval_lut(&lut),
+                product_interval_exact(act_signed),
+                "act_signed={act_signed}"
+            );
+        }
+    }
+
+    #[test]
+    fn approx_lut_interval_folds_error_extremes() {
+        // truncation only shrinks magnitudes, so the truncated LUT's
+        // interval must sit inside the exact grid interval — and the
+        // interval must equal exact + error extremes cell-wise.
+        let cat = unsigned_catalog();
+        let inst = cat.get("mul8u_trc4").expect("trc4 in catalog");
+        let lut = build_layer_lut(inst, false);
+        let iv = product_interval_lut(&lut);
+        assert!(iv.within(product_interval_exact(false)), "{iv:?}");
+        // cross-check against a direct scan of exact + error
+        let err = crate::errormodel::layer_error_map(inst, false);
+        let mut lo = i64::MAX;
+        let mut hi = i64::MIN;
+        for row in 0..256 {
+            for col in 1..256 {
+                let x = row as i64;
+                let w = col as i64 - 128;
+                let v = x * w + err[row * 256 + col] as i64;
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+        }
+        assert_eq!(iv, Interval::new(lo, hi));
+    }
+
+    #[test]
+    fn small_fan_in_is_proven_large_needs_widening() {
+        let p = product_interval_exact(false);
+        assert!(matches!(
+            verdict(accumulator_interval(p, 27), true),
+            OverflowVerdict::Proven
+        ));
+        // 255*127*100_000 ≈ 3.24e9 > i32::MAX: one extra bit suffices
+        assert!(matches!(
+            verdict(accumulator_interval(p, 100_000), true),
+            OverflowVerdict::NeedsWidening { bits: 1 }
+        ));
+        assert!(matches!(
+            verdict(accumulator_interval(p, 27), false),
+            OverflowVerdict::Unknown
+        ));
+    }
+}

@@ -1,0 +1,244 @@
+//! Static error-variance propagation (analysis 3 of [`crate::analysis`]).
+//!
+//! Per layer, the injected noise is summarized as a *relative* error std:
+//! the §3.3 error-model sigma of the assigned multiplier divided by the
+//! sigma of the exact accumulator signal under the same operand
+//! distributions. Operand distributions come from the IR itself — actual
+//! weight codes when the parameter payload is inline, a uniform prior over
+//! the reachable grid otherwise, and always a uniform activation prior
+//! (the analysis is data-free by design).
+//!
+//! The per-layer figures are then pushed through the reconstructed op
+//! tape: a layer adds its squared relative sigma to the running relative
+//! variance (unity noise gain — the layer transports upstream noise at
+//! roughly the magnitude of its signal), a rectifier halves the noise
+//! power (a zero-mean perturbation loses its negative half), pooling and
+//! reshapes preserve it (conservative: fully-correlated noise), and a
+//! residual join adds the two branch variances (conservative: independent
+//! branches). The result is a single predicted output-noise sigma —
+//! enough to *rank* assignments without running the simulator, which is
+//! all the search screen needs.
+
+use crate::errormodel::{estimate_layer, layer_error_map, layer_product_map, LayerOperands};
+use crate::ir::{ModelIr, ParamsIr};
+use crate::multipliers::{Catalog, Instance};
+use crate::quant;
+use crate::simulator::net::{build_ops, Activ, Op};
+
+use super::overflow::acc_len;
+
+/// Where the per-layer sigmas came from.
+pub const SOURCE_EXACT: &str = "exact";
+pub const SOURCE_ASSIGNMENT: &str = "assignment";
+pub const SOURCE_STATIC: &str = "static-uniform";
+
+/// Result of the variance analysis.
+#[derive(Clone, Debug)]
+pub struct VarianceResult {
+    /// Relative error std per layer (0.0 = exact).
+    pub per_layer_rel: Vec<f64>,
+    /// Predicted relative output-noise sigma after graph propagation.
+    pub predicted_sigma: f64,
+    /// One of [`SOURCE_EXACT`] / [`SOURCE_ASSIGNMENT`] / [`SOURCE_STATIC`].
+    pub source: &'static str,
+    /// False when the op tape could not be reconstructed and the
+    /// propagation fell back to a sequential sum over the layer tape.
+    pub graph: bool,
+}
+
+/// Weight column codes for layer `i`: quantized from the inline payload
+/// when available, else a uniform prior over the reachable columns
+/// (1..=255 — column 0 is unreachable, weights clamp to ±127).
+fn weight_cols(ir: &ModelIr, i: usize) -> Vec<u8> {
+    if let ParamsIr::Inline(flat) = &ir.params {
+        let path = format!("{}/w", ir.layers[i].info.name);
+        if let Some(t) = ir.tensors.iter().find(|t| t.leaf.path == path) {
+            let (lo, hi) = (t.leaf.offset, t.leaf.offset + t.size());
+            if hi <= flat.len() {
+                let (codes, _s_w) = quant::quantize_weights(&flat[lo..hi]);
+                return codes.iter().map(|&c| (c as i32 + 128) as u8).collect();
+            }
+        }
+    }
+    (1..=255).collect()
+}
+
+/// Relative error std of one (layer, instance) pair under the data-free
+/// operand priors described in the module docs.
+pub fn layer_rel_sigma(ir: &ModelIr, i: usize, inst: &Instance) -> f64 {
+    let info = &ir.layers[i].info;
+    let err = layer_error_map(inst, info.act_signed);
+    if err.iter().all(|&e| e == 0) {
+        return 0.0;
+    }
+    let ops = LayerOperands {
+        weight_cols: weight_cols(ir, i),
+        patches: vec![(0..=255).collect()],
+        fan_in: acc_len(info),
+        s_x: 1.0,
+        s_w: 1.0,
+    };
+    let noise = estimate_layer(&err, &ops).sigma_e;
+    let signal = estimate_layer(&layer_product_map(info.act_signed), &ops).sigma_e;
+    noise / signal.max(1e-9)
+}
+
+fn act_factor(act: Activ) -> f64 {
+    match act {
+        Activ::None => 1.0,
+        Activ::Relu | Activ::Relu6 => 0.5,
+    }
+}
+
+/// Propagate per-layer relative variances through the op tape to one
+/// output figure. Falls back to a sequential sum when the tape cannot be
+/// reconstructed (returns `graph = false` in [`analyze`]).
+fn propagate(ops: &[Op], rel: &[f64]) -> f64 {
+    let mut cur = 0.0f64;
+    let mut saved: Vec<f64> = Vec::new();
+    for op in ops {
+        match op {
+            Op::Layer { idx, act, .. } => {
+                cur += rel.get(*idx).copied().unwrap_or(0.0).powi(2);
+                cur *= act_factor(*act);
+            }
+            Op::MaxPool { .. } | Op::GlobalAvg | Op::Flatten => {}
+            Op::Save => saved.push(cur),
+            Op::Shortcut { layer } => {
+                if let (Some(l), Some(top)) = (layer, saved.last_mut()) {
+                    *top += rel.get(*l).copied().unwrap_or(0.0).powi(2);
+                }
+            }
+            Op::AddSaved { act } => {
+                cur += saved.pop().unwrap_or(0.0);
+                cur *= act_factor(*act);
+            }
+        }
+    }
+    cur.sqrt()
+}
+
+/// Run the variance analysis. `catalogs` resolves the recorded
+/// assignment; unresolvable instances contribute 0.0 (the consistency
+/// analysis reports them separately).
+pub fn analyze(ir: &ModelIr, catalogs: &[Catalog]) -> VarianceResult {
+    let n = ir.layers.len();
+    let (per_layer_rel, source) = match &ir.assignment {
+        None => (vec![0.0; n], SOURCE_EXACT),
+        Some(a) => {
+            let predicted = a.sigma_pred_rel.len() == n
+                && !a.sigma_pred_rel.is_empty()
+                && a.sigma_pred_rel.iter().all(|&s| s > 0.0);
+            if predicted {
+                (a.sigma_pred_rel.clone(), SOURCE_ASSIGNMENT)
+            } else {
+                let cat = catalogs.iter().find(|c| c.name == a.catalog);
+                let rel = (0..n)
+                    .map(|i| {
+                        cat.and_then(|c| a.instances.get(i).and_then(|name| c.get(name)))
+                            .map(|inst| layer_rel_sigma(ir, i, inst))
+                            .unwrap_or(0.0)
+                    })
+                    .collect();
+                (rel, SOURCE_STATIC)
+            }
+        }
+    };
+    let infos: Vec<_> = ir.layers.iter().map(|l| l.info.clone()).collect();
+    match build_ops(&ir.arch, &infos) {
+        Ok(ops) => VarianceResult {
+            predicted_sigma: propagate(&ops, &per_layer_rel),
+            per_layer_rel,
+            source,
+            graph: true,
+        },
+        Err(_) => {
+            // unknown arch: no graph — conservative sequential sum
+            let total: f64 = per_layer_rel.iter().map(|r| r * r).sum();
+            VarianceResult {
+                predicted_sigma: total.sqrt(),
+                per_layer_rel,
+                source,
+                graph: false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::AssignmentIr;
+    use crate::multipliers::{unsigned_catalog, Catalog};
+    use crate::runtime::synthetic;
+    use std::path::Path;
+
+    fn zoo_ir(model: &str) -> ModelIr {
+        let m = synthetic::manifest(Path::new("artifacts"), model).unwrap();
+        ModelIr::from_manifest(&m)
+    }
+
+    fn with_uniform(mut ir: ModelIr, cat: &Catalog, inst: &str) -> ModelIr {
+        let n = ir.layers.len();
+        ir.assignment = Some(AssignmentIr {
+            catalog: cat.name.clone(),
+            method: "uniform".into(),
+            instances: vec![inst.into(); n],
+            energy_reduction: 0.0,
+            sigma_pred_rel: vec![0.0; n],
+        });
+        ir
+    }
+
+    #[test]
+    fn exact_assignment_predicts_zero_noise() {
+        let cat = unsigned_catalog();
+        let ir = with_uniform(zoo_ir("tinynet"), &cat, "mul8u_exact");
+        let v = analyze(&ir, &[cat]);
+        assert_eq!(v.source, SOURCE_STATIC);
+        assert!(v.graph);
+        assert_eq!(v.predicted_sigma, 0.0);
+        assert!(v.per_layer_rel.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn approx_assignment_predicts_positive_noise() {
+        let cat = unsigned_catalog();
+        let ir = with_uniform(zoo_ir("tinynet"), &cat, "mul8u_trc4");
+        let v = analyze(&ir, &[cat]);
+        assert!(v.predicted_sigma > 0.0, "{v:?}");
+        assert!(v.predicted_sigma.is_finite());
+        assert!(v.per_layer_rel.iter().all(|&r| r > 0.0 && r.is_finite()), "{v:?}");
+    }
+
+    #[test]
+    fn no_assignment_is_exact_source() {
+        let cat = unsigned_catalog();
+        let v = analyze(&zoo_ir("resnet8"), &[cat]);
+        assert_eq!(v.source, SOURCE_EXACT);
+        assert_eq!(v.predicted_sigma, 0.0);
+    }
+
+    #[test]
+    fn assignment_sigmas_take_precedence() {
+        let cat = unsigned_catalog();
+        let mut ir = with_uniform(zoo_ir("tinynet"), &cat, "mul8u_trc4");
+        let n = ir.layers.len();
+        if let Some(a) = ir.assignment.as_mut() {
+            a.sigma_pred_rel = vec![0.1; n];
+        }
+        let v = analyze(&ir, &[cat]);
+        assert_eq!(v.source, SOURCE_ASSIGNMENT);
+        assert_eq!(v.per_layer_rel, vec![0.1; n]);
+        assert!(v.predicted_sigma > 0.0);
+    }
+
+    #[test]
+    fn residual_graph_propagation_is_finite() {
+        let cat = unsigned_catalog();
+        let ir = with_uniform(zoo_ir("resnet8"), &cat, "mul8u_trc4");
+        let v = analyze(&ir, &[cat]);
+        assert!(v.graph);
+        assert!(v.predicted_sigma.is_finite() && v.predicted_sigma > 0.0, "{v:?}");
+    }
+}

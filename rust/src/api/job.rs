@@ -36,6 +36,11 @@ pub enum JobSpec {
     Catalog,
     /// Artifact inventory and platform facts.
     Info,
+    /// Static analysis of a model's IR: per-layer overflow verdicts,
+    /// quantization-consistency diagnostics and a predicted output-noise
+    /// sigma. `instance` analyzes a uniform assignment of that catalog
+    /// instance; `None` analyzes the exact (unassigned) model.
+    Analyze { model: String, instance: Option<String> },
 }
 
 impl JobSpec {
@@ -54,6 +59,7 @@ impl JobSpec {
             JobSpec::Eval { .. } => "eval",
             JobSpec::Catalog => "catalog",
             JobSpec::Info => "info",
+            JobSpec::Analyze { .. } => "analyze",
         }
     }
 
@@ -72,6 +78,8 @@ impl JobSpec {
             | JobSpec::Eval { model } => vec![model.as_str()],
             JobSpec::Table1 { .. } => vec!["resnet8"],
             JobSpec::Homogeneity { .. } => vec!["vgg16"],
+            // analyze never trains: it only reads the model's IR
+            JobSpec::Analyze { .. } => Vec::new(),
             JobSpec::Catalog | JobSpec::Info => Vec::new(),
         }
     }
@@ -90,6 +98,7 @@ pub enum JobResult {
     Eval(EvalReport),
     Catalog(CatalogReport),
     Info(InfoReport),
+    Analyze(AnalyzeReport),
 }
 
 impl JobResult {
@@ -107,6 +116,7 @@ impl JobResult {
             JobResult::Eval(_) => "eval",
             JobResult::Catalog(_) => "catalog",
             JobResult::Info(_) => "info",
+            JobResult::Analyze(_) => "analyze",
         }
     }
 
@@ -159,6 +169,13 @@ mod tests {
             "table2"
         );
         assert_eq!(JobSpec::Catalog.name(), "catalog");
+    }
+
+    #[test]
+    fn analyze_spec_is_model_free_for_resume() {
+        let spec = JobSpec::Analyze { model: "resnet20".into(), instance: None };
+        assert_eq!(spec.name(), "analyze");
+        assert!(spec.models().is_empty());
     }
 
     #[test]

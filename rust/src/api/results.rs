@@ -220,3 +220,11 @@ pub struct InfoReport {
     /// recovered panics, injected faults) — see [`crate::robust::health`].
     pub health: crate::robust::HealthSnapshot,
 }
+
+/// Static-analysis report for one model ([`crate::analysis`]): per-layer
+/// overflow verdicts, consistency diagnostics and the predicted
+/// output-noise sigma.
+#[derive(Clone, Debug)]
+pub struct AnalyzeReport {
+    pub analysis: crate::analysis::ModelAnalysis,
+}

@@ -265,6 +265,10 @@ impl ApproxSession {
             }
             JobSpec::Catalog => Ok(JobResult::Catalog(experiments::catalog_job())),
             JobSpec::Info => experiments::info_job(self).map(JobResult::Info),
+            JobSpec::Analyze { model, instance } => {
+                experiments::analyze_job(self, &model, instance.as_deref())
+                    .map(JobResult::Analyze)
+            }
         };
         let result = out.map_err(|e| AgnError::job(job, e))?;
         self.jobs_run += 1;
@@ -294,6 +298,7 @@ impl ApproxSession {
             JobSpec::Search { model, .. } | JobSpec::Eval { model } => {
                 non_empty("model", model.len())
             }
+            JobSpec::Analyze { model, .. } => non_empty("model", model.len()),
             JobSpec::Homogeneity { .. } | JobSpec::Catalog | JobSpec::Info => Ok(()),
         }
     }
@@ -315,7 +320,11 @@ impl ApproxSession {
             .map_err(|source| AgnError::Artifacts { model: model.to_string(), source })?;
             self.pipelines.insert(model.to_string(), pipe);
         }
-        Ok((self.pipelines.get_mut(model).unwrap(), &mut *self.engine))
+        let pipe = self
+            .pipelines
+            .get_mut(model)
+            .ok_or_else(|| AgnError::invalid_spec(format!("pipeline for {model:?} vanished")))?;
+        Ok((pipe, &mut *self.engine))
     }
 
     /// Lift a model this session serves into validated IR

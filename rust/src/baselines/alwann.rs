@@ -85,7 +85,7 @@ fn crowding(pop: &[Candidate], members: &[usize]) -> Vec<(usize, f64)> {
     let mut dist: Vec<(usize, f64)> = members.iter().map(|&i| (i, 0.0)).collect();
     for key in 0..2 {
         let get = |c: &Candidate| if key == 0 { c.energy } else { c.error };
-        dist.sort_by(|a, b| get(&pop[a.0]).partial_cmp(&get(&pop[b.0])).unwrap());
+        dist.sort_by(|a, b| get(&pop[a.0]).total_cmp(&get(&pop[b.0])));
         let lo = get(&pop[dist[0].0]);
         let hi = get(&pop[dist[dist.len() - 1].0]);
         let span = (hi - lo).max(1e-12);
@@ -177,7 +177,7 @@ pub fn nsga2_search(
                 selected.extend(&members);
             } else {
                 let mut cd = crowding(&pop, &members);
-                cd.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                cd.sort_by(|a, b| b.1.total_cmp(&a.1));
                 for (i, _) in cd.into_iter().take(cfg.population - selected.len()) {
                     selected.push(i);
                 }

@@ -45,7 +45,7 @@ pub fn best_within_budget(
     results
         .iter()
         .filter(|r| baseline_top1 - r.top1 <= budget_pp / 100.0 + 1e-9)
-        .max_by(|a, b| a.energy_reduction.partial_cmp(&b.energy_reduction).unwrap())
+        .max_by(|a, b| a.energy_reduction.total_cmp(&b.energy_reduction))
 }
 
 #[cfg(test)]

@@ -74,7 +74,7 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t.elapsed().as_secs_f64());
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp);
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let result = BenchResult {
             name: name.to_string(),
@@ -94,8 +94,9 @@ impl Bench {
             fmt_time(result.min_s),
             iters
         );
+        let idx = self.results.len();
         self.results.push(result);
-        self.results.last().unwrap()
+        &self.results[idx]
     }
 
     /// Report a derived throughput for the last result (and record it for

@@ -4,8 +4,16 @@
 //!
 //! Semantics are identical by construction: activation row codes in
 //! [0, 255], weight column codes = weight code + 128, i32 accumulation of
-//! `lut[row * 256 + col]`. All accumulation is **wrapping** — the exact and
-//! LUT paths share one overflow behavior in debug and release builds.
+//! `lut[row * 256 + col]`.
+//!
+//! Overflow policy: the **LUT paths** accumulate with `wrapping_add` —
+//! a LUT cell is arbitrary modeled-hardware output (an approximate
+//! multiplier may return any i32), so wraparound is part of the modeled
+//! behavior, and debug/release must agree bit-for-bit. The **exact path**
+//! is different: its products are bounded (|x·w| <= 255·128) and the
+//! analysis pass ([`crate::analysis::overflow`]) proves the accumulator
+//! fits i32 before lowering, so overflow there is a bug, caught by a
+//! `debug_assert!` (release builds keep the wrapping bit pattern).
 //!
 //! Each kernel comes in two forms sharing one per-row body:
 //! * the serial form (`approx_matmul`, `exact_matmul`, `approx_dw`) —
@@ -47,6 +55,11 @@ fn approx_rows(
 }
 
 /// Rows of the exact integer matmul on the same operand encoding.
+///
+/// The per-step product cannot overflow (|xv| <= 255, |w| <= 128, so
+/// |xv * w| <= 32640 fits easily); accumulator overflow is ruled out
+/// statically by the analysis pass for every lowered model, so it is
+/// asserted in debug builds rather than silently wrapped.
 #[inline]
 fn exact_rows(
     x_codes: &[u8],
@@ -67,7 +80,14 @@ fn exact_rows(
             }
             let wrow = &w_cols[ki * n..(ki + 1) * n];
             for (o, &wc) in orow.iter_mut().zip(wrow.iter()) {
-                *o = (*o).wrapping_add(xv.wrapping_mul(wc as i32 - 128));
+                let prod = xv * (wc as i32 - 128);
+                debug_assert!(
+                    (*o).checked_add(prod).is_some(),
+                    "exact accumulator overflow: acc={} + prod={prod} at k={k} \
+                     (the analyze pass proves this cannot happen for lowered IR)",
+                    *o,
+                );
+                *o = (*o).wrapping_add(prod);
             }
         }
     }
@@ -165,9 +185,9 @@ pub fn approx_matmul_naive(
 }
 
 /// Exact integer matmul on the same operand encoding (reference / fast path
-/// when the layer is mapped to the accurate multiplier) — serial. Uses the
-/// same wrapping accumulation as the LUT path, so the two cannot diverge in
-/// release-vs-debug overflow behavior.
+/// when the layer is mapped to the accurate multiplier) — serial. Products
+/// use ordinary arithmetic (they cannot overflow); accumulator overflow is
+/// statically excluded by the analyze pass and debug-asserted here.
 pub fn exact_matmul(
     x_codes: &[u8],
     w_cols: &[u8],
@@ -277,16 +297,56 @@ mod tests {
         }
     }
 
+    // k large enough to overflow i32 with max-magnitude products:
+    // 255 * 127 * 70000 > 2^31 — an input the analyze pass would reject
+    // with NeedsWidening, so it can only reach the kernel through a bug.
+    const OVERFLOW_K: usize = 70_000;
+
+    #[cfg(debug_assertions)]
     #[test]
-    fn exact_matmul_wraps_instead_of_panicking() {
-        // k large enough to overflow i32 with max-magnitude products:
-        // 255 * 127 * 70000 > 2^31. Wrapping semantics must hold in every
-        // profile (this test would abort under checked arithmetic).
-        let k = 70_000usize;
-        let x = vec![255u8; k];
-        let w = vec![255u8; k]; // code 255 -> weight 127
-        let acc = exact_matmul(&x, &w, false, 1, k, 1);
-        let want = (0..k).fold(0i32, |a, _| a.wrapping_add(255 * 127));
+    #[should_panic(expected = "exact accumulator overflow")]
+    fn exact_matmul_overflow_is_caught_in_debug() {
+        let x = vec![255u8; OVERFLOW_K];
+        let w = vec![255u8; OVERFLOW_K]; // code 255 -> weight 127
+        let _ = exact_matmul(&x, &w, false, 1, OVERFLOW_K, 1);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn exact_matmul_overflow_wraps_in_release() {
+        // release keeps the historical wrapping bit pattern (no abort, no
+        // UB) so deployment behavior is unchanged even on un-analyzed input
+        let x = vec![255u8; OVERFLOW_K];
+        let w = vec![255u8; OVERFLOW_K];
+        let acc = exact_matmul(&x, &w, false, 1, OVERFLOW_K, 1);
+        let want = (0..OVERFLOW_K).fold(0i32, |a, _| a.wrapping_add(255 * 127));
         assert_eq!(acc[0], want);
+    }
+
+    #[test]
+    fn exact_matmul_bit_identical_to_wrapping_reference() {
+        // regression for the wrapping_* -> ordinary-ops rewrite: on
+        // non-overflowing operands (everything the analyze pass admits)
+        // the kernel must match a naive always-wrapping reference exactly
+        for act_signed in [false, true] {
+            for (m, k, n) in [(3, 27, 8), (5, 576, 4), (1, 1, 1)] {
+                let x: Vec<u8> = (0..m * k).map(|i| ((i * 37 + 11) % 256) as u8).collect();
+                let w: Vec<u8> = (0..k * n).map(|i| ((i * 91 + 3) % 256) as u8).collect();
+                let got = exact_matmul(&x, &w, act_signed, m, k, n);
+                let mut want = vec![0i32; m * n];
+                for mi in 0..m {
+                    for ni in 0..n {
+                        for ki in 0..k {
+                            let xc = x[mi * k + ki] as i32;
+                            let xv = if act_signed { xc - 128 } else { xc };
+                            let wv = w[ki * n + ni] as i32 - 128;
+                            want[mi * n + ni] =
+                                want[mi * n + ni].wrapping_add(xv.wrapping_mul(wv));
+                        }
+                    }
+                }
+                assert_eq!(got, want, "act_signed={act_signed} m={m} k={k} n={n}");
+            }
+        }
     }
 }

@@ -108,7 +108,10 @@ pub fn table1(session: &mut ApproxSession, mc_trials: usize) -> Result<Table1Rep
             let info = &layer.info;
             let err_map = layer_error_map(inst, info.act_signed);
             let lut = build_layer_lut(inst, info.act_signed);
-            let cap = caps.iter().find(|c| c.layer == li).unwrap();
+            let cap = caps
+                .iter()
+                .find(|c| c.layer == li)
+                .ok_or_else(|| anyhow::anyhow!("capture_forward returned no capture for layer {li}"))?;
             let gt = ground_truth_sigma(cap, &layer.w_cols, info, &lut);
             if gt == 0.0 {
                 continue; // degenerate point (exact-on-this-data), skip
@@ -552,8 +555,7 @@ pub fn homogeneity(session: &mut ApproxSession, lambda: f32) -> Result<Homogenei
         best.sort_by(|&a, &b| {
             (cands[a].energy_reduction - target)
                 .abs()
-                .partial_cmp(&(cands[b].energy_reduction - target).abs())
-                .unwrap()
+                .total_cmp(&(cands[b].energy_reduction - target).abs())
         });
         for &ci in best.iter().take(2) {
             let c = &cands[ci];
@@ -660,6 +662,33 @@ pub fn catalog_job() -> CatalogReport {
         })
         .collect();
     CatalogReport { catalogs }
+}
+
+/// Static analysis of one model's IR ([`crate::analysis`]). With an
+/// `instance`, a uniform assignment of that catalog instance is recorded
+/// first (via the `assign` pass, so the analyzed IR is exactly what
+/// lowering would see); without one the exact model is analyzed. Never
+/// trains or simulates — the report is produced from the IR alone.
+pub fn analyze_job(
+    session: &ApproxSession,
+    model: &str,
+    instance: Option<&str>,
+) -> Result<AnalyzeReport> {
+    let mut ir = session.export_ir(model)?;
+    let catalogs = vec![unsigned_catalog(), signed_catalog()];
+    if let Some(name) = instance {
+        let cat = catalogs
+            .iter()
+            .find(|c| c.get(name).is_some())
+            .ok_or_else(|| anyhow::anyhow!("unknown instance {name:?} in any catalog"))?;
+        let mut ctx = crate::ir::PassCtx::new();
+        crate::ir::PassPipeline::new()
+            .then(crate::ir::Validate)
+            .then(crate::ir::Assign::uniform(cat, name))
+            .run(&mut ir, &mut ctx)?;
+    }
+    let analysis = crate::analysis::analyze_ir_with(&ir, &catalogs);
+    Ok(AnalyzeReport { analysis })
 }
 
 /// Model inventory (on-disk artifacts + synthetic zoo) + platform facts.

@@ -33,7 +33,7 @@ pub fn pareto_split(points: &[Point]) -> (Vec<Point>, Vec<Point>) {
             front.push(*p);
         }
     }
-    front.sort_by(|a, b| a.energy_reduction.partial_cmp(&b.energy_reduction).unwrap());
+    front.sort_by(|a, b| a.energy_reduction.total_cmp(&b.energy_reduction));
     (front, dominated)
 }
 
@@ -43,7 +43,7 @@ pub fn best_within_loss(points: &[Point], baseline: f64, budget_pp: f64) -> Opti
     points
         .iter()
         .filter(|p| (baseline - p.accuracy) * 100.0 <= budget_pp + 1e-9)
-        .max_by(|a, b| a.energy_reduction.partial_cmp(&b.energy_reduction).unwrap())
+        .max_by(|a, b| a.energy_reduction.total_cmp(&b.energy_reduction))
         .copied()
 }
 

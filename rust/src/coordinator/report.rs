@@ -86,6 +86,7 @@ pub fn render(result: &JobResult) -> String {
         JobResult::Eval(r) => render_eval(r),
         JobResult::Catalog(r) => render_catalog(r),
         JobResult::Info(r) => render_info(r),
+        JobResult::Analyze(r) => render_analyze(r),
     }
 }
 
@@ -288,6 +289,42 @@ fn render_info(r: &InfoReport) -> String {
     out
 }
 
+fn render_analyze(r: &AnalyzeReport) -> String {
+    let a = &r.analysis;
+    let title = match (&a.catalog, &a.method) {
+        (Some(c), Some(m)) => format!("Static analysis: {} ({m} assignment, catalog {c})", a.model),
+        _ => format!("Static analysis: {} (no assignment: exact multipliers)", a.model),
+    };
+    let mut t = Table::new(&title, &["layer", "kind", "acc_len", "acc interval", "overflow", "rel sigma"]);
+    for l in &a.layers {
+        t.row(vec![
+            l.layer.clone(),
+            l.kind.clone(),
+            l.acc_len.to_string(),
+            format!("[{}, {}]", l.lo, l.hi),
+            l.verdict.label(),
+            format!("{:.4}", l.rel_sigma),
+        ]);
+    }
+    let mut out = t.render();
+    if a.consistent {
+        out.push_str("quantization consistency: ok\n");
+    } else {
+        out.push_str("quantization consistency: FAILED\n");
+        for d in &a.diagnostics {
+            out.push_str(&format!("  {d}\n"));
+        }
+    }
+    out.push_str(&format!(
+        "predicted output-noise sigma (relative): {:.4} (source: {}{})\n",
+        a.predicted_sigma,
+        a.sigma_source,
+        if a.graph { "" } else { ", sequential fallback" }
+    ));
+    out.push_str(&format!("analysis: {}\n", if a.passed() { "PASS" } else { "FAIL" }));
+    out
+}
+
 // ===========================================================================
 // JSON rendering
 
@@ -304,6 +341,7 @@ pub fn to_json(result: &JobResult) -> Json {
         JobResult::Eval(r) => eval_json(r),
         JobResult::Catalog(r) => catalog_json(r),
         JobResult::Info(r) => info_json(r),
+        JobResult::Analyze(r) => analyze_json(r),
     }
 }
 
@@ -580,6 +618,43 @@ fn info_json(r: &InfoReport) -> Json {
                 ("faults_injected", Json::num(r.health.faults_injected as f64)),
             ]),
         ),
+    ])
+}
+
+fn analyze_json(r: &AnalyzeReport) -> Json {
+    let a = &r.analysis;
+    Json::obj(vec![
+        ("model", Json::str(a.model.clone())),
+        ("catalog", a.catalog.clone().map(Json::str).unwrap_or(Json::Null)),
+        ("method", a.method.clone().map(Json::str).unwrap_or(Json::Null)),
+        (
+            "layers",
+            Json::Arr(
+                a.layers
+                    .iter()
+                    .map(|l| {
+                        Json::obj(vec![
+                            ("layer", Json::str(l.layer.clone())),
+                            ("kind", Json::str(l.kind.clone())),
+                            ("acc_len", Json::num(l.acc_len as f64)),
+                            ("acc_lo", Json::num(l.lo as f64)),
+                            ("acc_hi", Json::num(l.hi as f64)),
+                            ("verdict", Json::str(l.verdict.label())),
+                            ("rel_sigma", Json::num(l.rel_sigma)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("consistent", Json::Bool(a.consistent)),
+        (
+            "diagnostics",
+            Json::Arr(a.diagnostics.iter().map(Json::str).collect()),
+        ),
+        ("sigma_source", Json::str(a.sigma_source)),
+        ("predicted_sigma", Json::num(a.predicted_sigma)),
+        ("graph_propagation", Json::Bool(a.graph)),
+        ("passed", Json::Bool(a.passed())),
     ])
 }
 

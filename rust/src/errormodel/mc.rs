@@ -36,7 +36,7 @@ impl HistSampler {
 
     fn draw(&self, rng: &mut Pcg32) -> u8 {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        match self.cdf.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) | Err(i) => i.min(255) as u8,
         }
     }

@@ -28,10 +28,41 @@ pub fn layer_error_map(
     err
 }
 
+/// Exact product map in the *layer* operand convention (same indexing as
+/// [`layer_error_map`]): `z[row*256+col] = x * w`. Feeding this to
+/// [`estimate_layer`] in place of an error map yields the moments of the
+/// exact accumulator *signal* under the same operand distributions — the
+/// normalizer the static variance analysis divides error sigmas by.
+pub fn layer_product_map(act_signed: bool) -> Vec<i32> {
+    let mut z = vec![0i32; 256 * 256];
+    for row in 0..256 {
+        let x = if act_signed { row as i32 - 128 } else { row as i32 };
+        for col in 0..256 {
+            z[row * 256 + col] = x * (col as i32 - 128);
+        }
+    }
+    z
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::multipliers::unsigned_catalog;
+
+    #[test]
+    fn layer_product_map_matches_error_map_identity() {
+        // lut = product + error by definition, on both grids
+        let cat = unsigned_catalog();
+        let inst = cat.get("mul8u_trc4").expect("trc4 in catalog");
+        for act_signed in [false, true] {
+            let lut = crate::multipliers::build_layer_lut(inst, act_signed);
+            let z = layer_product_map(act_signed);
+            let e = layer_error_map(inst, act_signed);
+            for i in 0..lut.len() {
+                assert_eq!(lut[i], z[i] + e[i], "i={i} act_signed={act_signed}");
+            }
+        }
+    }
 
     #[test]
     fn exact_layer_error_map_is_zero() {

@@ -8,8 +8,9 @@
 //!
 //! * [`ModelIr`] — the deterministic JSON schema ([`SCHEMA_VERSION`]),
 //!   a lossless superset of the runtime [`crate::runtime::Manifest`].
-//! * [`passes`] — `validate` → `assign` → `lower` → `resource_check`,
-//!   each dumpable via `--dump-ir`.
+//! * [`passes`] — `validate` → `assign` → `analyze` → `lower` →
+//!   `resource_check`, each dumpable via `--dump-ir` (the analyze pass
+//!   lives in [`crate::analysis`]).
 //! * [`TargetDesc`] — the capability description `resource_check` gates
 //!   against.
 //!

@@ -1,4 +1,5 @@
-//! The IR pass pipeline: `validate` → `assign` → `lower` → `resource_check`.
+//! The IR pass pipeline:
+//! `validate` → `assign` → `analyze` → `lower` → `resource_check`.
 //!
 //! Each pass is a small [`Pass`] object over a mutable [`ModelIr`] plus a
 //! [`PassCtx`] carrying the catalogs, the deployment [`TargetDesc`], and
@@ -36,6 +37,9 @@ pub struct PassCtx {
     pub luts: Option<Vec<Vec<i32>>>,
     /// Set by [`Lower`]: resolved catalog instance index per layer.
     pub instances: Option<Vec<usize>>,
+    /// Set by [`crate::analysis::Analyze`]: the static-analysis report
+    /// (stored even when the gate fails, so callers can inspect it).
+    pub analysis: Option<crate::analysis::ModelAnalysis>,
 }
 
 impl PassCtx {
@@ -46,6 +50,7 @@ impl PassCtx {
             dump_dir: None,
             luts: None,
             instances: None,
+            analysis: None,
         }
     }
 
@@ -731,9 +736,13 @@ impl LoweredModel {
     }
 }
 
-/// Run the standard pipeline `validate → assign → lower → resource_check`
-/// over a manifest and return the lowered model. `dump_dir` enables
-/// per-pass `--dump-ir` snapshots.
+/// Run the standard pipeline
+/// `validate → assign → analyze → lower → resource_check` over a manifest
+/// and return the lowered model. The analyze pass hard-gates: an IR with
+/// quantization-consistency diagnostics or an unproven accumulator bound
+/// does not lower (use `analyze --analyze-only` on the CLI to inspect
+/// such an IR without failing). `dump_dir` enables per-pass `--dump-ir`
+/// snapshots.
 pub fn lower(
     manifest: &Manifest,
     assign: Assign,
@@ -746,12 +755,19 @@ pub fn lower(
     PassPipeline::new()
         .then(Validate)
         .then(assign)
+        .then(crate::analysis::Analyze)
         .then(Lower)
         .then(ResourceCheck)
         .run(&mut ir, &mut ctx)?;
     let manifest = ir.to_manifest(&manifest.dir)?;
-    let luts = ctx.luts.take().expect("lower pass populates ctx.luts");
-    let instances = ctx.instances.take().expect("lower pass populates ctx.instances");
+    let luts = ctx
+        .luts
+        .take()
+        .ok_or_else(|| anyhow!("lower pass did not populate ctx.luts"))?;
+    let instances = ctx
+        .instances
+        .take()
+        .ok_or_else(|| anyhow!("lower pass did not populate ctx.instances"))?;
     Ok(LoweredModel { ir, manifest, luts, instances })
 }
 
@@ -890,8 +906,9 @@ mod tests {
             vec![
                 "tinynet.00_validate.ir.json",
                 "tinynet.01_assign.ir.json",
-                "tinynet.02_lower.ir.json",
-                "tinynet.03_resource_check.ir.json",
+                "tinynet.02_analyze.ir.json",
+                "tinynet.03_lower.ir.json",
+                "tinynet.04_resource_check.ir.json",
             ]
         );
         // snapshots are valid digest-stripped IR

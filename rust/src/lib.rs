@@ -79,9 +79,21 @@
 //! leaves with quantization descriptors, program signatures, per-layer
 //! multiplier assignments and resource hints, with lossless
 //! `Manifest ↔ IR` conversion. Lowering is a pass pipeline
-//! (`validate → assign → lower → resource_check`, each dumpable with
-//! `--dump-ir`); `export-ir`/`import-ir` on the CLI move models across
-//! machines as single files.
+//! (`validate → assign → analyze → lower → resource_check`, each dumpable
+//! with `--dump-ir`); `export-ir`/`import-ir` on the CLI move models
+//! across machines as single files.
+//!
+//! ## Static analysis
+//!
+//! [`analysis`] proves properties of an IR *before* anything executes:
+//! value-range analysis over integer intervals (per-layer
+//! accumulator-overflow verdicts `proven` / `needs-widening` /
+//! `unknown`, folding the assigned multiplier's error-map extremes in),
+//! quantization-consistency checking with `Validate`-style field-path
+//! diagnostics, and static error-variance propagation to one predicted
+//! output-noise sigma per assignment. The `analyze` pass hard-gates
+//! [`ir::lower`]; `cargo run -- analyze --model resnet20` (or
+//! `--ir file.ir.json`) runs it standalone.
 //!
 //! ## Robustness
 //!
@@ -97,6 +109,7 @@
 //! See DESIGN.md for the system inventory and README.md for the quickstart
 //! and feature matrix.
 
+pub mod analysis;
 pub mod api;
 pub mod baselines;
 pub mod benchkit;

@@ -9,7 +9,9 @@
 //!
 //! Run `agn-approx help` for the command list.
 
-use agn_approx::api::{AgnError, ApproxSession, JobResult, JobSpec, RunConfig, render, save_json};
+use agn_approx::api::{
+    AgnError, AnalyzeReport, ApproxSession, JobResult, JobSpec, RunConfig, render, save_json,
+};
 use agn_approx::coordinator::experiments;
 use agn_approx::runtime::BackendKind;
 use agn_approx::util::cli::Args;
@@ -49,6 +51,8 @@ COMMANDS
   train             QAT-train a model and report validation accuracy
   search            one gradient-search run; prints learned sigma_l
   eval              evaluate the cached QAT baseline
+  analyze           static analysis of a model's IR: overflow proofs,
+                    quantization consistency, predicted output-noise sigma
   resume <job>      re-run <job> resuming training from checkpoints; fails
                     when the cache dir holds no *.ckpt.json snapshot
   export-ir         write servable models as versioned IR files (*.ir.json)
@@ -70,6 +74,23 @@ MODEL IR (export-ir / import-ir)
   import-ir --ir FILE                validate + materialize the model
             --target T               extra capability gate before import
                                      (native-cpu | tiny-edge)
+
+STATIC ANALYSIS (analyze)
+  Runs the analysis pass suite standalone: per-layer value-range /
+  accumulator-overflow verdicts (proven | needs-widening | unknown),
+  quantization-consistency checks with Validate-style field-path
+  diagnostics, and static error-variance propagation to one predicted
+  output-noise sigma. The same suite hard-gates every lowering
+  (validate -> assign -> analyze -> lower -> resource_check); a failing
+  report makes the command exit non-zero unless --analyze-only is given.
+
+  analyze --model M       analyze model M's exported IR      [resnet20]
+          --instance I    uniform-assign catalog instance I before
+                          analyzing (folds its error-map extremes into
+                          the overflow intervals and the noise sigma)
+          --ir FILE       analyze an IR file directly (sessionless: no
+                          artifacts, no backend, no cache dir)
+          --analyze-only  report only; exit 0 even when analysis fails
 
 COMMON FLAGS
   --backend B          execution backend         [native]
@@ -94,7 +115,7 @@ COMMON FLAGS
   --no-baselines       table2: skip ALWANN/LVRM/uniform
   --mc-trials N        table1 MC trials          [2000]
   --dump-ir DIR        write per-pass IR snapshots whenever a job lowers a
-                       model (validate/assign/lower/resource_check)
+                       model (validate/assign/analyze/lower/resource_check)
 
 ROBUSTNESS (see README \"Robustness\")
   --checkpoint-every N digest-verified training snapshot every N steps into
@@ -113,7 +134,7 @@ Unrecognized --flags warn instead of silently running defaults.
 
 /// Boolean flags: never consume the following token, so they can precede
 /// the command (`agn-approx --paper table2`).
-const SWITCHES: &[&str] = &["paper", "no-baselines", "strip-params"];
+const SWITCHES: &[&str] = &["paper", "no-baselines", "strip-params", "analyze-only"];
 
 /// Every flag the CLI understands (typo guard; see `Args::warn_unknown`).
 const KNOWN_FLAGS: &[&str] = &[
@@ -146,6 +167,9 @@ const KNOWN_FLAGS: &[&str] = &[
     "max-retries",
     "retry-backoff",
     "fault-plan",
+    "model",
+    "instance",
+    "analyze-only",
 ];
 
 fn run_config(args: &Args) -> RunConfig {
@@ -208,6 +232,13 @@ fn job_spec(cmd: &str, args: &Args) -> Option<JobSpec> {
         }),
         "catalog" => Some(JobSpec::Catalog),
         "info" => Some(JobSpec::Info),
+        "analyze" => Some(JobSpec::Analyze {
+            model: args
+                .get("model")
+                .map(String::from)
+                .unwrap_or_else(|| args.str_or("models", "resnet20")),
+            instance: args.get("instance").map(String::from),
+        }),
         _ => None,
     }
 }
@@ -292,6 +323,31 @@ fn import_ir_cmd(args: &Args) -> Result<(), AgnError> {
     Ok(())
 }
 
+/// `analyze --ir FILE`: sessionless static analysis of an IR file on disk
+/// (no artifacts, no backend). Exit status follows the verdict unless
+/// `--analyze-only` downgrades failure to report-only.
+fn analyze_ir_cmd(args: &Args, ir_file: &str) -> Result<(), AgnError> {
+    let path = PathBuf::from(ir_file);
+    let text = std::fs::read_to_string(&path)
+        .map_err(|source| AgnError::Io { path: path.clone(), source })?;
+    let ir = agn_approx::ir::parse_and_validate(&text).map_err(|source| AgnError::Artifacts {
+        model: path.display().to_string(),
+        source,
+    })?;
+    let analysis = agn_approx::analysis::analyze_ir(&ir);
+    let passed = analysis.passed();
+    let failures = analysis.failures();
+    print!("{}", render(&JobResult::Analyze(AnalyzeReport { analysis })));
+    if !passed && !args.has("analyze-only") {
+        return Err(AgnError::invalid_spec(format!(
+            "static analysis failed for {}: {}",
+            path.display(),
+            failures.join("; ")
+        )));
+    }
+    Ok(())
+}
+
 fn real_main() -> Result<(), AgnError> {
     let args = Args::from_env_with_switches(SWITCHES);
     args.warn_unknown(KNOWN_FLAGS);
@@ -307,6 +363,13 @@ fn real_main() -> Result<(), AgnError> {
         // before the JobSpec flow
         "export-ir" => return export_ir_cmd(&args),
         "import-ir" => return import_ir_cmd(&args),
+        // `analyze --ir FILE` never needs a session; without --ir it falls
+        // through to the JobSpec flow (exports the model's IR first)
+        "analyze" => {
+            if let Some(ir_file) = args.get("ir") {
+                return analyze_ir_cmd(&args, ir_file);
+            }
+        }
         _ => {}
     }
     let Some(spec) = job_spec(cmd, &args) else {
@@ -323,6 +386,17 @@ fn real_main() -> Result<(), AgnError> {
     let print_stats = matches!(spec, JobSpec::Eval { .. });
     let result = if resuming { session.resume(spec)? } else { session.run(spec)? };
     print!("{}", render(&result));
+
+    // the analyze job gates the exit status on its verdict, mirroring the
+    // in-pipeline Analyze pass that refuses to lower a failing IR
+    if let JobResult::Analyze(report) = &result {
+        if !report.analysis.passed() && !args.has("analyze-only") {
+            return Err(AgnError::invalid_spec(format!(
+                "static analysis failed: {}",
+                report.analysis.failures().join("; ")
+            )));
+        }
+    }
 
     if result.is_paper_artifact() {
         let path = save_json(&results_dir, &result).map_err(|source| AgnError::Io {

@@ -76,10 +76,8 @@ pub fn predict_all(
         let mut maps: [Option<Vec<i32>>; 2] = [None, None];
         for (li, ops) in operands.iter().enumerate() {
             let grid = act_signed[li] as usize;
-            if maps[grid].is_none() {
-                maps[grid] = Some(layer_error_map(inst, act_signed[li]));
-            }
-            let agg = row_aggregates(maps[grid].as_ref().unwrap(), &ops.weight_cols);
+            let map = maps[grid].get_or_insert_with(|| layer_error_map(inst, act_signed[li]));
+            let agg = row_aggregates(map, &ops.weight_cols);
             table[li][ii] = estimate_with_aggregates(&agg, ops).sigma_e_float;
         }
     }
@@ -183,6 +181,9 @@ pub fn assignment_luts(
 }
 
 /// Test-support helpers shared across the test suites.
+// only reachable from tests (doc(hidden), not gated on cfg(test) so the
+// integration suites can use it); panics here are test failures
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 #[doc(hidden)]
 pub mod tests_support {
     use super::Manifest;

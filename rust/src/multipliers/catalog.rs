@@ -29,6 +29,9 @@ impl Catalog {
     }
 
     /// Index of the exact instance (always present).
+    // both built-in catalogs start from MulKind::Exact and the assertion
+    // below is a constructor invariant, not a runtime condition
+    #[allow(clippy::expect_used)]
     pub fn exact_index(&self) -> usize {
         self.instances
             .iter()
@@ -52,7 +55,7 @@ pub fn unsigned_catalog() -> Catalog {
     assert_eq!(kinds.len(), 36, "unsigned catalog must have 36 instances");
     let mut instances: Vec<Instance> =
         kinds.into_iter().map(|k| inst("mul8u", k, false)).collect();
-    instances.sort_by(|a, b| a.power.partial_cmp(&b.power).unwrap());
+    instances.sort_by(|a, b| a.power.total_cmp(&b.power));
     Catalog { name: "evo8u".into(), instances }
 }
 
@@ -111,7 +114,7 @@ pub fn signed_catalog() -> Catalog {
     for i in &mut instances {
         i.power = (i.power * 0.92 + 0.08).min(1.0);
     }
-    instances.sort_by(|a, b| a.power.partial_cmp(&b.power).unwrap());
+    instances.sort_by(|a, b| a.power.total_cmp(&b.power));
     Catalog { name: "evo8s".into(), instances }
 }
 

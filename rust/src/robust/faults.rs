@@ -121,12 +121,18 @@ static ACTIVE: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
 static FIRED: Mutex<Vec<String>> = Mutex::new(Vec::new());
 static PANIC_ARMED: AtomicBool = AtomicBool::new(false);
 
+/// Fault bookkeeping is plain data; the injected worker panic below can
+/// poison these locks, which must not wedge later queries — recover.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// Install `plan` process-wide, replacing any previous plan. Loudly: an
 /// armed fault plan is never an ambient default.
 pub fn install(plan: &FaultPlan) {
-    let mut active = ACTIVE.lock().unwrap();
+    let mut active = lock(&ACTIVE);
     *active = plan.faults.clone();
-    FIRED.lock().unwrap().clear();
+    lock(&FIRED).clear();
     PANIC_ARMED.store(false, Ordering::SeqCst);
     for f in active.iter() {
         log::warn!("fault injection armed: {f}");
@@ -135,29 +141,29 @@ pub fn install(plan: &FaultPlan) {
 
 /// Drop all pending faults and the fired record.
 pub fn clear() {
-    ACTIVE.lock().unwrap().clear();
-    FIRED.lock().unwrap().clear();
+    lock(&ACTIVE).clear();
+    lock(&FIRED).clear();
     PANIC_ARMED.store(false, Ordering::SeqCst);
 }
 
 /// Spec strings of the faults that actually fired, in firing order.
 pub fn fired() -> Vec<String> {
-    FIRED.lock().unwrap().clone()
+    lock(&FIRED).clone()
 }
 
 /// Faults still waiting to fire (an armed-but-unfired worker panic counts).
 pub fn pending() -> usize {
-    ACTIVE.lock().unwrap().len() + PANIC_ARMED.load(Ordering::SeqCst) as usize
+    lock(&ACTIVE).len() + PANIC_ARMED.load(Ordering::SeqCst) as usize
 }
 
 fn take(pred: impl Fn(&Fault) -> bool) -> Option<Fault> {
-    let mut active = ACTIVE.lock().unwrap();
+    let mut active = lock(&ACTIVE);
     let idx = active.iter().position(pred)?;
     Some(active.remove(idx))
 }
 
 fn note_fired(f: &Fault) {
-    FIRED.lock().unwrap().push(f.to_string());
+    lock(&FIRED).push(f.to_string());
     super::health::note_fault_injected();
 }
 
@@ -180,10 +186,12 @@ pub fn on_train_step(step: usize) -> bool {
 /// Pool-worker hook: panics exactly once if a worker panic is armed.
 /// Called only from *spawned* workers, never from the caller thread, so
 /// the serial path is immune by construction.
+// the panic IS the injected fault — the whole point of this hook
+#[allow(clippy::panic)]
 pub fn injected_worker_panic_check() {
     if PANIC_ARMED.swap(false, Ordering::SeqCst) {
         // the arming step is not known here; the record is the fault class
-        FIRED.lock().unwrap().push("panic".to_string());
+        lock(&FIRED).push("panic".to_string());
         super::health::note_fault_injected();
         panic!("injected compute-worker panic (fault plan)");
     }

@@ -518,7 +518,9 @@ pub fn evaluate(
                     Value::vec_f32(flat.to_vec()),
                     xv,
                     yv,
-                    lut_value.clone().unwrap(),
+                    lut_value
+                        .clone()
+                        .ok_or_else(|| anyhow::anyhow!("eval_approx mode without layer LUTs"))?,
                     Value::vec_f32(act_scales.to_vec()),
                 ],
             )?,

@@ -4,6 +4,11 @@
 //! forms by construction. Existing callers of `simulator::matmul::*` keep
 //! working unchanged; see EXPERIMENTS.md §Perf for the measured loop-order
 //! and threading effects.
+//!
+//! Overflow policy (see [`crate::compute::lut`] for the full statement):
+//! LUT accumulation wraps (modeled hardware behavior); the exact path
+//! debug-asserts no accumulator overflow, which the analyze pass proves
+//! statically for every lowered model.
 
 pub use crate::compute::lut::{
     approx_dw, approx_dw_pool, approx_matmul, approx_matmul_naive, approx_matmul_pool,

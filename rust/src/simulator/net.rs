@@ -130,6 +130,9 @@ impl SimNet {
 
     /// Forward pass. `act_scales` are the frozen per-layer activation
     /// scales from calibration (absmax; converted per grid here).
+    // residual-stack underflow is a build_ops invariant violation (a tape
+    // that pops without a matching Save is a bug), so abort loudly
+    #[allow(clippy::expect_used)]
     pub fn forward(
         &self,
         x: &TensorF,
@@ -188,6 +191,9 @@ impl SimNet {
 
     /// Run one approximable layer: quantize input, integer matmul under the
     /// layer's LUT, dequantize. Returns the pre-BN pre-activation output.
+    // layer kinds are validated when the net is built; an unknown kind
+    // reaching execution is a construction bug, so abort loudly
+    #[allow(clippy::panic)]
     fn apply_layer(
         &self,
         idx: usize,
@@ -304,7 +310,9 @@ impl SimNet {
         let (Some(gamma), Some(beta)) = (&layer.gamma, &layer.beta) else {
             return x;
         };
-        let c = *x.shape.last().unwrap();
+        let Some(&c) = x.shape.last() else {
+            return x; // rank-0 tensor: nothing to normalize
+        };
         let rows = x.data.len() / c;
         let mut mean = vec![0f64; c];
         for r in 0..rows {
@@ -424,7 +432,7 @@ fn sequential_ops(layers: &[LayerInfo]) -> Result<Vec<Op>> {
         }
     }
     // conv -> fc transition
-    let last = &layers[*convs.last().unwrap()];
+    let last = &layers[convs[convs.len() - 1]];
     let fc0 = &layers[fcs[0]];
     let (h, w) = last.out_hw;
     if fc0.cin == last.cout {
@@ -467,7 +475,8 @@ fn resnet_ops(layers: &[LayerInfo]) -> Result<Vec<Op>> {
     }
     anyhow::ensure!(!prefixes.is_empty(), "resnet has no blocks");
     for base in prefixes {
-        let c1 = find(&format!("{base}_conv1")).unwrap();
+        let c1 = find(&format!("{base}_conv1"))
+            .ok_or_else(|| anyhow!("{base} missing conv1"))?;
         let c2 = find(&format!("{base}_conv2"))
             .ok_or_else(|| anyhow!("{base} missing conv2"))?;
         let sh = find(&format!("{base}_short"));
@@ -544,7 +553,7 @@ pub fn accuracy(logits: &TensorF, labels: &[i32], k: usize) -> (usize, usize) {
     for bi in 0..b {
         let row = &logits.data[bi * c..(bi + 1) * c];
         let mut idx: Vec<usize> = (0..c).collect();
-        idx.sort_by(|&i, &j| row[j].partial_cmp(&row[i]).unwrap());
+        idx.sort_by(|&i, &j| row[j].total_cmp(&row[i]));
         if idx[0] == labels[bi] as usize {
             top1 += 1;
         }

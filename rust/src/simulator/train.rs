@@ -167,6 +167,9 @@ pub struct FwdPass {
 }
 
 /// One forward pass in the given mode.
+// residual-stack underflow is a build_ops invariant violation, not a
+// runtime condition: an op tape that pops without a matching Save is a bug
+#[allow(clippy::expect_used)]
 pub fn forward(net: &TrainNet, x: &TensorF, mode: &Mode) -> FwdPass {
     let l = net.layers.len();
     let mut absmax = vec![0f32; l];
@@ -427,6 +430,9 @@ pub struct Grads {
 
 /// Backpropagate `dlogits` through the recorded pass. Straight-through
 /// float gradients for the quantized matmuls (see module docs).
+// see forward(): stack underflow / op-cache mismatch are tape-construction
+// invariants, violations are bugs and must abort loudly
+#[allow(clippy::expect_used)]
 pub fn backward(net: &TrainNet, pass: &FwdPass, dlogits: &TensorF) -> Grads {
     let mut grads = Grads {
         flat: vec![0f32; net.param_count],

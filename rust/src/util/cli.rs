@@ -31,13 +31,9 @@ impl Args {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     args.flags.insert(k.to_string(), v.to_string());
-                } else if !switches.contains(&rest)
-                    && iter
-                        .peek()
-                        .map(|n| !n.starts_with("--"))
-                        .unwrap_or(false)
+                } else if let Some(v) =
+                    iter.next_if(|n| !switches.contains(&rest) && !n.starts_with("--"))
                 {
-                    let v = iter.next().unwrap();
                     args.flags.insert(rest.to_string(), v);
                 } else {
                     args.flags.insert(rest.to_string(), FLAG_SET.to_string());

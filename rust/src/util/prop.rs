@@ -88,6 +88,8 @@ pub fn assert_prop(cond: bool, msg: impl Into<String>) -> PropResult {
 
 /// Run `cases` random cases of `prop`. Panics with the seed and case number
 /// of the first failure so it can be replayed with `check_case`.
+// test harness: the panic is the failure report, same as assert! in a #[test]
+#[allow(clippy::panic)]
 pub fn check<F: FnMut(&mut Gen) -> PropResult>(cases: usize, mut prop: F) {
     let base_seed = std::env::var("PROP_SEED")
         .ok()
@@ -105,6 +107,8 @@ pub fn check<F: FnMut(&mut Gen) -> PropResult>(cases: usize, mut prop: F) {
 }
 
 /// Replay a single failing case.
+// test harness: the panic is the failure report, same as assert! in a #[test]
+#[allow(clippy::panic)]
 pub fn check_case<F: FnMut(&mut Gen) -> PropResult>(seed: u64, case: usize, mut prop: F) {
     let mut g = Gen { rng: Pcg32::new(seed, case as u64), case };
     if let Err(msg) = prop(&mut g) {

@@ -24,7 +24,9 @@ pub struct Timings {
 
 impl Timings {
     pub fn add(&self, name: &str, seconds: f64) {
-        let mut entries = self.entries.lock().expect("timings poisoned");
+        // a panicked worker must not take the whole timing report with it:
+        // recover the (plain-data) contents from a poisoned lock
+        let mut entries = self.entries.lock().unwrap_or_else(|p| p.into_inner());
         if let Some(e) = entries.iter_mut().find(|(n, _)| n == name) {
             e.1 += seconds;
         } else {
@@ -42,7 +44,7 @@ impl Timings {
     pub fn get(&self, name: &str) -> f64 {
         self.entries
             .lock()
-            .expect("timings poisoned")
+            .unwrap_or_else(|p| p.into_inner())
             .iter()
             .find(|(n, _)| n == name)
             .map(|(_, s)| *s)
@@ -51,7 +53,7 @@ impl Timings {
 
     /// Snapshot of all segments in first-insert order.
     pub fn entries(&self) -> Vec<(String, f64)> {
-        self.entries.lock().expect("timings poisoned").clone()
+        self.entries.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 
     /// Fold another accumulator into this one (per-thread accumulation:

@@ -1,0 +1,186 @@
+//! Static-analysis suite integration tests.
+//!
+//! The load-bearing property: the *dynamic* accumulator extremes observed
+//! while simulating a model must lie inside the *static* per-layer
+//! intervals the analysis pass proves — for every zoo model, at thread
+//! counts {1, 4} (the pool is bit-identical by construction, so the
+//! extremes cannot depend on threading), on both the exact path and a
+//! uniform approximate assignment. Plus: goldens analyze clean, the
+//! analyze pass hard-gates lowering, and quantization-inconsistent IR is
+//! rejected with field-path diagnostics.
+
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+use agn_approx::analysis::{analyze_ir, Interval, OverflowVerdict};
+use agn_approx::compute::{ComputeConfig, ComputePool};
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::ir::{Assign, PassCtx, PassPipeline, Validate};
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
+use agn_approx::runtime::{create_backend, synthetic, BackendKind, ExecBackend};
+use agn_approx::simulator::{approx_matmul, LayerCapture, LutSet, SimNet};
+use agn_approx::tensor::TensorF;
+use std::path::PathBuf;
+
+fn captures_for(model: &str, threads: usize) -> (SimNet, Vec<LayerCapture>) {
+    let engine = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let manifest = engine.manifest(model).unwrap();
+    let flat = manifest.load_init_params().unwrap();
+    let spec = DatasetSpec::synth_cifar((manifest.input_shape[0], manifest.input_shape[1]), 11);
+    let data = Dataset::load(&spec, Split::Val);
+    let (xs, _ys) = data.eval_batch(manifest.batch, 0);
+    let x = TensorF::from_vec(
+        &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+        xs,
+    );
+    let pool = ComputePool::new(ComputeConfig::with_threads(threads));
+    let net = SimNet::with_pool(&manifest, &flat, pool).unwrap();
+    // static intervals hold for ANY in-range activation codes, so a fixed
+    // calibration scale is as strong a witness as a calibrated one
+    let absmax = vec![1.0f32; manifest.num_layers];
+    let mut caps = Vec::new();
+    let _ = net.forward(&x, &absmax, &LutSet::Exact, Some(&mut caps));
+    (net, caps)
+}
+
+/// Static per-layer accumulator intervals from the model's exported IR
+/// (exact model: no assignment).
+fn static_intervals(model: &str) -> Vec<Interval> {
+    let engine = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let ir = engine.export_ir(model).unwrap();
+    let a = analyze_ir(&ir);
+    assert!(a.passed(), "{model}: exact zoo IR must analyze clean: {:?}", a.failures());
+    a.layers.iter().map(|l| Interval::new(l.lo, l.hi)).collect()
+}
+
+#[test]
+fn dynamic_exact_extremes_within_static_intervals_all_models() {
+    for model in synthetic::MODELS {
+        let intervals = static_intervals(model);
+        for threads in [1usize, 4] {
+            let (_net, caps) = captures_for(model, threads);
+            assert!(!caps.is_empty(), "{model}: forward produced no captures");
+            for cap in &caps {
+                let iv = intervals[cap.layer];
+                let (mut lo, mut hi) = (i64::MAX, i64::MIN);
+                for &a in &cap.exact_acc {
+                    lo = lo.min(a as i64);
+                    hi = hi.max(a as i64);
+                }
+                assert!(
+                    iv.contains(lo) && iv.contains(hi),
+                    "{model} layer {} threads {threads}: dynamic acc [{lo}, {hi}] \
+                     escapes static interval {iv:?}",
+                    cap.layer
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dynamic_approx_extremes_within_lut_static_intervals() {
+    // uniform mul8u_trc4 assignment: the static interval now folds the
+    // instance's error extremes in via its lowered LUT; recomputing each
+    // captured layer's accumulators under that LUT must stay inside
+    let cat = unsigned_catalog();
+    let inst = "mul8u_trc4";
+    for model in ["tinynet", "resnet8"] {
+        let engine = create_backend(BackendKind::Native, "artifacts").unwrap();
+        let mut ir = engine.export_ir(model).unwrap();
+        let mut ctx = PassCtx::new();
+        PassPipeline::new()
+            .then(Validate)
+            .then(Assign::uniform(&cat, inst))
+            .run(&mut ir, &mut ctx)
+            .unwrap();
+        let a = analyze_ir(&ir);
+        assert!(a.passed(), "{model}+{inst}: {:?}", a.failures());
+        assert_eq!(a.catalog.as_deref(), Some("evo8u"));
+        assert!(a.predicted_sigma > 0.0 && a.predicted_sigma.is_finite());
+
+        let (net, caps) = captures_for(model, 1);
+        for cap in &caps {
+            let layer = &net.layers[cap.layer];
+            if layer.info.kind == "dwconv" {
+                continue; // captures are reshaped for dw; zoo has none
+            }
+            let lut = build_layer_lut(cat.get(inst).unwrap(), layer.info.act_signed);
+            let acc = approx_matmul(&cap.x_codes, &layer.w_cols, &lut, cap.m, cap.k, cap.n);
+            let la = &a.layers[cap.layer];
+            let iv = Interval::new(la.lo, la.hi);
+            for &v in &acc {
+                assert!(
+                    iv.contains(v as i64),
+                    "{model} layer {}: approx acc {v} escapes lut interval {iv:?}",
+                    cap.layer
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_irs_analyze_clean() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden_ir");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "json").unwrap_or(false) {
+            let text = std::fs::read_to_string(&path).unwrap();
+            let ir = agn_approx::ir::parse_and_validate(&text).unwrap();
+            let a = analyze_ir(&ir);
+            assert!(a.passed(), "{path:?}: {:?}", a.failures());
+            assert!(a.layers.iter().all(|l| l.verdict == OverflowVerdict::Proven));
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, synthetic::MODELS.len(), "one golden per zoo model");
+}
+
+fn fixture(name: &str) -> String {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/malformed_ir")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+}
+
+#[test]
+fn grid_mismatch_fixture_passes_validate_but_fails_analysis() {
+    // the fixture is structurally valid IR...
+    let ir = agn_approx::ir::parse_and_validate(&fixture("quant_grid_mismatch.json")).unwrap();
+    // ...but declares a signed activation grid on an unsigned layer, which
+    // only the consistency analysis catches, with a field-path diagnostic
+    let a = analyze_ir(&ir);
+    assert!(!a.passed());
+    assert!(
+        a.diagnostics.iter().any(|d| d.contains("layers[0].act_quant.scheme")),
+        "missing field-path diagnostic: {:?}",
+        a.diagnostics
+    );
+}
+
+#[test]
+fn analyze_pass_gates_the_lowering_pipeline() {
+    let mut ir =
+        agn_approx::ir::parse_and_validate(&fixture("quant_grid_mismatch.json")).unwrap();
+    let mut ctx = PassCtx::new();
+    let err = PassPipeline::new()
+        .then(Validate)
+        .then(agn_approx::analysis::Analyze)
+        .run(&mut ir, &mut ctx)
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("static analysis failed"), "{msg}");
+    assert!(msg.contains("layers[0].act_quant.scheme"), "{msg}");
+    // the report is still available for diagnosis even though the gate
+    // failed the pipeline
+    assert!(ctx.analysis.is_some());
+}
+
+#[test]
+fn bad_scheme_fixture_is_rejected_at_validate() {
+    let err = agn_approx::ir::parse_and_validate(&fixture("bad_quant_scheme.json"))
+        .expect_err("unknown scheme must fail validation");
+    assert!(format!("{err:#}").contains("layers[0].act_quant.scheme"));
+}

@@ -5,6 +5,10 @@
 //! Everything here runs on the native backend with synthetic in-memory
 //! manifests — no `artifacts/` directory, no skips.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{AgnError, ApproxSession, JobResult, JobSpec, RunConfig};
 
 fn tiny_cfg() -> RunConfig {

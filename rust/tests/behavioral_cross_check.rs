@@ -6,6 +6,10 @@
 //! load-bearing consistency check in the suite. Runs on the synthetic
 //! tinynet manifest — no artifacts, no skips.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
 use agn_approx::runtime::{create_backend, BackendKind, ExecBackend, Manifest, Value};

@@ -3,6 +3,10 @@
 //! field-path errors, and the auto-resume path treats every one of them as
 //! "start fresh" — never a silent partial resume, never an abort.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::robust::checkpoint::{self, Checkpoint};
 use std::path::PathBuf;
 

@@ -5,6 +5,10 @@
 //! near-perfect. Runs on the synthetic tinynet manifest (native backend
 //! path) — no artifacts, no skips.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::errormodel::layer_error_map;
 use agn_approx::errormodel::mc::mc_sigma_e;

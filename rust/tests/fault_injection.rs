@@ -7,6 +7,10 @@
 //! Fault and health state is process-global, so every test serializes on
 //! one mutex and starts from `faults::clear()` + `health::reset()`.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{AgnError, ApproxSession, FaultPlan, JobSpec, RunConfig};
 use agn_approx::multipliers::unsigned_catalog;
 use agn_approx::robust::{checkpoint, faults, health, integrity};

@@ -7,6 +7,10 @@
 //! committed goldens. Schema changes must bump `SCHEMA_VERSION` and
 //! regenerate (see tests/golden_ir/README.md).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::ir::ModelIr;
 use agn_approx::runtime::{create_backend, synthetic, BackendKind, ExecBackend};
 use std::path::PathBuf;

@@ -3,6 +3,10 @@
 //! bit-identical to evaluating the in-memory synthetic model — at 1 and 4
 //! compute threads (the determinism contract composes with the IR path).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::ApproxSession;
 use agn_approx::compute::ComputeConfig;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};

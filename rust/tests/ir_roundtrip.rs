@@ -4,6 +4,10 @@
 //! additionally fuzzed with awkward f32 bit patterns (negative zero,
 //! denormals) through the in-repo property harness.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::ir::{self, Assign, ModelIr, ParamsIr, TargetDesc};
 use agn_approx::multipliers::unsigned_catalog;
 use agn_approx::runtime::{create_backend, synthetic, BackendKind, ExecBackend};

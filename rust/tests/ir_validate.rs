@@ -2,6 +2,10 @@
 //! rejected with an error naming the offending JSON field path, and the
 //! valid fixture must pass `parse_and_validate` untouched.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use std::path::PathBuf;
 
 fn fixture(name: &str) -> String {
@@ -30,6 +34,7 @@ fn malformed_fixtures_are_rejected_with_field_paths() {
         ("tensor_offset_gap.json", "tensors[1].offset"),
         ("negative_offset.json", "tensors[0].offset"),
         ("bad_fan_in.json", "layers[0].fan_in"),
+        ("bad_quant_scheme.json", "layers[0].act_quant.scheme"),
         ("bad_program_signature.json", "programs.eval"),
         ("unknown_assignment_instance.json", "assignment.instances[0]"),
         ("params_count_mismatch.json", "params.count"),

@@ -8,6 +8,10 @@
 //! 2. it proves the native backend can actually serve every model the
 //!    suites rely on (so there is nothing left to skip *for*).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
 use std::path::Path;
 

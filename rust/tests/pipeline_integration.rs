@@ -6,6 +6,10 @@
 //! no skips. Asserts structural invariants, not accuracies (step counts
 //! are minimal).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{ApproxSession, RunConfig};
 use agn_approx::matching::assignment_luts;
 use agn_approx::multipliers::unsigned_catalog;

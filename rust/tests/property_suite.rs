@@ -6,6 +6,10 @@
 //! the serial kernels across thread counts {1, 2, 4, 8} and odd chunk
 //! boundaries (randomized shapes land mid-chunk on purpose).
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::compute::{self, ComputeConfig, ComputePool};
 use agn_approx::coordinator::pareto::{self, Point};
 use agn_approx::errormodel::layer_error_map;

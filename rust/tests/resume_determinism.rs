@@ -5,6 +5,10 @@
 //! sigma bits. Covers the QAT and AGN-search stages on tinynet and resnet8;
 //! CI runs the suite at `AGN_THREADS=1` and `AGN_THREADS=4`.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::api::{AgnError, ApproxSession, FaultPlan, RunConfig};
 use agn_approx::robust::{checkpoint, faults, health};
 use std::path::{Path, PathBuf};

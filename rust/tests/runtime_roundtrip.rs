@@ -7,6 +7,10 @@
 //! With `--features pjrt` and built artifacts the same assertions hold on
 //! the PJRT backend — the program contract is backend-independent.
 
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
 use agn_approx::compute::ComputeConfig;
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::runtime::{
