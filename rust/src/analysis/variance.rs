@@ -154,7 +154,7 @@ pub fn analyze(ir: &ModelIr, catalogs: &[Catalog]) -> VarianceResult {
         },
         Err(_) => {
             // unknown arch: no graph — conservative sequential sum
-            let total: f64 = per_layer_rel.iter().map(|r| r * r).sum();
+            let total = crate::compute::reduce::sum_f64(per_layer_rel.iter().map(|r| r * r));
             VarianceResult {
                 predicted_sigma: total.sqrt(),
                 per_layer_rel,

@@ -10,7 +10,7 @@ use crate::datasets::DatasetCache;
 use crate::robust::{self, FaultPlan, HealthSnapshot};
 use crate::runtime::{create_backend_with, BackendKind, EngineStats, ExecBackend};
 use anyhow::Context as _;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Aggregate accounting of a session, snapshot via [`ApproxSession::stats`].
@@ -148,7 +148,7 @@ impl SessionBuilder {
             cache_dir,
             cfg: self.cfg,
             compute,
-            pipelines: HashMap::new(),
+            pipelines: BTreeMap::new(),
             datasets: DatasetCache::default(),
             jobs_run: 0,
         })
@@ -178,7 +178,10 @@ pub struct ApproxSession {
     /// Compute-layer configuration shared by the backend and every
     /// per-model pipeline (simulator sweeps, operand collection).
     compute: ComputeConfig,
-    pipelines: HashMap<String, Pipeline>,
+    /// Ordered so any future iteration (bulk eval, session reports) is
+    /// deterministic by construction — the lint (AGN-D1) bans iterating
+    /// hash-ordered state.
+    pipelines: BTreeMap<String, Pipeline>,
     /// Loaded synthetic datasets, shared across pipelines with the same
     /// spec (the ResNet family shares one SynthCIFAR copy).
     datasets: DatasetCache,

@@ -52,10 +52,7 @@ impl Bench {
         Bench {
             group: group.to_string(),
             results: Vec::new(),
-            budget_s: std::env::var("BENCH_BUDGET_S")
-                .ok()
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(1.0),
+            budget_s: crate::util::env::read_parsed("BENCH_BUDGET_S", 1.0),
             min_iters: 3,
         }
     }
@@ -75,7 +72,7 @@ impl Bench {
             samples.push(t.elapsed().as_secs_f64());
         }
         samples.sort_by(f64::total_cmp);
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mean = crate::util::stats::mean(&samples);
         let result = BenchResult {
             name: name.to_string(),
             iters,

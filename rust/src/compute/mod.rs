@@ -29,6 +29,7 @@
 pub mod gemm;
 pub mod lut;
 pub mod pool;
+pub mod reduce;
 
 pub use gemm::{col2im_pool, gemm, gemm_at_acc, gemm_bt};
 pub use lut::{

@@ -61,10 +61,7 @@ impl ComputeConfig {
     /// bit-identical across thread counts, "all cores" is a safe default —
     /// the CI determinism lanes pin `AGN_THREADS=1` and `AGN_THREADS=4`.
     pub fn from_env() -> ComputeConfig {
-        let env = std::env::var("AGN_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(0);
+        let env = crate::util::env::read_parsed("AGN_THREADS", 0usize);
         if env > 0 {
             return ComputeConfig { threads: env };
         }

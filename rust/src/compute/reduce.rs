@@ -1,0 +1,72 @@
+//! Order-pinned float reductions — the one home for float `sum`/`fold`
+//! (lint rule AGN-D5; see README §Determinism contract).
+//!
+//! Float addition does not associate, so a reduction's value depends on its
+//! order. These helpers are plain left-to-right folds — bit-identical to
+//! `Iterator::sum` over the same sequence — *not* a different algorithm.
+//! The point is a single named, greppable reduction site: when a future
+//! kernel parallelizes or vectorizes a reduction, the chunk-order merge
+//! discipline (see [`crate::compute::pool`]) has exactly one place to land,
+//! and `tools/agn-lint` can mechanically flag every stray `.sum()` that
+//! would silently pick up a new order.
+
+/// Left-to-right f32 sum (bit-identical to `.sum::<f32>()` on the same
+/// iteration order).
+pub fn sum_f32<I: IntoIterator<Item = f32>>(xs: I) -> f32 {
+    let mut acc = 0.0;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Left-to-right f64 sum (bit-identical to `.sum::<f64>()` on the same
+/// iteration order).
+pub fn sum_f64<I: IntoIterator<Item = f64>>(xs: I) -> f64 {
+    let mut acc = 0.0;
+    for x in xs {
+        acc += x;
+    }
+    acc
+}
+
+/// Left-to-right f32 fold with an explicit initial value.
+pub fn fold_f32<I, F>(xs: I, init: f32, f: F) -> f32
+where
+    I: IntoIterator<Item = f32>,
+    F: FnMut(f32, f32) -> f32,
+{
+    xs.into_iter().fold(init, f)
+}
+
+/// Left-to-right f64 fold with an explicit initial value.
+pub fn fold_f64<I, F>(xs: I, init: f64, f: F) -> f64
+where
+    I: IntoIterator<Item = f64>,
+    F: FnMut(f64, f64) -> f64,
+{
+    xs.into_iter().fold(init, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_match_std_bit_for_bit() {
+        // values chosen so ordering matters: a big term then tiny terms
+        let xs: Vec<f32> = (0..1000).map(|i| if i == 0 { 1.0e8 } else { 1.0e-3 }).collect();
+        let std_sum: f32 = xs.iter().copied().sum();
+        assert_eq!(sum_f32(xs.iter().copied()).to_bits(), std_sum.to_bits());
+        let ys: Vec<f64> = (0..1000).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let std_sum: f64 = ys.iter().copied().sum();
+        assert_eq!(sum_f64(ys.iter().copied()).to_bits(), std_sum.to_bits());
+    }
+
+    #[test]
+    fn folds_respect_init_and_order() {
+        let xs = [3.0f64, 1.0, 2.0];
+        assert_eq!(fold_f64(xs.iter().copied(), f64::NEG_INFINITY, f64::max), 3.0);
+        assert_eq!(fold_f32([0.5f32, 0.25].iter().copied(), 1.0, |a, x| a - x), 0.25);
+    }
+}

@@ -7,6 +7,7 @@
 use crate::api::results::*;
 use crate::api::ApproxSession;
 use crate::baselines::{self, AlwannConfig};
+use crate::compute::reduce::sum_f64;
 use crate::coordinator::pareto::{self, Point};
 use crate::coordinator::pipeline::Pipeline;
 use crate::errormodel::model::estimate_with_aggregates;
@@ -479,12 +480,7 @@ pub fn layer_breakdown(
     for model in models {
         let (pipe, engine) = session.pipeline(model)?;
         let p = sweep_lambda(pipe, engine, &catalog, lambda, false)?;
-        let total: f64 = pipe
-            .manifest
-            .layers
-            .iter()
-            .map(|l| l.mults_per_image as f64)
-            .sum();
+        let total = sum_f64(pipe.manifest.layers.iter().map(|l| l.mults_per_image as f64));
         let layers = pipe
             .manifest
             .layers

@@ -4,6 +4,7 @@
 //! ([`render`]) and JSON artifacts ([`to_json`], [`save_json`]).
 
 use crate::api::job::JobResult;
+use crate::compute::reduce::fold_f64;
 use crate::api::results::*;
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
@@ -113,8 +114,8 @@ fn render_table1(r: &Table1Report) -> String {
         pct(r.medrel_multi),
         pct(r.iqr_multi),
     ]);
-    let lo = r.truth.iter().cloned().fold(f64::MAX, f64::min);
-    let hi = r.truth.iter().cloned().fold(0.0, f64::max);
+    let lo = fold_f64(r.truth.iter().cloned(), f64::MAX, f64::min);
+    let hi = fold_f64(r.truth.iter().cloned(), 0.0, f64::max);
     format!(
         "{}points: {} (layers x multipliers); truth spans {:.2e}..{:.2e}; model pass took {:.2}s\n",
         t.render(),

@@ -20,7 +20,7 @@
 use crate::tensor::TensorF;
 use crate::util::rng::Pcg32;
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Split {
     Train,
     Val,
@@ -158,7 +158,7 @@ pub fn render(spec: &DatasetSpec, split: Split, index: usize) -> (Vec<f32>, u32)
 /// sweeping the ResNet family holds one SynthCIFAR in memory, not four.
 #[derive(Default)]
 pub struct DatasetCache {
-    map: std::collections::HashMap<(String, (usize, usize), u64, Split), std::sync::Arc<Dataset>>,
+    map: std::collections::BTreeMap<(String, (usize, usize), u64, Split), std::sync::Arc<Dataset>>,
 }
 
 impl DatasetCache {

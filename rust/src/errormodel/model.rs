@@ -16,7 +16,7 @@
 //! the paper reports ~1 min for the same pass (§4.2). The decomposition is
 //! exact, not an approximation.
 
-use crate::util::stats;
+use crate::compute::reduce::sum_f64;
 
 /// Operand data for one layer, in the layer LUT convention
 /// (row codes 0..=255 for activations; col codes = weight code + 128).
@@ -100,9 +100,9 @@ fn patch_moments(agg: &RowAggregates, patch: &[u8]) -> (f64, f64) {
 /// for the spread of the local means).
 pub fn pool_moments(locals: &[(f64, f64)]) -> (f64, f64) {
     let k = locals.len().max(1) as f64;
-    let mu: f64 = locals.iter().map(|(m, _)| m).sum::<f64>() / k;
-    let sum_sq: f64 = locals.iter().map(|(m, v)| v + m * m).sum::<f64>();
-    let sum_mu: f64 = locals.iter().map(|(m, _)| m).sum::<f64>();
+    let mu = sum_f64(locals.iter().map(|(m, _)| *m)) / k;
+    let sum_sq = sum_f64(locals.iter().map(|(m, v)| v + m * m));
+    let sum_mu = sum_f64(locals.iter().map(|(m, _)| *m));
     let var = (sum_sq - sum_mu * sum_mu / k) / k;
     (mu, var.max(0.0))
 }
@@ -169,7 +169,7 @@ pub fn estimate_reference(err_map: &[i32], ops: &LayerOperands) -> ErrorEstimate
     for &c in &ops.weight_cols {
         whist[c as usize] += 1.0;
     }
-    let wt: f64 = whist.iter().sum();
+    let wt = sum_f64(whist.iter().copied());
     for p in whist.iter_mut() {
         *p /= wt;
     }
@@ -179,7 +179,7 @@ pub fn estimate_reference(err_map: &[i32], ops: &LayerOperands) -> ErrorEstimate
         for &a in patch {
             xhist[a as usize] += 1.0;
         }
-        let xt: f64 = xhist.iter().sum();
+        let xt = sum_f64(xhist.iter().copied());
         let (mut mu, mut ex2) = (0.0, 0.0);
         for a in 0..256 {
             let px = xhist[a] / xt;
@@ -210,9 +210,6 @@ pub fn estimate_reference(err_map: &[i32], ops: &LayerOperands) -> ErrorEstimate
         sigma_e_float: var_e.sqrt() * ops.s_x as f64 * ops.s_w as f64,
     }
 }
-
-#[allow(unused_imports)]
-use stats as _stats_reexport_guard;
 
 #[cfg(test)]
 mod tests {

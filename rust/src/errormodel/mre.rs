@@ -5,12 +5,14 @@
 //! power for the layer-output error std is poor (paper: Pearson 0.546).
 
 use crate::multipliers::Instance;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Memoized MRE per instance name (the full-space scan costs ~65k ops).
+/// Ordered map: keyed lookups today, deterministic iteration if a report
+/// ever walks the memo (AGN-D1).
 #[derive(Default)]
 pub struct MreCache {
-    cache: HashMap<String, f64>,
+    cache: BTreeMap<String, f64>,
 }
 
 impl MreCache {

@@ -34,15 +34,10 @@ pub const SCHEMA_VERSION: u32 = 1;
 // digests + parameter payload encoding
 
 /// FNV-1a 64-bit (the same hash the synthetic builder uses for per-model
-/// init streams).
-pub fn fnv64(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
-}
+/// init streams). Canonical implementation: [`crate::util::fnv`] — the
+/// digests below are committed to golden files, so both callers must stay
+/// on the identical fold.
+pub use crate::util::fnv::fnv64;
 
 /// 16-hex-char digest of a flat f32 vector (little-endian byte stream).
 pub fn params_digest(values: &[f32]) -> String {

@@ -14,6 +14,7 @@
 
 use super::model::{lut_digest, AssignmentIr, LoweringIr, ModelIr, ParamsIr};
 use super::target::TargetDesc;
+use crate::compute::reduce::sum_f64;
 use crate::matching::MatchOutcome;
 use crate::multipliers::{
     build_layer_lut, signed_catalog, unsigned_catalog, Catalog, LUT_SIDE, LUT_SIZE,
@@ -124,8 +125,8 @@ pub struct Validate;
 /// the same arithmetic as `matching::energy_reduction` (f64 sums in layer
 /// order) so recomputation matches stored values exactly.
 fn energy_from_layers(mults: &[usize], powers: &[f64]) -> f64 {
-    let total: f64 = mults.iter().map(|&m| m as f64).sum();
-    let spent: f64 = mults.iter().zip(powers).map(|(&m, &p)| m as f64 * p).sum();
+    let total = sum_f64(mults.iter().map(|&m| m as f64));
+    let spent = sum_f64(mults.iter().zip(powers).map(|(&m, &p)| m as f64 * p));
     1.0 - spent / total
 }
 

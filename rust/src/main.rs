@@ -129,6 +129,13 @@ ROBUSTNESS (see README \"Robustness\")
                        ckpt-corrupt,ir-corrupt (test/debug tool; every
                        fault must be absorbed or surface a typed error)
 
+DETERMINISM CONTRACT (see README \"Determinism contract\")
+  Same seed + same inputs => same bytes, at any --threads value. The
+  contract is machine-enforced: `cargo run -p agn-lint -- --deny rust/src`
+  (repo root) lints the source against the seven AGN-D rules, and
+  `RUSTFLAGS=\"--cfg loom\"` builds the concurrency models
+  (rust/tests/loom_models.rs). Both are required/advisory CI lanes.
+
 Unrecognized --flags warn instead of silently running defaults.
 ";
 

@@ -6,6 +6,7 @@
 //! layer, the cheapest instance whose predicted *relative* error
 //! sigma_e_float / sigma(y_l) stays below sigma_l.
 
+use crate::compute::reduce::sum_f64;
 use crate::datasets::Dataset;
 use crate::errormodel::model::{estimate_with_aggregates, row_aggregates, LayerOperands};
 use crate::errormodel::layer_error_map;
@@ -109,13 +110,14 @@ impl MatchOutcome {
 /// Multiply-energy reduction of an assignment (power weighted by each
 /// layer's multiplication count, normalized to all-exact).
 pub fn energy_reduction(manifest: &Manifest, catalog: &Catalog, instances: &[usize]) -> f64 {
-    let total: f64 = manifest.layers.iter().map(|l| l.mults_per_image as f64).sum();
-    let spent: f64 = manifest
-        .layers
-        .iter()
-        .zip(instances)
-        .map(|(l, &i)| l.mults_per_image as f64 * catalog.instances[i].power)
-        .sum();
+    let total = sum_f64(manifest.layers.iter().map(|l| l.mults_per_image as f64));
+    let spent = sum_f64(
+        manifest
+            .layers
+            .iter()
+            .zip(instances)
+            .map(|(l, &i)| l.mults_per_image as f64 * catalog.instances[i].power),
+    );
     1.0 - spent / total
 }
 

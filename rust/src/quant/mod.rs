@@ -53,7 +53,7 @@ pub fn weight_code(w: f32, s: f32) -> i8 {
 
 /// Quantize a weight slice; returns (codes, scale).
 pub fn quantize_weights(w: &[f32]) -> (Vec<i8>, f32) {
-    let absmax = w.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    let absmax = crate::compute::reduce::fold_f32(w.iter().copied(), 0.0, |m, x| m.max(x.abs()));
     let s = weight_scale(absmax);
     (w.iter().map(|&x| weight_code(x, s)).collect(), s)
 }

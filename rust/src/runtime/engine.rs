@@ -10,14 +10,14 @@ use super::backend::{BackendKind, EngineStats, ExecBackend};
 use super::manifest::Manifest;
 use super::value::Value;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
     exec_seconds: f64,
     exec_count: u64,
     compile_seconds: f64,
@@ -30,7 +30,7 @@ impl Engine {
         Ok(Engine {
             client,
             artifacts_dir: artifacts_dir.into(),
-            executables: HashMap::new(),
+            executables: BTreeMap::new(),
             exec_seconds: 0.0,
             exec_count: 0,
             compile_seconds: 0.0,

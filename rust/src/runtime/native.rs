@@ -18,7 +18,7 @@ use crate::compute::{ComputeConfig, ComputePool};
 use crate::simulator::train::{self, Mode, TrainNet};
 use crate::tensor::TensorF;
 use anyhow::{anyhow, Result};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -50,13 +50,15 @@ impl ProgramKind {
 
 pub struct NativeBackend {
     artifacts_dir: PathBuf,
-    plans: HashMap<String, ProgramKind>,
+    plans: BTreeMap<String, ProgramKind>,
     /// Compute pool shared by every program execution; bit-identical
     /// results at any thread count ([`crate::compute`]).
     pool: ComputePool,
     /// LUT sets (keyed by model + joined digests) already digest-verified
     /// by [`NativeBackend::run_lowered`] — verification runs once per set.
-    verified_luts: std::collections::HashSet<String>,
+    /// Ordered set: keyed membership today, deterministic iteration if a
+    /// stats report ever walks it (AGN-D1).
+    verified_luts: BTreeSet<String>,
     exec_seconds: f64,
     exec_count: u64,
     compile_seconds: f64,
@@ -78,9 +80,9 @@ impl NativeBackend {
     ) -> NativeBackend {
         NativeBackend {
             artifacts_dir: artifacts_dir.into(),
-            plans: HashMap::new(),
+            plans: BTreeMap::new(),
             pool: ComputePool::new(compute),
-            verified_luts: std::collections::HashSet::new(),
+            verified_luts: BTreeSet::new(),
             exec_seconds: 0.0,
             exec_count: 0,
             compile_seconds: 0.0,

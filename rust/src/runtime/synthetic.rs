@@ -109,11 +109,7 @@ struct Builder {
 impl Builder {
     fn new(model: &str) -> Builder {
         // FNV-1a over the model name: stable per-model init stream.
-        let mut h = 0xcbf29ce484222325u64;
-        for &byte in model.as_bytes() {
-            h ^= byte as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
+        let h = crate::util::fnv::fnv64(model.as_bytes());
         Builder {
             layers: Vec::new(),
             leaves: Vec::new(),

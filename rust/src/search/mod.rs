@@ -13,7 +13,7 @@ use crate::datasets::Dataset;
 use crate::robust::checkpoint::Checkpoint;
 use crate::robust::faults;
 use crate::runtime::{ExecBackend, Manifest, Value};
-use crate::util::rng::Pcg32;
+use crate::util::rng::{self, Pcg32};
 use anyhow::Result;
 
 /// Mutable training state mirroring the flat program signature.
@@ -87,7 +87,8 @@ impl History {
         if tail.is_empty() {
             return 0.0;
         }
-        tail.iter().map(|m| m.correct).sum::<f64>() / (tail.len() * batch) as f64
+        crate::compute::reduce::sum_f64(tail.iter().map(|m| m.correct))
+            / (tail.len() * batch) as f64
     }
 }
 
@@ -217,7 +218,7 @@ pub fn train_qat_with(
     let mut hist = History::default();
     for step in hooks.start_step..steps {
         let poison = faults::on_train_step(step);
-        let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(step as u64));
+        let (xs, ys) = data.batch(manifest.batch, rng::mix(seed, step as u64));
         let (xv, yv) = batch_values(manifest, xs, ys);
         let out = engine.run(
             manifest,
@@ -301,7 +302,7 @@ pub fn gradient_search_with(
     }
     for step in hooks.start_step..steps {
         let poison = faults::on_train_step(step);
-        let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(step as u64));
+        let (xs, ys) = data.batch(manifest.batch, rng::mix(seed, step as u64));
         let (xv, yv) = batch_values(manifest, xs, ys);
         let out = engine.run(
             manifest,
@@ -391,7 +392,7 @@ pub fn retrain_approx_with(
     let mut hist = History::default();
     for step in hooks.start_step..steps {
         let poison = faults::on_train_step(step);
-        let (xs, ys) = data.batch(manifest.batch, seed.wrapping_add(0x5e7 + step as u64));
+        let (xs, ys) = data.batch(manifest.batch, rng::mix(seed, 0x5e7 + step as u64));
         let (xv, yv) = batch_values(manifest, xs, ys);
         let out = engine.run(
             manifest,

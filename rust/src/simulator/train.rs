@@ -18,6 +18,7 @@
 //! values. BatchNorm uses batch statistics, exactly like the Python side
 //! and [`SimNet`](crate::simulator::SimNet).
 
+use crate::compute::reduce::{fold_f32, sum_f32, sum_f64};
 use crate::compute::{self, approx_matmul_pool, exact_matmul_pool, ComputePool};
 use crate::quant;
 use crate::runtime::manifest::{LayerInfo, Manifest};
@@ -97,7 +98,7 @@ impl TrainNet {
             });
         }
         let ops = build_ops(&manifest.arch, &manifest.layers)?;
-        let total: f64 = manifest.layers.iter().map(|l| l.mults_per_image as f64).sum();
+        let total = sum_f64(manifest.layers.iter().map(|l| l.mults_per_image as f64));
         let rel_costs = manifest
             .layers
             .iter()
@@ -285,7 +286,7 @@ fn apply_layer(
     // quantized matmul (fake-quant or behavioral LUT)
     let (w_codes, s_w) = quant::quantize_weights(&layer.w);
     let w_cols: Vec<u8> = w_codes.iter().map(|&c| (c as i32 + 128) as u8).collect();
-    let p_absmax = p.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    let p_absmax = fold_f32(p.iter().copied(), 0.0, |a, v| a.max(v.abs()));
     let s_x = match mode {
         Mode::Approx { act_scales, .. } => act_scales[idx],
         _ => {
@@ -375,8 +376,8 @@ fn std_of(xs: &[f32]) -> f32 {
         return 0.0;
     }
     let n = xs.len() as f64;
-    let mean: f64 = xs.iter().map(|&v| v as f64).sum::<f64>() / n;
-    let var: f64 = xs.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>() / n;
+    let mean = sum_f64(xs.iter().map(|&v| v as f64)) / n;
+    let var = sum_f64(xs.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean))) / n;
     var.sqrt() as f32
 }
 
@@ -610,9 +611,9 @@ pub fn softmax_xent(logits: &TensorF, labels: &[i32]) -> (f32, TensorF) {
     let mut loss = 0f64;
     for bi in 0..b {
         let row = &logits.data[bi * c..(bi + 1) * c];
-        let max = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let max = fold_f32(row.iter().copied(), f32::NEG_INFINITY, f32::max);
         let exps: Vec<f64> = row.iter().map(|&v| ((v - max) as f64).exp()).collect();
-        let z: f64 = exps.iter().sum();
+        let z = sum_f64(exps.iter().copied());
         let label = labels[bi] as usize;
         loss += -(exps[label] / z).ln();
         let drow = &mut dl.data[bi * c..(bi + 1) * c];
@@ -664,11 +665,7 @@ pub fn metrics3(logits: &TensorF, labels: &[i32], loss: f32) -> Vec<f32> {
 
 /// Paper Eq. 10: `L_N = -sum_l min(|sigma_l|, sigma_max) * c_l`.
 pub fn noise_loss(sigmas: &[f32], rel_costs: &[f32], sigma_max: f32) -> f32 {
-    -sigmas
-        .iter()
-        .zip(rel_costs)
-        .map(|(&s, &c)| s.abs().min(sigma_max) * c)
-        .sum::<f32>()
+    -sum_f32(sigmas.iter().zip(rel_costs).map(|(&s, &c)| s.abs().min(sigma_max) * c))
 }
 
 /// Subgradient of Eq. 10 (Eq. 12): `-c_l * sign(sigma_l)` inside the cap.

@@ -5,6 +5,8 @@
 //! The heavy lifting (matmul under a multiplier LUT) lives in
 //! `simulator::approx_matmul` where it can be specialized.
 
+use crate::compute::reduce::{fold_f32, sum_f32};
+
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor<T> {
     pub shape: Vec<usize>,
@@ -60,7 +62,7 @@ impl TensorF {
         if self.data.is_empty() {
             return 0.0;
         }
-        self.data.iter().sum::<f32>() / self.data.len() as f32
+        sum_f32(self.data.iter().copied()) / self.data.len() as f32
     }
 
     pub fn std(&self) -> f32 {
@@ -68,12 +70,11 @@ impl TensorF {
             return 0.0;
         }
         let m = self.mean();
-        (self.data.iter().map(|&x| (x - m) * (x - m)).sum::<f32>() / self.data.len() as f32)
-            .sqrt()
+        (sum_f32(self.data.iter().map(|&x| (x - m) * (x - m))) / self.data.len() as f32).sqrt()
     }
 
     pub fn abs_max(&self) -> f32 {
-        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+        fold_f32(self.data.iter().copied(), 0.0, |m, x| m.max(x.abs()))
     }
 }
 

@@ -1,0 +1,47 @@
+//! The one approved boundary for ambient environment reads (lint rule
+//! AGN-D4; see README §Determinism contract).
+//!
+//! An `std::env::var` call in lib code is invisible configuration: two runs
+//! with the same CLI line can diverge because a shell exported something.
+//! The contract therefore bans direct env reads outside this module —
+//! every knob the environment can turn is declared here, greppable in one
+//! place, and `tools/agn-lint` enforces the boundary mechanically.
+//! (CLI *arguments* via `std::env::args` are explicit inputs, not ambient
+//! state, and stay allowed at the `util::cli` boundary.)
+
+/// Read an environment variable; `None` when unset or not valid unicode
+/// (a non-unicode value is treated as unset rather than an error — env
+/// knobs are optional tuning, never required configuration).
+pub fn read(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// Read and parse an environment variable, falling back to `default` when
+/// the variable is unset or fails to parse. Malformed values fall back
+/// silently by design: env knobs tune behavior, they must never turn a
+/// working CLI invocation into a crash.
+pub fn read_parsed<T: std::str::FromStr>(name: &str, default: T) -> T {
+    read(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_reads_are_none_and_default() {
+        assert_eq!(read("AGN_TEST_SURELY_UNSET_7Q"), None);
+        assert_eq!(read_parsed("AGN_TEST_SURELY_UNSET_7Q", 42usize), 42);
+    }
+
+    #[test]
+    fn set_reads_come_through() {
+        // set_var is safe here: test-only, and the name is namespaced to
+        // this test to avoid cross-test interference
+        std::env::set_var("AGN_TEST_ENV_READ_7Q", "17");
+        assert_eq!(read("AGN_TEST_ENV_READ_7Q").as_deref(), Some("17"));
+        assert_eq!(read_parsed("AGN_TEST_ENV_READ_7Q", 0usize), 17);
+        std::env::set_var("AGN_TEST_ENV_READ_7Q", "not-a-number");
+        assert_eq!(read_parsed("AGN_TEST_ENV_READ_7Q", 5usize), 5);
+    }
+}

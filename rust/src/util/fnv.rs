@@ -1,0 +1,51 @@
+//! FNV-1a (64-bit) — the one sanctioned content-hash, and part of the
+//! modeled-wraparound domain (lint rule AGN-D2): the multiply is *defined*
+//! to wrap mod 2^64, so `wrapping_mul` here is the algorithm, not a masked
+//! overflow. Centralizing it keeps ad-hoc hash loops (each a fresh chance
+//! to fork the golden-IR digests) out of the tree.
+//!
+//! Callers: the IR section digests (`ir::model`) and the synthetic-zoo
+//! weight streams (`datasets::synthetic`). Both commit hashes to golden
+//! files, so these constants and the fold order are load-bearing — changing
+//! them is a format break (see `ir::FORMAT_VERSION`).
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte slice.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    fnv64_update(FNV_OFFSET, bytes)
+}
+
+/// Fold more bytes into a running FNV-1a state (streaming form: digests
+/// over several sections chain this without concatenating buffers).
+pub fn fnv64_update(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let whole = fnv64(b"split me anywhere");
+        let halves = fnv64_update(fnv64(b"split me"), b" anywhere");
+        assert_eq!(whole, halves);
+    }
+}

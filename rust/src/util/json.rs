@@ -143,6 +143,11 @@ impl Json {
         s
     }
 
+    // `pretty` is threaded to recursive calls unchanged by design: one flag
+    // selects the output mode for the whole tree, and keeping it a parameter
+    // (rather than two near-identical writers) keeps the escaping logic in
+    // one place — the lint sees only the recursion, not the call sites in
+    // to_string/to_string_pretty that pick the mode.
     #[allow(clippy::only_used_in_recursion)]
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = if pretty { "  ".repeat(indent + 1) } else { String::new() };

@@ -32,11 +32,11 @@ impl log::Log for StderrLogger {
 
 /// Install the logger (idempotent; safe to call from every entrypoint).
 pub fn init() {
-    let level = match std::env::var("AGN_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
+    let level = match crate::util::env::read("AGN_LOG").as_deref() {
+        Some("error") => LevelFilter::Error,
+        Some("warn") => LevelFilter::Warn,
+        Some("debug") => LevelFilter::Debug,
+        Some("trace") => LevelFilter::Trace,
         _ => LevelFilter::Info,
     };
     if log::set_logger(&LOGGER).is_ok() {

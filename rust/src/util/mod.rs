@@ -1,8 +1,12 @@
 //! Infrastructure substrates forced by the offline environment: PRNG, JSON,
-//! CLI parsing, statistics, property-testing and timing. See DESIGN.md
+//! CLI parsing, statistics, property-testing, timing, the [`env`] ambient-
+//! read boundary and the [`fnv`] content-hash domain (both are lint-enforced
+//! boundaries — see README §Determinism contract). See DESIGN.md
 //! §System inventory.
 
 pub mod cli;
+pub mod env;
+pub mod fnv;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -91,10 +91,7 @@ pub fn assert_prop(cond: bool, msg: impl Into<String>) -> PropResult {
 // test harness: the panic is the failure report, same as assert! in a #[test]
 #[allow(clippy::panic)]
 pub fn check<F: FnMut(&mut Gen) -> PropResult>(cases: usize, mut prop: F) {
-    let base_seed = std::env::var("PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xa6e0_1337_u64);
+    let base_seed = crate::util::env::read_parsed("PROP_SEED", 0xa6e0_1337_u64);
     for case in 0..cases {
         let mut g = Gen { rng: Pcg32::new(base_seed, case as u64), case };
         if let Err(msg) = prop(&mut g) {

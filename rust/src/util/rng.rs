@@ -5,6 +5,14 @@
 //! system needs. Determinism matters more than speed here: every experiment
 //! is reproducible from a single CLI seed.
 
+/// Derive a per-step seed from a base seed and a step offset. The add is
+/// *defined* to wrap mod 2^64 (seeds are opaque bit patterns, not
+/// quantities), which is why this lives in the modeled-wraparound domain
+/// (lint rule AGN-D2) instead of inlining `wrapping_add` at call sites.
+pub fn mix(seed: u64, offset: u64) -> u64 {
+    seed.wrapping_add(offset)
+}
+
 /// PCG32: 64-bit state, 64-bit stream, 32-bit output.
 #[derive(Clone, Debug)]
 pub struct Pcg32 {

@@ -1,11 +1,13 @@
 //! Statistics helpers shared by the error model, metrics and benches.
 
+use crate::compute::reduce::sum_f64;
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.iter().sum::<f64>() / xs.len() as f64
+    sum_f64(xs.iter().copied()) / xs.len() as f64
 }
 
 /// Population variance.
@@ -14,7 +16,7 @@ pub fn variance(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let m = mean(xs);
-    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+    sum_f64(xs.iter().map(|x| (x - m) * (x - m))) / xs.len() as f64
 }
 
 pub fn std_dev(xs: &[f64]) -> f64 {

@@ -10,6 +10,12 @@
 //! `&self` API + `merge` exist so kernels can start recording without an
 //! API break (the concurrency tests below pin the contract).
 
+// Under `RUSTFLAGS="--cfg loom"` the interior mutex is the loom-instrumented
+// one, so `rust/tests/loom_models.rs` can model-check the concurrent
+// `add`/`merge` contract; production builds keep the plain std mutex.
+#[cfg(loom)]
+use loom::sync::Mutex;
+#[cfg(not(loom))]
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -17,9 +23,16 @@ use std::time::Instant;
 /// `&self` and may be called concurrently; segment *order* is first-insert
 /// order, so merge per-thread instances in chunk order when the report
 /// layout must be deterministic.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Timings {
     entries: Mutex<Vec<(String, f64)>>,
+}
+
+// Manual impl because loom's `Mutex` does not implement `Default`.
+impl Default for Timings {
+    fn default() -> Timings {
+        Timings { entries: Mutex::new(Vec::new()) }
+    }
 }
 
 impl Timings {

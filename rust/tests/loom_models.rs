@@ -1,0 +1,168 @@
+//! Concurrency models of the two protocols the determinism contract leans
+//! on, checked under loom (or its vendored std-passthrough stub):
+//!
+//! * the [`agn_approx::compute::pool`] chunk protocol — a deterministic
+//!   [`partition`], one writer per disjoint chunk, merge **in chunk order**
+//!   (never completion order), and the `catch_unwind` serial re-run of a
+//!   panicked chunk producing bit-identical output;
+//! * the [`Timings`] mutex — concurrent `add` losing nothing, and per-thread
+//!   accumulators merged in chunk order pinning the report layout.
+//!
+//! The pool spawns scoped `std::thread`s internally, so the models
+//! re-express its protocol on loom primitives (the real `partition` plus
+//! `loom::thread` / `loom::sync`) rather than driving `ComputePool`
+//! directly; `Timings` *is* loom-instrumented here — under `--cfg loom` its
+//! interior mutex is `loom::sync::Mutex` (see `rust/src/util/timer.rs`).
+//!
+//! Run with:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test -p agn_approx --test loom_models --release
+//! ```
+//!
+//! Under the default build this file compiles to nothing (`#![cfg(loom)]`),
+//! keeping tier-1 and the default dependency set untouched. Point the
+//! `[target.'cfg(loom)'.dependencies]` entry in `rust/Cargo.toml` at the
+//! real `loom` crate to explore all interleavings instead of the stub's
+//! repeated stochastic runs; the models need no edits.
+#![cfg(loom)]
+
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use agn_approx::compute::partition;
+use agn_approx::util::timer::Timings;
+use loom::sync::atomic::{AtomicBool, Ordering};
+use loom::sync::{Arc, Mutex};
+use loom::thread;
+
+/// The pure per-chunk kernel the models share: output depends only on the
+/// row range, exactly the property the pool's re-run recovery relies on.
+fn kernel(r: Range<usize>) -> Vec<u64> {
+    r.map(|row| row as u64 * 7 + 3).collect()
+}
+
+/// `map_chunks` protocol: one writer per chunk slot, merged in chunk order
+/// after all joins — bit-identical to the serial run at every interleaving.
+#[test]
+fn chunked_map_merges_in_chunk_order_bit_identically() {
+    loom::model(|| {
+        let rows = 7usize;
+        let chunks = partition(rows, 3);
+        let slots: Vec<Arc<Mutex<Option<Vec<u64>>>>> =
+            chunks.iter().map(|_| Arc::new(Mutex::new(None))).collect();
+        let mut handles = Vec::new();
+        for (i, r) in chunks.iter().cloned().enumerate().skip(1) {
+            let slot = Arc::clone(&slots[i]);
+            handles.push(thread::spawn(move || {
+                *slot.lock().unwrap() = Some(kernel(r));
+            }));
+        }
+        // chunk 0 runs on the caller thread, like `ComputePool::run_rows`
+        *slots[0].lock().unwrap() = Some(kernel(chunks[0].clone()));
+        for h in handles {
+            h.join().unwrap();
+        }
+        let merged: Vec<u64> =
+            slots.iter().flat_map(|s| s.lock().unwrap().take().unwrap()).collect();
+        assert_eq!(merged, kernel(0..rows));
+    });
+}
+
+/// Panic-recovery protocol: a chunk that panics under `catch_unwind` is
+/// re-run serially on the joining thread, still in chunk order, and the
+/// merged output stays bit-identical to an unfaulted run.
+#[test]
+fn panicked_chunk_serial_rerun_is_bit_identical() {
+    loom::model(|| {
+        let rows = 6usize;
+        let chunks = partition(rows, 3);
+        let tripped = Arc::new(AtomicBool::new(false));
+        let handles: Vec<_> = chunks
+            .iter()
+            .cloned()
+            .enumerate()
+            .skip(1)
+            .map(|(i, r)| {
+                let tripped = Arc::clone(&tripped);
+                let rr = r.clone();
+                let h = thread::spawn(move || {
+                    catch_unwind(AssertUnwindSafe(|| {
+                        if i == 1 && !tripped.swap(true, Ordering::SeqCst) {
+                            panic!("injected worker panic");
+                        }
+                        kernel(rr)
+                    }))
+                });
+                (r, h)
+            })
+            .collect();
+        let mut results = vec![kernel(chunks[0].clone())];
+        for (r, h) in handles {
+            results.push(match h.join().unwrap() {
+                Ok(v) => v,
+                // the pool's recovery path: chunks are pure functions of
+                // their row range, so the serial re-run is bit-identical
+                Err(_) => kernel(r),
+            });
+        }
+        let merged: Vec<u64> = results.into_iter().flatten().collect();
+        assert_eq!(merged, kernel(0..rows));
+    });
+}
+
+/// The `Timings` mutex under concurrent `add`: no contribution is lost at
+/// any interleaving (`add` is a read-modify-write under one lock).
+#[test]
+fn timings_concurrent_adds_lose_nothing() {
+    loom::model(|| {
+        let t = Arc::new(Timings::default());
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                thread::spawn(move || {
+                    t.add("kernel", 0.5);
+                    t.add("kernel", 0.25);
+                })
+            })
+            .collect();
+        t.add("kernel", 1.0);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((t.get("kernel") - 2.5).abs() < 1e-12);
+    });
+}
+
+/// Per-thread `Timings` merged in chunk order after the joins: the report
+/// layout (segment order) is pinned by merge order, not completion order.
+#[test]
+fn timings_per_thread_merge_in_chunk_order_is_deterministic() {
+    loom::model(|| {
+        let locals: Vec<Arc<Timings>> = (0..2).map(|_| Arc::new(Timings::default())).collect();
+        let handles: Vec<_> = locals
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let l = Arc::clone(l);
+                thread::spawn(move || {
+                    l.add(&format!("chunk{i}"), (i + 1) as f64);
+                    l.add("shared", 0.25);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let total = Timings::default();
+        for l in &locals {
+            total.merge(l);
+        }
+        let entries = total.entries();
+        assert_eq!(entries[0].0, "chunk0");
+        assert_eq!(entries[1].0, "shared");
+        assert_eq!(entries[2].0, "chunk1");
+        let shared = entries.iter().find(|(n, _)| n == "shared").unwrap().1;
+        assert!((shared - 0.5).abs() < 1e-12);
+    });
+}

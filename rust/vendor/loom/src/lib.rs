@@ -1,0 +1,46 @@
+//! Std-passthrough stand-in for the `loom` concurrency model checker.
+//!
+//! The real loom executes a bounded concurrent program under *every* legal
+//! interleaving permitted by the C11 memory model. This vendored stub keeps
+//! the API shape the models use — [`model`], [`thread`], [`sync`] — but runs
+//! the closure repeatedly on real OS threads instead, so the `cfg(loom)`
+//! models in `rust/tests/loom_models.rs` compile and run in this offline
+//! tree and still perturb scheduling enough to catch gross ordering bugs.
+//!
+//! To run the models under the real checker, point the
+//! `[target.'cfg(loom)'.dependencies]` entry in `rust/Cargo.toml` at
+//! crates.io `loom` instead of this path; no model-source edits are needed
+//! (the exported names below are the loom names).
+
+/// Run `f` under the "model". Real loom enumerates interleavings; the stub
+/// re-runs the closure a fixed number of times so OS-level scheduling
+/// variance gets a chance to expose ordering bugs while staying fast in CI.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    const STUB_ITERATIONS: usize = 64;
+    for _ in 0..STUB_ITERATIONS {
+        f();
+    }
+}
+
+/// Mirror of `loom::thread` (real loom swaps in instrumented threads).
+pub mod thread {
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+}
+
+/// Mirror of `loom::sync` (real loom swaps in instrumented primitives;
+/// the std types here are API-compatible with them).
+pub mod sync {
+    pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
+
+    pub mod atomic {
+        pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+    }
+}
+
+/// Mirror of `loom::hint`.
+pub mod hint {
+    pub use std::hint::spin_loop;
+}

@@ -1,0 +1,194 @@
+//! AGN-D7 — dependency policy. The offline crate set (DESIGN.md) pins the
+//! default build's external dependencies to exactly `anyhow` + `log`;
+//! anything else must be `optional = true` (feature-gated, like the
+//! `vendor/xla` API stub) or live in a sanctioned verification-only target
+//! table (`cfg(loom)` / `cfg(miri)`). This is a purpose-built scan of the
+//! manifest's dependency tables, not a general TOML parser: it understands
+//! exactly the constructs Cargo.toml uses for dependencies (section
+//! headers, `name = value` lines, inline tables, `[dependencies.name]`
+//! subsections) and nothing more.
+
+use crate::diag::Diag;
+
+const ALLOWED_DEFAULT: &[&str] = &["anyhow", "log"];
+
+/// What a `[section]` header means for the dependency policy.
+enum Section {
+    /// Counts against the default dependency set.
+    Active,
+    /// dev-dependencies / sanctioned cfg tables / non-dependency tables.
+    Ignored,
+    /// `[dependencies.NAME]` header form: the dep named in the header.
+    ActiveHeader(String),
+}
+
+fn classify(section: &str) -> Section {
+    let s = section.trim();
+    if s.contains("dev-dependencies") {
+        return Section::Ignored;
+    }
+    if let Some(rest) = s.strip_prefix("target.") {
+        // [target.'cfg(...)'.dependencies] — active in default builds for
+        // matching targets, so it counts, unless the cfg is a sanctioned
+        // verification-only lane (loom / miri) that default builds never
+        // enable.
+        if !rest.contains(".dependencies") {
+            return Section::Ignored;
+        }
+        if rest.contains("loom") || rest.contains("miri") {
+            return Section::Ignored;
+        }
+        return Section::Active;
+    }
+    if s == "dependencies" || s == "build-dependencies" || s == "workspace.dependencies" {
+        return Section::Active;
+    }
+    for prefix in ["dependencies.", "build-dependencies.", "workspace.dependencies."] {
+        if let Some(name) = s.strip_prefix(prefix) {
+            return Section::ActiveHeader(name.trim().to_string());
+        }
+    }
+    Section::Ignored
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_backslash => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_backslash = c == '\\' && !prev_backslash;
+    }
+    line
+}
+
+fn is_optional_inline(value: &str) -> bool {
+    // `{ path = "...", optional = true }`
+    value.split(',').any(|part| {
+        let mut kv = part.splitn(2, '=');
+        let k = kv.next().unwrap_or("").trim().trim_start_matches('{');
+        let v = kv.next().unwrap_or("").trim().trim_end_matches('}');
+        k.trim() == "optional" && v.trim() == "true"
+    })
+}
+
+pub fn check_manifest(display_path: &str, src: &str) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let mut section = Section::Ignored;
+    // deferred [dependencies.NAME] judgement: (name, header line, optional?)
+    let mut pending: Option<(String, u32, bool)> = None;
+
+    let mut finalize = |pending: &mut Option<(String, u32, bool)>, diags: &mut Vec<Diag>| {
+        if let Some((name, line, optional)) = pending.take() {
+            if !optional && !ALLOWED_DEFAULT.contains(&name.as_str()) {
+                diags.push(Diag {
+                    file: display_path.to_string(),
+                    line,
+                    rule: "AGN-D7",
+                    message: format!(
+                        "non-optional dependency `{name}` grows the default set beyond \
+                         anyhow+log; gate it behind a feature (optional = true) or drop it"
+                    ),
+                });
+            }
+        }
+    };
+
+    for (idx, raw) in src.lines().enumerate() {
+        let line_no = (idx + 1) as u32;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            finalize(&mut pending, &mut diags);
+            let name = line[1..line.len() - 1].replace(['\'', '"'], "");
+            section = classify(&name);
+            if let Section::ActiveHeader(dep) = &section {
+                pending = Some((dep.clone(), line_no, false));
+            }
+            continue;
+        }
+        match &section {
+            Section::Ignored => {}
+            Section::ActiveHeader(_) => {
+                let mut kv = line.splitn(2, '=');
+                let k = kv.next().unwrap_or("").trim();
+                let v = kv.next().unwrap_or("").trim();
+                if k == "optional" && v == "true" {
+                    if let Some(p) = pending.as_mut() {
+                        p.2 = true;
+                    }
+                }
+            }
+            Section::Active => {
+                let mut kv = line.splitn(2, '=');
+                let name = kv.next().unwrap_or("").trim().replace(['\'', '"'], "");
+                let value = kv.next().unwrap_or("").trim();
+                if name.is_empty() || value.is_empty() {
+                    continue;
+                }
+                if ALLOWED_DEFAULT.contains(&name.as_str()) || is_optional_inline(value) {
+                    continue;
+                }
+                diags.push(Diag {
+                    file: display_path.to_string(),
+                    line: line_no,
+                    rule: "AGN-D7",
+                    message: format!(
+                        "non-optional dependency `{name}` grows the default set beyond \
+                         anyhow+log; gate it behind a feature (optional = true) or drop it"
+                    ),
+                });
+            }
+        }
+    }
+    finalize(&mut pending, &mut diags);
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allows_the_pinned_set_and_optional_deps() {
+        let toml = r#"
+[package]
+name = "x"
+[dependencies]
+anyhow = "1"
+log = "0.4"
+xla = { path = "vendor/xla", optional = true }
+[target.'cfg(loom)'.dependencies]
+loom = { path = "vendor/loom" }
+[dev-dependencies]
+criterion = "0.5"
+"#;
+        assert!(check_manifest("Cargo.toml", toml).is_empty());
+    }
+
+    #[test]
+    fn flags_new_default_deps() {
+        let toml = "[dependencies]\nanyhow = \"1\"\nrand = \"0.8\"\n";
+        let ds = check_manifest("Cargo.toml", toml);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].rule, "AGN-D7");
+        assert_eq!(ds[0].line, 3);
+        assert!(ds[0].message.contains("rand"));
+    }
+
+    #[test]
+    fn header_form_and_target_tables() {
+        let toml = "[dependencies.serde]\nversion = \"1\"\n";
+        assert_eq!(check_manifest("Cargo.toml", toml).len(), 1);
+        let optional = "[dependencies.serde]\nversion = \"1\"\noptional = true\n";
+        assert!(check_manifest("Cargo.toml", optional).is_empty());
+        let target = "[target.'cfg(unix)'.dependencies]\nlibc = \"0.2\"\n";
+        assert_eq!(check_manifest("Cargo.toml", target).len(), 1);
+    }
+}

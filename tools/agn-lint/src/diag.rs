@@ -1,0 +1,92 @@
+//! Diagnostics and their renderings (human `file:line` lines and the JSON
+//! report consumed by CI and the golden snapshot test).
+
+/// One finding. The derived `Ord` gives the report order the contract
+/// promises: (file, line, rule).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diag {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+pub fn render_human(diags: &[Diag]) -> String {
+    let mut out = String::new();
+    for d in diags {
+        out.push_str(&format!("{}:{}: [{}] {}\n", d.file, d.line, d.rule, d.message));
+    }
+    out
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the machine-readable report. Deterministic byte-for-byte for a
+/// given diagnostic set (keys in fixed order, diags pre-sorted by the
+/// caller).
+pub fn render_json(diags: &[Diag], files_checked: usize) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"tool\": \"agn-lint\",\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str(&format!("  \"files_checked\": {files_checked},\n"));
+    out.push_str(&format!("  \"violations\": {},\n", diags.len()));
+    out.push_str("  \"diagnostics\": [");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \"message\": \"{}\"}}",
+            escape_json(d.rule),
+            escape_json(&d.file),
+            d.line,
+            escape_json(&d.message)
+        ));
+    }
+    if !diags.is_empty() {
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes_and_sorts_stably() {
+        let mut ds = vec![
+            Diag { file: "b.rs".into(), line: 2, rule: "AGN-D2", message: "x\"y".into() },
+            Diag { file: "a.rs".into(), line: 9, rule: "AGN-D1", message: "m".into() },
+            Diag { file: "b.rs".into(), line: 2, rule: "AGN-D1", message: "m".into() },
+        ];
+        ds.sort();
+        assert_eq!(ds[0].file, "a.rs");
+        assert_eq!(ds[1].rule, "AGN-D1");
+        let j = render_json(&ds, 3);
+        assert!(j.contains("\\\"y"));
+        assert!(j.contains("\"violations\": 3"));
+    }
+
+    #[test]
+    fn empty_report_is_compact() {
+        let j = render_json(&[], 5);
+        assert!(j.contains("\"diagnostics\": []"));
+    }
+}

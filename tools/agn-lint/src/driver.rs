@@ -1,0 +1,102 @@
+//! File discovery and orchestration: walk the scan roots, run the source
+//! rules over every `.rs` file, run the dependency policy over the
+//! manifest(s), and return the sorted diagnostic list.
+
+use std::path::{Path, PathBuf};
+
+use crate::deps;
+use crate::diag::Diag;
+use crate::policy::{module_rel, Policy};
+use crate::rules;
+
+/// Directory names that never hold contract-bound lib code.
+const SKIP_DIRS: &[&str] = &["target", "vendor", "fixtures", "tests", "benches", "examples"];
+
+pub struct Report {
+    pub diags: Vec<Diag>,
+    pub files_checked: usize,
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read directory {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("read_dir entry under {}: {e}", dir.display()))?;
+        entries.push(entry.path());
+    }
+    // read_dir order is filesystem-dependent; sort so diagnostics and
+    // files_checked are reproducible everywhere.
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if SKIP_DIRS.contains(&name) || name.starts_with('.') {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Normalize a path for display: `/` separators, no leading `./`.
+fn display_path(p: &Path) -> String {
+    let s = p.to_string_lossy().replace('\\', "/");
+    s.strip_prefix("./").unwrap_or(&s).to_string()
+}
+
+/// Scan `roots` (files or directories) with `policy`, plus `manifests`
+/// under the AGN-D7 dependency policy.
+pub fn run(roots: &[PathBuf], manifests: &[PathBuf], policy: &Policy) -> Result<Report, String> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        if root.is_dir() {
+            walk(root, &mut files)?;
+        } else if root.is_file() {
+            files.push(root.clone());
+        } else {
+            return Err(format!("no such file or directory: {}", root.display()));
+        }
+    }
+    files.sort();
+    files.dedup();
+
+    let mut diags: Vec<Diag> = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("cannot read {}: {e}", f.display()))?;
+        let disp = display_path(f);
+        let rel = module_rel(&disp);
+        diags.extend(rules::check_source(&disp, &rel, &src, policy));
+    }
+    let mut files_checked = files.len();
+    for m in manifests {
+        let src = std::fs::read_to_string(m)
+            .map_err(|e| format!("cannot read {}: {e}", m.display()))?;
+        diags.extend(deps::check_manifest(&display_path(m), &src));
+        files_checked += 1;
+    }
+    diags.sort();
+    Ok(Report { diags, files_checked })
+}
+
+/// Discover the manifest governing a scan root: `<root>/Cargo.toml`, else
+/// `<root>/../Cargo.toml` (covers the conventional `rust/src` root whose
+/// package manifest sits one level up).
+pub fn discover_manifest(root: &Path) -> Option<PathBuf> {
+    if !root.is_dir() {
+        return None;
+    }
+    let own = root.join("Cargo.toml");
+    if own.is_file() {
+        return Some(own);
+    }
+    let parent = root.parent()?.join("Cargo.toml");
+    if parent.is_file() {
+        return Some(parent);
+    }
+    None
+}

@@ -1,0 +1,460 @@
+//! Minimal lossless Rust token scanner.
+//!
+//! The determinism-contract rules (see [`crate::rules`]) need three things a
+//! regex grep cannot provide: (1) code tokens reliably separated from string
+//! literals and comments, (2) the comment map itself (for `// SAFETY:` and
+//! justification checks), and (3) per-token line numbers for `file:line`
+//! diagnostics. A full parser adds nothing the rules use, so this module
+//! implements just the lexical grammar: line comments, nested block
+//! comments, string / raw-string / byte-string / char literals, raw
+//! identifiers, lifetimes (disambiguated from char literals), and numeric
+//! literals with float detection (`0.0`, `1e-3`, `7f32` are floats; `0..n`
+//! stays two `.` puncts and `1.max(2)` stays an integer method call).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+    Int,
+    Float,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == Kind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+}
+
+/// A comment span. `start_line..=end_line` covers every source line the
+/// comment touches (block comments may span several).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub start_line: u32,
+    pub end_line: u32,
+    pub text: String,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+impl Lexed {
+    /// Comments that touch `line` (inclusive span check).
+    pub fn comments_on(&self, line: u32) -> impl Iterator<Item = &Comment> {
+        self.comments.iter().filter(move |c| c.start_line <= line && line <= c.end_line)
+    }
+
+    /// True if any comment touching `lo..=hi` contains `needle`.
+    pub fn comment_in_range_contains(&self, lo: u32, hi: u32, needle: &str) -> bool {
+        self.comments
+            .iter()
+            .any(|c| c.start_line <= hi && c.end_line >= lo && c.text.contains(needle))
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Scanner {
+    cs: Vec<char>,
+    i: usize,
+    line: u32,
+    out: Lexed,
+}
+
+impl Scanner {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.cs.get(self.i + ahead).copied()
+    }
+
+    fn text(&self, lo: usize, hi: usize) -> String {
+        self.cs[lo.min(self.cs.len())..hi.min(self.cs.len())].iter().collect()
+    }
+
+    fn push(&mut self, kind: Kind, text: String, line: u32) {
+        self.out.toks.push(Tok { kind, text, line });
+    }
+
+    /// Consume a `"..."` body with `self.i` on the opening quote.
+    fn scan_plain_string(&mut self) {
+        let sl = self.line;
+        let start = self.i + 1;
+        self.i += 1;
+        while self.i < self.cs.len() {
+            let c = self.cs[self.i];
+            if c == '\\' && self.i + 1 < self.cs.len() {
+                if self.cs[self.i + 1] == '\n' {
+                    self.line += 1;
+                }
+                self.i += 2;
+                continue;
+            }
+            if c == '"' {
+                break;
+            }
+            if c == '\n' {
+                self.line += 1;
+            }
+            self.i += 1;
+        }
+        let text = self.text(start, self.i);
+        self.i += 1; // closing quote (or EOF)
+        self.push(Kind::Str, text, sl);
+    }
+
+    /// Consume `r"…"` / `r#"…"#` with `self.i` on the opening quote and
+    /// `hashes` guard characters expected after the closing quote.
+    fn scan_raw_string(&mut self, hashes: usize) {
+        let sl = self.line;
+        let start = self.i + 1;
+        self.i += 1;
+        while self.i < self.cs.len() {
+            let c = self.cs[self.i];
+            if c == '\n' {
+                self.line += 1;
+                self.i += 1;
+                continue;
+            }
+            if c == '"' {
+                let mut k = 0;
+                while k < hashes && self.peek(1 + k) == Some('#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    let text = self.text(start, self.i);
+                    self.i += 1 + hashes;
+                    self.push(Kind::Str, text, sl);
+                    return;
+                }
+            }
+            self.i += 1;
+        }
+        // unterminated: emit what we have
+        let text = self.text(start, self.cs.len());
+        self.push(Kind::Str, text, sl);
+    }
+
+    /// Try the `r`/`b`-prefixed literal forms (`r"…"`, `r#"…"#`, `b"…"`,
+    /// `br"…"`, `b'…'`, `r#ident`). Returns true if one was consumed.
+    fn try_prefixed(&mut self) -> bool {
+        let mut j = 0usize;
+        if self.peek(j) == Some('b') {
+            j += 1;
+        }
+        let saw_r = self.peek(j) == Some('r');
+        if saw_r {
+            j += 1;
+        }
+        let mut hashes = 0usize;
+        if saw_r {
+            while self.peek(j) == Some('#') {
+                hashes += 1;
+                j += 1;
+            }
+        }
+        match self.peek(j) {
+            Some('"') if saw_r => {
+                self.i += j;
+                self.scan_raw_string(hashes);
+                true
+            }
+            Some('"') if j == 1 => {
+                // b"…": plain-string body rules
+                self.i += j;
+                self.scan_plain_string();
+                true
+            }
+            Some('\'') if j == 1 && !saw_r => {
+                // b'…': byte literal; reuse char-literal scanning
+                self.i += j;
+                self.scan_char_or_lifetime();
+                true
+            }
+            Some(c) if saw_r && hashes == 1 && is_ident_start(c) => {
+                // raw identifier r#ident — strip the r# prefix
+                let start = self.i + j;
+                let mut k = start;
+                while k < self.cs.len() && is_ident_continue(self.cs[k]) {
+                    k += 1;
+                }
+                let text = self.text(start, k);
+                let line = self.line;
+                self.i = k;
+                self.push(Kind::Ident, text, line);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// `self.i` is on a `'`: char literal or lifetime.
+    fn scan_char_or_lifetime(&mut self) {
+        let line = self.line;
+        match self.peek(1) {
+            Some('\\') => {
+                // escaped char: '\n', '\'', '\\', '\u{…}'
+                let mut j = self.i + 2;
+                if j < self.cs.len() {
+                    j += 1; // escape body (covers \' and \\)
+                }
+                while j < self.cs.len() && self.cs[j] != '\'' {
+                    j += 1; // \u{…} tail
+                }
+                self.push(Kind::Char, String::new(), line);
+                self.i = (j + 1).min(self.cs.len());
+            }
+            Some(c) if is_ident_start(c) => {
+                let mut j = self.i + 2;
+                while j < self.cs.len() && is_ident_continue(self.cs[j]) {
+                    j += 1;
+                }
+                if j == self.i + 2 && self.peek(2) == Some('\'') {
+                    // 'x'
+                    let text = self.text(self.i + 1, j);
+                    self.push(Kind::Char, text, line);
+                    self.i = j + 1;
+                } else {
+                    // 'lifetime (including '_)
+                    let text = self.text(self.i + 1, j);
+                    self.push(Kind::Lifetime, text, line);
+                    self.i = j;
+                }
+            }
+            Some(_) if self.peek(2) == Some('\'') => {
+                // non-ident char like '+' or ' '
+                let text = self.text(self.i + 1, self.i + 2);
+                self.push(Kind::Char, text, line);
+                self.i += 3;
+            }
+            _ => {
+                self.push(Kind::Punct, "'".to_string(), line);
+                self.i += 1;
+            }
+        }
+    }
+
+    /// `self.i` is on an ASCII digit.
+    fn scan_number(&mut self) {
+        let start = self.i;
+        let line = self.line;
+        let mut is_float = false;
+        let radix_prefixed = self.peek(0) == Some('0')
+            && matches!(self.peek(1), Some('x') | Some('X') | Some('b') | Some('o'));
+        if radix_prefixed {
+            self.i += 2;
+            while self
+                .peek(0)
+                .map(|c| c.is_ascii_alphanumeric() || c == '_')
+                .unwrap_or(false)
+            {
+                self.i += 1;
+            }
+        } else {
+            while self.peek(0).map(|c| c.is_ascii_digit() || c == '_').unwrap_or(false) {
+                self.i += 1;
+            }
+            // fraction: `.` followed by a digit (never `..` or a method call)
+            if self.peek(0) == Some('.')
+                && self.peek(1).map(|c| c.is_ascii_digit()).unwrap_or(false)
+            {
+                is_float = true;
+                self.i += 1;
+                while self.peek(0).map(|c| c.is_ascii_digit() || c == '_').unwrap_or(false) {
+                    self.i += 1;
+                }
+            } else if self.peek(0) == Some('.')
+                && !self.peek(1).map(|c| is_ident_start(c) || c == '.').unwrap_or(false)
+            {
+                // trailing-dot float `1.`
+                is_float = true;
+                self.i += 1;
+            }
+            // exponent
+            if matches!(self.peek(0), Some('e') | Some('E')) {
+                let mut j = 1;
+                if matches!(self.peek(j), Some('+') | Some('-')) {
+                    j += 1;
+                }
+                if self.peek(j).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                    is_float = true;
+                    self.i += j + 1;
+                    while self
+                        .peek(0)
+                        .map(|c| c.is_ascii_digit() || c == '_')
+                        .unwrap_or(false)
+                    {
+                        self.i += 1;
+                    }
+                }
+            }
+            // type suffix (f32 / u64 / usize …)
+            let sstart = self.i;
+            while self.peek(0).map(is_ident_continue).unwrap_or(false) {
+                self.i += 1;
+            }
+            let suffix = self.text(sstart, self.i);
+            if suffix.starts_with("f32") || suffix.starts_with("f64") {
+                is_float = true;
+            }
+        }
+        let text = self.text(start, self.i);
+        self.push(if is_float { Kind::Float } else { Kind::Int }, text, line);
+    }
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let mut s = Scanner { cs: src.chars().collect(), i: 0, line: 1, out: Lexed::default() };
+    while s.i < s.cs.len() {
+        let c = s.cs[s.i];
+        if c == '\n' {
+            s.line += 1;
+            s.i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            s.i += 1;
+            continue;
+        }
+        if c == '/' && s.peek(1) == Some('/') {
+            let sl = s.line;
+            let start = s.i + 2;
+            while s.i < s.cs.len() && s.cs[s.i] != '\n' {
+                s.i += 1;
+            }
+            let text = s.text(start, s.i);
+            s.out.comments.push(Comment { start_line: sl, end_line: sl, text });
+            continue;
+        }
+        if c == '/' && s.peek(1) == Some('*') {
+            let sl = s.line;
+            let start = s.i + 2;
+            s.i += 2;
+            let mut depth = 1usize;
+            while s.i < s.cs.len() && depth > 0 {
+                if s.cs[s.i] == '\n' {
+                    s.line += 1;
+                    s.i += 1;
+                } else if s.cs[s.i] == '/' && s.peek(1) == Some('*') {
+                    depth += 1;
+                    s.i += 2;
+                } else if s.cs[s.i] == '*' && s.peek(1) == Some('/') {
+                    depth -= 1;
+                    s.i += 2;
+                } else {
+                    s.i += 1;
+                }
+            }
+            let text = s.text(start, s.i);
+            let (sl2, el) = (sl, s.line);
+            s.out.comments.push(Comment { start_line: sl2, end_line: el, text });
+            continue;
+        }
+        if c == '"' {
+            s.scan_plain_string();
+            continue;
+        }
+        if (c == 'r' || c == 'b') && s.try_prefixed() {
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = s.i;
+            while s.peek(0).map(is_ident_continue).unwrap_or(false) {
+                s.i += 1;
+            }
+            let text = s.text(start, s.i);
+            let line = s.line;
+            s.push(Kind::Ident, text, line);
+            continue;
+        }
+        if c == '\'' {
+            s.scan_char_or_lifetime();
+            continue;
+        }
+        if c.is_ascii_digit() {
+            s.scan_number();
+            continue;
+        }
+        let line = s.line;
+        s.push(Kind::Punct, c.to_string(), line);
+        s.i += 1;
+    }
+    s.out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn ranges_are_not_floats() {
+        let ks = kinds("for i in 0..n { let x = 0.5; }");
+        assert!(ks.contains(&(Kind::Int, "0".to_string())));
+        assert!(ks.contains(&(Kind::Float, "0.5".to_string())));
+    }
+
+    #[test]
+    fn float_suffix_and_exponent() {
+        let ks = kinds("let a = 1f32; let b = 2e-3; let c = 0x1f; let d = 1.max(2);");
+        assert!(ks.contains(&(Kind::Float, "1f32".to_string())));
+        assert!(ks.contains(&(Kind::Float, "2e-3".to_string())));
+        assert!(ks.contains(&(Kind::Int, "0x1f".to_string())));
+        assert!(ks.contains(&(Kind::Int, "1".to_string())), "1.max(2) keeps 1 an int");
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let ks = kinds("fn f<'a>(x: &'a str, c: char) { let y = 'z'; let e = '\\n'; }");
+        assert!(ks.contains(&(Kind::Lifetime, "a".to_string())));
+        assert!(ks.contains(&(Kind::Char, "z".to_string())));
+    }
+
+    #[test]
+    fn strings_and_comments_are_not_code() {
+        let lexed = lex("// has HashMap inside\nlet s = \"HashMap::new()\"; /* and\nwrapping_add */");
+        assert!(!lexed.toks.iter().any(|t| t.kind == Kind::Ident && t.text == "HashMap"));
+        assert!(lexed.comments.iter().any(|c| c.text.contains("HashMap")));
+        assert!(lexed
+            .comments
+            .iter()
+            .any(|c| c.start_line == 2 && c.end_line == 3 && c.text.contains("wrapping_add")));
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let ks = kinds("let s = r#\"unsafe { }\"#; let r#fn = 1;");
+        assert!(!ks.iter().any(|(k, t)| *k == Kind::Ident && t == "unsafe"));
+        assert!(ks.contains(&(Kind::Ident, "fn".to_string())));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let lexed = lex("/* outer /* inner */ still comment */ let x = 1;");
+        assert!(lexed.toks.iter().any(|t| t.is_ident("let")));
+        assert_eq!(lexed.comments.len(), 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! agn-lint — the machine-checked half of the repo's determinism contract
+//! (README §Determinism contract).
+//!
+//! The simulation stack promises bit-identical results at any thread count,
+//! across resume, and across machines. Most ways to silently break that
+//! promise are lexically visible: iterating a `RandomState`-seeded map,
+//! an unpinned float reduction, an ambient `env`/clock read, an `unsafe`
+//! block nobody justified, wraparound arithmetic outside the modeled
+//! domain. This crate walks `rust/src/**` and turns each of those contracts
+//! into a rule with a stable ID:
+//!
+//! | ID     | rule                                                      |
+//! |--------|-----------------------------------------------------------|
+//! | AGN-D1 | no `HashMap`/`HashSet` iteration in lib code              |
+//! | AGN-D2 | `wrapping_*` only in the modeled-wraparound domain        |
+//! | AGN-D3 | `unsafe` allowlisted + `// SAFETY:` justified             |
+//! | AGN-D4 | no ambient nondeterminism (env/clock/entropy) reads       |
+//! | AGN-D5 | float `.sum()`/`.fold()` reductions confined to compute:: |
+//! | AGN-D6 | `#[allow(...)]` needs an invariant comment                |
+//! | AGN-D7 | default dependency set stays `anyhow` + `log`             |
+//!
+//! Diagnostics carry `file:line`, render as human lines or a deterministic
+//! JSON report, and can be waived in place with
+//! `// lint:allow(AGN-Dn) <reason>`. The binary (`cargo run -p agn-lint --
+//! --deny rust/src`) exits non-zero on violations under `--deny`; the
+//! fixture corpus under `tests/fixtures/` pins each rule's behavior.
+
+pub mod deps;
+pub mod diag;
+pub mod driver;
+pub mod lexer;
+pub mod policy;
+pub mod rules;

@@ -1,0 +1,124 @@
+//! CLI for agn-lint. See lib.rs (and README §Determinism contract) for the
+//! rule set.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use agn_lint::diag::{render_human, render_json};
+use agn_lint::driver;
+use agn_lint::policy::Policy;
+
+const USAGE: &str = "\
+agn-lint — determinism/unsafety contract linter (rules AGN-D1..D7)
+
+USAGE:
+    agn-lint [FLAGS] PATH...
+
+PATHS are .rs files or directories (rust/src for the production tree).
+
+FLAGS:
+    --deny            exit 1 if any diagnostic is produced (CI gate mode)
+    --json            print the JSON report instead of human file:line lines
+    --manifest PATH   Cargo.toml checked under the dependency policy
+                      (AGN-D7); default: discovered next to each scan root
+    --no-dep-check    skip AGN-D7 entirely
+    -h, --help        this text
+
+EXIT CODES: 0 clean (or advisory mode), 1 violations under --deny, 2 usage
+or I/O error.
+
+Each rule's rationale lives in README.md §Determinism contract; waive a
+single finding in place with `// lint:allow(AGN-Dn) <reason>`.";
+
+struct Args {
+    deny: bool,
+    json: bool,
+    dep_check: bool,
+    manifest: Option<PathBuf>,
+    roots: Vec<PathBuf>,
+}
+
+fn parse_args(argv: impl Iterator<Item = String>) -> Result<Args, String> {
+    let mut args =
+        Args { deny: false, json: false, dep_check: true, manifest: None, roots: Vec::new() };
+    let mut it = argv;
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--deny" => args.deny = true,
+            "--json" => args.json = true,
+            "--no-dep-check" => args.dep_check = false,
+            "--manifest" => {
+                let p = it.next().ok_or("--manifest needs a path argument")?;
+                args.manifest = Some(PathBuf::from(p));
+            }
+            "-h" | "--help" => return Err(String::new()),
+            flag if flag.starts_with('-') => {
+                return Err(format!("unknown flag: {flag}"));
+            }
+            path => args.roots.push(PathBuf::from(path)),
+        }
+    }
+    if args.roots.is_empty() {
+        return Err("no scan paths given (try: agn-lint --deny rust/src)".to_string());
+    }
+    Ok(args)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(msg) => {
+            if msg.is_empty() {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("agn-lint: {msg}\n\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut manifests: Vec<PathBuf> = Vec::new();
+    if args.dep_check {
+        if let Some(m) = &args.manifest {
+            manifests.push(m.clone());
+        } else {
+            for root in &args.roots {
+                if let Some(m) = driver::discover_manifest(root) {
+                    manifests.push(m);
+                }
+            }
+            manifests.sort();
+            manifests.dedup();
+        }
+    }
+
+    let policy = Policy::production();
+    let report = match driver::run(&args.roots, &manifests, &policy) {
+        Ok(r) => r,
+        Err(msg) => {
+            eprintln!("agn-lint: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if args.json {
+        print!("{}", render_json(&report.diags, report.files_checked));
+    } else if report.diags.is_empty() {
+        println!(
+            "agn-lint: clean ({} files checked, rules AGN-D1..D7)",
+            report.files_checked
+        );
+    } else {
+        print!("{}", render_human(&report.diags));
+        eprintln!(
+            "agn-lint: {} violation(s) across {} file(s) checked",
+            report.diags.len(),
+            report.files_checked
+        );
+    }
+
+    if args.deny && !report.diags.is_empty() {
+        return ExitCode::from(1);
+    }
+    ExitCode::SUCCESS
+}

@@ -1,0 +1,100 @@
+//! Module allowlists for the determinism contract (README §Determinism
+//! contract). Paths are `src/`-relative with `/` separators; an entry
+//! ending in `/` is a prefix (whole subtree), otherwise it must match the
+//! file exactly.
+
+pub struct Policy {
+    /// AGN-D1: modules allowed to *iterate* std hash collections (keyed
+    /// lookup is allowed everywhere). Empty by design: iterated state is
+    /// `BTreeMap`/`BTreeSet` in this tree.
+    pub d1_hash_iteration: &'static [&'static str],
+    /// AGN-D2: the modeled-wraparound domain — modules where `wrapping_*`
+    /// arithmetic is the *specification* (LUT i32 accumulation, PCG32
+    /// stream, FNV-1a digests), not an accident.
+    pub d2_wrapping: &'static [&'static str],
+    /// AGN-D3: modules allowed to contain `unsafe` at all (each block
+    /// still needs a `// SAFETY:` comment). `compute/simd/` is reserved
+    /// for the std::arch kernels of ROADMAP item 1 — the gate arms before
+    /// the first unsafe block lands.
+    pub d3_unsafe: &'static [&'static str],
+    /// AGN-D4: approved ambient-input boundaries. `util/env.rs` is the one
+    /// place that touches `std::env::var`; timer/benchkit are approved
+    /// measurement boundaries (they read clocks and the bench budget).
+    pub d4_nondeterminism: &'static [&'static str],
+    /// AGN-D5: modules where float reduction order is pinned by
+    /// construction (serial-equivalent kernels and the order-pinned
+    /// `compute::reduce` helpers).
+    pub d5_float_reduction: &'static [&'static str],
+}
+
+impl Policy {
+    /// The production policy for `rust/src`.
+    pub fn production() -> Policy {
+        Policy {
+            d1_hash_iteration: &[],
+            d2_wrapping: &["compute/lut.rs", "util/rng.rs", "util/fnv.rs"],
+            d3_unsafe: &["compute/simd/"],
+            d4_nondeterminism: &["util/env.rs", "util/timer.rs", "benchkit.rs"],
+            d5_float_reduction: &["compute/"],
+        }
+    }
+
+    /// An empty policy (nothing allowlisted) — used by the fixture
+    /// self-tests so fixtures exercise each rule without path games.
+    pub fn empty() -> Policy {
+        Policy {
+            d1_hash_iteration: &[],
+            d2_wrapping: &[],
+            d3_unsafe: &[],
+            d4_nondeterminism: &[],
+            d5_float_reduction: &[],
+        }
+    }
+}
+
+/// True if `rel` (a `src/`-relative path) matches an allowlist.
+pub fn allowed(list: &[&str], rel: &str) -> bool {
+    list.iter().any(|e| {
+        if let Some(prefix) = e.strip_suffix('/') {
+            rel.starts_with(prefix) && rel[prefix.len()..].starts_with('/')
+        } else {
+            rel == *e
+        }
+    })
+}
+
+/// Normalize `path` to the `src/`-relative form the allowlists use: strip
+/// everything up to and including the last `/src/` component (so the tool
+/// behaves identically whatever directory it is invoked from); otherwise
+/// strip a leading `./`.
+pub fn module_rel(path: &str) -> String {
+    let norm = path.replace('\\', "/");
+    if let Some(pos) = norm.rfind("/src/") {
+        return norm[pos + "/src/".len()..].to_string();
+    }
+    if let Some(stripped) = norm.strip_prefix("src/") {
+        return stripped.to_string();
+    }
+    norm.strip_prefix("./").unwrap_or(&norm).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_paths_strip_src() {
+        assert_eq!(module_rel("rust/src/compute/lut.rs"), "compute/lut.rs");
+        assert_eq!(module_rel("/abs/repo/rust/src/util/rng.rs"), "util/rng.rs");
+        assert_eq!(module_rel("fixtures/bad/d1.rs"), "fixtures/bad/d1.rs");
+    }
+
+    #[test]
+    fn prefix_and_exact_matching() {
+        assert!(allowed(&["compute/"], "compute/reduce.rs"));
+        assert!(allowed(&["compute/"], "compute/simd/avx2.rs"));
+        assert!(!allowed(&["compute/"], "computegemm.rs"));
+        assert!(allowed(&["benchkit.rs"], "benchkit.rs"));
+        assert!(!allowed(&["benchkit.rs"], "util/benchkit.rs"));
+    }
+}

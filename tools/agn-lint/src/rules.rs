@@ -1,0 +1,720 @@
+//! The determinism/unsafety contract rules (AGN-D1..D6) over one source
+//! file. AGN-D7 (dependency policy) lives in [`crate::deps`].
+//!
+//! Scope discipline shared by every rule:
+//! - `#[cfg(test)]` / `#[cfg(loom)]` / `#[cfg(miri)]` items are exempt
+//!   (tests may iterate hash maps or read clocks freely; the contract is
+//!   about shipped lib code). `#[cfg(not(...))]` stays in scope.
+//! - A diagnostic can be waived in place with
+//!   `// lint:allow(AGN-Dn) <reason>` on the offending line or the line
+//!   above; the reason is mandatory.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::diag::Diag;
+use crate::lexer::{lex, Kind, Lexed, Tok};
+use crate::policy::{allowed, Policy};
+
+/// Methods whose call on a hash collection observes iteration order.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Nondeterminism-source identifiers banned outside approved boundaries.
+const NONDET_IDENTS: &[&str] = &["SystemTime", "RandomState", "thread_rng", "from_entropy"];
+
+pub fn check_source(display_path: &str, rel: &str, src: &str, policy: &Policy) -> Vec<Diag> {
+    let lexed = lex(src);
+    let toks = &lexed.toks;
+    let off = inactive_mask(toks);
+    let mut diags: Vec<Diag> = Vec::new();
+
+    d1_hash_iteration(display_path, rel, toks, &off, policy, &mut diags);
+    d2_wrapping(display_path, rel, toks, &off, policy, &mut diags);
+    d3_unsafe(display_path, rel, toks, &off, &lexed, policy, &mut diags);
+    d4_nondeterminism(display_path, rel, toks, &off, policy, &mut diags);
+    d5_float_reduction(display_path, rel, toks, &off, policy, &mut diags);
+    d6_naked_allow(display_path, toks, &off, &lexed, src, &mut diags);
+
+    // In-place waivers, then dedupe to one diagnostic per (rule, line).
+    diags.retain(|d| !waived(&lexed, d));
+    let mut seen: BTreeSet<(&'static str, u32)> = BTreeSet::new();
+    diags.retain(|d| seen.insert((d.rule, d.line)));
+    diags
+}
+
+/// `// lint:allow(AGN-Dn[,AGN-Dm]) reason` on the diagnostic's line or the
+/// line above waives it; an empty reason does not count.
+fn waived(lexed: &Lexed, d: &Diag) -> bool {
+    let lo = d.line.saturating_sub(1);
+    for c in lexed.comments.iter().filter(|c| c.start_line <= d.line && c.end_line >= lo) {
+        let Some(pos) = c.text.find("lint:allow(") else { continue };
+        let rest = &c.text[pos + "lint:allow(".len()..];
+        let Some(close) = rest.find(')') else { continue };
+        let ids = &rest[..close];
+        let reason = rest[close + 1..].trim_start_matches([':', '-']).trim();
+        if !reason.is_empty() && ids.split(',').any(|id| id.trim() == d.rule) {
+            return true;
+        }
+    }
+    false
+}
+
+fn push(
+    diags: &mut Vec<Diag>,
+    file: &str,
+    line: u32,
+    rule: &'static str,
+    message: impl Into<String>,
+) {
+    diags.push(Diag { file: file.to_string(), line, rule, message: message.into() });
+}
+
+// ---------------------------------------------------------------------------
+// cfg(test)/cfg(loom) exemption regions
+// ---------------------------------------------------------------------------
+
+/// Token mask: true = token sits in a `#[cfg(test)]`-style item and is
+/// exempt from every rule.
+fn inactive_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut off = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        match match_cfg_attr(toks, i) {
+            Some((after, inner, exempt)) => {
+                if exempt && inner {
+                    // #![cfg(test)] — the whole remaining file is exempt
+                    for slot in off.iter_mut().skip(i) {
+                        *slot = true;
+                    }
+                    return off;
+                }
+                if exempt {
+                    let end = item_end(toks, after);
+                    for slot in off.iter_mut().take(end + 1).skip(i) {
+                        *slot = true;
+                    }
+                    i = end + 1;
+                } else {
+                    i = after;
+                }
+            }
+            None => i += 1,
+        }
+    }
+    off
+}
+
+/// If `toks[i..]` starts a `#[cfg(...)]` / `#![cfg(...)]` attribute, return
+/// (index after the closing `]`, was-inner, gates-an-exempt-cfg).
+fn match_cfg_attr(toks: &[Tok], i: usize) -> Option<(usize, bool, bool)> {
+    if !toks.get(i)?.is_punct('#') {
+        return None;
+    }
+    let mut j = i + 1;
+    let inner = toks.get(j)?.is_punct('!');
+    if inner {
+        j += 1;
+    }
+    if !toks.get(j)?.is_punct('[') {
+        return None;
+    }
+    if !toks.get(j + 1)?.is_ident("cfg") {
+        return None;
+    }
+    if !toks.get(j + 2)?.is_punct('(') {
+        return None;
+    }
+    let mut depth = 1i32;
+    let mut k = j + 3;
+    let mut negated = false;
+    let mut exempt_word = false;
+    while k < toks.len() && depth > 0 {
+        let t = &toks[k];
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+        } else if t.kind == Kind::Ident {
+            match t.text.as_str() {
+                "not" => negated = true,
+                "test" | "loom" | "miri" => exempt_word = true,
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    // expect the closing `]`
+    if !toks.get(k).map(|t| t.is_punct(']')).unwrap_or(false) {
+        return None;
+    }
+    Some((k + 1, inner, exempt_word && !negated))
+}
+
+/// Index of the last token of the item starting at `toks[i]` (after any
+/// further attributes): either the matching `}` of its body or the `;` that
+/// ends a body-less item.
+fn item_end(toks: &[Tok], mut i: usize) -> usize {
+    // skip stacked attributes
+    while i + 1 < toks.len() && toks[i].is_punct('#') && toks[i + 1].is_punct('[') {
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        while j < toks.len() {
+            if toks[j].is_punct('[') {
+                depth += 1;
+            } else if toks[j].is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        i = (j + 1).min(toks.len());
+    }
+    let mut depth = 0i32;
+    let mut in_brace_body = false;
+    let mut k = i;
+    while k < toks.len() {
+        let t = &toks[k];
+        if t.is_punct('{') {
+            if depth == 0 {
+                in_brace_body = true;
+            }
+            depth += 1;
+        } else if t.is_punct('(') || t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct('}') || t.is_punct(')') || t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 && in_brace_body && t.is_punct('}') {
+                return k;
+            }
+        } else if t.is_punct(';') && depth == 0 {
+            return k;
+        }
+        k += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+// ---------------------------------------------------------------------------
+// AGN-D1 — no hash-collection iteration in lib code
+// ---------------------------------------------------------------------------
+
+fn is_hash_ty(t: &Tok) -> bool {
+    t.is_ident("HashMap") || t.is_ident("HashSet")
+}
+
+fn d1_hash_iteration(
+    file: &str,
+    rel: &str,
+    toks: &[Tok],
+    off: &[bool],
+    policy: &Policy,
+    diags: &mut Vec<Diag>,
+) {
+    if allowed(policy.d1_hash_iteration, rel) {
+        return;
+    }
+    // Pass 1: names bound to a hash-collection type in this file, via
+    // `name: …HashMap<…>` annotations (fields, params, lets) and
+    // `let name = HashMap::new()`-style initializers.
+    let mut hashy: BTreeMap<String, u32> = BTreeMap::new();
+    for i in 0..toks.len() {
+        if off[i] || toks[i].kind != Kind::Ident {
+            continue;
+        }
+        // `name : <type window containing HashMap>`
+        if toks.get(i + 1).map(|t| t.is_punct(':')).unwrap_or(false)
+            && !toks.get(i + 2).map(|t| t.is_punct(':')).unwrap_or(false)
+        {
+            let mut depth = 0i32;
+            for j in i + 2..(i + 42).min(toks.len()) {
+                let t = &toks[j];
+                if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+                    depth += 1;
+                } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+                    if depth == 0 {
+                        break;
+                    }
+                    depth -= 1;
+                } else if depth == 0 && (t.is_punct(',') || t.is_punct(';') || t.is_punct('=')) {
+                    break;
+                } else if is_hash_ty(t) {
+                    hashy.entry(toks[i].text.clone()).or_insert(toks[i].line);
+                    break;
+                }
+            }
+        }
+        // `let [mut] name = HashMap::…` / `= HashSet::…`
+        if toks[i].is_ident("let") {
+            let mut j = i + 1;
+            if toks.get(j).map(|t| t.is_ident("mut")).unwrap_or(false) {
+                j += 1;
+            }
+            if toks.get(j).map(|t| t.kind == Kind::Ident).unwrap_or(false)
+                && toks.get(j + 1).map(|t| t.is_punct('=')).unwrap_or(false)
+                && toks.get(j + 2).map(is_hash_ty).unwrap_or(false)
+            {
+                hashy.entry(toks[j].text.clone()).or_insert(toks[j].line);
+            }
+        }
+    }
+    if hashy.is_empty() {
+        return;
+    }
+    let msg = |name: &str| {
+        format!(
+            "iteration over hash collection `{name}` observes RandomState order; \
+             use BTreeMap/BTreeSet or sort before iterating"
+        )
+    };
+    for i in 0..toks.len() {
+        if off[i] {
+            continue;
+        }
+        // receiver.method( where receiver is hashy and method observes order
+        if toks[i].kind == Kind::Ident
+            && hashy.contains_key(&toks[i].text)
+            && toks.get(i + 1).map(|t| t.is_punct('.')).unwrap_or(false)
+        {
+            if let Some(m) = toks.get(i + 2) {
+                if ITER_METHODS.contains(&m.text.as_str())
+                    && toks.get(i + 3).map(|t| t.is_punct('(')).unwrap_or(false)
+                {
+                    push(diags, file, toks[i].line, "AGN-D1", msg(&toks[i].text));
+                }
+            }
+        }
+        // `for pat in <expr mentioning a hashy name> {`
+        if toks[i].is_ident("for") {
+            let mut j = i + 1;
+            let mut found_in = None;
+            while j < toks.len() && j < i + 40 {
+                if toks[j].is_ident("in") {
+                    found_in = Some(j);
+                    break;
+                }
+                if toks[j].is_punct('{') || toks[j].is_punct(';') {
+                    break;
+                }
+                j += 1;
+            }
+            if let Some(in_idx) = found_in {
+                let mut depth = 0i32;
+                for k in in_idx + 1..(in_idx + 60).min(toks.len()) {
+                    let t = &toks[k];
+                    if t.is_punct('(') || t.is_punct('[') {
+                        depth += 1;
+                    } else if t.is_punct(')') || t.is_punct(']') {
+                        depth -= 1;
+                    } else if t.is_punct('{') && depth == 0 {
+                        break;
+                    } else if t.kind == Kind::Ident && hashy.contains_key(&t.text) {
+                        push(diags, file, t.line, "AGN-D1", msg(&t.text));
+                        break;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AGN-D2 — wrapping arithmetic confined to the modeled-wraparound domain
+// ---------------------------------------------------------------------------
+
+fn d2_wrapping(
+    file: &str,
+    rel: &str,
+    toks: &[Tok],
+    off: &[bool],
+    policy: &Policy,
+    diags: &mut Vec<Diag>,
+) {
+    if allowed(policy.d2_wrapping, rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if off[i] || t.kind != Kind::Ident {
+            continue;
+        }
+        if t.text.starts_with("wrapping_") || t.text == "Wrapping" {
+            push(
+                diags,
+                file,
+                t.line,
+                "AGN-D2",
+                format!(
+                    "`{}` outside the modeled-wraparound domain (compute::lut / util::rng / \
+                     util::fnv); wraparound elsewhere is a masked bug, not a model",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AGN-D3 — unsafe requires an allowlisted module and a SAFETY comment
+// ---------------------------------------------------------------------------
+
+fn d3_unsafe(
+    file: &str,
+    rel: &str,
+    toks: &[Tok],
+    off: &[bool],
+    lexed: &Lexed,
+    policy: &Policy,
+    diags: &mut Vec<Diag>,
+) {
+    for (i, t) in toks.iter().enumerate() {
+        if off[i] || !t.is_ident("unsafe") {
+            continue;
+        }
+        if !allowed(policy.d3_unsafe, rel) {
+            push(
+                diags,
+                file,
+                t.line,
+                "AGN-D3",
+                "`unsafe` outside the allowlisted kernel modules (compute::simd); \
+                 widen the policy deliberately or keep the code safe",
+            );
+        }
+        if !lexed.comment_in_range_contains(t.line.saturating_sub(3), t.line, "SAFETY:") {
+            push(
+                diags,
+                file,
+                t.line,
+                "AGN-D3",
+                "`unsafe` without a `// SAFETY:` comment in the preceding 3 lines",
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AGN-D4 — ambient nondeterminism sources
+// ---------------------------------------------------------------------------
+
+fn d4_nondeterminism(
+    file: &str,
+    rel: &str,
+    toks: &[Tok],
+    off: &[bool],
+    policy: &Policy,
+    diags: &mut Vec<Diag>,
+) {
+    if allowed(policy.d4_nondeterminism, rel) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if off[i] || t.kind != Kind::Ident {
+            continue;
+        }
+        // `std::env` paths (env::var & friends). `std::env::args[_os]` is
+        // exempt: argv is an input, not ambient state.
+        if t.is_ident("std")
+            && toks.get(i + 1).map(|x| x.is_punct(':')).unwrap_or(false)
+            && toks.get(i + 2).map(|x| x.is_punct(':')).unwrap_or(false)
+            && toks.get(i + 3).map(|x| x.is_ident("env")).unwrap_or(false)
+        {
+            let is_args = toks.get(i + 4).map(|x| x.is_punct(':')).unwrap_or(false)
+                && toks.get(i + 5).map(|x| x.is_punct(':')).unwrap_or(false)
+                && toks
+                    .get(i + 6)
+                    .map(|x| x.is_ident("args") || x.is_ident("args_os"))
+                    .unwrap_or(false);
+            if !is_args {
+                push(
+                    diags,
+                    file,
+                    t.line,
+                    "AGN-D4",
+                    "ambient environment read outside util::env (the one approved \
+                     boundary); route it through util::env::read",
+                );
+            }
+        }
+        if NONDET_IDENTS.contains(&t.text.as_str()) {
+            push(
+                diags,
+                file,
+                t.line,
+                "AGN-D4",
+                format!(
+                    "`{}` is a nondeterminism source; the contract allows wall-clock \
+                     and entropy only inside util::timer / benchkit / util::env",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AGN-D5 — float reductions confined to compute:: (order-pinned)
+// ---------------------------------------------------------------------------
+
+fn d5_float_reduction(
+    file: &str,
+    rel: &str,
+    toks: &[Tok],
+    off: &[bool],
+    policy: &Policy,
+    diags: &mut Vec<Diag>,
+) {
+    if allowed(policy.d5_float_reduction, rel) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if off[i] || toks[i].kind != Kind::Ident {
+            continue;
+        }
+        let name = toks[i].text.as_str();
+        if !(name == "sum" || name == "product" || name == "fold") {
+            continue;
+        }
+        let after_dot = i
+            .checked_sub(1)
+            .and_then(|p| toks.get(p))
+            .map(|t| t.is_punct('.'))
+            .unwrap_or(false);
+        if !after_dot {
+            continue;
+        }
+        let (lo, hi) = stmt_window(toks, i);
+        let float_involved = toks[lo..hi].iter().any(|t| {
+            t.kind == Kind::Float || t.is_ident("f32") || t.is_ident("f64")
+        });
+        if float_involved {
+            push(
+                diags,
+                file,
+                toks[i].line,
+                "AGN-D5",
+                format!(
+                    "float `.{name}()` reduction outside compute:: — summation order \
+                     must be pinned; use compute::reduce (sum_f32/sum_f64/fold_*)"
+                ),
+            );
+        }
+    }
+}
+
+/// The statement-ish token window around `i`: bounded by `;`/`,`/braces at
+/// the same nesting level (commas inside nested parens/brackets do not
+/// split, so closure arguments and struct-literal fields stay intact).
+fn stmt_window(toks: &[Tok], i: usize) -> (usize, usize) {
+    let mut lo = 0usize;
+    let mut depth = 0i32;
+    for k in (0..i).rev() {
+        let t = &toks[k];
+        if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            depth += 1;
+        } else if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            if depth == 0 {
+                lo = k + 1;
+                break;
+            }
+            depth -= 1;
+        } else if depth == 0 && (t.is_punct(';') || t.is_punct(',')) {
+            lo = k + 1;
+            break;
+        }
+    }
+    let mut hi = toks.len();
+    depth = 0;
+    for (k, t) in toks.iter().enumerate().skip(i) {
+        if t.is_punct('(') || t.is_punct('[') || t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct(')') || t.is_punct(']') || t.is_punct('}') {
+            if depth == 0 {
+                hi = k;
+                break;
+            }
+            depth -= 1;
+        } else if depth == 0 && (t.is_punct(';') || t.is_punct(',')) {
+            hi = k;
+            break;
+        }
+    }
+    (lo, hi)
+}
+
+// ---------------------------------------------------------------------------
+// AGN-D6 — #[allow(...)] requires an invariant comment
+// ---------------------------------------------------------------------------
+
+fn d6_naked_allow(
+    file: &str,
+    toks: &[Tok],
+    off: &[bool],
+    lexed: &Lexed,
+    src: &str,
+    diags: &mut Vec<Diag>,
+) {
+    let lines: Vec<&str> = src.lines().collect();
+    let commented: BTreeSet<u32> = lexed
+        .comments
+        .iter()
+        .flat_map(|c| c.start_line..=c.end_line)
+        .collect();
+    for i in 0..toks.len() {
+        if off[i] || !toks[i].is_punct('#') {
+            continue;
+        }
+        let mut j = i + 1;
+        if toks.get(j).map(|t| t.is_punct('!')).unwrap_or(false) {
+            j += 1;
+        }
+        if !toks.get(j).map(|t| t.is_punct('[')).unwrap_or(false) {
+            continue;
+        }
+        if !toks.get(j + 1).map(|t| t.is_ident("allow")).unwrap_or(false) {
+            continue;
+        }
+        let line = toks[i].line;
+        if commented.contains(&line) {
+            continue; // trailing `// why` on the attribute line
+        }
+        // walk up through any attribute-only lines to the justification
+        let mut l = line.saturating_sub(1);
+        let mut justified = false;
+        while l >= 1 {
+            if commented.contains(&l) {
+                justified = true;
+                break;
+            }
+            let text = lines.get((l - 1) as usize).map(|s| s.trim()).unwrap_or("");
+            if text.starts_with("#[") || text.starts_with("#![") {
+                l -= 1;
+                continue;
+            }
+            break;
+        }
+        if !justified {
+            push(
+                diags,
+                file,
+                line,
+                "AGN-D6",
+                "#[allow(...)] without an invariant comment explaining why the \
+                 lint does not apply here",
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::Policy;
+
+    fn run(src: &str) -> Vec<Diag> {
+        check_source("t.rs", "t.rs", src, &Policy::empty())
+    }
+
+    fn rules(src: &str) -> Vec<&'static str> {
+        run(src).into_iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn d1_iteration_flagged_keyed_lookup_clean() {
+        let src = "use std::collections::HashMap;\n\
+                   fn f(m: &HashMap<String, u64>) -> u64 {\n\
+                       let mut t = 0;\n\
+                       for (_k, v) in m.iter() { t += v; }\n\
+                       t + m.get(\"x\").copied().unwrap_or(0)\n\
+                   }\n";
+        let ds = run(src);
+        assert_eq!(ds.iter().filter(|d| d.rule == "AGN-D1").count(), 1);
+        assert_eq!(ds[0].line, 4);
+        let keyed = "use std::collections::HashMap;\n\
+                     fn g(m: &HashMap<String, u64>) -> bool { m.contains_key(\"x\") }\n";
+        assert!(run(keyed).is_empty());
+    }
+
+    #[test]
+    fn d2_wrapping_and_waiver() {
+        assert_eq!(rules("fn f(a: u64) -> u64 { a.wrapping_mul(3) }"), vec!["AGN-D2"]);
+        let waived = "fn f(a: u64) -> u64 {\n\
+                      // lint:allow(AGN-D2) fixture models mod-2^64 arithmetic\n\
+                      a.wrapping_mul(3)\n}";
+        assert!(run(waived).is_empty());
+        let no_reason = "fn f(a: u64) -> u64 {\n// lint:allow(AGN-D2)\na.wrapping_mul(3)\n}";
+        assert_eq!(rules(no_reason), vec!["AGN-D2"]);
+    }
+
+    #[test]
+    fn d3_both_halves() {
+        let both = "fn f(x: &[u8]) -> u8 { unsafe { *x.get_unchecked(0) } }";
+        assert_eq!(rules(both), vec!["AGN-D3"]); // deduped to one per line
+        let with_comment = "// SAFETY: caller guarantees non-empty\n\
+                            fn f(x: &[u8]) -> u8 { unsafe { *x.get_unchecked(0) } }";
+        let ds = run(with_comment);
+        assert_eq!(ds.len(), 1);
+        assert!(ds[0].message.contains("allowlisted"));
+    }
+
+    #[test]
+    fn d4_env_flagged_args_exempt() {
+        assert_eq!(rules("fn f() { let _ = std::env::var(\"X\"); }"), vec!["AGN-D4"]);
+        assert!(run("fn f() { let _ = std::env::args().count(); }").is_empty());
+        assert_eq!(rules("fn f() { let _ = std::time::SystemTime::now(); }"), vec!["AGN-D4"]);
+    }
+
+    #[test]
+    fn d5_float_only() {
+        assert_eq!(rules("fn f(x: &[f32]) -> f32 { x.iter().sum::<f32>() }"), vec!["AGN-D5"]);
+        assert_eq!(
+            rules("fn f(x: &[f64]) -> f64 { x.iter().fold(0.0, |a, b| a.max(*b)) }"),
+            vec!["AGN-D5"]
+        );
+        assert!(run("fn f(x: &[usize]) -> usize { x.iter().sum() }").is_empty());
+        assert!(run("fn f(x: &[Vec<u8>]) -> usize { x.iter().map(|v| v.len()).sum() }")
+            .is_empty());
+    }
+
+    #[test]
+    fn d5_struct_literal_fields_do_not_leak_floats() {
+        // the float in a neighbouring field must not taint the integer sum
+        let src = "struct S { a: f64, b: usize }\n\
+                   fn f(xs: &[usize]) -> S {\n\
+                       S { a: 0.5, b: xs.iter().sum() }\n\
+                   }\n";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn d6_justification_forms() {
+        assert_eq!(rules("#[allow(dead_code)]\nfn f() {}"), vec!["AGN-D6"]);
+        assert!(run("// invariant: exercised via ffi\n#[allow(dead_code)]\nfn f() {}")
+            .is_empty());
+        assert!(run("#[allow(dead_code)] // invariant: ffi entry\nfn f() {}").is_empty());
+        assert!(run("/// docs count as justification\n#[allow(dead_code)]\nfn f() {}")
+            .is_empty());
+        // attributes stack: comment above the stack still counts
+        assert!(run("// why\n#[allow(dead_code)]\n#[allow(unused)]\nfn f() {}").is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n\
+                   fn f(x: &[f32]) -> f32 { x.iter().sum::<f32>() }\n\
+                   fn g(a: u64) -> u64 { a.wrapping_add(1) }\n}\n";
+        assert!(run(src).is_empty());
+        let not_gated = "#[cfg(not(loom))]\nfn g(a: u64) -> u64 { a.wrapping_add(1) }\n";
+        assert_eq!(rules(not_gated), vec!["AGN-D2"]);
+    }
+}

@@ -1,0 +1,10 @@
+// AGN-D1 bad twin: iterating a RandomState-seeded map in lib code.
+use std::collections::HashMap;
+
+pub fn report(m: &HashMap<String, u64>) -> u64 {
+    let mut total = 0;
+    for (_k, v) in m.iter() {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,4 @@
+// AGN-D2 bad twin: wraparound arithmetic outside the modeled domain.
+pub fn mix(a: u64, b: u64) -> u64 {
+    a.wrapping_mul(b).wrapping_add(17)
+}

@@ -1,0 +1,6 @@
+// AGN-D3 bad twin: unsafe outside the allowlist. The SAFETY comment is
+// present, so exactly the allowlist half of the rule fires.
+pub fn first(xs: &[u8]) -> u8 {
+    // SAFETY: callers pass non-empty slices (fixture pretext)
+    unsafe { *xs.get_unchecked(0) }
+}

@@ -1,0 +1,4 @@
+// AGN-D4 bad twin: ambient environment read outside util::env.
+pub fn threads() -> usize {
+    std::env::var("AGN_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}

@@ -1,0 +1,4 @@
+// AGN-D5 bad twin: unpinned float reduction outside compute::.
+pub fn total(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}

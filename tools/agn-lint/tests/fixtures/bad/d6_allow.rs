@@ -1,0 +1,5 @@
+// AGN-D6 bad twin: this banner is separated from the attribute by a
+// blank line, so it does not count as a justification.
+
+#[allow(dead_code)]
+fn helper() {}

@@ -1,0 +1,17 @@
+// Test modules are outside the contract: this file must lint clean.
+pub fn double(x: u64) -> u64 {
+    x * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::double;
+
+    #[test]
+    fn wrapping_and_float_sums_are_fine_in_tests() {
+        let xs = [0.5f32, 1.5];
+        let s: f32 = xs.iter().sum();
+        assert!(s > 0.0);
+        assert_eq!(double(2).wrapping_add(1), 5);
+    }
+}

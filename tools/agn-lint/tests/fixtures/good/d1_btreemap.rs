@@ -1,0 +1,16 @@
+// AGN-D1 good twin: iterate ordered collections; keyed hash lookup is
+// explicitly fine. (Names differ because the rule tracks hash-typed
+// bindings per file, not per scope.)
+use std::collections::{BTreeMap, HashMap};
+
+pub fn lookup(index: &HashMap<String, u64>, k: &str) -> Option<u64> {
+    index.get(k).copied()
+}
+
+pub fn report(ordered: &BTreeMap<String, u64>) -> u64 {
+    let mut total = 0;
+    for (_k, v) in ordered.iter() {
+        total += v;
+    }
+    total
+}

@@ -1,0 +1,4 @@
+// AGN-D2 good twin: bit mixing without modeled wraparound.
+pub fn mix(a: u64, b: u64) -> u64 {
+    a ^ b.rotate_left(13)
+}

@@ -1,0 +1,4 @@
+// AGN-D3 good twin: the safe API expresses the same access.
+pub fn first(xs: &[u8]) -> Option<u8> {
+    xs.first().copied()
+}

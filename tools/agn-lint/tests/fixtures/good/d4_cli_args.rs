@@ -1,0 +1,9 @@
+// AGN-D4 good twin: argv is an input, not ambient state — std::env::args
+// is exempt; configuration otherwise arrives as parameters.
+pub fn arg_count() -> usize {
+    std::env::args().skip(1).count()
+}
+
+pub fn threads(configured: Option<usize>) -> usize {
+    configured.unwrap_or(1)
+}

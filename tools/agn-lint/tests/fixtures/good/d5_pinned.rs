@@ -1,0 +1,13 @@
+// AGN-D5 good twin: integer reductions are unaffected, and explicit
+// left-to-right accumulation pins the float order.
+pub fn count(xs: &[Vec<u8>]) -> usize {
+    xs.iter().map(|v| v.len()).sum()
+}
+
+pub fn total(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in xs {
+        acc += x;
+    }
+    acc
+}

@@ -1,0 +1,7 @@
+// AGN-D6 good twin: both justification forms.
+// invariant: helper is exercised only through the fixture corpus
+#[allow(dead_code)]
+fn helper() {}
+
+#[allow(dead_code)] // invariant: kept for API parity with helper()
+fn helper_too() {}

@@ -1,0 +1,5 @@
+// One-off waivers carry the rule ID and a mandatory reason.
+pub fn fixture_mix(seed: u64) -> u64 {
+    // lint:allow(AGN-D2) fixture demonstrates the in-place waiver form
+    seed.wrapping_add(0x9e3779b97f4a7c15)
+}

@@ -1,0 +1,135 @@
+//! Fixture-corpus self-tests: every bad fixture trips exactly its rule ID,
+//! every good twin passes, the JSON report matches the golden snapshot
+//! byte-for-byte, and the binary's `--deny` exit codes hold end-to-end.
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+use std::path::PathBuf;
+
+use agn_lint::deps;
+use agn_lint::diag::{render_json, Diag};
+use agn_lint::driver;
+use agn_lint::policy::{module_rel, Policy};
+use agn_lint::rules;
+
+fn fixture_root(sub: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(sub)
+}
+
+fn check_file(dir: &str, name: &str) -> Vec<Diag> {
+    let path = fixture_root(dir).join(name);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let disp = path.to_string_lossy().replace('\\', "/");
+    rules::check_source(name, &module_rel(&disp), &src, &Policy::production())
+}
+
+#[test]
+fn every_bad_fixture_trips_exactly_its_rule() {
+    let cases = [
+        ("d1_hash_iteration.rs", "AGN-D1"),
+        ("d2_wrapping.rs", "AGN-D2"),
+        ("d3_unsafe.rs", "AGN-D3"),
+        ("d4_env.rs", "AGN-D4"),
+        ("d5_float_sum.rs", "AGN-D5"),
+        ("d6_allow.rs", "AGN-D6"),
+    ];
+    for (file, rule) in cases {
+        let ds = check_file("bad", file);
+        assert_eq!(ds.len(), 1, "{file} must trip exactly once: {ds:?}");
+        assert_eq!(ds[0].rule, rule, "{file} tripped the wrong rule: {ds:?}");
+    }
+}
+
+#[test]
+fn bad_manifest_trips_d7() {
+    let path = fixture_root("bad").join("Cargo_bad.toml");
+    let src = std::fs::read_to_string(path).unwrap();
+    let ds = deps::check_manifest("Cargo_bad.toml", &src);
+    assert_eq!(ds.len(), 1, "{ds:?}");
+    assert_eq!(ds[0].rule, "AGN-D7");
+    assert!(ds[0].message.contains("rand"));
+}
+
+#[test]
+fn every_good_fixture_is_clean() {
+    let dir = fixture_root("good");
+    let mut saw = 0usize;
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
+    entries.sort();
+    for p in entries {
+        let name = p.file_name().unwrap().to_string_lossy().to_string();
+        if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let ds = check_file("good", &name);
+            assert!(ds.is_empty(), "good fixture {name} must lint clean: {ds:?}");
+            saw += 1;
+        }
+    }
+    assert!(saw >= 7, "good corpus unexpectedly small ({saw} files)");
+    let m = dir.join("Cargo_good.toml");
+    let ds = deps::check_manifest("Cargo_good.toml", &std::fs::read_to_string(m).unwrap());
+    assert!(ds.is_empty(), "good manifest must pass AGN-D7: {ds:?}");
+}
+
+#[test]
+fn golden_json_snapshot() {
+    let bad = fixture_root("bad");
+    let manifest = bad.join("Cargo_bad.toml");
+    let report = driver::run(
+        &[bad],
+        std::slice::from_ref(&manifest),
+        &Policy::production(),
+    )
+    .unwrap();
+    // Strip the machine-specific prefix so the snapshot is portable.
+    let mapped: Vec<Diag> = report
+        .diags
+        .into_iter()
+        .map(|mut d| {
+            if let Some(pos) = d.file.rfind("/fixtures/") {
+                d.file = d.file[pos + "/fixtures/".len()..].to_string();
+            }
+            d
+        })
+        .collect();
+    let json = render_json(&mapped, report.files_checked);
+    let golden = include_str!("fixtures/golden_diagnostics.json");
+    assert_eq!(
+        json, golden,
+        "JSON report drifted from tests/fixtures/golden_diagnostics.json; \
+         update the snapshot deliberately if the change is intended"
+    );
+}
+
+#[test]
+fn deny_mode_exit_codes_and_json_rule_ids() {
+    let exe = env!("CARGO_BIN_EXE_agn-lint");
+    let bad = fixture_root("bad");
+    let out = std::process::Command::new(exe)
+        .arg("--deny")
+        .arg("--json")
+        .arg("--manifest")
+        .arg(bad.join("Cargo_bad.toml"))
+        .arg(&bad)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1), "--deny must exit 1 on the bad corpus");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    for rule in ["AGN-D1", "AGN-D2", "AGN-D3", "AGN-D4", "AGN-D5", "AGN-D6", "AGN-D7"] {
+        assert!(stdout.contains(rule), "JSON output is missing {rule}: {stdout}");
+    }
+
+    let good = fixture_root("good");
+    let out = std::process::Command::new(exe)
+        .arg("--deny")
+        .arg("--manifest")
+        .arg(good.join("Cargo_good.toml"))
+        .arg(&good)
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "good corpus must pass --deny: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}
