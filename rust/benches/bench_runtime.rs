@@ -8,14 +8,18 @@
 //! built artifacts, a PJRT section benches the same programs on the XLA
 //! path — only that section skips when the PJRT client or artifacts are
 //! unavailable.
+//!
+//! Emits the machine-readable `BENCH_runtime.json` (benchkit JSON export
+//! with host fingerprint) so the perf trajectory can be tracked across
+//! PRs.
 
 // test/bench/example code: panics are failure reports (see clippy.toml)
 #![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 
 
 use agn_approx::api::{ApproxSession, JobSpec, RunConfig};
-use agn_approx::benchkit::Bench;
-use agn_approx::compute::ComputeConfig;
+use agn_approx::benchkit::{host_fingerprint, Bench};
+use agn_approx::compute::{ComputeConfig, ComputePool, KernelChoice};
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
 use agn_approx::runtime::{
@@ -162,6 +166,21 @@ fn main() {
             });
             b.throughput(manifest.batch as f64, "images");
         }
+
+        // kernel-variant lane: forced-scalar vs the auto dispatch tier at
+        // one worker thread on the same program — outputs are bit-identical
+        // (the dispatch contract), only wall-clock moves
+        for (tag, cfg) in [
+            ("scalar", ComputeConfig::with_threads(1).with_kernel(KernelChoice::Scalar)),
+            ("simd", ComputeConfig::with_threads(1)),
+        ] {
+            let mut bt =
+                create_backend_with(BackendKind::Native, "artifacts", cfg).unwrap();
+            b.bench(&format!("native/{tag}/t1/execute/train_qat"), || {
+                bt.run(&manifest, "train_qat", &inputs).unwrap()
+            });
+            b.throughput(manifest.batch as f64, "images");
+        }
     }
 
     // session/job API overhead on a warm backend: baseline loads from the
@@ -207,5 +226,12 @@ fn main() {
         }
     }
 
+    let auto_variant =
+        ComputePool::new(ComputeConfig::with_threads(1)).kernel_variant().to_string();
+    b.set_fingerprint(host_fingerprint(ComputeConfig::from_env().threads, &auto_variant));
+    match b.save_json("BENCH_runtime.json") {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_runtime.json: {e}"),
+    }
     b.finish();
 }

@@ -11,8 +11,8 @@
 #![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
 
 
-use agn_approx::benchkit::Bench;
-use agn_approx::compute::{self, ComputeConfig, ComputePool};
+use agn_approx::benchkit::{host_fingerprint, Bench};
+use agn_approx::compute::{self, ComputeConfig, ComputePool, KernelChoice, LayerLut};
 use agn_approx::datasets::{Dataset, DatasetSpec, Split};
 use agn_approx::multipliers::{build_layer_lut, unsigned_catalog};
 use agn_approx::runtime::{create_backend, BackendKind, ExecBackend};
@@ -82,6 +82,39 @@ fn main() {
         }
     }
 
+    // kernel-variant lanes at a fixed thread count (§Perf acceptance: the
+    // simd lane beats the scalar lane on LUT-matmul p50 at equal threads,
+    // and the i16-packed LUT beats i32 again via the halved table
+    // footprint). Outputs are bit-identical across all three lanes — the
+    // SIMD kernels keep the serial accumulation order.
+    {
+        let (m, k, n) = (4096usize, 144usize, 32usize);
+        let x: Vec<u8> = (0..m * k).map(|_| rng.below(256) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|_| rng.below(256) as u8).collect();
+        let scalar = ComputePool::new(
+            ComputeConfig::with_threads(1).with_kernel(KernelChoice::Scalar),
+        );
+        let auto = ComputePool::new(ComputeConfig::with_threads(1));
+        let macs = (m * k * n) as f64 / 1e6;
+        b.bench(&format!("approx_matmul_pool/scalar/t1/{m}x{k}x{n}"), || {
+            compute::approx_matmul_pool(&scalar, &x, &w, &lut, m, k, n)
+        });
+        b.throughput(macs, "M-MACs");
+        b.bench(&format!("approx_matmul_pool/simd/t1/{m}x{k}x{n}"), || {
+            compute::approx_matmul_pool(&auto, &x, &w, &lut, m, k, n)
+        });
+        b.throughput(macs, "M-MACs");
+        let packed = LayerLut::from_lut(&lut);
+        if packed.width_bits() == 16 {
+            b.bench(&format!("approx_matmul_pool/simd_i16/t1/{m}x{k}x{n}"), || {
+                compute::approx_matmul_pool_view(&auto, &x, &w, packed.view(), m, k, n)
+            });
+            b.throughput(macs, "M-MACs");
+        } else {
+            println!("(simd_i16 lane skipped: this LUT has cells outside i16)");
+        }
+    }
+
     // trainer GEMM workloads (simulator::train backward: dW += pᵀg and
     // dp = g Wᵀ at a conv-layer shape): naive serial vs blocked (t1) vs
     // blocked parallel
@@ -111,6 +144,21 @@ fn main() {
             });
             b.throughput(macs, "M-MACs");
         }
+
+        // kernel-variant lanes for the f32 axpy dispatch (no-FMA SIMD,
+        // bit-identical to the scalar loop)
+        let scalar = ComputePool::new(
+            ComputeConfig::with_threads(1).with_kernel(KernelChoice::Scalar),
+        );
+        let auto = ComputePool::new(ComputeConfig::with_threads(1));
+        b.bench(&format!("gemm/scalar/t1/{m}x{k}x{n}"), || {
+            compute::gemm(&scalar, &p, &wmat, m, k, n)
+        });
+        b.throughput(macs, "M-MACs");
+        b.bench(&format!("gemm/simd/t1/{m}x{k}x{n}"), || {
+            compute::gemm(&auto, &p, &wmat, m, k, n)
+        });
+        b.throughput(macs, "M-MACs");
     }
 
     // full-network forward (synthetic manifest; no artifacts needed):
@@ -157,6 +205,12 @@ fn main() {
             b.throughput(macs / 1e6, "M-MACs");
         }
     }
+
+    // environment fingerprint: which host/toolchain/kernel tier produced
+    // these numbers (kernel = what the auto lanes resolved to)
+    let auto_variant =
+        ComputePool::new(ComputeConfig::with_threads(1)).kernel_variant().to_string();
+    b.set_fingerprint(host_fingerprint(ComputeConfig::from_env().threads, &auto_variant));
 
     match b.save_json("BENCH_kernels.json") {
         Ok(p) => println!("wrote {}", p.display()),

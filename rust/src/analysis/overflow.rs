@@ -59,6 +59,19 @@ pub fn accumulator_interval(product: Interval, acc_len: usize) -> Interval {
     product.sum_of(acc_len)
 }
 
+/// i16-packing eligibility for a lowered layer LUT: true when **every**
+/// cell fits i16, so the lowering pass may emit the 128 KiB packed form
+/// ([`crate::compute::lut::pack_lut_i16`]) instead of the 256 KiB i32
+/// table.
+///
+/// Unlike [`product_interval_lut`], this scans the whole table including
+/// the unreachable weight column 0: the packed table feeds the kernels
+/// verbatim, and the bit-identity contract covers every index the kernels
+/// can be handed, reachable by lowered code or not.
+pub fn lut_fits_i16(lut: &[i32]) -> bool {
+    crate::compute::lut::fits_i16(lut)
+}
+
 /// Turn an accumulator bound into a per-layer verdict. `known_grid` is
 /// false when the activation quantization is not a known 8-bit integer
 /// scheme — then the operand ranges the analysis assumed do not apply and
@@ -118,6 +131,25 @@ mod tests {
             }
         }
         assert_eq!(iv, Interval::new(lo, hi));
+    }
+
+    #[test]
+    fn i16_eligibility_tracks_lut_extremes() {
+        // the exact LUT's full-table extremes (including the unreachable
+        // column 0 = weight code -128) are 255·(-128) = -32640 and
+        // 255·127 = 32385; both fit i16, so the exact LUT is eligible
+        let cat = unsigned_catalog();
+        let exact = &cat.instances[cat.exact_index()];
+        for act_signed in [false, true] {
+            let lut = build_layer_lut(exact, act_signed);
+            assert!(lut_fits_i16(&lut), "act_signed={act_signed}");
+        }
+        // a single out-of-range cell — even in the unreachable column 0
+        // that product_interval_lut ignores — blocks packing
+        let mut lut = build_layer_lut(exact, false);
+        lut[128 * 256] = 40_000;
+        assert!(!lut_fits_i16(&lut));
+        assert!(product_interval_lut(&lut).within(product_interval_exact(false)));
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use super::error::{AgnError, AgnResult};
 use super::job::{JobResult, JobSpec};
-use crate::compute::ComputeConfig;
+use crate::compute::{ComputeConfig, KernelChoice};
 use crate::coordinator::experiments;
 use crate::coordinator::pipeline::{default_cache_dir, Pipeline, RunConfig};
 use crate::datasets::DatasetCache;
@@ -27,6 +27,10 @@ pub struct SessionStats {
     /// Worker count of the session's compute layer (`--threads` /
     /// [`SessionBuilder::threads`] / `AGN_THREADS`).
     pub compute_threads: usize,
+    /// Resolved kernel variant of the compute layer (`--kernel` /
+    /// [`SessionBuilder::kernel`] / `AGN_KERNEL`): `"scalar"`, `"avx2"`
+    /// or `"neon"`.
+    pub compute_kernel: String,
 }
 
 /// Builder for [`ApproxSession`]; the artifact directory is the only
@@ -38,6 +42,7 @@ pub struct SessionBuilder {
     cfg: RunConfig,
     backend: BackendKind,
     threads: usize,
+    kernel: KernelChoice,
     fault_plan: Option<FaultPlan>,
 }
 
@@ -56,6 +61,17 @@ impl SessionBuilder {
     /// ([`crate::compute`]), so this is purely a throughput knob.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Kernel dispatch tier for the compute layer (`--kernel` /
+    /// `AGN_KERNEL`). [`KernelChoice::Auto`] (the default) picks the best
+    /// tier the host supports; forcing an unavailable tier falls back to
+    /// scalar with a warning. Every tier is **bit-identical** to scalar
+    /// serial ([`crate::compute::simd`]), so this is purely a throughput
+    /// knob.
+    pub fn kernel(mut self, kernel: KernelChoice) -> Self {
+        self.kernel = kernel;
         self
     }
 
@@ -125,7 +141,10 @@ impl SessionBuilder {
     /// Construct the session: builds the execution backend and creates the
     /// cache directory. Model artifacts/manifests are loaded lazily per job.
     pub fn build(self) -> AgnResult<ApproxSession> {
-        let compute = ComputeConfig::resolve(self.threads);
+        let mut compute = ComputeConfig::resolve(self.threads);
+        if self.kernel != KernelChoice::Auto {
+            compute = compute.with_kernel(self.kernel);
+        }
         let engine = create_backend_with(self.backend, &self.artifacts, compute).map_err(
             |source| AgnError::Engine {
                 context: format!("constructing {} backend", self.backend),
@@ -142,12 +161,14 @@ impl SessionBuilder {
         if let Some(plan) = &self.fault_plan {
             robust::faults::install(plan);
         }
+        let (_, variant) = crate::compute::simd::select(compute.kernel);
         Ok(ApproxSession {
             engine,
             artifacts: self.artifacts,
             cache_dir,
             cfg: self.cfg,
             compute,
+            kernel_variant: variant,
             pipelines: BTreeMap::new(),
             datasets: DatasetCache::default(),
             jobs_run: 0,
@@ -178,6 +199,8 @@ pub struct ApproxSession {
     /// Compute-layer configuration shared by the backend and every
     /// per-model pipeline (simulator sweeps, operand collection).
     compute: ComputeConfig,
+    /// Kernel tier the compute configuration resolves to on this host.
+    kernel_variant: crate::compute::KernelVariant,
     /// Ordered so any future iteration (bulk eval, session reports) is
     /// deterministic by construction — the lint (AGN-D1) bans iterating
     /// hash-ordered state.
@@ -197,6 +220,7 @@ impl ApproxSession {
             cfg: RunConfig::default(),
             backend: BackendKind::Native,
             threads: 0,
+            kernel: KernelChoice::Auto,
             fault_plan: None,
         }
     }
@@ -428,6 +452,7 @@ impl ApproxSession {
             models_loaded: self.pipelines.len(),
             cache_dir: self.cache_dir.clone(),
             compute_threads: self.compute.threads,
+            compute_kernel: self.kernel_variant.to_string(),
         }
     }
 }

@@ -32,6 +32,65 @@ pub struct Bench {
     /// Target wall-clock per measurement (seconds).
     pub budget_s: f64,
     pub min_iters: usize,
+    /// Environment fingerprint ([`host_fingerprint`]) carried into the
+    /// JSON export, so committed `BENCH_*.json` files are comparable:
+    /// a perf diff against numbers from a different host/toolchain is
+    /// advisory at best, and the fingerprint makes that visible.
+    pub env: Option<Json>,
+}
+
+/// Runtime-detected CPU features relevant to the kernel dispatch tiers
+/// ([`crate::compute::simd`]), as a stable comma-joined list.
+#[cfg(target_arch = "x86_64")]
+fn cpu_feature_list() -> Vec<&'static str> {
+    let mut feats = Vec::new();
+    if std::is_x86_feature_detected!("avx2") {
+        feats.push("avx2");
+    }
+    if std::is_x86_feature_detected!("fma") {
+        feats.push("fma");
+    }
+    feats
+}
+
+#[cfg(target_arch = "aarch64")]
+fn cpu_feature_list() -> Vec<&'static str> {
+    let mut feats = Vec::new();
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        feats.push("neon");
+    }
+    feats
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn cpu_feature_list() -> Vec<&'static str> {
+    Vec::new()
+}
+
+/// Comma-joined dispatch-relevant CPU features of this host (`"avx2,fma"`,
+/// `"neon"`, or `"none-detected"`).
+pub fn detected_cpu_features() -> String {
+    let feats = cpu_feature_list();
+    if feats.is_empty() {
+        "none-detected".to_string()
+    } else {
+        feats.join(",")
+    }
+}
+
+/// The environment fingerprint embedded in every exported bench JSON:
+/// target arch/OS, detected CPU features, the resolved kernel variant,
+/// worker thread count and the rustc that built the bench binary
+/// (captured by `build.rs`; `"unknown"` if the build script was skipped).
+pub fn host_fingerprint(threads: usize, kernel: &str) -> Json {
+    Json::obj(vec![
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("cpu_features", Json::str(detected_cpu_features())),
+        ("kernel", Json::str(kernel)),
+        ("os", Json::str(std::env::consts::OS)),
+        ("rustc", Json::str(option_env!("AGN_RUSTC_VERSION").unwrap_or("unknown"))),
+        ("threads", Json::num(threads as f64)),
+    ])
 }
 
 fn fmt_time(s: f64) -> String {
@@ -54,7 +113,14 @@ impl Bench {
             results: Vec::new(),
             budget_s: crate::util::env::read_parsed("BENCH_BUDGET_S", 1.0),
             min_iters: 3,
+            env: None,
         }
+    }
+
+    /// Attach an environment fingerprint (normally [`host_fingerprint`])
+    /// to this group's JSON export.
+    pub fn set_fingerprint(&mut self, env: Json) {
+        self.env = Some(env);
     }
 
     /// Time `f` repeatedly until the budget is used (>= min_iters runs).
@@ -139,10 +205,12 @@ impl Bench {
                 Json::obj(pairs)
             })
             .collect();
-        Json::obj(vec![
-            ("group", Json::str(self.group.clone())),
-            ("results", Json::Arr(results)),
-        ])
+        let mut pairs = vec![("group", Json::str(self.group.clone()))];
+        if let Some(env) = &self.env {
+            pairs.push(("env", env.clone()));
+        }
+        pairs.push(("results", Json::Arr(results)));
+        Json::obj(pairs)
     }
 
     /// Write [`Bench::to_json`] to `path`; returns the written path.
@@ -181,5 +249,21 @@ mod tests {
         // the whole export must round-trip through the in-repo parser
         let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.req("group").unwrap().as_str(), Some("testgroup"));
+    }
+
+    #[test]
+    fn fingerprint_is_embedded_and_round_trips() {
+        let mut b = Bench::new("fpgroup");
+        b.bench("noop", || std::hint::black_box(1 + 1));
+        b.set_fingerprint(host_fingerprint(4, "scalar"));
+        let parsed = crate::util::json::parse(&b.to_json().to_string_pretty()).unwrap();
+        let env = parsed.req("env").unwrap();
+        assert_eq!(env.req("arch").unwrap().as_str(), Some(std::env::consts::ARCH));
+        assert_eq!(env.req("kernel").unwrap().as_str(), Some("scalar"));
+        assert_eq!(env.req("threads").unwrap().as_f64(), Some(4.0));
+        // rustc is whatever build.rs captured, but the key must exist
+        assert!(env.req("rustc").unwrap().as_str().is_some());
+        assert!(env.req("cpu_features").unwrap().as_str().is_some());
+        assert_eq!(env.req("os").unwrap().as_str(), Some(std::env::consts::OS));
     }
 }

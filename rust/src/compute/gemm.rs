@@ -31,6 +31,9 @@ const MC: usize = 128;
 pub fn gemm(pool: &ComputePool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "a shape");
     assert_eq!(b.len(), k * n, "b shape");
+    // axpy via the pool's kernel tier: every tier rounds multiply-then-add
+    // exactly like the scalar loop (no FMA), so results stay bit-identical
+    let ops = pool.kernel_ops();
     let mut c = vec![0f32; m * n];
     pool.run_rows(&mut c, n, m * k * n, |rows, out| {
         for k0 in (0..k).step_by(KC) {
@@ -44,9 +47,7 @@ pub fn gemm(pool: &ComputePool, a: &[f32], b: &[f32], m: usize, k: usize, n: usi
                         continue;
                     }
                     let brow = &b[kk * n..(kk + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                        *o += av * bv;
-                    }
+                    (ops.axpy_f32)(orow, av, brow);
                 }
             }
         }
@@ -73,6 +74,7 @@ pub fn gemm_at_acc(
     assert_eq!(a.len(), m * k, "a shape");
     assert_eq!(b.len(), m * n, "b shape");
     assert_eq!(out.len(), k * n, "out shape");
+    let ops = pool.kernel_ops();
     pool.run_rows(out, n, m * k * n, |rows, chunk| {
         // pack aᵀ for this chunk's output rows: at[local_k][r] = a[r][k]
         let rk = rows.end - rows.start;
@@ -94,9 +96,7 @@ pub fn gemm_at_acc(
                         continue;
                     }
                     let brow = &b[r * n..(r + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                        *o += av * bv;
-                    }
+                    (ops.axpy_f32)(orow, av, brow);
                 }
             }
         }
@@ -108,6 +108,11 @@ pub fn gemm_at_acc(
 /// rows). Row-chunk parallel over M; summation order per output element is
 /// n ascending with `b_elem * a_elem` operand order (matching the serial
 /// trainer kernel exactly).
+///
+/// Deliberately **not** dispatched through the kernel vtable: this is a
+/// horizontal dot-product reduction, and any SIMD widening would change
+/// the per-element summation order (lane-partial sums), breaking the
+/// bit-identity contract. It stays scalar in every tier.
 pub fn gemm_bt(
     pool: &ComputePool,
     a: &[f32],

@@ -25,14 +25,64 @@
 use super::pool::ComputePool;
 use std::ops::Range;
 
+/// Entry count of a packed i16 LUT: the 256×256 table plus one pad entry.
+///
+/// The pad exists for the AVX2 i16 path: `_mm256_i32gather_epi32` always
+/// reads 4 bytes per lane, so gathering the 2-byte entry at index 65535
+/// touches bytes [131070, 131074) — exactly the padded length × 2. The
+/// scalar kernels never read the pad; its value never reaches an output.
+pub const LUT_I16_LEN: usize = 256 * 256 + 1;
+
+/// `out[j] = out[j].wrapping_add(lrow[wcs[j]])` — the innermost LUT-axpy
+/// step over one hot LUT row. Shared by the scalar kernels and the SIMD
+/// tails (`compute::simd`) so every wrapping accumulate in the crate lives
+/// here, inside the AGN-D2 modeled-wraparound boundary.
+#[inline]
+pub(crate) fn lut_axpy_i32(out: &mut [i32], lrow: &[i32], wcs: &[u8]) {
+    for (o, &wc) in out.iter_mut().zip(wcs.iter()) {
+        *o = (*o).wrapping_add(lrow[wc as usize]);
+    }
+}
+
+/// [`lut_axpy_i32`] over one 256-entry row of a packed i16 LUT; cells are
+/// widened to i32 before the wrapping accumulate, matching the i32 kernel
+/// bit-for-bit (packing is exact — see [`pack_lut_i16`]).
+#[inline]
+pub(crate) fn lut_axpy_i16(out: &mut [i32], lrow: &[i16], wcs: &[u8]) {
+    for (o, &wc) in out.iter_mut().zip(wcs.iter()) {
+        *o = (*o).wrapping_add(lrow[wc as usize] as i32);
+    }
+}
+
+/// `out[ci] += lut[xcs[ci]·256 + wcs[ci]]` (wrapping) — the depthwise
+/// tap-axpy step, shared with the SIMD tails like [`lut_axpy_i32`].
+#[inline]
+pub(crate) fn dw_axpy_i32(out: &mut [i32], lut: &[i32], xcs: &[u8], wcs: &[u8]) {
+    for ci in 0..out.len() {
+        out[ci] = out[ci].wrapping_add(lut[(xcs[ci] as usize) * 256 + wcs[ci] as usize]);
+    }
+}
+
+/// [`dw_axpy_i32`] over a packed i16 LUT.
+#[inline]
+pub(crate) fn dw_axpy_i16(out: &mut [i32], lut: &[i16], xcs: &[u8], wcs: &[u8]) {
+    for ci in 0..out.len() {
+        out[ci] =
+            out[ci].wrapping_add(lut[(xcs[ci] as usize) * 256 + wcs[ci] as usize] as i32);
+    }
+}
+
 /// Rows `rows` of `acc[M, N] = sum_k lut[x[m,k] * 256 + w[k,n]]`, written
 /// into `out` (the chunk slice holding exactly those rows).
 ///
 /// Loop order (m, k, n) keeps the LUT row for `x[m,k]` hot in L1 and walks
 /// `w` and the accumulator sequentially — see EXPERIMENTS.md §Perf for the
 /// measured effect vs. the naive (m, n, k) order.
+///
+/// `pub(crate)`: this is also the scalar entry of the `compute::simd`
+/// kernel vtable and the bit-identity reference for every other variant.
 #[inline]
-fn approx_rows(
+pub(crate) fn approx_rows(
     x_codes: &[u8],
     w_cols: &[u8],
     lut: &[i32],
@@ -47,9 +97,31 @@ fn approx_rows(
         for (ki, &xc) in xrow.iter().enumerate() {
             let lrow = &lut[(xc as usize) * 256..(xc as usize) * 256 + 256];
             let wrow = &w_cols[ki * n..(ki + 1) * n];
-            for (o, &wc) in orow.iter_mut().zip(wrow.iter()) {
-                *o = (*o).wrapping_add(lrow[wc as usize]);
-            }
+            lut_axpy_i32(orow, lrow, wrow);
+        }
+    }
+}
+
+/// [`approx_rows`] over a packed i16 LUT ([`LUT_I16_LEN`] entries).
+/// Bit-identical to the i32 kernel on the unpacked table (widening is
+/// exact); the scalar reference for the SIMD i16 variants.
+#[inline]
+pub(crate) fn approx_rows_i16(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i16],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    for (ri, mi) in rows.enumerate() {
+        let xrow = &x_codes[mi * k..(mi + 1) * k];
+        let orow = &mut out[ri * n..(ri + 1) * n];
+        for (ki, &xc) in xrow.iter().enumerate() {
+            let lrow = &lut[(xc as usize) * 256..(xc as usize) * 256 + 256];
+            let wrow = &w_cols[ki * n..(ki + 1) * n];
+            lut_axpy_i16(orow, lrow, wrow);
         }
     }
 }
@@ -94,9 +166,9 @@ fn exact_rows(
 }
 
 /// Rows of the depthwise variant: x_codes [M, taps, C], w_cols [taps, C]
-/// -> acc rows [rows, C].
+/// -> acc rows [rows, C]. Also the scalar vtable entry / reference kernel.
 #[inline]
-fn dw_rows_kernel(
+pub(crate) fn dw_rows_kernel(
     x_codes: &[u8],
     w_cols: &[u8],
     lut: &[i32],
@@ -110,9 +182,28 @@ fn dw_rows_kernel(
         for t in 0..taps {
             let xr = &x_codes[(mi * taps + t) * c..(mi * taps + t + 1) * c];
             let wr = &w_cols[t * c..(t + 1) * c];
-            for ci in 0..c {
-                orow[ci] = orow[ci].wrapping_add(lut[(xr[ci] as usize) * 256 + wr[ci] as usize]);
-            }
+            dw_axpy_i32(orow, lut, xr, wr);
+        }
+    }
+}
+
+/// [`dw_rows_kernel`] over a packed i16 LUT ([`LUT_I16_LEN`] entries).
+#[inline]
+pub(crate) fn dw_rows_i16(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i16],
+    rows: Range<usize>,
+    taps: usize,
+    c: usize,
+    out: &mut [i32],
+) {
+    for (ri, mi) in rows.enumerate() {
+        let orow = &mut out[ri * c..(ri + 1) * c];
+        for t in 0..taps {
+            let xr = &x_codes[(mi * taps + t) * c..(mi * taps + t + 1) * c];
+            let wr = &w_cols[t * c..(t + 1) * c];
+            dw_axpy_i16(orow, lut, xr, wr);
         }
     }
 }
@@ -121,6 +212,86 @@ fn check_dense(x_codes: &[u8], w_cols: &[u8], lut: &[i32], m: usize, k: usize, n
     assert_eq!(x_codes.len(), m * k, "x codes shape");
     assert_eq!(w_cols.len(), k * n, "w cols shape");
     assert_eq!(lut.len(), 256 * 256, "lut size");
+}
+
+/// True when every cell of a 256×256 i32 LUT fits i16 — the packing
+/// eligibility test used by `ir::passes::lower` (via
+/// [`crate::analysis::overflow::lut_fits_i16`]) and [`pack_lut_i16`].
+///
+/// Checks the **whole** table, including weight column 0: lowered layers
+/// never index column 0 (weight codes are clamped to [1, 255]), but the
+/// kernels accept arbitrary codes and the bit-identity contract must hold
+/// for anything they can be fed.
+pub fn fits_i16(lut: &[i32]) -> bool {
+    lut.iter().all(|&v| i16::try_from(v).is_ok())
+}
+
+/// Pack a 256×256 i32 LUT into the i16 form ([`LUT_I16_LEN`] entries:
+/// table + one zero pad for the 4-byte-per-lane AVX2 gather). Returns
+/// `None` when any cell is out of i16 range — the caller keeps i32.
+pub fn pack_lut_i16(lut: &[i32]) -> Option<Vec<i16>> {
+    assert_eq!(lut.len(), 256 * 256, "lut size");
+    if !fits_i16(lut) {
+        return None;
+    }
+    let mut packed = Vec::with_capacity(LUT_I16_LEN);
+    packed.extend(lut.iter().map(|&v| v as i16));
+    packed.push(0);
+    Some(packed)
+}
+
+/// One layer's LUT at the width chosen at packing time. The i16 form is
+/// exact (cells verified in-range) and halves the table footprint from
+/// 256 KiB to 128 KiB, which is what the SIMD i16 kernels exploit.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerLut {
+    I32(Vec<i32>),
+    I16(Vec<i16>),
+}
+
+impl LayerLut {
+    /// Pack a flat i32 LUT at the narrowest exact width.
+    pub fn from_lut(lut: &[i32]) -> LayerLut {
+        match pack_lut_i16(lut) {
+            Some(packed) => LayerLut::I16(packed),
+            None => LayerLut::I32(lut.to_vec()),
+        }
+    }
+
+    pub fn view(&self) -> LutView<'_> {
+        match self {
+            LayerLut::I32(v) => LutView::I32(v),
+            LayerLut::I16(v) => LutView::I16(v),
+        }
+    }
+
+    /// Storage width in bits (16 or 32), as recorded in `LoweringIr`.
+    pub fn width_bits(&self) -> u32 {
+        match self {
+            LayerLut::I32(_) => 32,
+            LayerLut::I16(_) => 16,
+        }
+    }
+
+    /// Logical table footprint in bytes (256² cells × width; excludes the
+    /// single i16 gather pad) — the unit `LoweringIr::lut_bytes` sums.
+    pub fn bytes(&self) -> usize {
+        256 * 256 * (self.width_bits() as usize / 8)
+    }
+}
+
+/// Borrowed view of a [`LayerLut`], what the width-dispatching kernel
+/// entry points ([`approx_matmul_pool_view`], [`approx_dw_pool_view`])
+/// take.
+#[derive(Clone, Copy, Debug)]
+pub enum LutView<'a> {
+    I32(&'a [i32]),
+    I16(&'a [i16]),
+}
+
+/// Pack every layer LUT at its narrowest exact width.
+pub fn pack_layer_luts(luts: &[Vec<i32>]) -> Vec<LayerLut> {
+    luts.iter().map(|l| LayerLut::from_lut(l)).collect()
 }
 
 /// acc[M, N] = sum_k lut[x[m,k] * 256 + w[k,n]] — serial.
@@ -139,7 +310,8 @@ pub fn approx_matmul(
 }
 
 /// [`approx_matmul`], M-row-parallel over `pool`. Bit-identical to the
-/// serial form at any thread count (disjoint row chunks, same row body).
+/// serial form at any thread count and any dispatch tier (disjoint row
+/// chunks; every variant preserves the per-element accumulation order).
 pub fn approx_matmul_pool(
     pool: &ComputePool,
     x_codes: &[u8],
@@ -150,11 +322,40 @@ pub fn approx_matmul_pool(
     n: usize,
 ) -> Vec<i32> {
     check_dense(x_codes, w_cols, lut, m, k, n);
+    let ops = pool.kernel_ops();
     let mut acc = vec![0i32; m * n];
     pool.run_rows(&mut acc, n, m * k * n, |rows, out| {
-        approx_rows(x_codes, w_cols, lut, rows, k, n, out);
+        (ops.approx_i32)(x_codes, w_cols, lut, rows, k, n, out);
     });
     acc
+}
+
+/// [`approx_matmul_pool`] over a width-packed LUT view: dispatches to the
+/// pool's kernel tier at the view's width. The i16 path is bit-identical
+/// to running the i32 kernel on the unpacked table.
+pub fn approx_matmul_pool_view(
+    pool: &ComputePool,
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: LutView<'_>,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<i32> {
+    match lut {
+        LutView::I32(l) => approx_matmul_pool(pool, x_codes, w_cols, l, m, k, n),
+        LutView::I16(l) => {
+            assert_eq!(x_codes.len(), m * k, "x codes shape");
+            assert_eq!(w_cols.len(), k * n, "w cols shape");
+            assert_eq!(l.len(), LUT_I16_LEN, "packed i16 lut size");
+            let ops = pool.kernel_ops();
+            let mut acc = vec![0i32; m * n];
+            pool.run_rows(&mut acc, n, m * k * n, |rows, out| {
+                (ops.approx_i16)(x_codes, w_cols, l, rows, k, n, out);
+            });
+            acc
+        }
+    }
 }
 
 /// The naive (m, n, k) loop order — kept for the §Perf before/after bench
@@ -247,11 +448,38 @@ pub fn approx_dw_pool(
 ) -> Vec<i32> {
     assert_eq!(x_codes.len(), m * taps * c);
     assert_eq!(w_cols.len(), taps * c);
+    let ops = pool.kernel_ops();
     let mut acc = vec![0i32; m * c];
     pool.run_rows(&mut acc, c, m * taps * c, |rows, out| {
-        dw_rows_kernel(x_codes, w_cols, lut, rows, taps, c, out);
+        (ops.dw_i32)(x_codes, w_cols, lut, rows, taps, c, out);
     });
     acc
+}
+
+/// [`approx_dw_pool`] over a width-packed LUT view.
+pub fn approx_dw_pool_view(
+    pool: &ComputePool,
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: LutView<'_>,
+    m: usize,
+    taps: usize,
+    c: usize,
+) -> Vec<i32> {
+    match lut {
+        LutView::I32(l) => approx_dw_pool(pool, x_codes, w_cols, l, m, taps, c),
+        LutView::I16(l) => {
+            assert_eq!(x_codes.len(), m * taps * c);
+            assert_eq!(w_cols.len(), taps * c);
+            assert_eq!(l.len(), LUT_I16_LEN, "packed i16 lut size");
+            let ops = pool.kernel_ops();
+            let mut acc = vec![0i32; m * c];
+            pool.run_rows(&mut acc, c, m * taps * c, |rows, out| {
+                (ops.dw_i16)(x_codes, w_cols, l, rows, taps, c, out);
+            });
+            acc
+        }
+    }
 }
 
 #[cfg(test)]
@@ -281,6 +509,87 @@ mod tests {
                 assert_eq!(approx_matmul_pool(&pool, &x, &w, &lut, m, k, n), serial_a);
                 assert_eq!(exact_matmul_pool(&pool, &x, &w, true, m, k, n), serial_e);
             }
+        }
+    }
+
+    #[test]
+    fn pack_lut_i16_is_exact_and_padded() {
+        // the exact unsigned LUT's extremes (255·127 = 32385, 255·-128 =
+        // -32640) both fit i16, so packing must succeed
+        let lut = exact_lut();
+        let packed = pack_lut_i16(&lut).expect("exact LUT fits i16");
+        assert_eq!(packed.len(), LUT_I16_LEN);
+        assert_eq!(packed[LUT_I16_LEN - 1], 0, "gather pad entry");
+        for (i, (&p, &v)) in packed.iter().zip(lut.iter()).enumerate() {
+            assert_eq!(p as i32, v, "cell {i}");
+        }
+        match LayerLut::from_lut(&lut) {
+            LayerLut::I16(p) => {
+                assert_eq!(p, packed);
+            }
+            LayerLut::I32(_) => panic!("from_lut must pick i16 when it fits"),
+        }
+    }
+
+    #[test]
+    fn pack_lut_i16_rejects_out_of_range_cells() {
+        let mut lut = exact_lut();
+        lut[123] = 40_000; // one cell past i16::MAX
+        assert!(!fits_i16(&lut));
+        assert!(pack_lut_i16(&lut).is_none());
+        let layer = LayerLut::from_lut(&lut);
+        assert_eq!(layer.width_bits(), 32);
+        assert_eq!(layer.bytes(), 256 * 256 * 4);
+        // boundary cells are accepted
+        let mut edge = exact_lut();
+        edge[0] = i16::MAX as i32;
+        edge[1] = i16::MIN as i32;
+        assert!(fits_i16(&edge));
+        assert_eq!(LayerLut::from_lut(&edge).width_bits(), 16);
+        assert_eq!(LayerLut::from_lut(&edge).bytes(), 256 * 256 * 2);
+    }
+
+    #[test]
+    fn i16_scalar_kernels_match_i32_kernels() {
+        let lut = exact_lut();
+        let packed = pack_lut_i16(&lut).expect("fits");
+        let (m, k, n) = (7, 11, 5);
+        let x: Vec<u8> = (0..m * k).map(|i| ((i * 37 + 5) % 256) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|i| ((i * 91 + 9) % 256) as u8).collect();
+        let want = approx_matmul(&x, &w, &lut, m, k, n);
+        let mut got = vec![0i32; m * n];
+        approx_rows_i16(&x, &w, &packed, 0..m, k, n, &mut got);
+        assert_eq!(got, want);
+
+        let (dm, taps, c) = (9, 9, 5);
+        let dx: Vec<u8> = (0..dm * taps * c).map(|i| ((i * 13) % 256) as u8).collect();
+        let dw: Vec<u8> = (0..taps * c).map(|i| ((i * 7) % 256) as u8).collect();
+        let dwant = approx_dw(&dx, &dw, &lut, dm, taps, c);
+        let mut dgot = vec![0i32; dm * c];
+        dw_rows_i16(&dx, &dw, &packed, 0..dm, taps, c, &mut dgot);
+        assert_eq!(dgot, dwant);
+    }
+
+    #[test]
+    fn pool_view_entry_points_match_serial() {
+        let lut = exact_lut();
+        let layer = LayerLut::from_lut(&lut);
+        let (m, k, n) = (13, 17, 4);
+        let x: Vec<u8> = (0..m * k).map(|i| ((i * 37 + 5) % 256) as u8).collect();
+        let w: Vec<u8> = (0..k * n).map(|i| ((i * 91 + 9) % 256) as u8).collect();
+        let want = approx_matmul(&x, &w, &lut, m, k, n);
+        for t in [1usize, 3, 8] {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t)).with_min_chunk_work(0);
+            assert_eq!(
+                approx_matmul_pool_view(&pool, &x, &w, layer.view(), m, k, n),
+                want,
+                "threads={t}"
+            );
+            assert_eq!(
+                approx_matmul_pool_view(&pool, &x, &w, LutView::I32(&lut), m, k, n),
+                want,
+                "threads={t} i32 view"
+            );
         }
     }
 

@@ -11,12 +11,17 @@
 //!   trainer's backward weight/input gradients and the `col2im` scatter.
 //! * [`lut`] — the integer LUT matmul kernels (moved out of
 //!   `simulator::matmul`, which stays as a thin re-export) with
-//!   M-row-parallel variants.
+//!   M-row-parallel variants and width-packed (i16/i32) LUT forms.
+//! * [`simd`] — the runtime-dispatched kernel-variant layer: one
+//!   [`simd::KernelOps`] vtable per tier (scalar / AVX2 / NEON), resolved
+//!   once at pool construction. The only module in the crate allowed to
+//!   contain `unsafe` (lint rule AGN-D3).
 //!
 //! **Determinism contract.** Every `_pool` kernel is bit-identical to its
-//! serial form at any thread count: parallelism is only over disjoint
-//! output row chunks computed from `(rows, threads)` alone, each row runs
-//! the identical serial body, and chunked reductions merge in chunk order.
+//! serial form at any thread count **and any kernel tier**: parallelism is
+//! only over disjoint output row chunks computed from `(rows, threads)`
+//! alone, each row runs a body that preserves the serial per-element
+//! accumulation order, and chunked reductions merge in chunk order.
 //! `rust/tests/property_suite.rs` enforces this across thread counts
 //! {1, 2, 4, 8} and odd chunk boundaries. A per-chunk work floor keeps
 //! tiny layers inline (spawns cost more than they save there); it is a
@@ -30,10 +35,13 @@ pub mod gemm;
 pub mod lut;
 pub mod pool;
 pub mod reduce;
+pub mod simd;
 
 pub use gemm::{col2im_pool, gemm, gemm_at_acc, gemm_bt};
 pub use lut::{
-    approx_dw, approx_dw_pool, approx_matmul, approx_matmul_naive, approx_matmul_pool,
-    exact_matmul, exact_matmul_pool,
+    approx_dw, approx_dw_pool, approx_dw_pool_view, approx_matmul, approx_matmul_naive,
+    approx_matmul_pool, approx_matmul_pool_view, exact_matmul, exact_matmul_pool, pack_layer_luts,
+    pack_lut_i16, LayerLut, LutView, LUT_I16_LEN,
 };
 pub use pool::{partition, ComputeConfig, ComputePool};
+pub use simd::{KernelChoice, KernelVariant};

@@ -23,51 +23,86 @@
 //! and a [`crate::robust::health`] counter bump. A chunk that panics
 //! *again* on the serial re-run is a real kernel bug and propagates.
 
+use super::simd::{self, KernelChoice, KernelOps, KernelVariant};
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 
-/// How the compute layer parallelizes: the worker count used by every
-/// pool-aware kernel. `threads == 1` is the exact serial path.
+/// How the compute layer parallelizes: the worker count and the kernel
+/// dispatch tier used by every pool-aware kernel. `threads == 1` is the
+/// exact serial path; `kernel` never affects results, only throughput
+/// (every tier is bit-identical — README §Determinism contract).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ComputeConfig {
     /// Worker count (>= 1). See [`ComputeConfig::resolve`] for how `0`
     /// ("auto") is interpreted at the CLI/env boundary.
     pub threads: usize,
+    /// Requested kernel tier, resolved against host capability once at
+    /// pool construction (`--kernel` / `AGN_KERNEL`; default auto).
+    pub kernel: KernelChoice,
 }
 
 impl ComputeConfig {
-    /// The exact serial configuration (one worker, no spawning).
+    /// The exact serial configuration (one worker, no spawning). The
+    /// kernel tier stays auto: dispatch is orthogonal to serialism.
     pub fn serial() -> ComputeConfig {
-        ComputeConfig { threads: 1 }
+        ComputeConfig { threads: 1, kernel: KernelChoice::Auto }
     }
 
     /// A fixed worker count (clamped to >= 1).
     pub fn with_threads(threads: usize) -> ComputeConfig {
-        ComputeConfig { threads: threads.max(1) }
+        ComputeConfig { threads: threads.max(1), kernel: KernelChoice::Auto }
+    }
+
+    /// Builder-style kernel-tier override.
+    pub fn with_kernel(mut self, kernel: KernelChoice) -> ComputeConfig {
+        self.kernel = kernel;
+        self
     }
 
     /// Resolve a CLI-style request: `n > 0` is taken literally, `n == 0`
-    /// ("auto") defers to [`ComputeConfig::from_env`].
+    /// ("auto") defers to [`ComputeConfig::from_env`]. Either way the
+    /// kernel tier picks up the `AGN_KERNEL` env default (the CLI layer
+    /// overrides it afterwards via [`ComputeConfig::with_kernel`]).
     pub fn resolve(n: usize) -> ComputeConfig {
         if n > 0 {
-            ComputeConfig { threads: n }
+            ComputeConfig { threads: n, kernel: env_kernel() }
         } else {
             ComputeConfig::from_env()
         }
     }
 
     /// The environment default: `AGN_THREADS` when set to a positive
-    /// integer, otherwise all available cores. Because every pool kernel is
-    /// bit-identical across thread counts, "all cores" is a safe default —
-    /// the CI determinism lanes pin `AGN_THREADS=1` and `AGN_THREADS=4`.
+    /// integer, otherwise all available cores; `AGN_KERNEL` for the
+    /// dispatch tier (default auto). Because every pool kernel is
+    /// bit-identical across thread counts and tiers, both defaults are
+    /// safe — the CI determinism lanes pin `AGN_THREADS=1` and
+    /// `AGN_THREADS=4`.
     pub fn from_env() -> ComputeConfig {
+        let kernel = env_kernel();
         let env = crate::util::env::read_parsed("AGN_THREADS", 0usize);
         if env > 0 {
-            return ComputeConfig { threads: env };
+            return ComputeConfig { threads: env, kernel };
         }
         ComputeConfig {
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            kernel,
         }
+    }
+}
+
+/// `AGN_KERNEL` (auto|scalar|avx2|neon), default auto. Malformed values
+/// fall back with a warning rather than silently: a typo'd kernel knob
+/// that quietly ran scalar would be a confusing perf regression.
+fn env_kernel() -> KernelChoice {
+    match crate::util::env::read("AGN_KERNEL") {
+        None => KernelChoice::Auto,
+        Some(raw) => match raw.parse() {
+            Ok(k) => k,
+            Err(msg) => {
+                log::warn!("AGN_KERNEL: {msg}; using auto");
+                KernelChoice::Auto
+            }
+        },
     }
 }
 
@@ -111,20 +146,29 @@ pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
 /// a scheduling heuristic.
 const DEFAULT_MIN_CHUNK_WORK: usize = 128 * 1024;
 
-/// The scoped worker pool. Cheap to clone (it is a worker-count handle);
-/// workers are scoped `std::thread`s spawned per parallel region, so
-/// borrowed operands need no `'static` bounds and no channels.
+/// The scoped worker pool. Cheap to clone (it is a worker-count handle
+/// plus a `&'static` kernel vtable); workers are scoped `std::thread`s
+/// spawned per parallel region, so borrowed operands need no `'static`
+/// bounds and no channels.
 #[derive(Clone, Debug)]
 pub struct ComputePool {
     threads: usize,
     min_chunk_work: usize,
+    ops: &'static KernelOps,
+    variant: KernelVariant,
 }
 
 impl ComputePool {
+    /// Resolves the kernel tier **here, once**: `simd::select` consults
+    /// runtime feature detection, so every kernel launched through this
+    /// pool uses one fixed vtable for the pool's lifetime.
     pub fn new(cfg: ComputeConfig) -> ComputePool {
+        let (ops, variant) = simd::select(cfg.kernel);
         ComputePool {
             threads: cfg.threads.max(1),
             min_chunk_work: DEFAULT_MIN_CHUNK_WORK,
+            ops,
+            variant,
         }
     }
 
@@ -152,6 +196,18 @@ impl ComputePool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The kernel vtable resolved at construction — what the pool-aware
+    /// kernels in [`super::lut`] / [`super::gemm`] dispatch through.
+    pub fn kernel_ops(&self) -> &'static KernelOps {
+        self.ops
+    }
+
+    /// The dispatch tier this pool resolved to (for logs / stats / bench
+    /// fingerprints).
+    pub fn kernel_variant(&self) -> KernelVariant {
+        self.variant
     }
 
     /// Run `f(rows, chunk)` over disjoint row-chunks of `out` in parallel,
@@ -414,5 +470,19 @@ mod tests {
         assert_eq!(ComputeConfig::resolve(3).threads, 3);
         assert!(ComputeConfig::resolve(0).threads >= 1);
         assert!(ComputeConfig::from_env().threads >= 1);
+    }
+
+    #[test]
+    fn kernel_config_flows_to_the_pool() {
+        assert_eq!(ComputeConfig::serial().kernel, KernelChoice::Auto);
+        let cfg = ComputeConfig::with_threads(2).with_kernel(KernelChoice::Scalar);
+        assert_eq!(cfg.kernel, KernelChoice::Scalar);
+        let pool = ComputePool::new(cfg);
+        assert_eq!(pool.kernel_variant(), KernelVariant::Scalar);
+        // forcing scalar must hand out the scalar vtable itself
+        assert!(std::ptr::eq(pool.kernel_ops(), &simd::SCALAR_OPS));
+        // auto resolves to *some* tier and never panics
+        let auto = ComputePool::new(ComputeConfig::with_threads(1));
+        let _ = auto.kernel_variant();
     }
 }

@@ -1,0 +1,293 @@
+//! Runtime-dispatched kernel variants behind the [`super::lut`] /
+//! [`super::gemm`] entry points.
+//!
+//! One [`KernelOps`] vtable per variant: the portable scalar bodies
+//! (shared with the serial reference kernels in [`super::lut`]), an AVX2
+//! tier ([`x86`]: `_mm256_i32gather_epi32` LUT gathers + vectorized GEMM
+//! axpy) and a NEON tier ([`neon`]: vectorized GEMM axpy; AArch64 has no
+//! gather instruction, so its LUT paths stay scalar). The variant is
+//! resolved **once** at pool construction ([`select`]) from a
+//! [`KernelChoice`] (`--kernel auto|scalar|avx2|neon`, `AGN_KERNEL` env);
+//! a forced variant the host cannot run falls back to scalar with a
+//! `log::warn!`, never a crash.
+//!
+//! **Determinism contract (AGN-D3 / README).** Every variant is
+//! bit-identical to the scalar serial kernel at any thread count:
+//!
+//! * LUT paths accumulate with two's-complement wraparound
+//!   (`_mm256_add_epi32` *is* the wrapping add), and vectorizing across
+//!   output columns keeps each element's k-ascending accumulation order.
+//! * The f32 axpy vectorizes as separately-rounded multiply-then-add
+//!   (`_mm256_mul_ps` + `_mm256_add_ps`) — deliberately **not** FMA,
+//!   whose single rounding would diverge from the scalar `*o += a * b`.
+//! * Dot-product-shaped reductions (`gemm_bt`) and the exact integer
+//!   path (whose debug-build overflow assert is part of its semantics)
+//!   are not vectorized in any tier.
+//!
+//! All `unsafe` in the crate lives in this module's submodules, each block
+//! justified with a `// SAFETY:` comment (enforced by agn-lint AGN-D3).
+
+use std::fmt;
+use std::ops::Range;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+/// A kernel-variant *request* (CLI `--kernel`, `AGN_KERNEL`, or
+/// [`crate::api::SessionBuilder`]): what the user asked for, before host
+/// capability is consulted. Resolved to a [`KernelVariant`] by [`select`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Best supported tier: AVX2 when detected, else NEON, else scalar.
+    Auto,
+    /// Portable scalar bodies (the reference the others must match).
+    Scalar,
+    /// Force the AVX2 tier (falls back to scalar + warning off-host).
+    Avx2,
+    /// Force the NEON tier (falls back to scalar + warning off-host).
+    Neon,
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<KernelChoice, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelChoice::Auto),
+            "scalar" => Ok(KernelChoice::Scalar),
+            "avx2" => Ok(KernelChoice::Avx2),
+            "neon" => Ok(KernelChoice::Neon),
+            other => Err(format!("unknown kernel {other:?} (expected auto|scalar|avx2|neon)")),
+        }
+    }
+}
+
+impl fmt::Display for KernelChoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Avx2 => "avx2",
+            KernelChoice::Neon => "neon",
+        })
+    }
+}
+
+/// The *resolved* dispatch tier a pool actually runs with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelVariant {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl KernelVariant {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelVariant::Scalar => "scalar",
+            KernelVariant::Avx2 => "avx2",
+            KernelVariant::Neon => "neon",
+        }
+    }
+}
+
+impl fmt::Display for KernelVariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Per-row kernel bodies of one dispatch tier. Function pointers (not a
+/// trait object) so the pool stores one `&'static` vtable resolved once
+/// and the hot loops pay a plain indirect call, no dynamic lookup.
+///
+/// Signatures mirror the scalar bodies in [`super::lut`]: `rows` are the
+/// output rows this call produces into `out` (the chunk slice holding
+/// exactly those rows), so every variant plugs into
+/// [`super::pool::ComputePool::run_rows`] unchanged.
+pub struct KernelOps {
+    /// Rows of `acc[M, N] += Σ_k lut[x[m,k]·256 + w[k,n]]`, i32 LUT.
+    pub approx_i32: fn(&[u8], &[u8], &[i32], Range<usize>, usize, usize, &mut [i32]),
+    /// Same, over a packed i16 LUT of [`super::lut::LUT_I16_LEN`] entries
+    /// (one pad entry past the 256×256 table; see `pack_lut_i16`).
+    pub approx_i16: fn(&[u8], &[u8], &[i16], Range<usize>, usize, usize, &mut [i32]),
+    /// Depthwise rows: x [M, taps, C], w [taps, C] → acc rows [rows, C].
+    pub dw_i32: fn(&[u8], &[u8], &[i32], Range<usize>, usize, usize, &mut [i32]),
+    /// Depthwise rows over a packed i16 LUT.
+    pub dw_i16: fn(&[u8], &[u8], &[i16], Range<usize>, usize, usize, &mut [i32]),
+    /// `out[i] += a * b[i]` — the GEMM inner axpy. Must round exactly like
+    /// the scalar loop (multiply, then add; no FMA contraction).
+    pub axpy_f32: fn(&mut [f32], f32, &[f32]),
+}
+
+impl fmt::Debug for KernelOps {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("KernelOps { .. }")
+    }
+}
+
+fn axpy_f32_scalar(out: &mut [f32], a: f32, b: &[f32]) {
+    for (o, &bv) in out.iter_mut().zip(b.iter()) {
+        *o += a * bv;
+    }
+}
+
+/// The portable tier: the exact serial bodies every other variant is
+/// property-tested against (`rust/tests/simd_dispatch.rs`).
+pub static SCALAR_OPS: KernelOps = KernelOps {
+    approx_i32: super::lut::approx_rows,
+    approx_i16: super::lut::approx_rows_i16,
+    dw_i32: super::lut::dw_rows_kernel,
+    dw_i16: super::lut::dw_rows_i16,
+    axpy_f32: axpy_f32_scalar,
+};
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_ops() -> &'static KernelOps {
+    &x86::AVX2_OPS
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_ops() -> &'static KernelOps {
+    // unreachable in practice: gated on `avx2_available()` by `select`
+    &SCALAR_OPS
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_ops() -> &'static KernelOps {
+    &neon::NEON_OPS
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_ops() -> &'static KernelOps {
+    // unreachable in practice: gated on `neon_available()` by `select`
+    &SCALAR_OPS
+}
+
+fn best_available() -> (&'static KernelOps, KernelVariant) {
+    if avx2_available() {
+        return (avx2_ops(), KernelVariant::Avx2);
+    }
+    if neon_available() {
+        return (neon_ops(), KernelVariant::Neon);
+    }
+    (&SCALAR_OPS, KernelVariant::Scalar)
+}
+
+/// Resolve a [`KernelChoice`] against host capability. Called once per
+/// [`super::pool::ComputePool`] construction; results never change within
+/// a process (feature detection is static for the machine), so re-resolving
+/// is cheap but pointless. A forced tier the host lacks degrades to scalar
+/// with a warning — outputs are bit-identical either way, only throughput
+/// changes, so degrading is always safe.
+pub fn select(choice: KernelChoice) -> (&'static KernelOps, KernelVariant) {
+    match choice {
+        KernelChoice::Auto => best_available(),
+        KernelChoice::Scalar => (&SCALAR_OPS, KernelVariant::Scalar),
+        KernelChoice::Avx2 => {
+            if avx2_available() {
+                (avx2_ops(), KernelVariant::Avx2)
+            } else {
+                log::warn!("kernel avx2 requested but AVX2 is not available on this host; using scalar");
+                (&SCALAR_OPS, KernelVariant::Scalar)
+            }
+        }
+        KernelChoice::Neon => {
+            if neon_available() {
+                (neon_ops(), KernelVariant::Neon)
+            } else {
+                log::warn!("kernel neon requested but NEON is not available on this host; using scalar");
+                (&SCALAR_OPS, KernelVariant::Scalar)
+            }
+        }
+    }
+}
+
+/// Every distinct [`KernelVariant`] this host can actually run, with a
+/// choice that selects it — `[Scalar]` plus at most one SIMD tier. The
+/// cross-variant property suite iterates exactly this set.
+pub fn available_variants() -> Vec<(KernelChoice, KernelVariant)> {
+    let mut out = vec![(KernelChoice::Scalar, KernelVariant::Scalar)];
+    for choice in [KernelChoice::Avx2, KernelChoice::Neon] {
+        let (_, variant) = select(choice);
+        if variant != KernelVariant::Scalar {
+            out.push((choice, variant));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parses_and_displays() {
+        for (s, want) in [
+            ("auto", KernelChoice::Auto),
+            ("scalar", KernelChoice::Scalar),
+            ("AVX2", KernelChoice::Avx2),
+            ("neon", KernelChoice::Neon),
+        ] {
+            let got: KernelChoice = s.parse().expect(s);
+            assert_eq!(got, want);
+        }
+        assert!("sse9".parse::<KernelChoice>().is_err());
+        assert_eq!(KernelChoice::Avx2.to_string(), "avx2");
+        assert_eq!(KernelVariant::Scalar.to_string(), "scalar");
+    }
+
+    #[test]
+    fn select_never_panics_and_scalar_is_scalar() {
+        for choice in [
+            KernelChoice::Auto,
+            KernelChoice::Scalar,
+            KernelChoice::Avx2,
+            KernelChoice::Neon,
+        ] {
+            let (_, v) = select(choice);
+            // forcing scalar must always yield scalar; others are host-dependent
+            if choice == KernelChoice::Scalar {
+                assert_eq!(v, KernelVariant::Scalar);
+            }
+        }
+        // auto must resolve to something the host supports (select of the
+        // matching forced choice returns the same variant)
+        let (_, auto) = select(KernelChoice::Auto);
+        let forced = match auto {
+            KernelVariant::Scalar => KernelChoice::Scalar,
+            KernelVariant::Avx2 => KernelChoice::Avx2,
+            KernelVariant::Neon => KernelChoice::Neon,
+        };
+        assert_eq!(select(forced).1, auto);
+    }
+
+    #[test]
+    fn available_variants_lists_scalar_first() {
+        let vs = available_variants();
+        assert_eq!(vs[0].1, KernelVariant::Scalar);
+        assert!(vs.len() <= 2);
+    }
+}

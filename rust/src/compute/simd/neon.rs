@@ -1,0 +1,69 @@
+//! NEON kernels (AArch64). AArch64 NEON has no gather instruction, so the
+//! LUT paths reuse the scalar bodies (which autovectorize poorly but are
+//! the bit-identity reference anyway); the win here is the f32 GEMM axpy.
+//!
+//! Reached only through [`NEON_OPS`], which [`super::select`] hands out
+//! solely after `is_aarch64_feature_detected!("neon")` returned true.
+
+use super::KernelOps;
+use std::arch::aarch64::{vaddq_f32, vdupq_n_f32, vld1q_f32, vmulq_f32, vst1q_f32};
+
+/// The NEON dispatch tier: scalar LUT bodies + vectorized f32 axpy.
+pub(crate) static NEON_OPS: KernelOps = KernelOps {
+    approx_i32: crate::compute::lut::approx_rows,
+    approx_i16: crate::compute::lut::approx_rows_i16,
+    dw_i32: crate::compute::lut::dw_rows_kernel,
+    dw_i16: crate::compute::lut::dw_rows_i16,
+    axpy_f32,
+};
+
+fn axpy_f32(out: &mut [f32], a: f32, b: &[f32]) {
+    // SAFETY: NEON_OPS is handed out by `super::select` only after
+    // `is_aarch64_feature_detected!("neon")` returned true on this machine.
+    unsafe { axpy_f32_impl(out, a, b) }
+}
+
+/// SAFETY: caller guarantees NEON. All loads/stores stay inside
+/// `min(out.len(), b.len())`.
+///
+/// Deliberately `vmulq` + `vaddq` (two roundings), not `vfmaq`: the scalar
+/// reference `*o += a * b[i]` rounds the product before the add, and the
+/// determinism contract requires bit-equality with it.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_f32_impl(out: &mut [f32], a: f32, b: &[f32]) {
+    let len = out.len().min(b.len());
+    let av = vdupq_n_f32(a);
+    let mut j = 0;
+    while j + 4 <= len {
+        let bv = vld1q_f32(b.as_ptr().add(j));
+        let ov = vld1q_f32(out.as_ptr().add(j));
+        vst1q_f32(out.as_mut_ptr().add(j), vaddq_f32(ov, vmulq_f32(av, bv)));
+        j += 4;
+    }
+    while j < len {
+        out[j] += a * b[j];
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::simd::SCALAR_OPS;
+
+    #[test]
+    fn neon_axpy_matches_scalar_bitwise() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            return;
+        }
+        let b: Vec<f32> = (0..23).map(|i| (i as f32 * 0.31).sin() * 1e2).collect();
+        let mut o1: Vec<f32> = (0..23).map(|i| (i as f32 * 1.7).cos()).collect();
+        let mut o2 = o1.clone();
+        (SCALAR_OPS.axpy_f32)(&mut o1, 3.14159e-1, &b);
+        (NEON_OPS.axpy_f32)(&mut o2, 3.14159e-1, &b);
+        assert_eq!(
+            o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            o2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+    }
+}

@@ -1,0 +1,412 @@
+//! AVX2 microkernels (x86-64). See the module doc of [`super`] for the
+//! determinism contract; the short version for this file:
+//!
+//! * LUT paths: `_mm256_i32gather_epi32` fetches 8 table cells per step
+//!   and `_mm256_add_epi32` accumulates them — hardware two's-complement
+//!   add, i.e. exactly `i32::wrapping_add`, in the same per-element
+//!   k-ascending order as the scalar kernel. Scalar remainders reuse the
+//!   wrapping axpy helpers in [`crate::compute::lut`].
+//! * f32 axpy: separate `_mm256_mul_ps` + `_mm256_add_ps` (no FMA — its
+//!   single rounding would diverge from the scalar `*o += a * b`).
+//! * Output columns are processed in N-blocks ([`NB_I32`] / [`NB_I16`])
+//!   sized so the output block, the weight-code block and the hot LUT row
+//!   stay resident in L1/L2 across the k loop.
+//!
+//! Every function here is compiled with `#[target_feature(enable =
+//! "avx2")]` and reached only through the safe wrappers installed in
+//! [`AVX2_OPS`], which [`super::select`] hands out solely after
+//! `is_x86_feature_detected!("avx2")` returned true.
+
+use super::KernelOps;
+use crate::compute::lut::{self, LUT_I16_LEN};
+use std::arch::x86_64::{
+    __m128i, __m256i, _mm256_add_epi32, _mm256_add_ps, _mm256_cvtepu8_epi32,
+    _mm256_i32gather_epi32, _mm256_loadu_ps, _mm256_loadu_si256, _mm256_mul_ps, _mm256_set1_ps,
+    _mm256_slli_epi32, _mm256_srai_epi32, _mm256_storeu_ps, _mm256_storeu_si256, _mm_loadl_epi64,
+};
+use std::ops::Range;
+
+/// Output-column block width for the i32-LUT kernel: 4 KiB of accumulator
+/// + 1 KiB of weight codes per block, leaving L1 room for the hot 1 KiB
+/// LUT row that the k loop re-reads.
+const NB_I32: usize = 1024;
+
+/// Block width for the i16-LUT kernel: the hot row halves to 512 B, so the
+/// block doubles for fewer block-loop trips at the same cache footprint.
+const NB_I16: usize = 2048;
+
+/// The AVX2 dispatch tier. Only [`super::select`] reads this, after
+/// runtime feature detection succeeds.
+pub(crate) static AVX2_OPS: KernelOps = KernelOps {
+    approx_i32,
+    approx_i16,
+    dw_i32,
+    dw_i16,
+    axpy_f32,
+};
+
+fn approx_i32(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    // SAFETY: AVX2_OPS is handed out by `super::select` only after
+    // `is_x86_feature_detected!("avx2")` returned true on this machine.
+    unsafe { approx_i32_impl(x_codes, w_cols, lut, rows, k, n, out) }
+}
+
+fn approx_i16(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i16],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    // SAFETY: AVX2 detected at pool construction (see approx_i32); the
+    // LUT-length precondition of the impl is asserted before dispatch.
+    assert_eq!(lut.len(), LUT_I16_LEN, "packed i16 lut size");
+    unsafe { approx_i16_impl(x_codes, w_cols, lut, rows, k, n, out) }
+}
+
+fn dw_i32(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    rows: Range<usize>,
+    taps: usize,
+    c: usize,
+    out: &mut [i32],
+) {
+    // SAFETY: AVX2 detected at pool construction (see approx_i32); the
+    // impl gathers full-table indices, so the dense 256*256 size is
+    // asserted before dispatch.
+    assert_eq!(lut.len(), 256 * 256, "lut size");
+    unsafe { dw_i32_impl(x_codes, w_cols, lut, rows, taps, c, out) }
+}
+
+fn dw_i16(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i16],
+    rows: Range<usize>,
+    taps: usize,
+    c: usize,
+    out: &mut [i32],
+) {
+    // SAFETY: AVX2 detected at pool construction (see approx_i32); the
+    // padded-length precondition of the impl is asserted before dispatch.
+    assert_eq!(lut.len(), LUT_I16_LEN, "packed i16 lut size");
+    unsafe { dw_i16_impl(x_codes, w_cols, lut, rows, taps, c, out) }
+}
+
+fn axpy_f32(out: &mut [f32], a: f32, b: &[f32]) {
+    // SAFETY: AVX2 detected at pool construction (see approx_i32).
+    unsafe { axpy_f32_impl(out, a, b) }
+}
+
+/// Widen 8 u8 codes starting at `codes[at]` to i32 lanes.
+///
+/// SAFETY: caller guarantees AVX2 and `at + 8 <= codes.len()` (the 8-byte
+/// `_mm_loadl_epi64` stays inside the slice).
+#[target_feature(enable = "avx2")]
+unsafe fn load8_u8_as_i32(codes: &[u8], at: usize) -> __m256i {
+    debug_assert!(at + 8 <= codes.len());
+    let lo = _mm_loadl_epi64(codes.as_ptr().add(at) as *const __m128i);
+    _mm256_cvtepu8_epi32(lo)
+}
+
+/// SAFETY: caller guarantees AVX2; slice preconditions are the same shape
+/// contract as the scalar kernel (checked by the public entry points):
+/// `x_codes` is [M, k], `w_cols` is [k, n], `lut` is 256×256, `out` holds
+/// exactly the rows in `rows`.
+#[target_feature(enable = "avx2")]
+unsafe fn approx_i32_impl(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    for (ri, mi) in rows.enumerate() {
+        let xrow = &x_codes[mi * k..(mi + 1) * k];
+        let orow = &mut out[ri * n..(ri + 1) * n];
+        let mut nb = 0;
+        while nb < n {
+            let bw = (n - nb).min(NB_I32);
+            let oblk = &mut orow[nb..nb + bw];
+            for (ki, &xc) in xrow.iter().enumerate() {
+                let lrow = &lut[(xc as usize) * 256..(xc as usize) * 256 + 256];
+                let wblk = &w_cols[ki * n + nb..ki * n + nb + bw];
+                let mut j = 0;
+                while j + 8 <= bw {
+                    let idx = load8_u8_as_i32(wblk, j);
+                    // Gather 8 cells of the hot LUT row. Indices are u8
+                    // (<= 255), scale 4: max byte offset 255*4 + 4 = 1024
+                    // = lrow's byte length, so every lane stays inside
+                    // the 256-entry row slice.
+                    let cells = _mm256_i32gather_epi32::<4>(lrow.as_ptr(), idx);
+                    let optr = oblk.as_mut_ptr().add(j) as *mut __m256i;
+                    // _mm256_add_epi32 is two's-complement wraparound —
+                    // identical to the scalar wrapping_add accumulate.
+                    _mm256_storeu_si256(optr, _mm256_add_epi32(_mm256_loadu_si256(optr), cells));
+                    j += 8;
+                }
+                lut::lut_axpy_i32(&mut oblk[j..], lrow, &wblk[j..]);
+            }
+            nb += bw;
+        }
+    }
+}
+
+/// SAFETY: caller guarantees AVX2 and `lut.len() == LUT_I16_LEN` (the
+/// padded packed table); other slices follow the scalar shape contract.
+///
+/// The row base pointer is derived from the **full** table pointer, not a
+/// 256-entry subslice: the 4-byte gather at in-row index 255 reads 2 bytes
+/// past the row (and, on the last row, 2 bytes past the 256×256 table —
+/// exactly the pad entry), which must stay inside the provenance of one
+/// allocation. Worst case: row 255, index 255 → byte offset 2·65535 =
+/// 131070, read ends at 131074 = LUT_I16_LEN·2, the padded table's end.
+#[target_feature(enable = "avx2")]
+unsafe fn approx_i16_impl(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i16],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(lut.len(), LUT_I16_LEN);
+    for (ri, mi) in rows.enumerate() {
+        let xrow = &x_codes[mi * k..(mi + 1) * k];
+        let orow = &mut out[ri * n..(ri + 1) * n];
+        let mut nb = 0;
+        while nb < n {
+            let bw = (n - nb).min(NB_I16);
+            let oblk = &mut orow[nb..nb + bw];
+            for (ki, &xc) in xrow.iter().enumerate() {
+                let row_base = lut.as_ptr().add((xc as usize) * 256) as *const i32;
+                let wblk = &w_cols[ki * n + nb..ki * n + nb + bw];
+                let mut j = 0;
+                while j + 8 <= bw {
+                    let idx = load8_u8_as_i32(wblk, j);
+                    // Scale-2 gather of 4 bytes per lane: each lane's low
+                    // 16 bits are the target cell (little-endian); the
+                    // high 16 bits are the next cell / the pad.
+                    let raw = _mm256_i32gather_epi32::<2>(row_base, idx);
+                    // Keep the low half and sign-extend it to i32.
+                    let cells = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(raw));
+                    let optr = oblk.as_mut_ptr().add(j) as *mut __m256i;
+                    _mm256_storeu_si256(optr, _mm256_add_epi32(_mm256_loadu_si256(optr), cells));
+                    j += 8;
+                }
+                let lrow = &lut[(xc as usize) * 256..(xc as usize) * 256 + 256];
+                lut::lut_axpy_i16(&mut oblk[j..], lrow, &wblk[j..]);
+            }
+            nb += bw;
+        }
+    }
+}
+
+/// SAFETY: caller guarantees AVX2 and a dense 256×256 `lut`; `x_codes` is
+/// [M, taps, C], `w_cols` is [taps, C], `out` holds the rows in `rows`.
+/// Gather indices are `xc·256 + wc <= 65535`, scale 4: max byte offset
+/// 65535·4 + 4 = 262144 = the full table's byte length.
+#[target_feature(enable = "avx2")]
+unsafe fn dw_i32_impl(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i32],
+    rows: Range<usize>,
+    taps: usize,
+    c: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(lut.len(), 256 * 256);
+    for (ri, mi) in rows.enumerate() {
+        let orow = &mut out[ri * c..(ri + 1) * c];
+        for t in 0..taps {
+            let xr = &x_codes[(mi * taps + t) * c..(mi * taps + t + 1) * c];
+            let wr = &w_cols[t * c..(t + 1) * c];
+            let mut j = 0;
+            while j + 8 <= c {
+                let xv = load8_u8_as_i32(xr, j);
+                let wv = load8_u8_as_i32(wr, j);
+                let idx = _mm256_add_epi32(_mm256_slli_epi32::<8>(xv), wv);
+                let cells = _mm256_i32gather_epi32::<4>(lut.as_ptr(), idx);
+                let optr = orow.as_mut_ptr().add(j) as *mut __m256i;
+                _mm256_storeu_si256(optr, _mm256_add_epi32(_mm256_loadu_si256(optr), cells));
+                j += 8;
+            }
+            lut::dw_axpy_i32(&mut orow[j..], lut, &xr[j..], &wr[j..]);
+        }
+    }
+}
+
+/// SAFETY: caller guarantees AVX2 and `lut.len() == LUT_I16_LEN`. Scale-2
+/// gather on full-table indices: max byte offset 2·65535 + 4 = 131074 =
+/// LUT_I16_LEN·2, the padded table's end (same argument as the matmul
+/// i16 kernel).
+#[target_feature(enable = "avx2")]
+unsafe fn dw_i16_impl(
+    x_codes: &[u8],
+    w_cols: &[u8],
+    lut: &[i16],
+    rows: Range<usize>,
+    taps: usize,
+    c: usize,
+    out: &mut [i32],
+) {
+    debug_assert_eq!(lut.len(), LUT_I16_LEN);
+    let base = lut.as_ptr() as *const i32;
+    for (ri, mi) in rows.enumerate() {
+        let orow = &mut out[ri * c..(ri + 1) * c];
+        for t in 0..taps {
+            let xr = &x_codes[(mi * taps + t) * c..(mi * taps + t + 1) * c];
+            let wr = &w_cols[t * c..(t + 1) * c];
+            let mut j = 0;
+            while j + 8 <= c {
+                let xv = load8_u8_as_i32(xr, j);
+                let wv = load8_u8_as_i32(wr, j);
+                let idx = _mm256_add_epi32(_mm256_slli_epi32::<8>(xv), wv);
+                let raw = _mm256_i32gather_epi32::<2>(base, idx);
+                let cells = _mm256_srai_epi32::<16>(_mm256_slli_epi32::<16>(raw));
+                let optr = orow.as_mut_ptr().add(j) as *mut __m256i;
+                _mm256_storeu_si256(optr, _mm256_add_epi32(_mm256_loadu_si256(optr), cells));
+                j += 8;
+            }
+            lut::dw_axpy_i16(&mut orow[j..], lut, &xr[j..], &wr[j..]);
+        }
+    }
+}
+
+/// SAFETY: caller guarantees AVX2. All loads/stores stay inside
+/// `min(out.len(), b.len())`.
+///
+/// Deliberately multiply-then-add (two roundings) rather than FMA: the
+/// scalar reference `*o += a * b[i]` rounds the product before the add,
+/// and the determinism contract requires bit-equality with it.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f32_impl(out: &mut [f32], a: f32, b: &[f32]) {
+    let len = out.len().min(b.len());
+    let av = _mm256_set1_ps(a);
+    let mut j = 0;
+    while j + 8 <= len {
+        let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+        let ov = _mm256_loadu_ps(out.as_ptr().add(j));
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_add_ps(ov, _mm256_mul_ps(av, bv)));
+        j += 8;
+    }
+    while j < len {
+        out[j] += a * b[j];
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::simd::SCALAR_OPS;
+
+    fn wrap_heavy_lut() -> Vec<i32> {
+        // extreme cells force wraparound in a handful of accumulate steps,
+        // proving _mm256_add_epi32 matches wrapping_add bit-for-bit
+        (0..256 * 256)
+            .map(|i| match i % 5 {
+                0 => i32::MAX - (i as i32 % 97),
+                1 => i32::MIN + (i as i32 % 89),
+                _ => (i as i32).wrapping_mul(2_654_435_761u32 as i32),
+            })
+            .collect()
+    }
+
+    fn i16_lut() -> Vec<i32> {
+        (0..256 * 256)
+            .map(|i| ((i as i64 * 31 + 7) % 65536 - 32768) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn avx2_kernels_match_scalar_including_wraparound() {
+        if !std::is_x86_feature_detected!("avx2") {
+            return; // nothing to test on this host; Auto resolves to scalar
+        }
+        let lut = wrap_heavy_lut();
+        for (m, k, n) in [(1, 1, 1), (3, 7, 9), (5, 33, 40), (2, 13, 70)] {
+            let x: Vec<u8> = (0..m * k).map(|i| ((i * 37 + 5) % 256) as u8).collect();
+            let w: Vec<u8> = (0..k * n).map(|i| ((i * 91 + 9) % 256) as u8).collect();
+            let mut want = vec![0i32; m * n];
+            (SCALAR_OPS.approx_i32)(&x, &w, &lut, 0..m, k, n, &mut want);
+            let mut got = vec![0i32; m * n];
+            (AVX2_OPS.approx_i32)(&x, &w, &lut, 0..m, k, n, &mut got);
+            assert_eq!(got, want, "approx_i32 m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn avx2_i16_kernels_match_scalar_at_boundary_codes() {
+        if !std::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let packed = lut::pack_lut_i16(&i16_lut()).expect("in range");
+        // n and c chosen to exercise both full 8-lane steps and tails;
+        // codes include 255 so the last-row / last-column gather hits the
+        // pad-adjacent cells
+        let (m, k, n) = (4, 9, 21);
+        let x: Vec<u8> = (0..m * k).map(|i| if i % 4 == 0 { 255 } else { (i * 53) as u8 }).collect();
+        let w: Vec<u8> = (0..k * n).map(|i| if i % 3 == 0 { 255 } else { (i * 29) as u8 }).collect();
+        let mut want = vec![0i32; m * n];
+        (SCALAR_OPS.approx_i16)(&x, &w, &packed, 0..m, k, n, &mut want);
+        let mut got = vec![0i32; m * n];
+        (AVX2_OPS.approx_i16)(&x, &w, &packed, 0..m, k, n, &mut got);
+        assert_eq!(got, want, "approx_i16");
+
+        let (dm, taps, c) = (3, 5, 19);
+        let dx: Vec<u8> = (0..dm * taps * c).map(|i| if i % 5 == 0 { 255 } else { (i * 13) as u8 }).collect();
+        let dwc: Vec<u8> = (0..taps * c).map(|i| if i % 2 == 0 { 255 } else { (i * 7) as u8 }).collect();
+        let mut dwant = vec![0i32; dm * c];
+        (SCALAR_OPS.dw_i16)(&dx, &dwc, &packed, 0..dm, taps, c, &mut dwant);
+        let mut dgot = vec![0i32; dm * c];
+        (AVX2_OPS.dw_i16)(&dx, &dwc, &packed, 0..dm, taps, c, &mut dgot);
+        assert_eq!(dgot, dwant, "dw_i16");
+    }
+
+    #[test]
+    fn avx2_dw_and_axpy_match_scalar() {
+        if !std::is_x86_feature_detected!("avx2") {
+            return;
+        }
+        let lut = wrap_heavy_lut();
+        let (m, taps, c) = (4, 9, 23);
+        let x: Vec<u8> = (0..m * taps * c).map(|i| ((i * 13) % 256) as u8).collect();
+        let w: Vec<u8> = (0..taps * c).map(|i| ((i * 7) % 256) as u8).collect();
+        let mut want = vec![0i32; m * c];
+        (SCALAR_OPS.dw_i32)(&x, &w, &lut, 0..m, taps, c, &mut want);
+        let mut got = vec![0i32; m * c];
+        (AVX2_OPS.dw_i32)(&x, &w, &lut, 0..m, taps, c, &mut got);
+        assert_eq!(got, want, "dw_i32");
+
+        // f32 axpy must be bit-identical (mul+add, no FMA) on awkward values
+        let b: Vec<f32> = (0..37)
+            .map(|i| (i as f32 * 0.123456).sin() * 1e3 + 1e-3)
+            .collect();
+        let mut o1: Vec<f32> = (0..37).map(|i| (i as f32 * 0.7).cos()).collect();
+        let mut o2 = o1.clone();
+        (SCALAR_OPS.axpy_f32)(&mut o1, 1.000001e-2, &b);
+        (AVX2_OPS.axpy_f32)(&mut o2, 1.000001e-2, &b);
+        assert_eq!(
+            o1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            o2.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "axpy_f32 bit-identity"
+        );
+    }
+}

@@ -333,10 +333,12 @@ fn run_baselines(
     let mut evals = 0usize;
     let front = baselines::nsga2_search(&manifest, &catalog, &alwann_cfg, |genome| {
         evals += 1;
-        let luts = assignment_luts(&manifest, &catalog, genome);
+        // pack per evaluation: i16-eligible layers run the halved-footprint
+        // kernels (bit-identical to PerLayer, so search results don't move)
+        let packed = crate::compute::pack_layer_luts(&assignment_luts(&manifest, &catalog, genome));
         let energy = 1.0 - matching::energy_reduction(&manifest, &catalog, genome);
         let acc = pipe
-            .evaluate_sim(&base.flat, &absmax, &LutSet::PerLayer(&luts), holdout)
+            .evaluate_sim(&base.flat, &absmax, &LutSet::PerLayerPacked(&packed), holdout)
             .map(|m| m.top1)
             .unwrap_or(0.0);
         (energy, 1.0 - acc)
@@ -349,9 +351,10 @@ fn run_baselines(
     // re-evaluate the front on the full val split, pick best within budget
     let mut alwann_best: Option<(f64, f64)> = None;
     for cand in &front {
-        let luts = assignment_luts(&manifest, &catalog, &cand.genome);
+        let packed =
+            crate::compute::pack_layer_luts(&assignment_luts(&manifest, &catalog, &cand.genome));
         let acc = pipe
-            .evaluate_sim(&base.flat, &absmax, &LutSet::PerLayer(&luts), usize::MAX)?
+            .evaluate_sim(&base.flat, &absmax, &LutSet::PerLayerPacked(&packed), usize::MAX)?
             .top1;
         let e = matching::energy_reduction(&manifest, &catalog, &cand.genome);
         if (baseline_top1 - acc) * 100.0 <= budget_pp
@@ -365,9 +368,13 @@ fn run_baselines(
     let mut lvrm_best: Option<(f64, f64)> = None;
     for tau in [0.01, 0.02, 0.05, 0.08, 0.12, 0.2, 0.3] {
         let out = baselines::lvrm_assign(&manifest, &catalog, &preds, &ystd, tau);
-        let luts = assignment_luts(&manifest, &catalog, &out.instance_indices());
+        let packed = crate::compute::pack_layer_luts(&assignment_luts(
+            &manifest,
+            &catalog,
+            &out.instance_indices(),
+        ));
         let acc = pipe
-            .evaluate_sim(&base.flat, &absmax, &LutSet::PerLayer(&luts), usize::MAX)?
+            .evaluate_sim(&base.flat, &absmax, &LutSet::PerLayerPacked(&packed), usize::MAX)?
             .top1;
         if (baseline_top1 - acc) * 100.0 <= budget_pp
             && lvrm_best.map(|(be, _)| out.energy_reduction > be).unwrap_or(true)

@@ -309,8 +309,16 @@ pub struct LoweringIr {
     pub lut_side: usize,
     /// FNV-1a digest of each layer's LUT, in layer order.
     pub lut_digests: Vec<String>,
-    /// Total LUT bytes the lowered model binds (layers * 256^2 * 4).
+    /// Total LUT bytes the lowered model binds: Σ over layers of
+    /// `256^2 * width/8` (see `lut_widths`).
     pub lut_bytes: usize,
+    /// Per-layer LUT storage width in bits (16 or 32), in layer order.
+    /// 16 is chosen by the lower pass exactly when every cell of that
+    /// layer's LUT fits i16 (`analysis::overflow::lut_fits_i16`) — packing
+    /// is lossless, so digests are always of the i32 table. Absent in IR
+    /// files written before this field existed; defaults to all-32
+    /// (the historical layout).
+    pub lut_widths: Vec<u32>,
 }
 
 impl LoweringIr {
@@ -320,6 +328,7 @@ impl LoweringIr {
             ("lut_bytes", Json::num(self.lut_bytes as f64)),
             ("lut_digests", Json::Arr(self.lut_digests.iter().map(Json::str).collect())),
             ("lut_side", Json::num(self.lut_side as f64)),
+            ("lut_widths", Json::Arr(self.lut_widths.iter().map(|&w| Json::num(w as f64)).collect())),
         ])
     }
 
@@ -333,11 +342,32 @@ impl LoweringIr {
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        // optional for back-compat: pre-width IR files carry i32 LUTs only
+        let lut_widths = match v.get("lut_widths") {
+            None => vec![32u32; lut_digests.len()],
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("{path}.lut_widths: expected array"))?
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let w = e.as_f64().and_then(|f| {
+                        if f == 16.0 || f == 32.0 {
+                            Some(f as u32)
+                        } else {
+                            None
+                        }
+                    });
+                    w.ok_or_else(|| anyhow!("{path}.lut_widths[{i}]: expected 16 or 32"))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
         Ok(LoweringIr {
             catalog: str_field(v, path, "catalog")?,
             lut_side: usize_field(v, path, "lut_side")?,
             lut_digests,
             lut_bytes: usize_field(v, path, "lut_bytes")?,
+            lut_widths,
         })
     }
 }

@@ -436,24 +436,41 @@ impl Validate {
                 "lowering.lut_digests[{i}]: expected 16 lowercase hex chars, got {d:?}"
             );
         }
-        let expect = ir.layers.len() * LUT_SIZE * 4;
+        ensure!(
+            low.lut_widths.len() == ir.layers.len(),
+            "lowering.lut_widths: expected {} entries, got {}",
+            ir.layers.len(),
+            low.lut_widths.len()
+        );
+        for (i, &w) in low.lut_widths.iter().enumerate() {
+            ensure!(w == 16 || w == 32, "lowering.lut_widths[{i}]: expected 16 or 32, got {w}");
+        }
+        let expect: usize = low.lut_widths.iter().map(|&w| LUT_SIZE * (w as usize / 8)).sum();
         ensure!(
             low.lut_bytes == expect,
-            "lowering.lut_bytes: expected {expect} (layers * 256^2 * 4), got {}",
+            "lowering.lut_bytes: expected {expect} (sum of 256^2 * width/8 over layers), got {}",
             low.lut_bytes
         );
         // Integrity cross-check ([`crate::robust::integrity`]): the digests
         // must equal those of the LUTs the assignment actually lowers to,
-        // so a tampered digest field cannot survive validation.
+        // so a tampered digest field cannot survive validation. The width
+        // claim is checked against the same rebuilt LUT: 16 requires every
+        // cell to fit i16 (a 32 claim is allowed for an i16-eligible LUT —
+        // that is the pre-width on-disk layout, merely unpacked).
         let cat = ctx.catalog(&low.catalog).map_err(|e| anyhow!("lowering.catalog: {e}"))?;
         for (i, (name, d)) in a.instances.iter().zip(&low.lut_digests).enumerate() {
             let inst = cat
                 .get(name)
                 .ok_or_else(|| anyhow!("lowering: assignment.instances[{i}] {name:?} unknown"))?;
-            let rebuilt = lut_digest(&build_layer_lut(inst, ir.layers[i].info.act_signed));
+            let lut = build_layer_lut(inst, ir.layers[i].info.act_signed);
+            let rebuilt = lut_digest(&lut);
             ensure!(
                 *d == rebuilt,
                 "lowering.lut_digests[{i}]: stored {d} but instance {name:?} lowers to {rebuilt}"
+            );
+            ensure!(
+                low.lut_widths[i] == 32 || crate::analysis::overflow::lut_fits_i16(&lut),
+                "lowering.lut_widths[{i}]: claims 16 but instance {name:?} has cells outside i16"
             );
         }
         Ok(())
@@ -642,11 +659,20 @@ impl Pass for Lower {
             .zip(&indices)
             .map(|(l, &idx)| build_layer_lut(&cat.instances[idx], l.info.act_signed))
             .collect();
+        // Width election: a layer whose LUT extremes all fit i16 lowers to
+        // the 128 KiB packed form (halved gather footprint — the SIMD i16
+        // kernels feed on this); digests stay over the i32 table because
+        // packing is lossless.
+        let lut_widths: Vec<u32> = luts
+            .iter()
+            .map(|l| if crate::analysis::overflow::lut_fits_i16(l) { 16 } else { 32 })
+            .collect();
         ir.lowering = Some(LoweringIr {
             catalog: a.catalog.clone(),
             lut_side: LUT_SIDE,
             lut_digests: luts.iter().map(|l| lut_digest(l)).collect(),
-            lut_bytes: luts.len() * LUT_SIZE * 4,
+            lut_bytes: lut_widths.iter().map(|&w| LUT_SIZE * (w as usize / 8)).sum(),
+            lut_widths,
         });
         ctx.luts = Some(luts);
         ctx.instances = Some(indices);
@@ -728,12 +754,24 @@ pub struct LoweredModel {
 
 impl LoweredModel {
     /// The LUT input tensor in program layout: `i32[num_layers, 65536]`.
+    /// Program inputs stay flat i32 regardless of the elected storage
+    /// width — width packing is a deployment-kernel concern
+    /// ([`LoweredModel::packed_luts`]), not a program-ABI one.
     pub fn lut_value(&self) -> Value {
         let mut flat = Vec::with_capacity(self.luts.len() * LUT_SIZE);
         for lut in &self.luts {
             flat.extend_from_slice(lut);
         }
         Value::i32(&[self.luts.len(), LUT_SIZE], flat)
+    }
+
+    /// Per-layer LUTs packed at the width the lowering elected
+    /// (`lowering.lut_widths`), for the width-dispatching simulator path
+    /// (`simulator::LutSet::PerLayerPacked`). Packing re-derives
+    /// eligibility from the actual cells, so it agrees with the recorded
+    /// widths by construction (both sides are `fits_i16`).
+    pub fn packed_luts(&self) -> Vec<crate::compute::LayerLut> {
+        crate::compute::pack_layer_luts(&self.luts)
     }
 }
 

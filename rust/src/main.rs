@@ -96,6 +96,9 @@ COMMON FLAGS
   --backend B          execution backend         [native]
   --threads N          compute worker threads; 0 = auto (AGN_THREADS env
                        var, else all cores)      [0]
+  --kernel K           compute kernel tier: auto | scalar | avx2 | neon
+                       (AGN_KERNEL env var; forcing an unavailable tier
+                       falls back to scalar with a warning)   [auto]
   --artifacts DIR      artifact directory        [artifacts]
   --results DIR        JSON result directory     [results]
   --models a,b         model list                [command-specific]
@@ -130,7 +133,8 @@ ROBUSTNESS (see README \"Robustness\")
                        fault must be absorbed or surface a typed error)
 
 DETERMINISM CONTRACT (see README \"Determinism contract\")
-  Same seed + same inputs => same bytes, at any --threads value. The
+  Same seed + same inputs => same bytes, at any --threads value and any
+  --kernel tier (SIMD kernels keep the serial accumulation order). The
   contract is machine-enforced: `cargo run -p agn-lint -- --deny rust/src`
   (repo root) lints the source against the seven AGN-D rules, and
   `RUSTFLAGS=\"--cfg loom\"` builds the concurrency models
@@ -147,6 +151,7 @@ const SWITCHES: &[&str] = &["paper", "no-baselines", "strip-params", "analyze-on
 const KNOWN_FLAGS: &[&str] = &[
     "backend",
     "threads",
+    "kernel",
     "artifacts",
     "results",
     "models",
@@ -258,10 +263,15 @@ fn build_session(args: &Args) -> Result<ApproxSession, AgnError> {
         .str_or("backend", "native")
         .parse()
         .map_err(AgnError::invalid_spec)?;
+    let kernel: agn_approx::compute::KernelChoice = args
+        .str_or("kernel", "auto")
+        .parse()
+        .map_err(AgnError::invalid_spec)?;
     let mut builder = ApproxSession::builder(&artifacts)
         .config(run_config(args))
         .backend(backend)
-        .threads(args.usize_or("threads", 0));
+        .threads(args.usize_or("threads", 0))
+        .kernel(kernel);
     if let Some(spec) = args.get("fault-plan") {
         let plan = agn_approx::robust::FaultPlan::parse(spec)
             .map_err(|e| AgnError::invalid_spec(e.to_string()))?;
@@ -415,9 +425,9 @@ fn real_main() -> Result<(), AgnError> {
     if print_stats {
         let s = session.stats();
         println!(
-            "engine: {} executions, {:.2}s exec, {} compiles, {:.2}s compile, {} threads",
+            "engine: {} executions, {:.2}s exec, {} compiles, {:.2}s compile, {} threads, {} kernels",
             s.engine.exec_count, s.engine.exec_seconds, s.engine.compile_count,
-            s.engine.compile_seconds, s.compute_threads
+            s.engine.compile_seconds, s.compute_threads, s.compute_kernel
         );
     }
     Ok(())

@@ -78,10 +78,16 @@ impl NativeBackend {
         artifacts_dir: impl Into<PathBuf>,
         compute: ComputeConfig,
     ) -> NativeBackend {
+        let pool = ComputePool::new(compute);
+        log::debug!(
+            "native backend: {} threads, {} kernels",
+            pool.threads(),
+            pool.kernel_variant()
+        );
         NativeBackend {
             artifacts_dir: artifacts_dir.into(),
             plans: BTreeMap::new(),
-            pool: ComputePool::new(compute),
+            pool,
             verified_luts: BTreeSet::new(),
             exec_seconds: 0.0,
             exec_count: 0,

@@ -9,7 +9,10 @@
 //! batch-stats BN, same quantization grids); the cross-check test in
 //! `rust/tests/` compares it against the AOT `eval_approx` program.
 
-use crate::compute::{approx_dw_pool, approx_matmul_pool, exact_matmul_pool, ComputePool};
+use crate::compute::{
+    approx_dw_pool, approx_dw_pool_view, approx_matmul_pool_view, exact_matmul_pool, ComputePool,
+    LayerLut, LutView,
+};
 use crate::quant;
 use crate::runtime::manifest::{LayerInfo, Manifest};
 use crate::tensor::{self, TensorF};
@@ -74,6 +77,11 @@ pub enum LutSet<'a> {
     Exact,
     /// One full product LUT per approximable layer.
     PerLayer(&'a [Vec<i32>]),
+    /// Width-packed per-layer LUTs (`compute::pack_layer_luts` /
+    /// `ir::LoweredModel::packed_luts`): i16-eligible layers run the
+    /// 128 KiB packed kernels. Bit-identical to [`LutSet::PerLayer`] on
+    /// the same tables — packing is lossless.
+    PerLayerPacked(&'a [LayerLut]),
 }
 
 pub struct SimNet {
@@ -206,9 +214,10 @@ impl SimNet {
         let info = &layer.info;
         let signed = info.act_signed;
         let s_x = if signed { quant::act_scale_signed(absmax) } else { quant::act_scale(absmax) };
-        let lut: Option<&[i32]> = match luts {
+        let lut: Option<LutView<'_>> = match luts {
             LutSet::Exact => None,
-            LutSet::PerLayer(ls) => Some(&ls[idx]),
+            LutSet::PerLayer(ls) => Some(LutView::I32(&ls[idx])),
+            LutSet::PerLayerPacked(ls) => Some(ls[idx].view()),
         };
         match info.kind.as_str() {
             "conv" | "fc" => {
@@ -225,7 +234,9 @@ impl SimNet {
                 debug_assert_eq!(layer.w_cols.len(), kdim * n);
                 let codes = quant::quantize_acts(&x2d, s_x, signed);
                 let acc = match lut {
-                    Some(l) => approx_matmul_pool(&self.pool, &codes, &layer.w_cols, l, m, kdim, n),
+                    Some(v) => {
+                        approx_matmul_pool_view(&self.pool, &codes, &layer.w_cols, v, m, kdim, n)
+                    }
                     None => exact_matmul_pool(&self.pool, &codes, &layer.w_cols, signed, m, kdim, n),
                 };
                 if let Some(cap) = capture {
@@ -268,7 +279,7 @@ impl SimNet {
                 let codes = quant::quantize_acts(&p.data, s_x, signed);
                 // exact dwconv path shares approx_dw with the exact LUT
                 let acc = match lut {
-                    Some(l) => approx_dw_pool(&self.pool, &codes, &layer.w_cols, l, m, taps, c),
+                    Some(v) => approx_dw_pool_view(&self.pool, &codes, &layer.w_cols, v, m, taps, c),
                     None => {
                         let exact = crate::multipliers::build_layer_lut(
                             &exact_instance(),

@@ -17,6 +17,11 @@
 //! backward uses the raw float operands rather than their fake-quantized
 //! values. BatchNorm uses batch statistics, exactly like the Python side
 //! and [`SimNet`](crate::simulator::SimNet).
+//!
+//! All hot loops route through the pool's [`crate::compute::simd`] kernel
+//! vtable; every variant keeps the serial per-element accumulation order
+//! (and FMA stays off), so training is bit-identical across kernel tiers
+//! and thread counts.
 
 use crate::compute::reduce::{fold_f32, sum_f32, sum_f64};
 use crate::compute::{self, approx_matmul_pool, exact_matmul_pool, ComputePool};

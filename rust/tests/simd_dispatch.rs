@@ -1,0 +1,327 @@
+//! Cross-variant determinism suite for the runtime-dispatched kernel
+//! layer (`compute::simd`): every kernel tier (scalar / AVX2 / NEON, plus
+//! the auto dispatch) × LUT width (i32 / packed i16) × thread count
+//! {1, 2, 4, 8} must be **bit-identical** to the serial scalar reference —
+//! on fuzzed shapes with odd chunk boundaries, on wraparound-heavy LUTs,
+//! and end-to-end through the simulator and the native backend's
+//! `train_qat` program. Also pins the i16-eligibility rule to the
+//! `analysis::overflow` verdicts.
+
+// test/bench/example code: panics are failure reports (see clippy.toml)
+#![allow(clippy::unwrap_used, clippy::expect_used, clippy::panic)]
+
+
+use agn_approx::analysis::overflow::lut_fits_i16;
+use agn_approx::compute::{
+    self, ComputeConfig, ComputePool, KernelChoice, LayerLut, LutView, LUT_I16_LEN,
+};
+use agn_approx::datasets::{Dataset, DatasetSpec, Split};
+use agn_approx::multipliers::{build_layer_lut, unsigned_catalog, LUT_SIZE};
+use agn_approx::runtime::{create_backend, create_backend_with, BackendKind, ExecBackend, Value};
+use agn_approx::simulator::{LutSet, SimNet};
+use agn_approx::tensor::TensorF;
+use agn_approx::util::prop::{self, assert_prop};
+
+/// Every selectable tier: forcing an unavailable one falls back to scalar
+/// (with a warning), so the full matrix runs on any host.
+const CHOICES: [KernelChoice; 4] =
+    [KernelChoice::Scalar, KernelChoice::Auto, KernelChoice::Avx2, KernelChoice::Neon];
+
+/// The determinism contract's thread counts (8 over-subscribes any shape
+/// used here).
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+/// One pool per (choice, thread count), with the chunk-work floor disabled
+/// so even tiny fuzzed shapes fan out across workers.
+fn pools() -> Vec<(KernelChoice, usize, ComputePool)> {
+    let mut out = Vec::new();
+    for &c in &CHOICES {
+        for &t in &THREADS {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t).with_kernel(c))
+                .with_min_chunk_work(0);
+            out.push((c, t, pool));
+        }
+    }
+    out
+}
+
+/// A LUT whose cells sit near the i32 extremes, so any kernel tier that
+/// deviated from `wrapping_add` (or reordered the k-accumulation) would
+/// produce different bytes. Deliberately NOT i16-packable.
+fn wrap_heavy_lut() -> Vec<i32> {
+    (0..LUT_SIZE)
+        .map(|i| match i % 5 {
+            0 => i32::MAX - (i as i32 % 97),
+            1 => i32::MIN + (i as i32 % 89),
+            _ => (i as i32).wrapping_mul(-1_640_531_527),
+        })
+        .collect()
+}
+
+/// An i16-packable synthetic LUT spanning the full i16 range, including
+/// both boundary values.
+fn i16_range_lut() -> Vec<i32> {
+    (0..LUT_SIZE)
+        .map(|i| match i % 7 {
+            0 => i16::MAX as i32,
+            1 => i16::MIN as i32,
+            _ => ((i as i64 * 2_654_435_761) % 65_535) as i32 - 32_767,
+        })
+        .collect()
+}
+
+#[test]
+fn cross_variant_lut_matmul_bit_identical_to_serial_scalar() {
+    let pools = pools();
+    let wrap = wrap_heavy_lut();
+    let narrow = i16_range_lut();
+    let packed = LayerLut::from_lut(&narrow);
+    assert_eq!(packed.width_bits(), 16, "synthetic narrow LUT must elect i16");
+    prop::check(12, |g| {
+        let m = g.usize_in(1..12);
+        let k = g.usize_in(1..40);
+        let n = g.usize_in(1..70);
+        // fuzzed codes with the boundary value 255 forced in (the i16
+        // gather's padded-tail index) and 0 (the skip code of exact paths)
+        let mut x = g.vec_u8(m * k..m * k + 1);
+        let mut w = g.vec_u8(k * n..k * n + 1);
+        x[0] = 255;
+        w[0] = 255;
+        if x.len() > 1 {
+            x[1] = 0;
+        }
+        let want_wrap = compute::approx_matmul(&x, &w, &wrap, m, k, n);
+        let want_narrow = compute::approx_matmul(&x, &w, &narrow, m, k, n);
+        for (c, t, pool) in &pools {
+            let got = compute::approx_matmul_pool(pool, &x, &w, &wrap, m, k, n);
+            assert_prop(
+                got == want_wrap,
+                format!("i32 lane diverged: kernel={c:?} threads={t} shape={m}x{k}x{n}"),
+            )?;
+            let got16 = compute::approx_matmul_pool_view(pool, &x, &w, packed.view(), m, k, n);
+            assert_prop(
+                got16 == want_narrow,
+                format!("i16 lane diverged: kernel={c:?} threads={t} shape={m}x{k}x{n}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cross_variant_dw_kernels_bit_identical_to_serial_scalar() {
+    let pools = pools();
+    let wrap = wrap_heavy_lut();
+    let narrow = i16_range_lut();
+    let packed = LayerLut::from_lut(&narrow);
+    prop::check(12, |g| {
+        let m = g.usize_in(1..10);
+        let taps = g.usize_in(1..10);
+        let c = g.usize_in(1..40);
+        let mut x = g.vec_u8(m * taps * c..m * taps * c + 1);
+        let mut w = g.vec_u8(taps * c..taps * c + 1);
+        x[0] = 255;
+        w[0] = 255;
+        let want_wrap = compute::approx_dw(&x, &w, &wrap, m, taps, c);
+        let want_narrow = compute::approx_dw(&x, &w, &narrow, m, taps, c);
+        for (ch, t, pool) in &pools {
+            let got = compute::approx_dw_pool(pool, &x, &w, &wrap, m, taps, c);
+            assert_prop(
+                got == want_wrap,
+                format!("dw i32 lane diverged: kernel={ch:?} threads={t} m={m} taps={taps} c={c}"),
+            )?;
+            let got16 = compute::approx_dw_pool_view(pool, &x, &w, packed.view(), m, taps, c);
+            assert_prop(
+                got16 == want_narrow,
+                format!("dw i16 lane diverged: kernel={ch:?} threads={t} m={m} taps={taps} c={c}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cross_variant_gemm_bit_identical() {
+    // f32 bit-identity across kernel tiers: the SIMD axpy must keep
+    // mul-then-add (no FMA) or these byte comparisons fail
+    let pools = pools();
+    let serial =
+        ComputePool::new(ComputeConfig::with_threads(1).with_kernel(KernelChoice::Scalar));
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    prop::check(10, |g| {
+        let m = g.usize_in(1..10);
+        let k = g.usize_in(1..24);
+        let n = g.usize_in(1..40);
+        let a = g.vec_f32(m * k..m * k + 1, -2.0..2.0);
+        let b = g.vec_f32(k * n..k * n + 1, -2.0..2.0);
+        let gb = g.vec_f32(m * n..m * n + 1, -2.0..2.0);
+        let want = bits(&compute::gemm(&serial, &a, &b, m, k, n));
+        let mut want_at = vec![0f32; k * n];
+        compute::gemm_at_acc(&serial, &a, &gb, m, k, n, &mut want_at);
+        let want_bt = bits(&compute::gemm_bt(&serial, &gb, &b, m, n, k));
+        for (c, t, pool) in &pools {
+            let got = bits(&compute::gemm(pool, &a, &b, m, k, n));
+            assert_prop(
+                got == want,
+                format!("gemm diverged: kernel={c:?} threads={t} shape={m}x{k}x{n}"),
+            )?;
+            let mut got_at = vec![0f32; k * n];
+            compute::gemm_at_acc(pool, &a, &gb, m, k, n, &mut got_at);
+            assert_prop(
+                bits(&got_at) == bits(&want_at),
+                format!("gemm_at_acc diverged: kernel={c:?} threads={t}"),
+            )?;
+            let got_bt = bits(&compute::gemm_bt(pool, &gb, &b, m, n, k));
+            assert_prop(
+                got_bt == want_bt,
+                format!("gemm_bt diverged: kernel={c:?} threads={t}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn i16_eligibility_matches_overflow_analysis() {
+    // the three election predicates must agree cell-for-cell
+    let narrow = i16_range_lut();
+    assert!(lut_fits_i16(&narrow));
+    let packed = agn_approx::compute::pack_lut_i16(&narrow).expect("narrow LUT packs");
+    assert_eq!(packed.len(), LUT_I16_LEN);
+    assert_eq!(*packed.last().unwrap(), 0, "gather pad must be zero");
+    for (i, &v) in narrow.iter().enumerate() {
+        assert_eq!(packed[i] as i32, v, "cell {i} changed under packing");
+    }
+
+    let mut wide = narrow.clone();
+    wide[128 * 256] = 40_000; // one cell past i16::MAX
+    assert!(!lut_fits_i16(&wide));
+    assert!(agn_approx::compute::pack_lut_i16(&wide).is_none());
+    assert_eq!(LayerLut::from_lut(&wide).width_bits(), 32);
+
+    // real catalog LUTs: packing decision == the analysis verdict, and the
+    // packed view reads back the exact same cells
+    let cat = unsigned_catalog();
+    for name in ["mul8u_etm6", "mul8u_trc3"] {
+        for act_signed in [false, true] {
+            let lut = build_layer_lut(cat.get(name).unwrap(), act_signed);
+            let layer = LayerLut::from_lut(&lut);
+            assert_eq!(
+                layer.width_bits() == 16,
+                lut_fits_i16(&lut),
+                "{name} act_signed={act_signed}: width election disagrees with analysis"
+            );
+            if let LutView::I16(v) = layer.view() {
+                assert_eq!(v.len(), LUT_I16_LEN);
+                for (i, &cell) in lut.iter().enumerate() {
+                    assert_eq!(v[i] as i32, cell);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simnet_forward_bit_identical_across_kernel_tiers() {
+    // program-level: a full behavioral forward (packed per-layer LUTs) on
+    // the auto tier must produce byte-identical logits to forced scalar
+    let backend = create_backend(BackendKind::Native, "artifacts").unwrap();
+    let manifest = backend.manifest("tinynet").expect("tinynet manifest");
+    let flat = manifest.load_init_params().expect("init params");
+    let spec = DatasetSpec::synth_cifar((manifest.input_shape[0], manifest.input_shape[1]), 42);
+    let data = Dataset::load(&spec, Split::Val);
+    let (xs, _) = data.eval_batch(manifest.batch, 0);
+    let x = TensorF::from_vec(
+        &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+        xs,
+    );
+    let absmax = vec![6.0f32; manifest.num_layers];
+    let cat = unsigned_catalog();
+    let luts: Vec<Vec<i32>> = manifest
+        .layers
+        .iter()
+        .map(|l| build_layer_lut(cat.get("mul8u_etm6").unwrap(), l.act_signed))
+        .collect();
+    let packed = compute::pack_layer_luts(&luts);
+
+    let scalar_pool =
+        ComputePool::new(ComputeConfig::with_threads(1).with_kernel(KernelChoice::Scalar));
+    let net = SimNet::with_pool(&manifest, &flat, scalar_pool).expect("simnet");
+    let want = net.forward(&x, &absmax, &LutSet::PerLayer(&luts), None);
+    let want_bits: Vec<u32> = want.data.iter().map(|v| v.to_bits()).collect();
+
+    for t in [1usize, 4] {
+        for choice in CHOICES {
+            let pool = ComputePool::new(ComputeConfig::with_threads(t).with_kernel(choice));
+            let netv = SimNet::with_pool(&manifest, &flat, pool).expect("simnet");
+            for luts_arg in
+                [LutSet::PerLayer(&luts), LutSet::PerLayerPacked(&packed)]
+            {
+                let got = netv.forward(&x, &absmax, &luts_arg, None);
+                let got_bits: Vec<u32> = got.data.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    got_bits, want_bits,
+                    "forward diverged: kernel={choice:?} threads={t}"
+                );
+            }
+        }
+    }
+}
+
+/// Bit-compare two runtime output vectors (f32 via to_bits).
+fn values_bit_equal(a: &[Value], b: &[Value]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| match (x, y) {
+            (Value::F32 { data: dx, .. }, Value::F32 { data: dy, .. }) => {
+                dx.len() == dy.len()
+                    && dx.iter().zip(dy).all(|(p, q)| p.to_bits() == q.to_bits())
+            }
+            (Value::I32 { data: dx, .. }, Value::I32 { data: dy, .. }) => dx == dy,
+            (Value::U32 { data: dx, .. }, Value::U32 { data: dy, .. }) => dx == dy,
+            _ => false,
+        })
+}
+
+#[test]
+fn train_qat_bit_identical_across_kernel_tiers() {
+    // program-level through the native backend: one train_qat step must
+    // return identical bytes on every kernel tier × thread count
+    let mut scalar = create_backend_with(
+        BackendKind::Native,
+        "artifacts",
+        ComputeConfig::with_threads(1).with_kernel(KernelChoice::Scalar),
+    )
+    .unwrap();
+    let manifest = scalar.manifest("tinynet").expect("tinynet manifest");
+    let flat = manifest.load_init_params().expect("init params");
+    let spec = DatasetSpec::synth_cifar((manifest.input_shape[0], manifest.input_shape[1]), 42);
+    let data = Dataset::load(&spec, Split::Train);
+    let (xs, ys) = data.batch(manifest.batch, 0);
+    let inputs = vec![
+        Value::vec_f32(flat.clone()),
+        Value::vec_f32(vec![0f32; flat.len()]),
+        Value::f32(
+            &[manifest.batch, manifest.input_shape[0], manifest.input_shape[1], 3],
+            xs,
+        ),
+        Value::i32(&[manifest.batch], ys),
+        Value::scalar_f32(0.01),
+    ];
+    let want = scalar.run(&manifest, "train_qat", &inputs).expect("scalar train_qat");
+
+    for t in [1usize, 4] {
+        for choice in CHOICES {
+            let mut engine = create_backend_with(
+                BackendKind::Native,
+                "artifacts",
+                ComputeConfig::with_threads(t).with_kernel(choice),
+            )
+            .unwrap();
+            let got = engine.run(&manifest, "train_qat", &inputs).expect("train_qat");
+            assert!(
+                values_bit_equal(&want, &got),
+                "train_qat diverged: kernel={choice:?} threads={t}"
+            );
+        }
+    }
+}

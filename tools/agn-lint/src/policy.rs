@@ -13,9 +13,9 @@ pub struct Policy {
     /// stream, FNV-1a digests), not an accident.
     pub d2_wrapping: &'static [&'static str],
     /// AGN-D3: modules allowed to contain `unsafe` at all (each block
-    /// still needs a `// SAFETY:` comment). `compute/simd/` is reserved
-    /// for the std::arch kernels of ROADMAP item 1 — the gate arms before
-    /// the first unsafe block lands.
+    /// still needs a `// SAFETY:` comment). `compute/simd/` holds the
+    /// `std::arch` kernel tiers (AVX2/NEON gathers and axpy) — the only
+    /// unsafe in the tree.
     pub d3_unsafe: &'static [&'static str],
     /// AGN-D4: approved ambient-input boundaries. `util/env.rs` is the one
     /// place that touches `std::env::var`; timer/benchkit are approved

@@ -1,0 +1,6 @@
+//! Bad twin: an unsafe block inside the allowlisted kernel module but
+//! without the mandatory safety comment in the 3-line window above it.
+
+pub fn first(x: &[u8]) -> u8 {
+    unsafe { *x.get_unchecked(0) }
+}

@@ -1,0 +1,8 @@
+//! Good twin: unsafe confined to the allowlisted kernel module, with the
+//! mandatory justification comment within the 3-line lookback window.
+
+pub fn first(x: &[u8]) -> u8 {
+    assert!(!x.is_empty());
+    // SAFETY: the assert above guarantees index 0 is in bounds.
+    unsafe { *x.get_unchecked(0) }
+}

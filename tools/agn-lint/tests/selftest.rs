@@ -32,6 +32,9 @@ fn every_bad_fixture_trips_exactly_its_rule() {
         ("d4_env.rs", "AGN-D4"),
         ("d5_float_sum.rs", "AGN-D5"),
         ("d6_allow.rs", "AGN-D6"),
+        // nested under src/ so module_rel lands inside the compute/simd/
+        // allowlist: only the missing-SAFETY half of AGN-D3 fires
+        ("src/compute/simd/d3_missing_safety.rs", "AGN-D3"),
     ];
     for (file, rule) in cases {
         let ds = check_file("bad", file);
@@ -50,22 +53,38 @@ fn bad_manifest_trips_d7() {
     assert!(ds[0].message.contains("rand"));
 }
 
+/// Recursively collect `.rs` files (the corpus now nests `src/compute/simd`
+/// twins for the path-sensitive AGN-D3 allowlist).
+fn collect_rs(dir: &PathBuf, out: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir).unwrap().map(|e| e.unwrap().path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
 #[test]
 fn every_good_fixture_is_clean() {
     let dir = fixture_root("good");
     let mut saw = 0usize;
-    let mut entries: Vec<PathBuf> =
-        std::fs::read_dir(&dir).unwrap().map(|e| e.unwrap().path()).collect();
-    entries.sort();
-    for p in entries {
-        let name = p.file_name().unwrap().to_string_lossy().to_string();
-        if p.extension().and_then(|e| e.to_str()) == Some("rs") {
-            let ds = check_file("good", &name);
-            assert!(ds.is_empty(), "good fixture {name} must lint clean: {ds:?}");
-            saw += 1;
-        }
+    let mut files = Vec::new();
+    collect_rs(&dir, &mut files);
+    for p in files {
+        let name = p
+            .strip_prefix(&dir)
+            .unwrap()
+            .to_string_lossy()
+            .replace('\\', "/");
+        let ds = check_file("good", &name);
+        assert!(ds.is_empty(), "good fixture {name} must lint clean: {ds:?}");
+        saw += 1;
     }
-    assert!(saw >= 7, "good corpus unexpectedly small ({saw} files)");
+    assert!(saw >= 8, "good corpus unexpectedly small ({saw} files)");
     let m = dir.join("Cargo_good.toml");
     let ds = deps::check_manifest("Cargo_good.toml", &std::fs::read_to_string(m).unwrap());
     assert!(ds.is_empty(), "good manifest must pass AGN-D7: {ds:?}");

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Advisory perf-regression diff between two benchkit JSON exports.
+
+Matches lanes by name and compares p50_s. Lanes present in only one file
+are listed but never fail the diff (bench sets grow across PRs). The
+default is purely advisory (exit 0 even on regressions) because CI hosts
+differ from the committed baseline's host — the embedded `env`
+fingerprints are printed so a cross-host comparison is visibly
+apples-to-oranges. Pass --strict to turn warnings into exit 1 (only
+sensible when both fingerprints match).
+
+Usage:
+    bench_diff.py BASELINE.json FRESH.json [--warn-pct 15] [--strict]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as fp:
+        doc = json.load(fp)
+    lanes = {r["name"]: r for r in doc.get("results", [])}
+    return doc, lanes
+
+
+def fmt_env(doc):
+    env = doc.get("env")
+    if not env:
+        return "(no fingerprint)"
+    return ", ".join(f"{k}={env[k]}" for k in sorted(env))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed benchkit JSON (the reference)")
+    ap.add_argument("fresh", help="freshly measured benchkit JSON")
+    ap.add_argument("--warn-pct", type=float, default=15.0,
+                    help="warn when fresh p50 is this %% slower (default 15)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on warnings instead of staying advisory")
+    args = ap.parse_args()
+
+    base_doc, base = load(args.baseline)
+    fresh_doc, fresh = load(args.fresh)
+
+    print(f"baseline  {args.baseline}: {fmt_env(base_doc)}")
+    print(f"fresh     {args.fresh}: {fmt_env(fresh_doc)}")
+    if base_doc.get("env") != fresh_doc.get("env"):
+        print("note: fingerprints differ — deltas are cross-host and advisory")
+    print()
+
+    common = sorted(set(base) & set(fresh))
+    only_base = sorted(set(base) - set(fresh))
+    only_fresh = sorted(set(fresh) - set(base))
+
+    warnings = 0
+    for name in common:
+        b, f = base[name].get("p50_s"), fresh[name].get("p50_s")
+        if not b or not f:
+            print(f"  ?        {name}: missing p50_s")
+            continue
+        pct = (f - b) / b * 100.0
+        tag = "ok"
+        if pct > args.warn_pct:
+            tag = "WARN"
+            warnings += 1
+        elif pct < -args.warn_pct:
+            tag = "faster"
+        print(f"  {tag:<8} {name}: p50 {b * 1e3:.3f} ms -> {f * 1e3:.3f} ms "
+              f"({pct:+.1f}%)")
+
+    for name in only_base:
+        print(f"  gone     {name}: in baseline only")
+    for name in only_fresh:
+        print(f"  new      {name}: in fresh only")
+
+    if not common:
+        print("no common lanes — nothing to compare")
+
+    print(f"\n{len(common)} compared, {warnings} over the "
+          f"{args.warn_pct:g}% threshold")
+    if warnings and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

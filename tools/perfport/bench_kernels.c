@@ -1,0 +1,452 @@
+/*
+ * Offline C port of the rust/benches/bench_simulator.rs kernel-variant
+ * lanes, for producing measured BENCH_kernels.json / BENCH_runtime.json
+ * numbers on hosts without a Rust toolchain (the build container bakes in
+ * only the rust_pallas runtime, not cargo).
+ *
+ * The ports mirror the Rust kernels loop-for-loop:
+ *   - approx_matmul_pool/scalar/t1  -> compute::lut::approx_rows (blocked,
+ *     LUT-row-hot (m,k,n) order, wrapping i32 accumulation)
+ *   - approx_matmul_pool/simd/t1    -> compute::simd::x86 approx_i32_impl
+ *     (_mm256_i32gather_epi32 over the 256-entry LUT row, NB=1024 column
+ *     blocks, _mm256_add_epi32 accumulate)
+ *   - approx_matmul_pool/simd_i16/t1-> approx_i16_impl (scale-2 gather on
+ *     the packed 65537-entry i16 table + slli/srai sign extension, NB=2048)
+ *   - gemm/{scalar,simd}/t1         -> compute::gemm row kernel via the
+ *     axpy_f32 vtable slot (mul-then-add, deliberately no FMA)
+ *
+ * Lane names match the Rust bench exactly so tools/bench_diff.py can diff
+ * either producer against the committed snapshots. The env fingerprint
+ * records this harness as the producer (rustc = "none (C port)").
+ *
+ * Build & run (single core):
+ *   gcc -O2 -mavx2 -o bench_kernels tools/perfport/bench_kernels.c
+ *   ./bench_kernels BENCH_kernels.json BENCH_runtime.json
+ */
+
+#include <immintrin.h>
+#include <stdint.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+#define LUT_SIDE 256
+#define LUT_SIZE (LUT_SIDE * LUT_SIDE)
+#define LUT_I16_LEN (LUT_SIZE + 1)
+#define NB_I32 1024
+#define NB_I16 2048
+
+/* ------------------------------------------------------------------ */
+/* kernels (ports of rust/src/compute/{lut,simd/x86,gemm}.rs)          */
+/* ------------------------------------------------------------------ */
+
+/* wrapping i32 add without C signed-overflow UB */
+static inline int32_t wadd(int32_t a, int32_t b) {
+    return (int32_t)((uint32_t)a + (uint32_t)b);
+}
+
+static void approx_rows_scalar(const uint8_t *x, const uint8_t *w,
+                               const int32_t *lut, size_t m, size_t k,
+                               size_t n, int32_t *out) {
+    for (size_t mi = 0; mi < m; mi++) {
+        int32_t *orow = out + mi * n;
+        memset(orow, 0, n * sizeof(int32_t));
+        for (size_t ki = 0; ki < k; ki++) {
+            const int32_t *lrow = lut + (size_t)x[mi * k + ki] * LUT_SIDE;
+            const uint8_t *wrow = w + ki * n;
+            for (size_t j = 0; j < n; j++) {
+                orow[j] = wadd(orow[j], lrow[wrow[j]]);
+            }
+        }
+    }
+}
+
+static void approx_rows_avx2_i32(const uint8_t *x, const uint8_t *w,
+                                 const int32_t *lut, size_t m, size_t k,
+                                 size_t n, int32_t *out) {
+    for (size_t mi = 0; mi < m; mi++) {
+        int32_t *orow = out + mi * n;
+        memset(orow, 0, n * sizeof(int32_t));
+        for (size_t n0 = 0; n0 < n; n0 += NB_I32) {
+            size_t nb = n - n0 < NB_I32 ? n - n0 : NB_I32;
+            int32_t *oblk = orow + n0;
+            for (size_t ki = 0; ki < k; ki++) {
+                const int32_t *lrow = lut + (size_t)x[mi * k + ki] * LUT_SIDE;
+                const uint8_t *wblk = w + ki * n + n0;
+                size_t j = 0;
+                for (; j + 8 <= nb; j += 8) {
+                    __m128i codes =
+                        _mm_loadl_epi64((const __m128i *)(wblk + j));
+                    __m256i idx = _mm256_cvtepu8_epi32(codes);
+                    __m256i g = _mm256_i32gather_epi32(lrow, idx, 4);
+                    __m256i o = _mm256_loadu_si256((const __m256i *)(oblk + j));
+                    _mm256_storeu_si256((__m256i *)(oblk + j),
+                                        _mm256_add_epi32(o, g));
+                }
+                for (; j < nb; j++) {
+                    oblk[j] = wadd(oblk[j], lrow[wblk[j]]);
+                }
+            }
+        }
+    }
+}
+
+static void approx_rows_avx2_i16(const uint8_t *x, const uint8_t *w,
+                                 const int16_t *lut16, size_t m, size_t k,
+                                 size_t n, int32_t *out) {
+    for (size_t mi = 0; mi < m; mi++) {
+        int32_t *orow = out + mi * n;
+        memset(orow, 0, n * sizeof(int32_t));
+        for (size_t n0 = 0; n0 < n; n0 += NB_I16) {
+            size_t nb = n - n0 < NB_I16 ? n - n0 : NB_I16;
+            int32_t *oblk = orow + n0;
+            for (size_t ki = 0; ki < k; ki++) {
+                const int16_t *lrow = lut16 + (size_t)x[mi * k + ki] * LUT_SIDE;
+                const uint8_t *wblk = w + ki * n + n0;
+                size_t j = 0;
+                for (; j + 8 <= nb; j += 8) {
+                    __m128i codes =
+                        _mm_loadl_epi64((const __m128i *)(wblk + j));
+                    __m256i idx = _mm256_cvtepu8_epi32(codes);
+                    /* scale-2 gather over 16-bit entries; the one-entry pad
+                     * keeps index 255 of the last row in bounds */
+                    __m256i g =
+                        _mm256_i32gather_epi32((const int *)lrow, idx, 2);
+                    g = _mm256_srai_epi32(_mm256_slli_epi32(g, 16), 16);
+                    __m256i o = _mm256_loadu_si256((const __m256i *)(oblk + j));
+                    _mm256_storeu_si256((__m256i *)(oblk + j),
+                                        _mm256_add_epi32(o, g));
+                }
+                for (; j < nb; j++) {
+                    oblk[j] = wadd(oblk[j], (int32_t)lrow[wblk[j]]);
+                }
+            }
+        }
+    }
+}
+
+static void gemm_scalar(const float *a, const float *b, size_t m, size_t k,
+                        size_t n, float *out) {
+    for (size_t mi = 0; mi < m; mi++) {
+        float *orow = out + mi * n;
+        memset(orow, 0, n * sizeof(float));
+        for (size_t ki = 0; ki < k; ki++) {
+            float av = a[mi * k + ki];
+            if (av == 0.0f) {
+                continue;
+            }
+            const float *brow = b + ki * n;
+            for (size_t j = 0; j < n; j++) {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+static void gemm_avx2(const float *a, const float *b, size_t m, size_t k,
+                      size_t n, float *out) {
+    for (size_t mi = 0; mi < m; mi++) {
+        float *orow = out + mi * n;
+        memset(orow, 0, n * sizeof(float));
+        for (size_t ki = 0; ki < k; ki++) {
+            float av = a[mi * k + ki];
+            if (av == 0.0f) {
+                continue;
+            }
+            const float *brow = b + ki * n;
+            __m256 avv = _mm256_set1_ps(av);
+            size_t j = 0;
+            for (; j + 8 <= n; j += 8) {
+                __m256 bv = _mm256_loadu_ps(brow + j);
+                __m256 ov = _mm256_loadu_ps(orow + j);
+                /* mul-then-add, NOT FMA: bit-identical to the scalar loop */
+                _mm256_storeu_ps(orow + j, _mm256_add_ps(ov, _mm256_mul_ps(avv, bv)));
+            }
+            for (; j < n; j++) {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* benchkit-compatible harness                                         */
+/* ------------------------------------------------------------------ */
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return (double)ts.tv_sec + (double)ts.tv_nsec * 1e-9;
+}
+
+typedef struct {
+    char name[96];
+    int iters;
+    double mean_s, min_s, p50_s, p90_s;
+    double units; /* M-MACs (or steps) per measurement */
+    const char *unit;
+} Lane;
+
+static int cmp_double(const void *a, const void *b) {
+    double x = *(const double *)a, y = *(const double *)b;
+    return (x > y) - (x < y);
+}
+
+static volatile int32_t g_sink32;
+static volatile float g_sinkf;
+
+typedef void (*work_fn)(void *);
+
+static Lane run_lane(const char *name, double units, const char *unit,
+                     work_fn f, void *arg) {
+    double budget = 1.0;
+    const char *bs = getenv("BENCH_BUDGET_S");
+    if (bs != NULL && atof(bs) > 0.0) {
+        budget = atof(bs);
+    }
+    double t0 = now_s();
+    f(arg);
+    double once = now_s() - t0;
+    if (once < 1e-9) {
+        once = 1e-9;
+    }
+    long iters = (long)(budget / once);
+    if (iters < 3) {
+        iters = 3;
+    }
+    if (iters > 10000) {
+        iters = 10000;
+    }
+    double *samples = malloc((size_t)iters * sizeof(double));
+    for (long i = 0; i < iters; i++) {
+        double t = now_s();
+        f(arg);
+        samples[i] = now_s() - t;
+    }
+    qsort(samples, (size_t)iters, sizeof(double), cmp_double);
+    Lane lane;
+    memset(&lane, 0, sizeof(lane));
+    snprintf(lane.name, sizeof(lane.name), "%s", name);
+    lane.iters = (int)iters;
+    double sum = 0.0;
+    for (long i = 0; i < iters; i++) {
+        sum += samples[i];
+    }
+    lane.mean_s = sum / (double)iters;
+    lane.min_s = samples[0];
+    lane.p50_s = samples[iters / 2];
+    lane.p90_s = samples[iters * 9 / 10];
+    lane.units = units;
+    lane.unit = unit;
+    free(samples);
+    printf("%-44s p50 %10.3f ms  (min %.3f ms, n=%d)  %.1f %s/s\n", name,
+           lane.p50_s * 1e3, lane.min_s * 1e3, lane.iters,
+           lane.units / lane.p50_s, unit);
+    return lane;
+}
+
+static void write_json(const char *path, const char *group,
+                       const char *cpu_features, const char *kernel,
+                       const Lane *lanes, int n_lanes) {
+    FILE *fp = fopen(path, "w");
+    if (fp == NULL) {
+        fprintf(stderr, "cannot write %s\n", path);
+        exit(1);
+    }
+    fprintf(fp, "{\n");
+    fprintf(fp, "  \"group\": \"%s\",\n", group);
+    fprintf(fp, "  \"env\": {\n");
+    fprintf(fp, "    \"arch\": \"x86_64\",\n");
+    fprintf(fp, "    \"cpu_features\": \"%s\",\n", cpu_features);
+    fprintf(fp, "    \"kernel\": \"%s\",\n", kernel);
+    fprintf(fp, "    \"os\": \"linux\",\n");
+    fprintf(fp,
+            "    \"rustc\": \"none (tools/perfport C port; no Rust toolchain "
+            "in the build container)\",\n");
+    fprintf(fp, "    \"threads\": 1\n");
+    fprintf(fp, "  },\n");
+    fprintf(fp, "  \"results\": [\n");
+    for (int i = 0; i < n_lanes; i++) {
+        const Lane *l = &lanes[i];
+        fprintf(fp,
+                "    {\n      \"name\": \"%s\",\n      \"iters\": %d,\n"
+                "      \"mean_s\": %.9g,\n      \"min_s\": %.9g,\n"
+                "      \"p50_s\": %.9g,\n      \"p90_s\": %.9g,\n"
+                "      \"units\": %.9g,\n      \"unit\": \"%s\",\n"
+                "      \"per_s\": %.9g\n    }%s\n",
+                l->name, l->iters, l->mean_s, l->min_s, l->p50_s, l->p90_s,
+                l->units, l->unit, l->units / l->p50_s,
+                i + 1 < n_lanes ? "," : "");
+    }
+    fprintf(fp, "  ]\n}\n");
+    fclose(fp);
+    printf("wrote %s\n", path);
+}
+
+/* ------------------------------------------------------------------ */
+/* workloads                                                           */
+/* ------------------------------------------------------------------ */
+
+#define M 4096
+#define K 144
+#define N 32
+
+typedef struct {
+    uint8_t *x;
+    uint8_t *w;
+    int32_t *lut;
+    int16_t *lut16;
+    int32_t *out;
+    float *fa, *fb, *fg, *fout;
+} Work;
+
+static void lane_lut_scalar(void *p) {
+    Work *wk = p;
+    approx_rows_scalar(wk->x, wk->w, wk->lut, M, K, N, wk->out);
+    g_sink32 = wk->out[M * N - 1];
+}
+
+static void lane_lut_avx2(void *p) {
+    Work *wk = p;
+    approx_rows_avx2_i32(wk->x, wk->w, wk->lut, M, K, N, wk->out);
+    g_sink32 = wk->out[M * N - 1];
+}
+
+static void lane_lut_avx2_i16(void *p) {
+    Work *wk = p;
+    approx_rows_avx2_i16(wk->x, wk->w, wk->lut16, M, K, N, wk->out);
+    g_sink32 = wk->out[M * N - 1];
+}
+
+static void lane_gemm_scalar(void *p) {
+    Work *wk = p;
+    gemm_scalar(wk->fa, wk->fb, M, K, N, wk->fout);
+    g_sinkf = wk->fout[M * N - 1];
+}
+
+static void lane_gemm_avx2(void *p) {
+    Work *wk = p;
+    gemm_avx2(wk->fa, wk->fb, M, K, N, wk->fout);
+    g_sinkf = wk->fout[M * N - 1];
+}
+
+/* one "train-step-like" composite: forward LUT matmul + two trainer GEMMs
+ * (the per-step hot loops of the native train_qat path) */
+static void lane_step_scalar(void *p) {
+    lane_lut_scalar(p);
+    lane_gemm_scalar(p);
+    lane_gemm_scalar(p);
+}
+
+static void lane_step_avx2(void *p) {
+    lane_lut_avx2_i16(p);
+    lane_gemm_avx2(p);
+    lane_gemm_avx2(p);
+}
+
+static uint32_t lcg(uint32_t *s) {
+    *s = *s * 1664525u + 1013904223u;
+    return *s >> 8;
+}
+
+int main(int argc, char **argv) {
+    const char *kpath = argc > 1 ? argv[1] : "BENCH_kernels.json";
+    const char *rpath = argc > 2 ? argv[2] : "BENCH_runtime.json";
+
+    if (!__builtin_cpu_supports("avx2")) {
+        fprintf(stderr, "host has no AVX2; the simd lanes would be dishonest — aborting\n");
+        return 1;
+    }
+    const char *features =
+        __builtin_cpu_supports("fma") ? "avx2,fma" : "avx2";
+
+    Work wk;
+    wk.x = malloc(M * K);
+    wk.w = malloc(K * N);
+    wk.lut = malloc(LUT_SIZE * sizeof(int32_t));
+    wk.lut16 = malloc(LUT_I16_LEN * sizeof(int16_t));
+    wk.out = malloc(M * N * sizeof(int32_t));
+    wk.fa = malloc(M * K * sizeof(float));
+    wk.fb = malloc(K * N * sizeof(float));
+    wk.fg = malloc(M * N * sizeof(float));
+    wk.fout = malloc(M * N * sizeof(float));
+    uint32_t seed = 1u;
+    for (size_t i = 0; i < M * K; i++) {
+        wk.x[i] = (uint8_t)lcg(&seed);
+        wk.fa[i] = (float)(lcg(&seed) % 2048) / 1024.0f - 1.0f;
+    }
+    for (size_t i = 0; i < K * N; i++) {
+        wk.w[i] = (uint8_t)lcg(&seed);
+        wk.fb[i] = (float)(lcg(&seed) % 2048) / 1024.0f - 1.0f;
+    }
+    for (size_t i = 0; i < M * N; i++) {
+        wk.fg[i] = (float)(lcg(&seed) % 2048) / 1024.0f - 1.0f;
+    }
+    /* signed-activation exact product table (the same shape the lowering
+     * pass packs to i16: every cell in [-32640, 32385]) */
+    for (int r = 0; r < LUT_SIDE; r++) {
+        for (int c = 0; c < LUT_SIDE; c++) {
+            wk.lut[r * LUT_SIDE + c] = (r - 128) * (c - 128);
+        }
+    }
+    for (int i = 0; i < LUT_SIZE; i++) {
+        wk.lut16[i] = (int16_t)wk.lut[i];
+    }
+    wk.lut16[LUT_SIZE] = 0; /* gather pad */
+
+    /* cross-check: all three LUT kernels must agree bit-for-bit before any
+     * timing is recorded */
+    int32_t *ref = malloc(M * N * sizeof(int32_t));
+    approx_rows_scalar(wk.x, wk.w, wk.lut, M, K, N, ref);
+    approx_rows_avx2_i32(wk.x, wk.w, wk.lut, M, K, N, wk.out);
+    if (memcmp(ref, wk.out, M * N * sizeof(int32_t)) != 0) {
+        fprintf(stderr, "avx2 i32 kernel diverged from scalar\n");
+        return 1;
+    }
+    approx_rows_avx2_i16(wk.x, wk.w, wk.lut16, M, K, N, wk.out);
+    if (memcmp(ref, wk.out, M * N * sizeof(int32_t)) != 0) {
+        fprintf(stderr, "avx2 i16 kernel diverged from scalar\n");
+        return 1;
+    }
+    float *fref = malloc(M * N * sizeof(float));
+    gemm_scalar(wk.fa, wk.fb, M, K, N, fref);
+    gemm_avx2(wk.fa, wk.fb, M, K, N, wk.fout);
+    if (memcmp(fref, wk.fout, M * N * sizeof(float)) != 0) {
+        fprintf(stderr, "avx2 gemm diverged from scalar (FMA leak?)\n");
+        return 1;
+    }
+    free(ref);
+    free(fref);
+    printf("kernel cross-check passed: avx2 i32/i16 + gemm bit-identical to scalar\n");
+
+    double macs = (double)M * K * N / 1e6;
+    Lane kernels[5];
+    kernels[0] = run_lane("approx_matmul_pool/scalar/t1/4096x144x32", macs,
+                          "M-MACs", lane_lut_scalar, &wk);
+    kernels[1] = run_lane("approx_matmul_pool/simd/t1/4096x144x32", macs,
+                          "M-MACs", lane_lut_avx2, &wk);
+    kernels[2] = run_lane("approx_matmul_pool/simd_i16/t1/4096x144x32", macs,
+                          "M-MACs", lane_lut_avx2_i16, &wk);
+    kernels[3] = run_lane("gemm/scalar/t1/4096x144x32", macs, "M-MACs",
+                          lane_gemm_scalar, &wk);
+    kernels[4] = run_lane("gemm/simd/t1/4096x144x32", macs, "M-MACs",
+                          lane_gemm_avx2, &wk);
+    write_json(kpath, "simulator", features, "avx2", kernels, 5);
+
+    Lane runtime[2];
+    runtime[0] = run_lane("cport/scalar/t1/train_step_proxy", 1.0, "steps",
+                          lane_step_scalar, &wk);
+    runtime[1] = run_lane("cport/simd/t1/train_step_proxy", 1.0, "steps",
+                          lane_step_avx2, &wk);
+    write_json(rpath, "runtime", features, "avx2", runtime, 2);
+
+    if (kernels[1].p50_s >= kernels[0].p50_s) {
+        fprintf(stderr,
+                "WARNING: simd lane did not beat scalar on p50 "
+                "(%.3f ms vs %.3f ms)\n",
+                kernels[1].p50_s * 1e3, kernels[0].p50_s * 1e3);
+        return 2;
+    }
+    return 0;
+}
